@@ -1,0 +1,66 @@
+//! Edge–cloud routing scenario (paper Fig 2): a weak on-device model
+//! (`nano` ~ FLAN-t5 800m on a phone) backed by a strong cloud model
+//! (`medium` ~ Llama-2 13b behind an API). Sweeps the router threshold
+//! and prints the achievable cost-advantage / quality-drop frontier —
+//! the consumer's "how many API calls can I skip" view.
+//!
+//! Requires a completed pipeline run (default `runs/smoke`):
+//! `cargo run --release --example edge_cloud [RUN_DIR]`
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+use hybrid_llm::corpus::{Scale, Split};
+use hybrid_llm::pipeline::{pair_id, subset, Pipeline};
+use hybrid_llm::policy;
+use hybrid_llm::router::RouterKind;
+use hybrid_llm::runtime::Runtime;
+use hybrid_llm::stats;
+
+fn main() -> Result<()> {
+    let run_dir = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "runs/smoke".into()),
+    );
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let pl = Pipeline::new(rt, &run_dir, Scale::Smoke);
+    let corpus = pl.ensure_corpus()?;
+    let (edge, cloud) = ("nano", "medium");
+    let pair = pair_id(edge, cloud);
+
+    let test = hybrid_llm::corpus::split_ids(&corpus, Split::Test);
+    let qs = subset(&pl.load_quality(edge, &corpus).context("run the pipeline first")?, &test).mean();
+    let ql = subset(&pl.load_quality(cloud, &corpus)?, &test).mean();
+    let all_scores = pl.load_router_scores(&pair, RouterKind::Trans)?;
+    let scores: Vec<f32> = test.iter().map(|&i| all_scores[i]).collect();
+
+    println!("== edge–cloud routing: {edge} (edge) vs {cloud} (cloud API) ==\n");
+    println!(
+        "all-at-cloud quality {:.3} | all-at-edge quality {:.3}\n",
+        stats::mean(&ql),
+        stats::mean(&qs)
+    );
+    println!("threshold  api_calls_saved%  quality_drop%");
+    for k in 0..=10 {
+        let thr = k as f32 / 10.0;
+        let assign = policy::Policy::Threshold { threshold: thr }.assign(&scores);
+        let ca = policy::cost_advantage(&assign);
+        let q = policy::achieved_quality(&assign, &qs, &ql);
+        let drop = hybrid_llm::metrics::quality_drop_pct(stats::mean(&ql), q);
+        println!("   {thr:.1}        {:6.1}        {drop:+7.2}", ca * 100.0);
+    }
+
+    // the §4.5 operating point: calibrate on val for <=1% drop
+    let val = hybrid_llm::corpus::split_ids(&corpus, Split::Val);
+    let qs_v = subset(&pl.load_quality(edge, &corpus)?, &val).mean();
+    let ql_v = subset(&pl.load_quality(cloud, &corpus)?, &val).mean();
+    let scores_v: Vec<f32> = val.iter().map(|&i| all_scores[i]).collect();
+    let cal = hybrid_llm::calibrate::calibrate(&scores_v, &qs_v, &ql_v, 1.0);
+    let on_test = hybrid_llm::calibrate::evaluate_threshold(cal.threshold, &scores, &qs, &ql);
+    println!(
+        "\ncalibrated threshold {:.3}: saves {:.1}% of cloud calls at {:+.2}% drop on test",
+        cal.threshold,
+        on_test.cost_advantage * 100.0,
+        on_test.drop_pct
+    );
+    Ok(())
+}

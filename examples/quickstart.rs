@@ -1,0 +1,101 @@
+//! Quickstart — the end-to-end driver (DESIGN.md e2e mandate).
+//!
+//! Runs the entire reproduction at smoke scale against the real AOT
+//! artifacts: trains the LM roster + scorer + routers **from rust**,
+//! then serves a batch of live requests through the router + two
+//! continuous-batching workers and reports latency, throughput, cost
+//! advantage and response quality.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//! Re-runs reuse `runs/quickstart` (every stage is resumable).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+use hybrid_llm::batching::BatchMode;
+use hybrid_llm::corpus::{Scale, Split};
+use hybrid_llm::eval::Eval;
+use hybrid_llm::pipeline::{pair_id, Pipeline};
+use hybrid_llm::runtime::Runtime;
+use hybrid_llm::scorer::ScorerEngine;
+use hybrid_llm::serve::{ServeConfig, Server};
+
+fn main() -> Result<()> {
+    let artifacts = Runtime::default_dir();
+    let run_dir = PathBuf::from(
+        std::env::args()
+            .nth(1)
+            .unwrap_or_else(|| "runs/quickstart".into()),
+    );
+    println!("== hybrid-llm quickstart ==");
+    println!("artifacts: {artifacts:?}   run: {run_dir:?}\n");
+
+    // 1. full pipeline at smoke scale (resumable)
+    let rt = Runtime::load(&artifacts).context("run `make artifacts` first")?;
+    let pl = Pipeline::new(rt.clone(), &run_dir, Scale::Smoke);
+    pl.run_all()?;
+    let corpus = pl.ensure_corpus()?;
+
+    // 2. headline numbers (Fig 1 analogue)
+    let ev = Eval::new(&pl, &corpus);
+    println!("{}", ev.run("fig1")?);
+
+    // 3. live serving demo: medium (small/edge) vs large (cloud)
+    let (small, large) = ("medium", "large");
+    let cfg = ServeConfig {
+        artifacts_dir: artifacts,
+        run_dir: run_dir.clone(),
+        small: small.into(),
+        large: large.into(),
+        router: format!("{}_trans", pair_id(small, large)),
+        threshold: 0.5,
+        temp: 0.0,
+        mode: BatchMode::Continuous,
+        batch_window: Duration::from_millis(5),
+    };
+    println!("== live serving: {small} vs {large}, r_trans ==");
+    let server = Server::start(cfg)?;
+    let test: Vec<_> = corpus
+        .iter()
+        .filter(|q| q.split == Split::Test)
+        .take(48)
+        .collect();
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = test.iter().map(|q| server.submit(q.prompt.clone())).collect();
+    let completions: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().context("completion"))
+        .collect::<Result<_>>()?;
+    let wall = t0.elapsed();
+    let stats = server.shutdown()?;
+
+    // 4. score the live responses with the quality scorer
+    let scorer = ScorerEngine::load(rt, &pl.paths.params("scorer"))?;
+    let pairs: Vec<(&[i32], &[i32])> = test
+        .iter()
+        .zip(&completions)
+        .map(|(q, c)| (q.prompt.as_slice(), c.tokens.as_slice()))
+        .collect();
+    let quals = scorer.score(&pairs)?;
+    let mean_q: f64 = quals.iter().map(|&x| x as f64).sum::<f64>() / quals.len() as f64;
+
+    println!("\n== serving report ==");
+    println!(
+        "requests {}   wall {:.2}s   throughput {:.1} req/s",
+        completions.len(),
+        wall.as_secs_f64(),
+        completions.len() as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "cost advantage {:.1}%   mean quality {:.3}   e2e p50 {:.0} ms  p95 {:.0} ms",
+        stats.routing.cost_advantage * 100.0,
+        mean_q,
+        stats.e2e_latency.p50_ms,
+        stats.e2e_latency.p95_ms
+    );
+    println!("done. Full tables/figures: `repro eval all --run {run_dir:?} --scale smoke`");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Serving benchmark — load trained models and serve batched requests,
+//! reporting latency and throughput under four configurations:
+//! {learned router, random router} × {continuous batching,
+//! run-to-completion}. This is the "load a small real model and serve
+//! batched requests" end-to-end validation driver.
+//!
+//! `cargo run --release --example serve_bench [RUN_DIR] [N_REQUESTS]`
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+use hybrid_llm::batching::BatchMode;
+use hybrid_llm::corpus::{Scale, Split};
+use hybrid_llm::pipeline::{pair_id, Pipeline};
+use hybrid_llm::runtime::Runtime;
+use hybrid_llm::serve::{ServeConfig, Server};
+
+fn main() -> Result<()> {
+    let run_dir = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "runs/smoke".into()),
+    );
+    let n: usize = std::env::args()
+        .nth(2)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(64);
+    let artifacts = Runtime::default_dir();
+    let rt = Runtime::load(&artifacts)?;
+    let pl = Pipeline::new(rt, &run_dir, Scale::Smoke);
+    let corpus = pl.ensure_corpus()?;
+    let prompts: Vec<Vec<i32>> = corpus
+        .iter()
+        .filter(|q| q.split == Split::Test)
+        .take(n)
+        .map(|q| q.prompt.clone())
+        .collect();
+    anyhow::ensure!(!prompts.is_empty());
+
+    let (small, large) = ("medium", "large");
+    println!("== serve_bench: {} requests, {small} vs {large} ==\n", prompts.len());
+    println!(
+        "{:<28} {:>9} {:>10} {:>9} {:>9} {:>9}",
+        "config", "wall s", "req/s", "p50 ms", "p95 ms", "cost adv"
+    );
+
+    for (router, mode, label) in [
+        (format!("{}_trans", pair_id(small, large)), BatchMode::Continuous, "r_trans + continuous"),
+        (format!("{}_trans", pair_id(small, large)), BatchMode::RunToCompletion, "r_trans + run-to-completion"),
+        (String::new(), BatchMode::Continuous, "random + continuous"),
+        (String::new(), BatchMode::RunToCompletion, "random + run-to-completion"),
+    ] {
+        let cfg = ServeConfig {
+            artifacts_dir: artifacts.clone(),
+            run_dir: run_dir.clone(),
+            small: small.into(),
+            large: large.into(),
+            router,
+            threshold: 0.5,
+            temp: 0.0,
+            mode,
+            batch_window: Duration::from_millis(5),
+        };
+        let server = Server::start(cfg)?;
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone())).collect();
+        for rx in rxs {
+            rx.recv().context("completion dropped")?;
+        }
+        let wall = t0.elapsed();
+        let stats = server.shutdown()?;
+        println!(
+            "{:<28} {:>9.2} {:>10.1} {:>9.0} {:>9.0} {:>8.1}%",
+            label,
+            wall.as_secs_f64(),
+            prompts.len() as f64 / wall.as_secs_f64(),
+            stats.e2e_latency.p50_ms,
+            stats.e2e_latency.p95_ms,
+            stats.routing.cost_advantage * 100.0,
+        );
+    }
+    Ok(())
+}

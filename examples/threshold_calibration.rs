@@ -1,0 +1,65 @@
+//! §4.5 walkthrough: choose router thresholds on a 500-sample validation
+//! subset under a performance-drop budget, then verify generalization on
+//! the test split (the Table 3 protocol), for all routers × main pairs.
+//!
+//! `cargo run --release --example threshold_calibration [RUN_DIR] [MAX_DROP_PCT]`
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+use hybrid_llm::calibrate;
+use hybrid_llm::corpus::{Scale, Split};
+use hybrid_llm::pipeline::{pair_id, subset, Pipeline, MAIN_PAIRS};
+use hybrid_llm::router::ALL_ROUTERS;
+use hybrid_llm::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let run_dir = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "runs/smoke".into()),
+    );
+    let max_drop: f64 = std::env::args()
+        .nth(2)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1.0);
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let pl = Pipeline::new(rt, &run_dir, Scale::Smoke);
+    let corpus = pl.ensure_corpus()?;
+    let val = hybrid_llm::corpus::split_ids(&corpus, Split::Val);
+    let test = hybrid_llm::corpus::split_ids(&corpus, Split::Test);
+
+    println!("== threshold calibration (<= {max_drop}% drop on 500 val samples) ==\n");
+    println!(
+        "{:<8} {:<16} {:>9} {:>12} {:>9} {:>12}",
+        "router", "pair", "val drop", "val cost adv", "test drop", "test cost adv"
+    );
+    for kind in ALL_ROUTERS {
+        for (small, large, _) in MAIN_PAIRS {
+            let pair = pair_id(small, large);
+            let scores_all = pl
+                .load_router_scores(&pair, kind)
+                .context("run the pipeline first")?;
+            let sub = calibrate::subsample(val.len(), 500, 0xCAFE);
+            let val_ids: Vec<usize> = sub.iter().map(|&i| val[i]).collect();
+            let qs_v = subset(&pl.load_quality(small, &corpus)?, &val_ids).mean();
+            let ql_v = subset(&pl.load_quality(large, &corpus)?, &val_ids).mean();
+            let scores_v: Vec<f32> = val_ids.iter().map(|&i| scores_all[i]).collect();
+            let cal = calibrate::calibrate(&scores_v, &qs_v, &ql_v, max_drop);
+
+            let qs_t = subset(&pl.load_quality(small, &corpus)?, &test).mean();
+            let ql_t = subset(&pl.load_quality(large, &corpus)?, &test).mean();
+            let scores_t: Vec<f32> = test.iter().map(|&i| scores_all[i]).collect();
+            let on_test = calibrate::evaluate_threshold(cal.threshold, &scores_t, &qs_t, &ql_t);
+            println!(
+                "r_{:<6} {:<16} {:>8.2}% {:>11.1}% {:>8.2}% {:>11.1}%",
+                kind.name(),
+                pair,
+                cal.drop_pct,
+                cal.cost_advantage * 100.0,
+                on_test.drop_pct,
+                on_test.cost_advantage * 100.0
+            );
+        }
+    }
+    Ok(())
+}

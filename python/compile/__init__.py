@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 kernels + L2 models + AOT lowering).
+
+Never imported at runtime: the rust coordinator consumes only the HLO-text
+artifacts and the manifest that ``compile.aot`` writes.
+"""

@@ -1,0 +1,343 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts + manifest.
+
+Run once at build time (``make artifacts``); the rust coordinator then
+loads ``artifacts/*.hlo.txt`` through the PJRT C API and never touches
+python again.
+
+HLO text — not ``HloModuleProto.serialize()`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+The manifest (``artifacts/manifest.txt``) is the *contract* with rust: a
+plain line-oriented file recording global dims, per-model configs, and for
+every artifact the exact HLO parameter order/shapes/dtypes and output
+structure. Rust refuses to run against a manifest whose version it does
+not know.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .common import (
+    A_MAX,
+    CFGS,
+    GEN_B,
+    LM_SIZES,
+    SCORE_B,
+    S_CTX,
+    S_PROMPT,
+    TRAIN_B,
+    VOCAB,
+)
+
+MANIFEST_VERSION = 1
+
+F32 = jnp.float32
+S32 = jnp.int32
+U32 = jnp.uint32
+
+_DTYPE_NAMES = {jnp.dtype("float32"): "f32", jnp.dtype("int32"): "s32", jnp.dtype("uint32"): "u32"}
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_str(shape):
+    return "scalar" if len(shape) == 0 else "x".join(str(d) for d in shape)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class ManifestWriter:
+    def __init__(self):
+        self.lines = [
+            f"version {MANIFEST_VERSION}",
+            f"global vocab {VOCAB} sctx {S_CTX} sprompt {S_PROMPT} amax {A_MAX} "
+            f"genb {GEN_B} trainb {TRAIN_B} scoreb {SCORE_B}",
+        ]
+
+    def model(self, cfg, head=False):
+        n = len(M.param_names(cfg, head))
+        self.lines.append(
+            f"model {cfg.name} d {cfg.d} layers {cfg.layers} heads {cfg.heads} "
+            f"ff {cfg.ff} headdim {cfg.head_dim} nparams {n} head {int(head)}"
+        )
+
+    def artifact(self, name, fname, ins, outs):
+        self.lines.append(f"artifact {name} file {fname}")
+        for nm, spec, cls in ins:
+            self.lines.append(f"in {nm} {_DTYPE_NAMES[jnp.dtype(spec.dtype)]} {_shape_str(spec.shape)} {cls}")
+        for nm, spec in outs:
+            self.lines.append(f"out {nm} {_DTYPE_NAMES[jnp.dtype(spec.dtype)]} {_shape_str(spec.shape)}")
+
+    def write(self, path):
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\nend\n")
+
+
+def lower_one(out_dir, mw, name, fn, ins, out_names):
+    """Lower ``fn`` over ``ins`` ([(name, spec, class)]) and register it."""
+    t0 = time.time()
+    specs = [spec for _, spec, _ in ins]
+    lowered = jax.jit(fn).lower(*specs)
+    out_specs = jax.eval_shape(fn, *specs)
+    if not isinstance(out_specs, (tuple, list)):
+        out_specs = (out_specs,)
+    assert len(out_names) == len(out_specs), (name, len(out_names), len(out_specs))
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    mw.artifact(name, fname, ins, list(zip(out_names, out_specs)))
+    print(f"  {name:<22} {len(text):>9} chars  {time.time() - t0:5.1f}s", flush=True)
+
+
+def param_ins(cfg, head=False, cls="param", prefix="p."):
+    return [
+        (prefix + n, _spec(s, F32), cls) for n, s in M.param_shapes(cfg, head)
+    ]
+
+
+def lm_artifacts(out_dir, mw, cfg):
+    """init / prefill / decode (+ B=1 variants) / train for one LM size."""
+    L, H, Dh = cfg.layers, cfg.heads, cfg.head_dim
+    n = len(M.param_names(cfg))
+    pnames = M.param_names(cfg)
+
+    # --- init ------------------------------------------------------------
+    def init_fn(seed):
+        return tuple(M.init_params(cfg, seed))
+
+    lower_one(
+        out_dir, mw, f"{cfg.name}.init", init_fn,
+        [("seed", _spec((), U32), "data")],
+        [f"p.{nm}" for nm in pnames],
+    )
+
+    # --- prefill / decode at generation and latency batch sizes ----------
+    for b, tag in ((GEN_B, ""), (1, "1")):
+        cache = _spec((L, b, S_CTX, H, Dh), F32)
+
+        def prefill_fn(*flat):
+            params, rest = flat[:n], flat[n:]
+            prompt, lens, seeds, temp = rest
+            return M.prefill(cfg, list(params), prompt, lens, seeds, temp)
+
+        lower_one(
+            out_dir, mw, f"{cfg.name}.prefill{tag}", prefill_fn,
+            param_ins(cfg)
+            + [
+                ("prompt", _spec((b, S_PROMPT), S32), "data"),
+                ("lens", _spec((b,), S32), "data"),
+                ("seeds", _spec((b,), U32), "data"),
+                ("temp", _spec((), F32), "data"),
+            ],
+            ["next", "logp", "kcache", "vcache"],
+        )
+
+        def decode_fn(*flat):
+            params, rest = flat[:n], flat[n:]
+            kc, vc, tok, pos, step, seeds, temp = rest
+            return M.decode_step(cfg, list(params), kc, vc, tok, pos, step, seeds, temp)
+
+        lower_one(
+            out_dir, mw, f"{cfg.name}.decode{tag}", decode_fn,
+            param_ins(cfg)
+            + [
+                ("kcache", cache, "state"),
+                ("vcache", cache, "state"),
+                ("tok", _spec((b,), S32), "data"),
+                ("pos", _spec((b,), S32), "data"),
+                ("step", _spec((), S32), "data"),
+                ("seeds", _spec((b,), U32), "data"),
+                ("temp", _spec((), F32), "data"),
+            ],
+            ["next", "logp", "kcache", "vcache"],
+        )
+
+    # --- train ------------------------------------------------------------
+    def train_fn(*flat):
+        params, m, v = flat[:n], flat[n : 2 * n], flat[2 * n : 3 * n]
+        tokens, loss_mask, lr, step = flat[3 * n :]
+        return M.lm_train_step(cfg, list(params), list(m), list(v), tokens, loss_mask, lr, step)
+
+    lower_one(
+        out_dir, mw, f"{cfg.name}.train", train_fn,
+        param_ins(cfg)
+        + param_ins(cfg, cls="opt", prefix="m.")
+        + param_ins(cfg, cls="opt", prefix="v.")
+        + [
+            ("tokens", _spec((TRAIN_B, S_CTX), S32), "data"),
+            ("loss_mask", _spec((TRAIN_B, S_CTX), F32), "data"),
+            ("lr", _spec((), F32), "data"),
+            ("step", _spec((), S32), "data"),
+        ],
+        [f"p.{nm}" for nm in pnames]
+        + [f"m.{nm}" for nm in pnames]
+        + [f"v.{nm}" for nm in pnames]
+        + ["loss"],
+    )
+
+
+def scorer_artifacts(out_dir, mw, cfg):
+    n = len(M.param_names(cfg))
+    pnames = M.param_names(cfg)
+
+    def init_fn(seed):
+        return tuple(M.init_params(cfg, seed))
+
+    lower_one(
+        out_dir, mw, f"{cfg.name}.init", init_fn,
+        [("seed", _spec((), U32), "data")],
+        [f"p.{nm}" for nm in pnames],
+    )
+
+    def train_fn(*flat):
+        params, m, v = flat[:n], flat[n : 2 * n], flat[2 * n : 3 * n]
+        tokens, loss_mask, lr, step = flat[3 * n :]
+        return M.lm_train_step(cfg, list(params), list(m), list(v), tokens, loss_mask, lr, step)
+
+    lower_one(
+        out_dir, mw, f"{cfg.name}.train", train_fn,
+        param_ins(cfg)
+        + param_ins(cfg, cls="opt", prefix="m.")
+        + param_ins(cfg, cls="opt", prefix="v.")
+        + [
+            ("tokens", _spec((TRAIN_B, S_CTX), S32), "data"),
+            ("loss_mask", _spec((TRAIN_B, S_CTX), F32), "data"),
+            ("lr", _spec((), F32), "data"),
+            ("step", _spec((), S32), "data"),
+        ],
+        [f"p.{nm}" for nm in pnames]
+        + [f"m.{nm}" for nm in pnames]
+        + [f"v.{nm}" for nm in pnames]
+        + ["loss"],
+    )
+
+    for b, tag in ((SCORE_B, ""), (1, "1")):
+
+        def score_fn(*flat):
+            params, rest = flat[:n], flat[n:]
+            tokens, resp_mask = rest
+            return (M.score(cfg, list(params), tokens, resp_mask),)
+
+        lower_one(
+            out_dir, mw, f"{cfg.name}.score{tag}", score_fn,
+            param_ins(cfg)
+            + [
+                ("tokens", _spec((b, S_CTX), S32), "data"),
+                ("resp_mask", _spec((b, S_CTX), F32), "data"),
+            ],
+            ["q"],
+        )
+
+
+def router_artifacts(out_dir, mw, cfg):
+    n = len(M.param_names(cfg, head=True))
+    pnames = M.param_names(cfg, head=True)
+
+    def init_fn(seed):
+        return tuple(M.init_params(cfg, seed, head=True))
+
+    lower_one(
+        out_dir, mw, "router.init", init_fn,
+        [("seed", _spec((), U32), "data")],
+        [f"p.{nm}" for nm in pnames],
+    )
+
+    for b, tag in ((TRAIN_B, ""), (1, "1")):
+
+        def fwd_fn(*flat):
+            params, rest = flat[:n], flat[n:]
+            tokens, lens = rest
+            return (M.router_forward(cfg, list(params), tokens, lens),)
+
+        lower_one(
+            out_dir, mw, f"router.fwd{tag}", fwd_fn,
+            param_ins(cfg, head=True)
+            + [
+                ("tokens", _spec((b, S_PROMPT), S32), "data"),
+                ("lens", _spec((b,), S32), "data"),
+            ],
+            ["score"],
+        )
+
+    def train_fn(*flat):
+        params, m, v = flat[:n], flat[n : 2 * n], flat[2 * n : 3 * n]
+        tokens, lens, labels, lr, step = flat[3 * n :]
+        return M.router_train_step(
+            cfg, list(params), list(m), list(v), tokens, lens, labels, lr, step
+        )
+
+    lower_one(
+        out_dir, mw, "router.train", train_fn,
+        param_ins(cfg, head=True)
+        + param_ins(cfg, head=True, cls="opt", prefix="m.")
+        + param_ins(cfg, head=True, cls="opt", prefix="v.")
+        + [
+            ("tokens", _spec((TRAIN_B, S_PROMPT), S32), "data"),
+            ("lens", _spec((TRAIN_B,), S32), "data"),
+            ("labels", _spec((TRAIN_B,), F32), "data"),
+            ("lr", _spec((), F32), "data"),
+            ("step", _spec((), S32), "data"),
+        ],
+        [f"p.{nm}" for nm in pnames]
+        + [f"m.{nm}" for nm in pnames]
+        + [f"v.{nm}" for nm in pnames]
+        + ["loss"],
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--only",
+        default="",
+        help="comma-separated subset of model names to lower (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    t0 = time.time()
+    mw = ManifestWriter()
+    for name in LM_SIZES:
+        mw.model(CFGS[name])
+    mw.model(CFGS["scorer"])
+    mw.model(CFGS["router"], head=True)
+
+    for name in LM_SIZES:
+        if only and name not in only:
+            continue
+        print(f"[aot] lowering LM '{name}'", flush=True)
+        lm_artifacts(args.out, mw, CFGS[name])
+    if not only or "scorer" in only:
+        print("[aot] lowering scorer", flush=True)
+        scorer_artifacts(args.out, mw, CFGS["scorer"])
+    if not only or "router" in only:
+        print("[aot] lowering router", flush=True)
+        router_artifacts(args.out, mw, CFGS["router"])
+
+    mw.write(os.path.join(args.out, "manifest.txt"))
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {args.out}/manifest.txt", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

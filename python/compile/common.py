@@ -1,0 +1,69 @@
+"""Shared constants for the Hybrid-LLM reproduction compile path.
+
+Everything here must stay in sync with the rust side, which learns these
+values from ``artifacts/manifest.txt`` (written by ``aot.py``) rather than
+hard-coding them.
+
+Vocabulary (64 tokens)
+----------------------
+0 PAD, 1 BOS, 2 EOS, 3 SEP, 4..29 letters a..z, 30..39 digits 0..9,
+40..49 task keywords (COPY, DOUBLE, REV, SORT, DEDUP, SUCC, ADD, COUNT,
+EXTR, ROT), 50 COLON marker, 51..63 reserved.
+"""
+
+from dataclasses import dataclass
+
+VOCAB = 64
+S_CTX = 64  # total context (prompt + generated answer)
+S_PROMPT = 40  # max prompt length (incl BOS .. SEP)
+A_MAX = 24  # max answer length (incl EOS)
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+LETTER0 = 4  # 'a'
+DIGIT0 = 30  # '0'
+TASK0 = 40  # first task keyword token
+COLON = 50
+
+GEN_B = 16  # batch for generation (prefill/decode) artifacts
+TRAIN_B = 32  # batch for LM / router train-step artifacts
+SCORE_B = 32  # batch for scorer artifacts
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.01
+GRAD_CLIP = 1.0
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """Transformer dims for one roster entry."""
+
+    name: str
+    d: int
+    layers: int
+    heads: int
+    ff: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.heads == 0
+        return self.d // self.heads
+
+
+# The LM roster mirrors the paper's model line-up (DESIGN.md §3):
+#   nano   ~ FLAN-t5 (800m)     micro ~ FLAN-t5 (11b)
+#   small  ~ Llama-2 (7b)       medium ~ Llama-2 (13b)
+#   large  ~ GPT-3.5-turbo
+# plus the BART-analogue scorer and the DeBERTa-analogue router encoder.
+LM_SIZES = ("nano", "micro", "small", "medium", "large")
+
+CFGS = {
+    "nano": ModelCfg("nano", d=32, layers=1, heads=2, ff=64),
+    "micro": ModelCfg("micro", d=48, layers=2, heads=3, ff=96),
+    "small": ModelCfg("small", d=64, layers=3, heads=4, ff=128),
+    "medium": ModelCfg("medium", d=96, layers=4, heads=4, ff=192),
+    "large": ModelCfg("large", d=128, layers=6, heads=8, ff=256),
+    "scorer": ModelCfg("scorer", d=96, layers=4, heads=4, ff=192),
+    "router": ModelCfg("router", d=64, layers=2, heads=4, ff=128),
+}

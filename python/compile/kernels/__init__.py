@@ -1,0 +1,12 @@
+"""L1 Pallas kernels + pure-jnp oracle."""
+
+from .attention import flash_attention
+from .decode_attention import decode_attention
+from .ref import ref_attention, ref_decode_attention
+
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "ref_attention",
+    "ref_decode_attention",
+]

@@ -1,0 +1,96 @@
+"""Pallas flash-style prefill attention (L1 hot-spot kernel).
+
+TPU adaptation of the paper's GPU serving hot path (DESIGN.md §5): instead
+of a threadblock-per-tile CUDA schedule with shared-memory staging, the
+HBM→VMEM schedule is expressed with ``BlockSpec``s — the kernel walks the
+KV sequence in ``BLOCK_KV``-sized tiles with an *online softmax* (running
+max / running sum), exactly the flash-attention recurrence.
+
+Grid = (heads,): each program instance holds one head's Q/K/V for the
+*whole batch* in VMEM and computes all B rows of the recurrence at once.
+As with the decode kernel, batch is kept inside the block rather than on
+the grid because grid instances execute sequentially in interpret mode
+(and on a single TPU core) — moving B off the grid measured ~3–4× faster
+per query at B=16 (EXPERIMENTS.md §Perf L1). VMEM per instance at B=16,
+S=64, Dh≤32: Q+O `[B,S,Dh]` ×2 + one KV tile ×2 + running stats ≈ 560 KB
+— still ~3% of a 16 MB VMEM; at production dims you would tile Q across
+the grid as well.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO ops and validated
+against ``ref.py``; real-TPU performance is estimated analytically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+BLOCK_KV = 16  # KV tile width walked by the online-softmax loop
+
+
+def _attention_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, *, causal: bool, s: int, dh: int):
+    """One (head,) program instance over the full batch.
+
+    Block shapes: ``q_ref/k_ref/v_ref/o_ref: [B, S, 1, Dh]``,
+    ``lens_ref: [B]``.
+    """
+    q = q_ref[:, :, 0, :].astype(jnp.float32)  # [B, S, Dh]
+    b = q.shape[0]
+    length = lens_ref[...]  # [B]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    m_i = jnp.full((b, s), NEG_INF, jnp.float32)  # running row max
+    l_i = jnp.zeros((b, s), jnp.float32)  # running row sum
+    acc = jnp.zeros((b, s, dh), jnp.float32)  # running output accumulator
+
+    rows = jax.lax.iota(jnp.int32, s)
+    n_blocks = pl.cdiv(s, BLOCK_KV)
+    for blk in range(n_blocks):  # static unroll: the flash KV walk
+        bw = min(BLOCK_KV, s - blk * BLOCK_KV)  # ragged last tile
+        k_blk = k_ref[:, pl.dslice(blk * BLOCK_KV, bw), 0, :].astype(jnp.float32)
+        v_blk = v_ref[:, pl.dslice(blk * BLOCK_KV, bw), 0, :].astype(jnp.float32)
+        sc = jnp.einsum("bqd,bkd->bqk", q, k_blk) * scale  # [B, S, bw]
+        cols = blk * BLOCK_KV + jax.lax.iota(jnp.int32, bw)
+        ok = cols[None, None, :] < length[:, None, None]  # [B, 1->S, bw]
+        if causal:
+            ok = jnp.logical_and(ok, (cols[None, :] <= rows[:, None])[None, :, :])
+        sc = jnp.where(ok, sc, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[:, :, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_i = l_i * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, :, None] + jnp.einsum("bqk,bkd->bqd", p, v_blk)
+        m_i = m_new
+
+    out = acc / jnp.maximum(l_i, 1e-30)[:, :, None]
+    o_ref[:, :, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, lens, causal=True):
+    """Flash-style attention; drop-in for ``ref.ref_attention``.
+
+    Args:
+      q, k, v: ``[B, S, H, Dh]``.
+      lens: ``[B]`` int32 valid key prefix per example.
+      causal: static — causal (LM) vs bidirectional (router encoder).
+    """
+    B, S, H, Dh = q.shape
+    kernel = functools.partial(_attention_kernel, causal=causal, s=S, dh=Dh)
+    qkv_spec = pl.BlockSpec((B, S, 1, Dh), lambda h: (0, 0, h, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((B,), lambda h: (0,)),  # lens
+            qkv_spec,
+            qkv_spec,
+            qkv_spec,
+        ],
+        out_specs=qkv_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, H, Dh), q.dtype),
+        interpret=True,
+    )(lens, q, k, v)

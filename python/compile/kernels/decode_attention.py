@@ -1,0 +1,71 @@
+"""Pallas single-step decode attention (the serving hot path).
+
+One new query token per sequence attends to the KV cache; this is the
+kernel executed once per generated token per layer, i.e. the innermost
+loop of the whole serving system.
+
+Grid = (heads,): each program instance holds one head's cache slice for
+the *whole batch* (`[B, S, Dh]` in VMEM) and computes all B rows at
+once. The batch dimension is deliberately kept inside the block rather
+than on the grid: interpret-mode Pallas (and a single TPU core) executes
+grid instances *sequentially*, so a (B, H) grid serializes over batch —
+measured 3–4× slower per query at B=16 on this substrate (see
+EXPERIMENTS.md §Perf L1). VMEM per instance at B=16, S=64, Dh≤32 is
+2·B·S·Dh·4 ≈ 256 KB — comfortably inside a real core's budget too. No
+online softmax is needed: with query length 1 the full score row is a
+single `[S]` vector (the flash recurrence degenerates).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, s: int, dh: int):
+    """Block shapes: ``q_ref/o_ref: [B, 1, Dh]``, ``k_ref/v_ref: [B, S, 1, Dh]``,
+    ``pos_ref: [B]`` (full batch per (head,) program instance)."""
+    q = q_ref[:, 0, :].astype(jnp.float32)  # [B, Dh]
+    k = k_ref[:, :, 0, :].astype(jnp.float32)  # [B, S, Dh]
+    v = v_ref[:, :, 0, :].astype(jnp.float32)  # [B, S, Dh]
+    pos = pos_ref[...]  # [B]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    sc = jnp.einsum("bd,bsd->bs", q, k) * scale  # [B, S]
+    jj = jax.lax.iota(jnp.int32, s)[None, :]
+    sc = jnp.where(jj <= pos[:, None], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o_ref[:, 0, :] = jnp.einsum("bs,bsd->bd", p, v).astype(o_ref.dtype)
+
+
+@jax.jit
+def decode_attention(q, kcache, vcache, pos):
+    """Single-query cached attention; drop-in for ``ref.ref_decode_attention``.
+
+    Args:
+      q: ``[B, H, Dh]`` query at position ``pos[b]``.
+      kcache, vcache: ``[B, S, H, Dh]``; entries ``> pos[b]`` are garbage.
+      pos: ``[B]`` int32; attends to ``j <= pos[b]``.
+    """
+    B, S, H, Dh = kcache.shape
+    kernel = functools.partial(_decode_kernel, s=S, dh=Dh)
+    cache_spec = pl.BlockSpec((B, S, 1, Dh), lambda h: (0, 0, h, 0))
+    q_spec = pl.BlockSpec((B, 1, Dh), lambda h: (0, h, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((B,), lambda h: (0,)),  # pos
+            q_spec,
+            cache_spec,
+            cache_spec,
+        ],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+        interpret=True,
+    )(pos, q, kcache, vcache)

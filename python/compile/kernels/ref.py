@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *correctness contract* for ``attention.py`` and
+``decode_attention.py``: pytest (with hypothesis sweeps over shapes,
+lengths and dtypes) asserts allclose between the kernels and these
+references. They are also used directly inside the *training* graphs,
+where gradients must flow (the Pallas kernels define no VJP; serving is
+the hot path, see DESIGN.md §5).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(q, k, v, lens, causal=True):
+    """Multi-head attention over a full sequence.
+
+    Args:
+      q, k, v: ``[B, S, H, Dh]``.
+      lens: ``[B]`` int32 — valid prefix length per example; key/value
+        positions ``>= lens[b]`` are masked out.
+      causal: if True, query position ``i`` attends only to ``j <= i``.
+
+    Returns:
+      ``[B, S, H, Dh]`` attention output (same dtype as ``q``).
+    """
+    B, S, H, Dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(Dh, jnp.float32))
+    # [B, H, S, S]
+    s = jnp.einsum("bihd,bjhd->bhij", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    ii = jnp.arange(S)[:, None]
+    jj = jnp.arange(S)[None, :]
+    mask = jj[None, :, :] < lens[:, None, None]  # [B, S, S] key validity
+    if causal:
+        mask = jnp.logical_and(mask, (jj <= ii)[None, :, :])
+    s = jnp.where(mask[:, None, :, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhij,bjhd->bihd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_decode_attention(q, kcache, vcache, pos):
+    """Single-step attention of one new query against a KV cache.
+
+    Args:
+      q: ``[B, H, Dh]`` — query for the token at position ``pos[b]``.
+      kcache, vcache: ``[B, S, H, Dh]`` — positions ``> pos[b]`` may hold
+        garbage and must not contribute.
+      pos: ``[B]`` int32 — current position (attends to ``j <= pos[b]``,
+        i.e. the cache is expected to already contain this step's K/V).
+
+    Returns:
+      ``[B, H, Dh]``.
+    """
+    B, S, H, Dh = kcache.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(Dh, jnp.float32))
+    s = jnp.einsum("bhd,bjhd->bhj", q.astype(jnp.float32), kcache.astype(jnp.float32)) * scale
+    jj = jnp.arange(S)[None, None, :]
+    mask = jj <= pos[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhj,bjhd->bhd", p, vcache.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,361 @@
+"""L2: JAX transformer models for the Hybrid-LLM reproduction.
+
+Defines, for every roster entry (DESIGN.md §3):
+
+* ``init_params``     — seeded parameter initialization,
+* ``prefill``         — prompt ingestion: fills the KV cache and samples
+                        the first answer token (Pallas flash attention),
+* ``decode_step``     — one autoregressive step against the KV cache
+                        (Pallas decode attention) with in-graph sampling,
+* ``score``           — BART-score analogue: mean per-token log-prob of a
+                        response region under the scorer LM,
+* ``router_forward``  — DeBERTa-analogue encoder score in [0, 1],
+* ``lm_train_step`` / ``router_train_step`` — fused fwd+bwd+AdamW updates
+                        (gradients flow through the jnp reference
+                        attention; the Pallas kernels define no VJP).
+
+All functions operate on *flat parameter lists* in the order of
+``param_names(cfg)`` so that the AOT artifacts' HLO parameter numbering is
+deterministic and recorded in the manifest for the rust side.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    ADAM_B1,
+    ADAM_B2,
+    ADAM_EPS,
+    GRAD_CLIP,
+    S_CTX,
+    VOCAB,
+    WEIGHT_DECAY,
+    ModelCfg,
+)
+from .kernels import decode_attention, flash_attention, ref_attention
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelCfg, head: bool = False):
+    """Ordered ``[(name, shape)]`` for a roster entry.
+
+    ``head=True`` adds the router's pooled MLP head. The order of this
+    list *is* the HLO parameter order of every artifact (manifest
+    contract with rust).
+    """
+    d, ff = cfg.d, cfg.ff
+    shapes = [("emb", (VOCAB, d)), ("pos", (S_CTX, d))]
+    for l in range(cfg.layers):
+        p = f"l{l:02d}."
+        shapes += [
+            (p + "ln1g", (d,)),
+            (p + "ln1b", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ln2g", (d,)),
+            (p + "ln2b", (d,)),
+            (p + "w1", (d, ff)),
+            (p + "b1", (ff,)),
+            (p + "w2", (ff, d)),
+            (p + "b2", (d,)),
+        ]
+    shapes += [("lnfg", (d,)), ("lnfb", (d,))]
+    if head:
+        shapes += [
+            ("head.w1", (d, d)),
+            ("head.b1", (d,)),
+            ("head.w2", (d, 1)),
+            ("head.b2", (1,)),
+        ]
+    return shapes
+
+
+def param_names(cfg: ModelCfg, head: bool = False):
+    return [n for n, _ in param_shapes(cfg, head)]
+
+
+def init_params(cfg: ModelCfg, seed, head: bool = False):
+    """Seeded init; returns the flat param list (manifest order).
+
+    Residual-output projections (``wo``, ``w2``) are scaled by
+    ``1/sqrt(2*layers)`` (GPT-2-style) so depth does not blow up the
+    residual stream; gains start at 1, biases at 0.
+    """
+    key = jax.random.PRNGKey(seed)
+    out = []
+    resid_scale = 1.0 / jnp.sqrt(jnp.float32(2 * cfg.layers))
+    for i, (name, shape) in enumerate(param_shapes(cfg, head)):
+        k = jax.random.fold_in(key, i)
+        base = name.split(".")[-1]
+        if base in ("ln1g", "ln2g", "lnfg"):
+            w = jnp.ones(shape, jnp.float32)
+        elif base in ("ln1b", "ln2b", "lnfb", "b1", "b2"):
+            w = jnp.zeros(shape, jnp.float32)
+        else:
+            w = jax.random.normal(k, shape, jnp.float32) * 0.02
+            if base in ("wo", "w2") and name.startswith("l"):
+                w = w * resid_scale
+        out.append(w)
+    return out
+
+
+def as_dict(cfg: ModelCfg, flat, head: bool = False):
+    names = param_names(cfg, head)
+    assert len(names) == len(flat), (len(names), len(flat))
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _ln(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _attn_full(cfg, p, l, x, lens, causal, use_pallas):
+    """Full-sequence attention sub-block; x: [B,S,d] -> [B,S,d]."""
+    B, S, d = x.shape
+    H, Dh = cfg.heads, cfg.head_dim
+    pre = f"l{l:02d}."
+    h = _ln(x, p[pre + "ln1g"], p[pre + "ln1b"])
+    q = (h @ p[pre + "wq"]).reshape(B, S, H, Dh)
+    k = (h @ p[pre + "wk"]).reshape(B, S, H, Dh)
+    v = (h @ p[pre + "wv"]).reshape(B, S, H, Dh)
+    attn = flash_attention(q, k, v, lens, causal) if use_pallas else ref_attention(q, k, v, lens, causal)
+    return x + attn.reshape(B, S, d) @ p[pre + "wo"], k, v
+
+
+def _mlp(cfg, p, l, x):
+    pre = f"l{l:02d}."
+    h = _ln(x, p[pre + "ln2g"], p[pre + "ln2b"])
+    return x + (jax.nn.gelu(h @ p[pre + "w1"] + p[pre + "b1"])) @ p[pre + "w2"] + p[pre + "b2"]
+
+
+def lm_logits(cfg, p, tokens, lens, causal=True, use_pallas=True):
+    """Teacher-forced logits over a full sequence; tokens: [B,S] -> [B,S,V]."""
+    B, S = tokens.shape
+    x = p["emb"][tokens] + p["pos"][:S][None, :, :]
+    for l in range(cfg.layers):
+        x, _, _ = _attn_full(cfg, p, l, x, lens, causal, use_pallas)
+        x = _mlp(cfg, p, l, x)
+    x = _ln(x, p["lnfg"], p["lnfb"])
+    return x @ p["emb"].T
+
+
+def _sample(logits, seeds, step, temp):
+    """In-graph sampling: per-example threefry keys, temperature, greedy at 0.
+
+    Returns (token [B] int32, logprob [B] f32 of the sampled token).
+    """
+    B = logits.shape[0]
+    base = jax.random.PRNGKey(0)
+
+    def one(seed, s, lg):
+        k = jax.random.fold_in(jax.random.fold_in(base, seed), s)
+        return jax.random.categorical(k, lg / jnp.maximum(temp, 1e-6))
+
+    sampled = jax.vmap(one, in_axes=(0, None, 0))(seeds, step, logits)
+    greedy = jnp.argmax(logits, axis=-1)
+    tok = jnp.where(temp > 1e-6, sampled, greedy).astype(jnp.int32)
+    lp = jax.nn.log_softmax(logits, axis=-1)[jnp.arange(B), tok]
+    return tok, lp
+
+
+# ---------------------------------------------------------------------------
+# Serving graphs (AOT-lowered; Pallas kernels on the hot path)
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg, flat, prompt, lens, seeds, temp, use_pallas=True):
+    """Ingest right-padded prompts, fill the KV cache, sample 1st token.
+
+    Args:
+      flat: params (manifest order).
+      prompt: [B, Sp] int32 right-padded with PAD.
+      lens: [B] int32 true prompt lengths (>= 1).
+      seeds: [B] uint32 per-slot sampling seeds.
+      temp: scalar f32 (0 => greedy).
+
+    Returns:
+      (first_tok [B] i32, logprob [B] f32,
+       kcache [L,B,S_CTX,H,Dh] f32, vcache [L,B,S_CTX,H,Dh] f32)
+
+    Cache layout is *compacted*: the answer continues at position
+    ``lens[b]``, overwriting the pad region, so decode masks ``j <= pos``
+    never see stale prompt padding (DESIGN.md §4).
+    """
+    p = as_dict(cfg, flat)
+    B, Sp = prompt.shape
+    H, Dh, L = cfg.heads, cfg.head_dim, cfg.layers
+    x = p["emb"][prompt] + p["pos"][:Sp][None, :, :]
+    ks, vs = [], []
+    for l in range(L):
+        x, k, v = _attn_full(cfg, p, l, x, lens, True, use_pallas)
+        x = _mlp(cfg, p, l, x)
+        pad = ((0, 0), (0, S_CTX - Sp), (0, 0), (0, 0))
+        ks.append(jnp.pad(k, pad))
+        vs.append(jnp.pad(v, pad))
+    x = _ln(x, p["lnfg"], p["lnfb"])
+    logits_all = x @ p["emb"].T  # [B, Sp, V]
+    last = jnp.clip(lens - 1, 0, Sp - 1)
+    logits = logits_all[jnp.arange(B), last]  # [B, V]
+    tok, lp = _sample(logits, seeds, jnp.zeros((), jnp.int32), temp)
+    kcache = jnp.stack(ks)  # [L,B,S_CTX,H,Dh]
+    vcache = jnp.stack(vs)
+    return tok, lp, kcache, vcache
+
+
+def decode_step(cfg, flat, kcache, vcache, tok, pos, step, seeds, temp, use_pallas=True):
+    """One autoregressive step for all B slots.
+
+    Args:
+      tok: [B] i32 current input token (the previously sampled one).
+      pos: [B] i32 its position (K/V written there; attends j <= pos).
+      step: scalar i32 decode step counter (folded into sampling keys).
+      seeds, temp: as in ``prefill``.
+
+    Returns: (next_tok [B], logprob [B], kcache', vcache').
+    """
+    p = as_dict(cfg, flat)
+    B = tok.shape[0]
+    H, Dh, L = cfg.heads, cfg.head_dim, cfg.layers
+    x = p["emb"][tok] + p["pos"][pos]  # [B, d]
+    for l in range(L):
+        pre = f"l{l:02d}."
+        h = _ln(x, p[pre + "ln1g"], p[pre + "ln1b"])
+        q = (h @ p[pre + "wq"]).reshape(B, H, Dh)
+        k = (h @ p[pre + "wk"]).reshape(B, H, Dh)
+        v = (h @ p[pre + "wv"]).reshape(B, H, Dh)
+
+        def write(cache_b, new_b, pb):
+            return jax.lax.dynamic_update_slice(cache_b, new_b[None], (pb, 0, 0))
+
+        kc_l = jax.vmap(write)(kcache[l], k, pos)  # [B,S,H,Dh]
+        vc_l = jax.vmap(write)(vcache[l], v, pos)
+        kcache = kcache.at[l].set(kc_l)
+        vcache = vcache.at[l].set(vc_l)
+        if use_pallas:
+            attn = decode_attention(q, kc_l, vc_l, pos)
+        else:
+            from .kernels import ref_decode_attention
+
+            attn = ref_decode_attention(q, kc_l, vc_l, pos)
+        x = x + attn.reshape(B, cfg.d) @ p[pre + "wo"]
+        x = _mlp(cfg, p, l, x[:, None, :])[:, 0, :]
+    x = _ln(x, p["lnfg"], p["lnfb"])
+    logits = x @ p["emb"].T
+    tok2, lp = _sample(logits, seeds, step, temp)
+    return tok2, lp, kcache, vcache
+
+
+def score(cfg, flat, tokens, resp_mask, use_pallas=True):
+    """BART-score analogue: mean next-token log-prob over the response.
+
+    tokens: [B,S] full teacher-forced sequence (BOS prompt SEP answer EOS
+    PAD*); resp_mask: [B,S] f32, 1.0 on positions whose *token* belongs to
+    the response (incl EOS). Score of example b =
+    mean_{t: mask[t]=1} log p(tokens[t] | tokens[<t]).
+    """
+    p = as_dict(cfg, flat)
+    B, S = tokens.shape
+    lens = jnp.sum((tokens != 0).astype(jnp.int32), axis=1)
+    logits = lm_logits(cfg, p, tokens, lens, causal=True, use_pallas=use_pallas)
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)  # predicts tokens[:,1:]
+    tgt = tokens[:, 1:]
+    tok_lp = jnp.take_along_axis(lp, tgt[:, :, None], axis=-1)[:, :, 0]  # [B,S-1]
+    m = resp_mask[:, 1:]
+    denom = jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return jnp.sum(tok_lp * m, axis=1) / denom
+
+
+def router_forward(cfg, flat, tokens, lens, use_pallas=True):
+    """Router score p_w(x) in [0,1]; single bidirectional encoder pass."""
+    p = as_dict(cfg, flat, head=True)
+    B, S = tokens.shape
+    x = p["emb"][tokens] + p["pos"][:S][None, :, :]
+    for l in range(cfg.layers):
+        x, _, _ = _attn_full(cfg, p, l, x, lens, False, use_pallas)
+        x = _mlp(cfg, p, l, x)
+    x = _ln(x, p["lnfg"], p["lnfb"])
+    mask = (jnp.arange(S)[None, :] < lens[:, None]).astype(jnp.float32)
+    pooled = jnp.sum(x * mask[:, :, None], axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1, keepdims=True), 1.0
+    )
+    h = jnp.tanh(pooled @ p["head.w1"] + p["head.b1"])
+    logit = (h @ p["head.w2"] + p["head.b2"])[:, 0]
+    return jax.nn.sigmoid(logit)
+
+
+# ---------------------------------------------------------------------------
+# Training graphs (fused fwd+bwd+AdamW; jnp reference attention for VJP)
+# ---------------------------------------------------------------------------
+
+
+def _adamw(flat, m, v, grads, lr, step):
+    """AdamW with global-norm clipping; returns (flat', m', v')."""
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+    scale = jnp.minimum(1.0, GRAD_CLIP / gnorm)
+    t = step.astype(jnp.float32)
+    b1c = 1.0 - ADAM_B1 ** t
+    b2c = 1.0 - ADAM_B2 ** t
+    new_p, new_m, new_v = [], [], []
+    for pi, mi, vi, gi in zip(flat, m, v, grads):
+        g = gi * scale
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = mi / b1c
+        vhat = vi / b2c
+        upd = mhat / (jnp.sqrt(vhat) + ADAM_EPS) + WEIGHT_DECAY * pi
+        new_p.append(pi - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def _lm_loss(cfg, flat, tokens, loss_mask):
+    p = as_dict(cfg, flat)
+    lens = jnp.sum((tokens != 0).astype(jnp.int32), axis=1)
+    logits = lm_logits(cfg, p, tokens, lens, causal=True, use_pallas=False)
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    tok_lp = jnp.take_along_axis(lp, tgt[:, :, None], axis=-1)[:, :, 0]
+    m = loss_mask[:, 1:]
+    return -jnp.sum(tok_lp * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def lm_train_step(cfg, flat, m, v, tokens, loss_mask, lr, step):
+    """One AdamW step of next-token CE on the answer region.
+
+    Returns (flat', m', v', loss)."""
+    loss, grads = jax.value_and_grad(lambda f: _lm_loss(cfg, f, tokens, loss_mask))(list(flat))
+    new_p, new_m, new_v = _adamw(flat, m, v, grads, lr, step)
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+
+def _router_loss(cfg, flat, tokens, lens, labels):
+    s = router_forward(cfg, flat, tokens, lens, use_pallas=False)
+    s = jnp.clip(s, 1e-6, 1.0 - 1e-6)
+    return -jnp.mean(labels * jnp.log(s) + (1.0 - labels) * jnp.log(1.0 - s))
+
+
+def router_train_step(cfg, flat, m, v, tokens, lens, labels, lr, step):
+    """One AdamW step of (soft-label) BCE — Eqs. (1), (2), (4) of the paper
+    share this graph; the label *values* decide which router is trained.
+
+    Returns (flat', m', v', loss)."""
+    loss, grads = jax.value_and_grad(lambda f: _router_loss(cfg, f, tokens, lens, labels))(
+        list(flat)
+    )
+    new_p, new_m, new_v = _adamw(flat, m, v, grads, lr, step)
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)

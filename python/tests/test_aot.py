@@ -1,0 +1,106 @@
+"""AOT/manifest contract tests: the manifest must exactly describe the
+lowered artifacts (file presence, parameter counts, HLO parameter order),
+because the rust runtime trusts it blindly."""
+
+import os
+
+import pytest
+
+from compile import model as M
+from compile.common import CFGS, LM_SIZES
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def parse_manifest(path):
+    arts, models, globals_ = {}, {}, {}
+    cur = None
+    with open(path) as f:
+        for line in f:
+            parts = line.split()
+            if not parts:
+                continue
+            if parts[0] == "global":
+                globals_ = dict(zip(parts[1::2], parts[2::2]))
+            elif parts[0] == "model":
+                models[parts[1]] = dict(zip(parts[2::2], parts[3::2]))
+            elif parts[0] == "artifact":
+                cur = {"file": parts[3], "ins": [], "outs": []}
+                arts[parts[1]] = cur
+            elif parts[0] == "in":
+                cur["ins"].append((parts[1], parts[2], parts[3], parts[4]))
+            elif parts[0] == "out":
+                cur["outs"].append((parts[1], parts[2], parts[3]))
+    return globals_, models, arts
+
+
+@needs_artifacts
+def test_manifest_files_exist():
+    _, _, arts = parse_manifest(os.path.join(ART, "manifest.txt"))
+    assert len(arts) == 38
+    for name, a in arts.items():
+        p = os.path.join(ART, a["file"])
+        assert os.path.exists(p), name
+        assert os.path.getsize(p) > 1000, name
+
+
+@needs_artifacts
+def test_manifest_artifact_set_complete():
+    _, _, arts = parse_manifest(os.path.join(ART, "manifest.txt"))
+    for s in LM_SIZES:
+        for kind in ("init", "prefill", "decode", "prefill1", "decode1", "train"):
+            assert f"{s}.{kind}" in arts, (s, kind)
+    for kind in ("init", "train", "score", "score1"):
+        assert f"scorer.{kind}" in arts
+    for kind in ("init", "fwd", "fwd1", "train"):
+        assert f"router.{kind}" in arts
+
+
+@needs_artifacts
+def test_manifest_param_order_matches_model():
+    """The in-lines of each artifact must list params in param_names order
+    (that order is the HLO parameter numbering rust relies on)."""
+    _, models, arts = parse_manifest(os.path.join(ART, "manifest.txt"))
+    for s in LM_SIZES + ("scorer",):
+        names = M.param_names(CFGS[s])
+        ins = arts[f"{s}.train"]["ins"]
+        got_p = [n[2:] for n, _, _, c in ins if c == "param"]
+        assert got_p == names, s
+        got_m = [n[2:] for n, _, _, c in ins if c == "opt" and n.startswith("m.")]
+        assert got_m == names, s
+    names = M.param_names(CFGS["router"], head=True)
+    ins = arts["router.fwd"]["ins"]
+    got = [n[2:] for n, _, _, c in ins if c == "param"]
+    assert got == names
+
+
+@needs_artifacts
+def test_manifest_hlo_param_count_matches():
+    """HLO text must declare exactly as many parameters as manifest ins."""
+    import re
+
+    _, _, arts = parse_manifest(os.path.join(ART, "manifest.txt"))
+    for name in ("nano.decode", "router.fwd", "scorer.score", "nano.init"):
+        a = arts[name]
+        text = open(os.path.join(ART, a["file"])).read()
+        # count distinct parameter(k) declarations in the ENTRY computation
+        entry = text.split("ENTRY")[1]
+        params = set(re.findall(r"parameter\((\d+)\)", entry))
+        assert len(params) == len(a["ins"]), (name, len(params), len(a["ins"]))
+
+
+@needs_artifacts
+def test_manifest_model_dims():
+    _, models, _ = parse_manifest(os.path.join(ART, "manifest.txt"))
+    for s in LM_SIZES:
+        cfg = CFGS[s]
+        m = models[s]
+        assert int(m["d"]) == cfg.d
+        assert int(m["layers"]) == cfg.layers
+        assert int(m["heads"]) == cfg.heads
+        assert int(m["nparams"]) == len(M.param_names(cfg))

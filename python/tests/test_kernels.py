@@ -1,0 +1,155 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, dtypes, lengths and causality; these tests are
+the core numerical contract for everything the rust side executes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import (
+    decode_attention,
+    flash_attention,
+    ref_attention,
+    ref_decode_attention,
+)
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+@st.composite
+def attn_case(draw):
+    b = draw(st.integers(1, 4))
+    s = draw(st.integers(1, 70))
+    h = draw(st.integers(1, 4))
+    dh = draw(st.sampled_from([4, 8, 16, 24, 32]))
+    causal = draw(st.booleans())
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    lens = draw(st.lists(st.integers(1, s), min_size=b, max_size=b))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return b, s, h, dh, causal, dtype, lens, seed
+
+
+@given(attn_case())
+def test_flash_attention_matches_ref(case):
+    b, s, h, dh, causal, dtype, lens, seed = case
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (b, s, h, dh), dtype)
+    k = _rand(kk, (b, s, h, dh), dtype)
+    v = _rand(kv, (b, s, h, dh), dtype)
+    lens = jnp.array(lens, jnp.int32)
+    got = flash_attention(q, k, v, lens, causal)
+    want = ref_attention(q, k, v, lens, causal)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@st.composite
+def decode_case(draw):
+    b = draw(st.integers(1, 4))
+    s = draw(st.integers(1, 70))
+    h = draw(st.integers(1, 4))
+    dh = draw(st.sampled_from([4, 8, 16, 32]))
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    pos = draw(st.lists(st.integers(0, s - 1), min_size=b, max_size=b))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return b, s, h, dh, dtype, pos, seed
+
+
+@given(decode_case())
+def test_decode_attention_matches_ref(case):
+    b, s, h, dh, dtype, pos, seed = case
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (b, h, dh), dtype)
+    kc = _rand(kk, (b, s, h, dh), dtype)
+    vc = _rand(kv, (b, s, h, dh), dtype)
+    pos = jnp.array(pos, jnp.int32)
+    got = decode_attention(q, kc, vc, pos)
+    want = ref_decode_attention(q, kc, vc, pos)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_decode_ignores_garbage_beyond_pos():
+    """Cache positions > pos must not affect the output at all."""
+    key = jax.random.PRNGKey(0)
+    b, s, h, dh = 2, 16, 2, 8
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (b, h, dh), jnp.float32)
+    kc = _rand(kk, (b, s, h, dh), jnp.float32)
+    vc = _rand(kv, (b, s, h, dh), jnp.float32)
+    pos = jnp.array([3, 9], jnp.int32)
+    base = decode_attention(q, kc, vc, pos)
+    kc2 = kc.at[0, 4:].set(1e6).at[1, 10:].set(-1e6)
+    vc2 = vc.at[0, 4:].set(1e6).at[1, 10:].set(-1e6)
+    poisoned = decode_attention(q, kc2, vc2, pos)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned), rtol=1e-6, atol=1e-6)
+
+
+def test_flash_attention_respects_lens():
+    """Keys beyond lens[b] must not affect the output."""
+    key = jax.random.PRNGKey(1)
+    b, s, h, dh = 2, 12, 2, 8
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (b, s, h, dh), jnp.float32)
+    k = _rand(kk, (b, s, h, dh), jnp.float32)
+    v = _rand(kv, (b, s, h, dh), jnp.float32)
+    lens = jnp.array([5, 12], jnp.int32)
+    base = flash_attention(q, k, v, lens, causal=False)
+    k2 = k.at[0, 5:].set(1e6)
+    v2 = v.at[0, 5:].set(-1e6)
+    poisoned = flash_attention(q, k2, v2, lens, causal=False)
+    np.testing.assert_allclose(
+        np.asarray(base[:, :5]), np.asarray(poisoned[:, :5]), rtol=1e-6, atol=1e-6
+    )
+    # example 1 (full length) identical everywhere
+    np.testing.assert_allclose(np.asarray(base[1]), np.asarray(poisoned[1]), rtol=1e-6, atol=1e-6)
+
+
+def test_causal_first_position_is_value_passthrough():
+    """At i=0 with causal masking, output must equal v[:, 0] exactly-ish."""
+    key = jax.random.PRNGKey(2)
+    b, s, h, dh = 3, 8, 2, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (b, s, h, dh), jnp.float32)
+    k = _rand(kk, (b, s, h, dh), jnp.float32)
+    v = _rand(kv, (b, s, h, dh), jnp.float32)
+    lens = jnp.full((b,), s, jnp.int32)
+    out = flash_attention(q, k, v, lens, causal=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(v[:, 0]), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("s", [1, 15, 16, 17, 40, 64])
+def test_flash_attention_ragged_tiles(s):
+    """Sequence lengths straddling BLOCK_KV boundaries."""
+    key = jax.random.PRNGKey(3)
+    b, h, dh = 2, 2, 8
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (b, s, h, dh), jnp.float32)
+    k = _rand(kk, (b, s, h, dh), jnp.float32)
+    v = _rand(kv, (b, s, h, dh), jnp.float32)
+    lens = jnp.array([s, max(1, s // 2)], jnp.int32)
+    got = flash_attention(q, k, v, lens, causal=True)
+    want = ref_attention(q, k, v, lens, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,91 @@
+//! Bench: batching-policy ablation — continuous batching (iteration-level
+//! admission, vLLM/Orca-style) vs run-to-completion (static batches).
+//! The DESIGN.md §8 L3 target: continuous batching should win wall-clock
+//! on mixed-length workloads because finished slots are refilled instead
+//! of idling until the batch drains.
+
+use std::time::{Duration, Instant};
+
+use hybrid_llm::batching::BatchMode;
+use hybrid_llm::corpus::{generate, Scale};
+use hybrid_llm::lm::LmEngine;
+use hybrid_llm::runtime::Runtime;
+use hybrid_llm::serve::{ServeConfig, Server};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Runtime::default_dir();
+    if !artifacts.join("manifest.txt").exists() {
+        eprintln!("skipping bench: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let run_dir = std::env::temp_dir().join(format!("hybrid_ablation_{}", std::process::id()));
+    {
+        let rt = Runtime::load(&artifacts)?;
+        for model in ["small", "medium"] {
+            let eng = LmEngine::init(rt.clone(), model, 3)?;
+            eng.save(&run_dir.join("params").join(model))?;
+        }
+    }
+    let corpus = generate(23, Scale::Smoke);
+    let prompts: Vec<Vec<i32>> = corpus.iter().take(64).map(|q| q.prompt.clone()).collect();
+
+    println!("== batching ablation: 64 requests, small/medium ==");
+    println!(
+        "{:<22} {:>9} {:>10} {:>9} {:>9} {:>10} {:>12}",
+        "mode", "wall s", "req/s", "p50 ms", "p95 ms", "slot eff", "decode iters"
+    );
+    let mut walls = Vec::new();
+    for (mode, label) in [
+        (BatchMode::Continuous, "continuous"),
+        (BatchMode::RunToCompletion, "run-to-completion"),
+    ] {
+        let cfg = ServeConfig {
+            artifacts_dir: artifacts.clone(),
+            run_dir: run_dir.clone(),
+            small: "small".into(),
+            large: "medium".into(),
+            router: String::new(),
+            threshold: 0.5,
+            temp: 0.8,
+            mode,
+            batch_window: Duration::from_millis(2),
+        };
+        let server = Server::start(cfg)?;
+        let t0 = Instant::now();
+        // staggered arrivals: 4 waves to exercise admission policy
+        let mut rxs = Vec::new();
+        for chunk in prompts.chunks(16) {
+            for p in chunk {
+                rxs.push(server.submit(p.clone()));
+            }
+            std::thread::sleep(Duration::from_millis(120));
+        }
+        for rx in rxs {
+            rx.recv()?;
+        }
+        let wall = t0.elapsed();
+        let stats = server.shutdown()?;
+        let eff = if stats.decode_steps > 0 {
+            stats.decode_slot_steps as f64 / (stats.decode_steps as f64 * 16.0)
+        } else {
+            0.0
+        };
+        println!(
+            "{:<22} {:>9.2} {:>10.1} {:>9.0} {:>9.0} {:>10.2} {:>12}",
+            label,
+            wall.as_secs_f64(),
+            prompts.len() as f64 / wall.as_secs_f64(),
+            stats.e2e_latency.p50_ms,
+            stats.e2e_latency.p95_ms,
+            eff,
+            stats.decode_steps
+        );
+        walls.push(wall.as_secs_f64());
+    }
+    println!(
+        "\ncontinuous vs run-to-completion speedup: {:.2}x",
+        walls[1] / walls[0].max(1e-9)
+    );
+    let _ = std::fs::remove_dir_all(&run_dir);
+    Ok(())
+}

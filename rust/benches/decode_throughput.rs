@@ -1,0 +1,97 @@
+//! Bench: decode-step throughput per roster model — the serving hot path
+//! (one fused HLO call per generated token for B slots). Reports
+//! tokens/sec at full batch for each model size plus the B=1 latency
+//! path, quantifying the batching win and the model-size cost gradient
+//! that motivates routing in the first place.
+
+use hybrid_llm::bench::{report, Bencher};
+use hybrid_llm::corpus::{generate, Scale};
+use hybrid_llm::lm::LmEngine;
+use hybrid_llm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping bench: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let rt = Runtime::load(&dir)?;
+    let g = rt.manifest.globals;
+    let corpus = generate(7, Scale::Smoke);
+    let prompts: Vec<&[i32]> = corpus
+        .iter()
+        .take(g.genb)
+        .map(|q| q.prompt.as_slice())
+        .collect();
+    let seeds: Vec<u32> = (0..g.genb as u32).collect();
+
+    let b = Bencher::default();
+    let mut results = Vec::new();
+    for model in hybrid_llm::pipeline::ROSTER {
+        let eng = LmEngine::init(rt.clone(), model, 1)?;
+        // warm compile; untrained weights rarely emit EOS so every wave
+        // decodes to the full answer budget — worst-case throughput.
+        eng.generate(&prompts, &seeds, 0.8)?;
+        let tokens_per_wave = (g.genb * (hybrid_llm::corpus::A_MAX - 1)) as f64;
+        results.push(b.bench_items(
+            &format!("{model}.generate wave (B={})", g.genb),
+            tokens_per_wave,
+            &mut || {
+                eng.generate(&prompts, &seeds, 0.8).unwrap();
+            },
+        ));
+        // B=1 latency path on the largest + smallest only (slow)
+        if model == "nano" || model == "large" {
+            eng.generate_one(prompts[0], 0, 0.8)?;
+            results.push(b.bench(&format!("{model}.generate_one (B=1)"), || {
+                eng.generate_one(prompts[0], 0, 0.8).unwrap();
+            }));
+        }
+    }
+    report("decode_throughput (tokens/s where listed)", &results);
+
+    // ---- perf before/after: params re-uploaded per call (naive literal
+    // path) vs device-resident params (execute_b). This is the L3
+    // optimization recorded in EXPERIMENTS.md §Perf.
+    let eng = LmEngine::init(rt.clone(), "large", 1)?;
+    let exec = rt.exec("large.decode")?;
+    let meta = *rt.manifest.model("large")?;
+    let n = eng.params.len();
+    let cache_dims = vec![meta.layers, g.genb, g.sctx, meta.heads, meta.headdim];
+    let cache_len: usize = cache_dims.iter().product();
+    let kc = hybrid_llm::io::Tensor::f32(cache_dims.clone(), vec![0.0; cache_len]);
+    let vc = kc.clone();
+    let tok = hybrid_llm::io::Tensor::i32(vec![g.genb], vec![5; g.genb]);
+    let pos = hybrid_llm::io::Tensor::i32(vec![g.genb], vec![8; g.genb]);
+    let step = hybrid_llm::io::Tensor::i32(vec![], vec![1]);
+    let seeds_t = hybrid_llm::io::Tensor::u32(vec![g.genb], vec![0; g.genb]);
+    let temp = hybrid_llm::io::Tensor::f32(vec![], vec![0.8]);
+
+    let mut ins: Vec<&hybrid_llm::io::Tensor> = eng.params.host.iter().collect();
+    ins.extend([&kc, &vc, &tok, &pos, &step, &seeds_t, &temp]);
+    exec.run(&ins)?; // warm
+    let resident: std::collections::HashMap<usize, std::sync::Arc<xla::PjRtBuffer>> =
+        eng.params.device.iter().cloned().enumerate().collect();
+    let host: Vec<(usize, &hybrid_llm::io::Tensor)> = vec![
+        (n, &kc),
+        (n + 1, &vc),
+        (n + 2, &tok),
+        (n + 3, &pos),
+        (n + 4, &step),
+        (n + 5, &seeds_t),
+        (n + 6, &temp),
+    ];
+    exec.run_with_resident(&resident, &host)?; // warm
+
+    let mut results = Vec::new();
+    results.push(b.bench("large.decode literal path (re-upload params)", || {
+        exec.run(&ins).unwrap();
+    }));
+    results.push(b.bench("large.decode resident params (execute_b)", || {
+        exec.run_with_resident(&resident, &host).unwrap();
+    }));
+    report("decode step: naive vs resident params", &results);
+    let speedup = results[0].mean.as_secs_f64() / results[1].mean.as_secs_f64().max(1e-12);
+    println!("\nresident-params speedup on large.decode: {speedup:.2}x");
+    Ok(())
+}

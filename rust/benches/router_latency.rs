@@ -1,0 +1,46 @@
+//! Bench: router scoring latency — the paper's claim that the router adds
+//! negligible overhead (Table 2 row 1, §4.4). Measures the single-query
+//! path (B=1 artifact) and the batched path (B=32), plus the pure
+//! manifest-validation overhead. Uses seeded-init router params (latency
+//! is weight-independent), so this runs without a pipeline run.
+
+use hybrid_llm::bench::{report, Bencher};
+use hybrid_llm::corpus::{generate, Scale};
+use hybrid_llm::router::RouterEngine;
+use hybrid_llm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping bench: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let rt = Runtime::load(&dir)?;
+    let router = RouterEngine::init(rt.clone(), 0)?;
+    let corpus = generate(7, Scale::Smoke);
+    let prompts: Vec<&[i32]> = corpus.iter().take(32).map(|q| q.prompt.as_slice()).collect();
+
+    // warm the executable cache
+    router.score_one(prompts[0])?;
+    router.scores(&prompts)?;
+
+    let b = Bencher::default();
+    let mut results = Vec::new();
+    results.push(b.bench("router.score_one (B=1)", || {
+        router.score_one(prompts[0]).unwrap();
+    }));
+    results.push(b.bench_items("router.scores (B=32)", 32.0, &mut || {
+        router.scores(&prompts).unwrap();
+    }));
+    report("router_latency", &results);
+
+    let one = results[0].mean.as_secs_f64();
+    let batched = results[1].mean.as_secs_f64() / 32.0;
+    println!(
+        "\nper-query: single {:.3} ms, batched {:.3} ms ({:.1}x amortization)",
+        one * 1e3,
+        batched * 1e3,
+        one / batched.max(1e-12)
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Bench: end-to-end serving — requests flow through the router thread
+//! and the two continuous-batching workers. Reports request throughput
+//! and latency percentiles at several offered loads. Uses seeded-init
+//! weights written to a temp run dir (latency is weight-independent), so
+//! it runs without a pipeline run; the router is random at threshold 0.5
+//! giving a ~50% routing split.
+
+use std::time::{Duration, Instant};
+
+use hybrid_llm::batching::BatchMode;
+use hybrid_llm::corpus::{generate, Scale};
+use hybrid_llm::lm::LmEngine;
+use hybrid_llm::runtime::Runtime;
+use hybrid_llm::serve::{ServeConfig, Server};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Runtime::default_dir();
+    if !artifacts.join("manifest.txt").exists() {
+        eprintln!("skipping bench: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    // seed a temp run dir with init weights
+    let run_dir = std::env::temp_dir().join(format!("hybrid_bench_run_{}", std::process::id()));
+    {
+        let rt = Runtime::load(&artifacts)?;
+        for model in ["small", "medium"] {
+            let eng = LmEngine::init(rt.clone(), model, 3)?;
+            eng.save(&run_dir.join("params").join(model))?;
+        }
+    }
+    let corpus = generate(11, Scale::Smoke);
+    let prompts: Vec<Vec<i32>> = corpus.iter().take(96).map(|q| q.prompt.clone()).collect();
+
+    println!("== serving_e2e: small/medium pair, random router ==");
+    println!(
+        "{:>9} {:>9} {:>10} {:>9} {:>9} {:>10}",
+        "requests", "wall s", "req/s", "p50 ms", "p95 ms", "slot eff"
+    );
+    for n in [16, 48, 96] {
+        let cfg = ServeConfig {
+            artifacts_dir: artifacts.clone(),
+            run_dir: run_dir.clone(),
+            small: "small".into(),
+            large: "medium".into(),
+            router: String::new(), // random routing
+            threshold: 0.5,
+            temp: 0.8,
+            mode: BatchMode::Continuous,
+            batch_window: Duration::from_millis(2),
+        };
+        let server = Server::start(cfg)?;
+        let t0 = Instant::now();
+        let rxs: Vec<_> = prompts[..n].iter().map(|p| server.submit(p.clone())).collect();
+        for rx in rxs {
+            rx.recv()?;
+        }
+        let wall = t0.elapsed();
+        let stats = server.shutdown()?;
+        let eff = if stats.decode_steps > 0 {
+            stats.decode_slot_steps as f64 / (stats.decode_steps as f64 * 16.0)
+        } else {
+            0.0
+        };
+        println!(
+            "{:>9} {:>9.2} {:>10.1} {:>9.0} {:>9.0} {:>10.2}",
+            n,
+            wall.as_secs_f64(),
+            n as f64 / wall.as_secs_f64(),
+            stats.e2e_latency.p50_ms,
+            stats.e2e_latency.p95_ms,
+            eff
+        );
+    }
+    let _ = std::fs::remove_dir_all(&run_dir);
+    Ok(())
+}

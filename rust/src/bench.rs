@@ -1,0 +1,184 @@
+//! Criterion-style micro-benchmark harness (the offline environment has
+//! no `criterion`): warmup, timed iterations, mean ± stderr, p50/p95, and
+//! throughput reporting. Used by the `rust/benches/*.rs` targets (built
+//! with `harness = false`) and by the Table 2 latency driver.
+
+use std::time::{Duration, Instant};
+
+use crate::stats;
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub std_err: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.mean.as_secs_f64() <= 0.0 {
+            return 0.0;
+        }
+        self.items_per_iter / self.mean.as_secs_f64()
+    }
+
+    /// Criterion-like one-line rendering.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{:<36} time: [{} ± {}]  p50 {}  p95 {}  ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.std_err),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            self.iters,
+        );
+        if self.items_per_iter > 0.0 {
+            s.push_str(&format!("  thrpt: {:.1}/s", self.throughput_per_s()));
+        }
+        s
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per benchmark.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            budget: Duration::from_secs(3),
+            min_iters: 10,
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+
+    /// Run `f` repeatedly; one call = one iteration.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        self.bench_items(name, 1.0, &mut f)
+    }
+
+    /// Run with a declared items-per-iteration (throughput).
+    pub fn bench_items<F: FnMut()>(&self, name: &str, items_per_iter: f64, f: &mut F) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // measure
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.budget || samples_ns.len() < self.min_iters)
+            && samples_ns.len() < self.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+        }
+        let mut sorted = samples_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let d = |ns: f64| Duration::from_nanos(ns.max(0.0) as u64);
+        BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean: d(stats::mean(&samples_ns)),
+            std_err: d(stats::std_err(&samples_ns)),
+            p50: d(stats::percentile_sorted(&sorted, 50.0)),
+            p95: d(stats::percentile_sorted(&sorted, 95.0)),
+            min: d(sorted[0]),
+            max: d(*sorted.last().unwrap()),
+            items_per_iter,
+        }
+    }
+}
+
+/// Print a group header + results like criterion does.
+pub fn report(group: &str, results: &[BenchResult]) {
+    println!("\n== bench group: {group} ==");
+    for r in results {
+        println!("{}", r.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let r = b.bench("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.p95 >= r.p50);
+        assert!(r.max >= r.min);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(100),
+            std_err: Duration::ZERO,
+            p50: Duration::ZERO,
+            p95: Duration::ZERO,
+            min: Duration::ZERO,
+            max: Duration::ZERO,
+            items_per_iter: 50.0,
+        };
+        assert!((r.throughput_per_s() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(500)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

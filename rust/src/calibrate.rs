@@ -1,0 +1,147 @@
+//! Empirical threshold determination (paper §4.5): pick the router-score
+//! threshold on a small validation sample that maximizes cost advantage
+//! subject to a performance-drop limit (default ≤ 1%), then report how it
+//! generalizes to the test split (Table 3).
+
+use crate::policy::{achieved_quality, cost_advantage, Policy};
+use crate::stats;
+
+/// Outcome of calibrating on one labelled set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    pub threshold: f32,
+    pub cost_advantage: f64,
+    pub drop_pct: f64,
+}
+
+/// Evaluate a fixed threshold on a labelled set.
+pub fn evaluate_threshold(
+    threshold: f32,
+    scores: &[f32],
+    q_small: &[f64],
+    q_large: &[f64],
+) -> Calibration {
+    let assign = Policy::Threshold { threshold }.assign(scores);
+    let base = stats::mean(q_large);
+    let q = achieved_quality(&assign, q_small, q_large);
+    Calibration {
+        threshold,
+        cost_advantage: cost_advantage(&assign),
+        drop_pct: crate::metrics::quality_drop_pct(base, q),
+    }
+}
+
+/// Grid-search the threshold delivering the highest cost advantage with
+/// `drop_pct <= max_drop_pct` on the given (validation) sample. The grid
+/// is the set of observed scores (every achievable assignment), exactly
+/// what §4.5's grid search explores.
+pub fn calibrate(
+    scores: &[f32],
+    q_small: &[f64],
+    q_large: &[f64],
+    max_drop_pct: f64,
+) -> Calibration {
+    assert!(!scores.is_empty());
+    let mut candidates: Vec<f32> = scores.to_vec();
+    candidates.push(f32::MAX); // all-at-large fallback (cost advantage 0)
+    candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    candidates.dedup();
+    let mut best: Option<Calibration> = None;
+    for &thr in &candidates {
+        let c = evaluate_threshold(thr, scores, q_small, q_large);
+        if c.drop_pct <= max_drop_pct {
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    c.cost_advantage > b.cost_advantage
+                        || (c.cost_advantage == b.cost_advantage && c.drop_pct < b.drop_pct)
+                }
+            };
+            if better {
+                best = Some(c);
+            }
+        }
+    }
+    // the f32::MAX fallback always satisfies the constraint (0% drop)
+    best.expect("calibrate: all-at-large candidate must be feasible")
+}
+
+/// Subsample `k` indices for the §4.5 "500 validation samples" protocol.
+pub fn subsample(n: usize, k: usize, seed: u64) -> Vec<usize> {
+    let mut rng = crate::rng::Rng::new(seed);
+    rng.sample_indices(n, k.min(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic set: scores perfectly identify where small is as good.
+    fn perfect_case(n: usize) -> (Vec<f32>, Vec<f64>, Vec<f64>) {
+        let mut scores = Vec::new();
+        let mut qs = Vec::new();
+        let mut ql = Vec::new();
+        for i in 0..n {
+            if i % 4 == 0 {
+                scores.push(0.9);
+                qs.push(-1.0);
+            } else {
+                scores.push(0.1);
+                qs.push(-4.0);
+            }
+            ql.push(-1.0);
+        }
+        (scores, qs, ql)
+    }
+
+    #[test]
+    fn calibrate_finds_free_cost_advantage() {
+        let (scores, qs, ql) = perfect_case(100);
+        let c = calibrate(&scores, &qs, &ql, 1.0);
+        // 25% of queries are free wins
+        assert!((c.cost_advantage - 0.25).abs() < 1e-9, "{c:?}");
+        assert!(c.drop_pct <= 1e-9);
+    }
+
+    #[test]
+    fn calibrate_respects_drop_limit() {
+        crate::testing::check("calibration never exceeds limit", 50, |rng| {
+            let n = rng.range(10, 200);
+            let scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let qs: Vec<f64> = (0..n).map(|_| -(rng.next_f64() * 5.0)).collect();
+            let ql: Vec<f64> = (0..n).map(|_| -(rng.next_f64() * 5.0)).collect();
+            let limit = rng.next_f64() * 5.0;
+            let c = calibrate(&scores, &qs, &ql, limit);
+            assert!(c.drop_pct <= limit + 1e-9, "{c:?} limit {limit}");
+        });
+    }
+
+    #[test]
+    fn zero_limit_still_feasible() {
+        let (scores, qs, ql) = perfect_case(40);
+        let c = calibrate(&scores, &qs, &ql, 0.0);
+        assert!(c.drop_pct <= 1e-12);
+    }
+
+    #[test]
+    fn evaluate_threshold_extremes() {
+        let (scores, qs, ql) = perfect_case(40);
+        let all_large = evaluate_threshold(f32::MAX, &scores, &qs, &ql);
+        assert_eq!(all_large.cost_advantage, 0.0);
+        assert!(all_large.drop_pct.abs() < 1e-12);
+        let all_small = evaluate_threshold(0.0, &scores, &qs, &ql);
+        assert_eq!(all_small.cost_advantage, 1.0);
+        assert!(all_small.drop_pct > 0.0);
+    }
+
+    #[test]
+    fn subsample_is_deterministic_and_distinct() {
+        let a = subsample(1000, 500, 7);
+        let b = subsample(1000, 500, 7);
+        assert_eq!(a, b);
+        let mut d = a.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 500);
+    }
+}

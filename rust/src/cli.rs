@@ -1,0 +1,153 @@
+//! Minimal CLI argument parser (the offline environment has no `clap`).
+//!
+//! Supports `repro <subcommand> [--flag value] [--switch]` with typed
+//! accessors, defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: a subcommand plus `--key value` / `--switch` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Flags may appear before or after positionals.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let mut out = Args::default();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_empty() {
+                out.subcommand = a;
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// String flag with default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Required string flag.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.flags
+            .get(key)
+            .map(|s| s.as_str())
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
+        }
+    }
+
+    /// Boolean switch (`--verbose` style).
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    /// All unknown-flag detection for strict commands.
+    pub fn check_known(&self, known_flags: &[&str], known_switches: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known_flags.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known_flags.join(", "));
+            }
+        }
+        for s in &self.switches {
+            if !known_switches.contains(&s.as_str()) {
+                bail!("unknown switch --{s}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("pipeline --run runs/x --scale smoke --verbose");
+        assert_eq!(a.subcommand, "pipeline");
+        assert_eq!(a.get("run", ""), "runs/x");
+        assert_eq!(a.get("scale", "default"), "smoke");
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("eval --id=fig5 --pairs=small:medium");
+        assert_eq!(a.get("id", ""), "fig5");
+        assert_eq!(a.get("pairs", ""), "small:medium");
+    }
+
+    #[test]
+    fn typed_and_defaults() {
+        let a = parse("train --steps 200");
+        assert_eq!(a.get_parse("steps", 10usize).unwrap(), 200);
+        assert_eq!(a.get_parse("lr", 3e-3f64).unwrap(), 3e-3);
+        assert!(a.get_parse::<usize>("steps", 0).is_ok());
+        let b = parse("train --steps abc");
+        assert!(b.get_parse::<usize>("steps", 0).is_err());
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("eval fig5 table1 --run r");
+        assert_eq!(a.subcommand, "eval");
+        assert_eq!(a.positional, vec!["fig5", "table1"]);
+    }
+
+    #[test]
+    fn require_missing_errors() {
+        let a = parse("serve");
+        assert!(a.require("run").is_err());
+    }
+
+    #[test]
+    fn trailing_switch_before_flag() {
+        let a = parse("x --fast --run r");
+        assert!(a.switch("fast"));
+        assert_eq!(a.get("run", ""), "r");
+    }
+
+    #[test]
+    fn check_known_flags() {
+        let a = parse("x --run r --oops 1");
+        assert!(a.check_known(&["run"], &[]).is_err());
+        assert!(a.check_known(&["run", "oops"], &[]).is_ok());
+    }
+}

@@ -1,0 +1,513 @@
+//! **MixSynth** — the synthetic instruction corpus standing in for
+//! MixInstruct (paper §4.1, Table 5).
+//!
+//! Ten task families with algorithmic reference answers and graded
+//! intrinsic difficulty; combined with the capacity-graded LM roster this
+//! yields the paper's key structural property: larger models win on
+//! average but the small model matches or beats them on an "easy" subset
+//! of queries (Fig. 1b). Queries are grouped into four "sources" to
+//! mirror MixInstruct's composition (Table 5).
+//!
+//! Prompt layout: `[BOS, TASK_KW, COLON, payload..., SEP]` (≤ `S_PROMPT`);
+//! reference answer: task-defined tokens (EOS is appended by consumers).
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::Rng;
+use crate::tokenizer as tok;
+
+/// Maximum prompt length — must match the manifest's `sprompt`.
+pub const S_PROMPT: usize = 40;
+/// Maximum answer length including EOS — must match the manifest's `amax`.
+pub const A_MAX: usize = 24;
+
+/// The ten MixSynth task families (token = `TASK0 + Task as i32`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Copy = 0,
+    Double = 1,
+    Rev = 2,
+    Sort = 3,
+    Dedup = 4,
+    Succ = 5,
+    Add = 6,
+    Count = 7,
+    Extr = 8,
+    Rot = 9,
+}
+
+pub const ALL_TASKS: [Task; 10] = [
+    Task::Copy,
+    Task::Double,
+    Task::Rev,
+    Task::Sort,
+    Task::Dedup,
+    Task::Succ,
+    Task::Add,
+    Task::Count,
+    Task::Extr,
+    Task::Rot,
+];
+
+impl Task {
+    pub fn name(self) -> &'static str {
+        tok::TASK_NAMES[self as usize]
+    }
+
+    pub fn from_name(name: &str) -> Option<Task> {
+        tok::TASK_NAMES
+            .iter()
+            .position(|&n| n == name)
+            .map(|i| ALL_TASKS[i])
+    }
+
+    pub fn keyword_token(self) -> i32 {
+        tok::TASK0 + self as i32
+    }
+
+    /// Intrinsic difficulty grade in 1..=7 (corpus metadata; the *actual*
+    /// hardness emerges from the trained models).
+    pub fn difficulty(self) -> u8 {
+        match self {
+            Task::Copy => 1,
+            Task::Double => 2,
+            Task::Rev => 3,
+            Task::Dedup => 3,
+            Task::Extr => 3,
+            Task::Succ => 4,
+            Task::Rot => 5,
+            Task::Sort => 6,
+            Task::Count => 6,
+            Task::Add => 7,
+        }
+    }
+
+    /// "Source" grouping used to mirror MixInstruct's Table 5.
+    pub fn source(self) -> &'static str {
+        match self {
+            Task::Copy | Task::Double | Task::Rev => "SynthAlpaca",
+            Task::Dedup | Task::Extr => "SynthDolly",
+            Task::Succ | Task::Rot | Task::Sort => "SynthGPT4All",
+            Task::Count | Task::Add => "SynthShare",
+        }
+    }
+}
+
+/// Dataset split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+impl Split {
+    pub fn name(self) -> &'static str {
+        match self {
+            Split::Train => "train",
+            Split::Val => "val",
+            Split::Test => "test",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Split> {
+        match s {
+            "train" => Some(Split::Train),
+            "val" => Some(Split::Val),
+            "test" => Some(Split::Test),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Split {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One query: prompt tokens + algorithmic reference answer.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub id: usize,
+    pub split: Split,
+    pub task: Task,
+    /// Full prompt: `[BOS, KW, COLON, payload..., SEP]`.
+    pub prompt: Vec<i32>,
+    /// Reference answer tokens (no EOS).
+    pub reference: Vec<i32>,
+}
+
+impl Query {
+    /// Payload = prompt without frame tokens.
+    pub fn payload(&self) -> &[i32] {
+        &self.prompt[3..self.prompt.len() - 1]
+    }
+}
+
+/// Compute the reference answer for `(task, payload)`.
+pub fn reference(task: Task, payload: &[i32]) -> Vec<i32> {
+    match task {
+        Task::Copy => payload.to_vec(),
+        Task::Double => payload.iter().flat_map(|&t| [t, t]).collect(),
+        Task::Rev => payload.iter().rev().copied().collect(),
+        Task::Sort => {
+            let mut v = payload.to_vec();
+            v.sort_unstable();
+            v
+        }
+        Task::Dedup => {
+            let mut out: Vec<i32> = Vec::new();
+            for &t in payload {
+                if out.last() != Some(&t) {
+                    out.push(t);
+                }
+            }
+            out
+        }
+        Task::Succ => payload
+            .iter()
+            .map(|&t| {
+                debug_assert!(tok::is_digit(t));
+                tok::digit((tok::digit_val(t) + 1) % 10)
+            })
+            .collect(),
+        Task::Add => {
+            debug_assert_eq!(payload.len(), 4);
+            let num = |a: i32, b: i32| tok::digit_val(a) * 10 + tok::digit_val(b);
+            let sum = num(payload[0], payload[1]) + num(payload[2], payload[3]);
+            tok::encode_number(sum)
+        }
+        Task::Count => tok::encode_number(payload.len() as u32),
+        Task::Extr => {
+            let pos = payload
+                .iter()
+                .position(|&t| t == tok::COLON)
+                .expect("EXTR payload must contain COLON");
+            payload[pos + 1..].to_vec()
+        }
+        Task::Rot => payload
+            .iter()
+            .map(|&t| {
+                debug_assert!(tok::is_letter(t));
+                tok::LETTER0 + ((t - tok::LETTER0 + 1) % tok::N_LETTERS)
+            })
+            .collect(),
+    }
+}
+
+fn gen_payload(task: Task, rng: &mut Rng) -> Vec<i32> {
+    let rand_letters =
+        |rng: &mut Rng, n: usize| (0..n).map(|_| tok::LETTER0 + rng.below(26) as i32).collect::<Vec<_>>();
+    let rand_digits =
+        |rng: &mut Rng, n: usize| (0..n).map(|_| tok::digit(rng.below(10) as u32)).collect::<Vec<_>>();
+    match task {
+        Task::Copy | Task::Rev | Task::Sort | Task::Rot => {
+            let n = rng.range(3, 12);
+            rand_letters(rng, n)
+        }
+        Task::Double => {
+            let n = rng.range(3, 10);
+            rand_letters(rng, n)
+        }
+        Task::Count => {
+            let n = rng.range(3, 12);
+            rand_letters(rng, n)
+        }
+        Task::Succ => {
+            let n = rng.range(3, 10);
+            rand_digits(rng, n)
+        }
+        Task::Add => rand_digits(rng, 4),
+        Task::Dedup => {
+            // draw from a small alphabet so consecutive repeats occur
+            let n = rng.range(4, 12);
+            let alpha: Vec<i32> = (0..4).map(|i| tok::LETTER0 + i).collect();
+            let mut v = Vec::with_capacity(n);
+            let mut cur = alpha[rng.below(alpha.len())];
+            for _ in 0..n {
+                if rng.next_f64() < 0.5 {
+                    cur = alpha[rng.below(alpha.len())];
+                }
+                v.push(cur);
+            }
+            v
+        }
+        Task::Extr => {
+            let n1 = rng.range(2, 6);
+            let mut v = rand_letters(rng, n1);
+            v.push(tok::COLON);
+            let n2 = rng.range(2, 6);
+            v.extend(rand_letters(rng, n2));
+            v
+        }
+    }
+}
+
+/// Build one query with the standard prompt frame.
+pub fn make_query(id: usize, split: Split, task: Task, rng: &mut Rng) -> Query {
+    let payload = gen_payload(task, rng);
+    let mut prompt = Vec::with_capacity(payload.len() + 4);
+    prompt.push(tok::BOS);
+    prompt.push(task.keyword_token());
+    prompt.push(tok::COLON);
+    prompt.extend_from_slice(&payload);
+    prompt.push(tok::SEP);
+    debug_assert!(prompt.len() <= S_PROMPT, "prompt too long: {}", prompt.len());
+    let reference = reference(task, &payload);
+    debug_assert!(reference.len() + 1 <= A_MAX, "answer too long");
+    Query { id, split, task, prompt, reference }
+}
+
+/// Corpus scale presets (DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-sized, minutes on CPU.
+    Smoke,
+    /// Between smoke and default: the single-CPU-hour reproduction.
+    Mid,
+    /// The default reproduction scale.
+    Default,
+    /// The paper's 10k/5k/5k.
+    Paper,
+}
+
+impl Scale {
+    pub fn from_name(s: &str) -> Option<Scale> {
+        match s {
+            "smoke" => Some(Scale::Smoke),
+            "mid" => Some(Scale::Mid),
+            "default" => Some(Scale::Default),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+
+    /// (n_train, n_val, n_test)
+    pub fn sizes(self) -> (usize, usize, usize) {
+        match self {
+            Scale::Smoke => (256, 96, 96),
+            Scale::Mid => (768, 512, 512),
+            Scale::Default => (2000, 1000, 1000),
+            Scale::Paper => (10_000, 5_000, 5_000),
+        }
+    }
+
+    /// Number of sampled responses per (query, model) — paper uses 10.
+    pub fn n_samples(self) -> usize {
+        match self {
+            Scale::Smoke => 4,
+            Scale::Mid => 6,
+            _ => 10,
+        }
+    }
+
+    /// LM pre-training step multiplier.
+    pub fn train_mult(self) -> f64 {
+        match self {
+            Scale::Smoke => 0.25,
+            Scale::Mid => 0.6,
+            _ => 1.0,
+        }
+    }
+}
+
+/// Generate the full corpus (train/val/test), uniformly over tasks, with
+/// a deterministic seed. Queries get sequential ids: train, then val,
+/// then test (the id is the row index everywhere downstream).
+pub fn generate(seed: u64, scale: Scale) -> Vec<Query> {
+    let (n_train, n_val, n_test) = scale.sizes();
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n_train + n_val + n_test);
+    let mut id = 0;
+    for (split, n) in [
+        (Split::Train, n_train),
+        (Split::Val, n_val),
+        (Split::Test, n_test),
+    ] {
+        for _ in 0..n {
+            let task = ALL_TASKS[rng.below(ALL_TASKS.len())];
+            out.push(make_query(id, split, task, &mut rng));
+            id += 1;
+        }
+    }
+    out
+}
+
+/// Save the corpus as TSV (`split, task, prompt, reference` — rendered
+/// with the tokenizer's reversible text form).
+pub fn save(path: &Path, corpus: &[Query]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut s = String::with_capacity(corpus.len() * 48);
+    for q in corpus {
+        s.push_str(&format!(
+            "{}\t{}\t{}\t{}\n",
+            q.split.name(),
+            q.task.name(),
+            tok::detokenize(&q.prompt),
+            tok::detokenize(&q.reference),
+        ));
+    }
+    fs::write(path, s)?;
+    Ok(())
+}
+
+/// Load a TSV corpus written by [`save`].
+pub fn load(path: &Path) -> Result<Vec<Query>> {
+    let text = fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let mut f = line.split('\t');
+        let (Some(split), Some(task), Some(prompt), Some(reference)) =
+            (f.next(), f.next(), f.next(), f.next())
+        else {
+            bail!("{path:?}:{}: bad corpus line", i + 1);
+        };
+        let split = Split::from_name(split).with_context(|| format!("bad split {split}"))?;
+        let task = Task::from_name(task).with_context(|| format!("bad task {task}"))?;
+        let prompt = tok::tokenize(prompt).context("bad prompt")?;
+        let reference = tok::tokenize(reference).context("bad reference")?;
+        out.push(Query { id: i, split, task, prompt, reference });
+    }
+    Ok(out)
+}
+
+/// Indices of a given split.
+pub fn split_ids(corpus: &[Query], split: Split) -> Vec<usize> {
+    corpus
+        .iter()
+        .enumerate()
+        .filter(|(_, q)| q.split == split)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn references_are_correct() {
+        use crate::tokenizer::{digit, letter};
+        let p = [letter('c'), letter('a'), letter('b')];
+        assert_eq!(reference(Task::Copy, &p), p.to_vec());
+        assert_eq!(
+            reference(Task::Rev, &p),
+            vec![letter('b'), letter('a'), letter('c')]
+        );
+        assert_eq!(
+            reference(Task::Sort, &p),
+            vec![letter('a'), letter('b'), letter('c')]
+        );
+        assert_eq!(
+            reference(Task::Double, &[letter('a'), letter('b')]),
+            vec![letter('a'), letter('a'), letter('b'), letter('b')]
+        );
+        assert_eq!(
+            reference(Task::Dedup, &[letter('a'), letter('a'), letter('b'), letter('a')]),
+            vec![letter('a'), letter('b'), letter('a')]
+        );
+        assert_eq!(
+            reference(Task::Succ, &[digit(0), digit(9), digit(4)]),
+            vec![digit(1), digit(0), digit(5)]
+        );
+        // 17 + 25 = 42
+        assert_eq!(
+            reference(Task::Add, &[digit(1), digit(7), digit(2), digit(5)]),
+            vec![digit(4), digit(2)]
+        );
+        assert_eq!(reference(Task::Count, &p), vec![digit(3)]);
+        assert_eq!(
+            reference(Task::Extr, &[letter('x'), tok::COLON, letter('p'), letter('q')]),
+            vec![letter('p'), letter('q')]
+        );
+        assert_eq!(
+            reference(Task::Rot, &[letter('a'), letter('z')]),
+            vec![letter('b'), letter('a')]
+        );
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(7, Scale::Smoke);
+        let b = generate(7, Scale::Smoke);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.reference, y.reference);
+        }
+        let c = generate(8, Scale::Smoke);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn prompts_and_answers_fit_limits() {
+        // property: every generated query satisfies the frame invariants
+        for q in generate(3, Scale::Default) {
+            assert!(q.prompt.len() <= S_PROMPT, "{:?}", q);
+            assert!(q.reference.len() + 1 <= A_MAX, "{:?}", q);
+            assert_eq!(q.prompt[0], tok::BOS);
+            assert_eq!(q.prompt[1], q.task.keyword_token());
+            assert_eq!(q.prompt[2], tok::COLON);
+            assert_eq!(*q.prompt.last().unwrap(), tok::SEP);
+            assert_eq!(reference(q.task, q.payload()), q.reference);
+        }
+    }
+
+    #[test]
+    fn splits_have_requested_sizes() {
+        let c = generate(1, Scale::Smoke);
+        let (nt, nv, ns) = Scale::Smoke.sizes();
+        assert_eq!(split_ids(&c, Split::Train).len(), nt);
+        assert_eq!(split_ids(&c, Split::Val).len(), nv);
+        assert_eq!(split_ids(&c, Split::Test).len(), ns);
+        // ids are the row index
+        for (i, q) in c.iter().enumerate() {
+            assert_eq!(q.id, i);
+        }
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hybrid_corpus_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("corpus.tsv");
+        let c = generate(11, Scale::Smoke);
+        save(&p, &c).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.len(), c.len());
+        for (x, y) in c.iter().zip(&back) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.reference, y.reference);
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.split, y.split);
+            assert_eq!(x.id, y.id);
+        }
+    }
+
+    #[test]
+    fn all_tasks_appear() {
+        let c = generate(5, Scale::Default);
+        for t in ALL_TASKS {
+            assert!(c.iter().any(|q| q.task == t), "{t:?} missing");
+        }
+    }
+
+    #[test]
+    fn extr_payload_always_has_colon() {
+        let mut rng = Rng::new(2);
+        for i in 0..200 {
+            let q = make_query(i, Split::Train, Task::Extr, &mut rng);
+            assert!(q.payload().contains(&tok::COLON));
+        }
+    }
+}

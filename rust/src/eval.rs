@@ -1,0 +1,602 @@
+//! Experiment drivers — one per table/figure of the paper (DESIGN.md §6).
+//!
+//! Every driver reads pipeline outputs (`runs/<name>/…`), computes the
+//! paper's quantity, renders a markdown report (tables + TSV series +
+//! ASCII histograms), writes it to `runs/<name>/results/<id>.md`, and
+//! returns it for stdout. Quality of a (query, model) is the mean
+//! BART-analogue score over the sampled responses unless stated
+//! otherwise.
+
+use std::fs;
+
+
+use anyhow::{ensure, Result};
+
+use crate::corpus::{Query, Split, ALL_TASKS};
+use crate::labels::{self, QualitySamples};
+use crate::pipeline::{pair_id, subset, Pipeline, MAIN_PAIRS, ROSTER};
+use crate::policy::{self, random_curve, tradeoff_at, tradeoff_curve};
+use crate::router::{RouterKind, ALL_ROUTERS};
+use crate::stats::{self, Histogram};
+
+/// Markdown table renderer.
+pub fn md_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("| {} |\n", headers.join(" | ")));
+    s.push_str(&format!("|{}\n", "---|".repeat(headers.len())));
+    for r in rows {
+        s.push_str(&format!("| {} |\n", r.join(" | ")));
+    }
+    s
+}
+
+/// Driver context.
+pub struct Eval<'a> {
+    pub pl: &'a Pipeline,
+    pub corpus: &'a [Query],
+}
+
+impl<'a> Eval<'a> {
+    pub fn new(pl: &'a Pipeline, corpus: &'a [Query]) -> Self {
+        Eval { pl, corpus }
+    }
+
+    fn ids(&self, split: Split) -> Vec<usize> {
+        crate::corpus::split_ids(self.corpus, split)
+    }
+
+    /// Per-query mean qualities of a pair over a split: (q_small, q_large).
+    fn pair_quality(&self, small: &str, large: &str, ids: &[usize]) -> Result<(Vec<f64>, Vec<f64>)> {
+        let qs = self.pl.load_quality(small, self.corpus)?;
+        let ql = self.pl.load_quality(large, self.corpus)?;
+        Ok((
+            subset(&qs, ids).mean(),
+            subset(&ql, ids).mean(),
+        ))
+    }
+
+    fn router_scores_on(&self, pair: &str, kind: RouterKind, ids: &[usize]) -> Result<Vec<f32>> {
+        let all = self.pl.load_router_scores(pair, kind)?;
+        Ok(ids.iter().map(|&i| all[i]).collect())
+    }
+
+    fn write(&self, id: &str, body: &str) -> Result<String> {
+        let dir = self.pl.paths.results();
+        fs::create_dir_all(&dir)?;
+        fs::write(dir.join(format!("{id}.md")), body)?;
+        Ok(body.to_string())
+    }
+
+    /// Dispatch by experiment id.
+    pub fn run(&self, id: &str) -> Result<String> {
+        match id {
+            "fig1" => self.fig1(),
+            "fig3" => self.fig3(),
+            "fig4" => self.fig4(),
+            "fig5" => self.fig5(&MAIN_PAIRS),
+            "fig6" => self.gapdiff("fig6", &MAIN_PAIRS),
+            "fig7" => self.fig7(),
+            "fig8" => self.fig8(),
+            "fig9" => self.fig5_named("fig9", &crate::pipeline::APPENDIX_PAIRS),
+            "fig10" => self.gapdiff("fig10", &crate::pipeline::APPENDIX_PAIRS),
+            "table1" => self.table1(&MAIN_PAIRS, "table1"),
+            "table3" => self.table3(),
+            "table4" => self.table1(&crate::pipeline::APPENDIX_PAIRS, "table4"),
+            "table5" => self.table5(),
+            "nmodel" => self.nmodel(),
+            other => anyhow::bail!("unknown experiment id {other} (see DESIGN.md §6)"),
+        }
+    }
+
+    /// All experiment ids runnable without live engines (Table 2 is the
+    /// exception — it measures real latency and lives in `main.rs`).
+    pub fn all_ids() -> &'static [&'static str] {
+        &[
+            "table5", "fig1", "fig3", "fig4", "fig5", "fig6", "table1", "table3", "fig7",
+            "fig8", "fig9", "fig10", "table4", "nmodel",
+        ]
+    }
+
+    // ------------------------------------------------------------------
+    // Fig 1 — (a) quality per model, (b) gap tail, (c) headline tradeoff
+    // ------------------------------------------------------------------
+    pub fn fig1(&self) -> Result<String> {
+        let test = self.ids(Split::Test);
+        let mut body = String::from("# Fig 1 — motivation\n\n## (a) response quality by model (test split)\n\n");
+        let mut rows = Vec::new();
+        for model in ROSTER {
+            let q = subset(&self.pl.load_quality(model, self.corpus)?, &test).mean();
+            rows.push(vec![
+                model.to_string(),
+                format!("{:.3}", stats::mean(&q)),
+                format!("{:.3}", stats::percentile(&q, 25.0)),
+                format!("{:.3}", stats::percentile(&q, 50.0)),
+                format!("{:.3}", stats::percentile(&q, 75.0)),
+            ]);
+        }
+        body.push_str(&md_table(&["model", "mean q", "p25", "p50", "p75"], &rows));
+
+        // (b) tail of the quality gap for the medium-gap pair
+        let (small, large) = ("medium", "large");
+        let (qs, ql) = self.pair_quality(small, large, &test)?;
+        let mut gaps: Vec<f64> = qs.iter().zip(&ql).map(|(a, b)| a - b).collect();
+        gaps.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let frac_nonneg = gaps.iter().filter(|&&g| g >= 0.0).count() as f64 / gaps.len() as f64;
+        body.push_str(&format!(
+            "\n## (b) quality-gap tail: {small} vs {large}\n\nPr[H(x) >= 0] = {:.3} \
+             (paper: ~0.20 for Llama-2-13b vs GPT-3.5)\n\n",
+            frac_nonneg
+        ));
+        body.push_str("top-of-tail gap values (sorted desc, every 5th pctile):\n\n```\n");
+        for k in 0..=20 {
+            let idx = (k as f64 / 20.0 * (gaps.len() - 1) as f64) as usize;
+            body.push_str(&format!("pct {:>3}: {:+.3}\n", k * 5, gaps[idx]));
+        }
+        body.push_str("```\n");
+
+        // (c) headline: trans router on medium/large
+        let pair = pair_id(small, large);
+        let scores = self.router_scores_on(&pair, RouterKind::Trans, &test)?;
+        let curve = tradeoff_curve(&scores, &qs, &ql, 20);
+        body.push_str("\n## (c) error–cost tradeoff (r_trans, medium/large)\n\n```\ncost_adv\tdrop_pct\n");
+        for p in &curve {
+            body.push_str(&format!(
+                "{:.2}\t{:+.2}\n",
+                p.achieved_cost_advantage, p.drop_pct
+            ));
+        }
+        body.push_str("```\n");
+        // headline number: best cost advantage with <=1% drop
+        let best = curve
+            .iter()
+            .filter(|p| p.drop_pct <= 1.0)
+            .map(|p| p.achieved_cost_advantage)
+            .fold(0.0, f64::max);
+        body.push_str(&format!(
+            "\nheadline: {:.0}% cost advantage with <=1% quality drop \
+             (paper Fig 1c: 22% with <1%)\n",
+            best * 100.0
+        ));
+        self.write("fig1", &body)
+    }
+
+    // ------------------------------------------------------------------
+    // Fig 3 — per-query response-quality distributions + shift
+    // ------------------------------------------------------------------
+    pub fn fig3(&self) -> Result<String> {
+        let (small, large) = ("nano", "medium");
+        let pair = pair_id(small, large);
+        let tstar = self.pl.load_tstar(&pair)?;
+        let qs = self.pl.load_quality(small, self.corpus)?;
+        let ql = self.pl.load_quality(large, self.corpus)?;
+        // pick the test query whose distributions overlap the most after
+        // the shift (illustrative, like the paper's hand-picked example)
+        let test = self.ids(Split::Test);
+        let qi = *test
+            .iter()
+            .find(|&&i| self.corpus[i].task == crate::corpus::Task::Extr)
+            .unwrap_or(&test[0]);
+        let q = &self.corpus[qi];
+        let mut body = format!(
+            "# Fig 3 — response quality distribution for one query\n\nquery: `{}`\n\
+             pair: {small} vs {large}, t* = {tstar:.3}\n\n",
+            crate::tokenizer::detokenize(&q.prompt)
+        );
+        let all: Vec<f64> = qs.q[qi]
+            .iter()
+            .chain(ql.q[qi].iter())
+            .map(|&x| x as f64)
+            .collect();
+        let lo = all.iter().cloned().fold(f64::MAX, f64::min) - 0.2;
+        let hi = all.iter().cloned().fold(f64::MIN, f64::max) + 0.2;
+        for (name, samples, shift) in [
+            (format!("{small} (small)"), &qs.q[qi], 0.0f32),
+            (format!("{large} (large)"), &ql.q[qi], 0.0),
+            (format!("{large} shifted by -t*"), &ql.q[qi], tstar),
+        ] {
+            let vals: Vec<f64> = samples.iter().map(|&x| (x - shift) as f64).collect();
+            let h = Histogram::build(&vals, lo, hi, 12);
+            body.push_str(&format!("\n### {name}\n\n```\n{}```\n", h.ascii(30)));
+        }
+        body.push_str(&format!(
+            "\nPr[q(S) >= q(L)] = {:.2}, Pr[q(S) >= q(L) - t*] = {:.2}\n",
+            labels::y_prob(&pick(&qs, qi), &pick(&ql, qi))?[0],
+            labels::y_trans(&pick(&qs, qi), &pick(&ql, qi), tstar)?[0],
+        ));
+        self.write("fig3", &body)
+    }
+
+    // ------------------------------------------------------------------
+    // Fig 4 — label distributions before/after the transformation
+    // ------------------------------------------------------------------
+    pub fn fig4(&self) -> Result<String> {
+        let (small, large) = ("nano", "medium");
+        let pair = pair_id(small, large);
+        let tstar = self.pl.load_tstar(&pair)?;
+        let train = self.ids(Split::Train);
+        let mut body = format!(
+            "# Fig 4 — data transformation ({small}/{large}, t* = {tstar:.3})\n"
+        );
+        for (tag, kind) in [("(a) y_prob", RouterKind::Prob), ("(c) y_trans(t*)", RouterKind::Trans)] {
+            let y = crate::io::Tensor::load(&self.pl.paths.labels_tz(&pair, kind))?;
+            let y = y.as_f32()?;
+            let vals: Vec<f64> = train.iter().map(|&i| y[i] as f64).collect();
+            let h = Histogram::build(&vals, 0.0, 1.0001, 10);
+            body.push_str(&format!("\n## {tag} label distribution (train)\n\n```\n{}```\n", h.ascii(40)));
+            let frac_zero = vals.iter().filter(|&&v| v < 0.05).count() as f64 / vals.len() as f64;
+            body.push_str(&format!("fraction of labels < 0.05: {:.2}\n", frac_zero));
+        }
+        // (b) the Eq. 3 objective curve
+        let curve = crate::io::Tensor::load(&self.pl.paths.tstar_curve(&pair))?;
+        let c = curve.as_f32()?;
+        body.push_str("\n## (b) objective J(t) (Eq. 3)\n\n```\nt\tJ(t)\n");
+        for row in c.chunks(2) {
+            body.push_str(&format!("{:.3}\t{:.4}\n", row[0], row[1]));
+        }
+        body.push_str("```\n");
+        self.write("fig4", &body)
+    }
+
+    // ------------------------------------------------------------------
+    // Fig 5 / Fig 9 — error-cost tradeoff curves
+    // ------------------------------------------------------------------
+    pub fn fig5(&self, pairs: &[(&str, &str, &str)]) -> Result<String> {
+        self.fig5_named("fig5", pairs)
+    }
+
+    pub fn fig5_named(&self, id: &str, pairs: &[(&str, &str, &str)]) -> Result<String> {
+        let test = self.ids(Split::Test);
+        let mut body = format!("# {id} — error–cost tradeoffs\n");
+        for (small, large, regime) in pairs {
+            let pair = pair_id(small, large);
+            let (qs, ql) = self.pair_quality(small, large, &test)?;
+            body.push_str(&format!(
+                "\n## {small} vs {large} ({regime})\n\n```\ncost_adv\trandom\tr_det\tr_prob\tr_trans\n"
+            ));
+            let rnd = random_curve(test.len(), &qs, &ql, 20, 99);
+            let mut curves = Vec::new();
+            for kind in ALL_ROUTERS {
+                let scores = self.router_scores_on(&pair, kind, &test)?;
+                curves.push(tradeoff_curve(&scores, &qs, &ql, 20));
+            }
+            for k in 0..=20 {
+                body.push_str(&format!(
+                    "{:.2}\t{:+.2}\t{:+.2}\t{:+.2}\t{:+.2}\n",
+                    k as f64 / 20.0,
+                    rnd[k].drop_pct,
+                    curves[0][k].drop_pct,
+                    curves[1][k].drop_pct,
+                    curves[2][k].drop_pct,
+                ));
+            }
+            body.push_str("```\n");
+        }
+        self.write(id, &body)
+    }
+
+    // ------------------------------------------------------------------
+    // Table 1 / Table 4 — drops at fixed cost advantages
+    // ------------------------------------------------------------------
+    pub fn table1(&self, pairs: &[(&str, &str, &str)], id: &str) -> Result<String> {
+        let test = self.ids(Split::Test);
+        let mut body = format!(
+            "# {id} — quality drop (%) vs all-at-large at fixed cost advantage\n\n"
+        );
+        let mut rows = Vec::new();
+        for ca in [0.10, 0.20, 0.40] {
+            let mut row = vec![format!("{:.0}", ca * 100.0)];
+            for (small, large, _) in pairs {
+                let pair = pair_id(small, large);
+                let (qs, ql) = self.pair_quality(small, large, &test)?;
+                for kind in ALL_ROUTERS {
+                    let scores = self.router_scores_on(&pair, kind, &test)?;
+                    let p = tradeoff_at(&scores, &qs, &ql, ca);
+                    row.push(format!("{:+.1}", p.drop_pct));
+                }
+            }
+            rows.push(row);
+        }
+        let mut headers = vec!["cost adv %".to_string()];
+        for (small, large, _) in pairs {
+            for kind in ALL_ROUTERS {
+                headers.push(format!("{small}/{large} r_{}", kind.name()));
+            }
+        }
+        let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        body.push_str(&md_table(&headers_ref, &rows));
+        self.write(id, &body)
+    }
+
+    // ------------------------------------------------------------------
+    // Fig 6 / Fig 10 — router validation via quality-gap difference
+    // ------------------------------------------------------------------
+    pub fn gapdiff(&self, id: &str, pairs: &[(&str, &str, &str)]) -> Result<String> {
+        let test = self.ids(Split::Test);
+        let mut body = format!(
+            "# {id} — avg quality-gap difference (small-routed minus large-routed)\n\n\
+             Positive = easy queries go to the small model (router works).\n"
+        );
+        for (small, large, regime) in pairs {
+            let pair = pair_id(small, large);
+            let (qs, ql) = self.pair_quality(small, large, &test)?;
+            let gap: Vec<f64> = qs.iter().zip(&ql).map(|(a, b)| a - b).collect();
+            let scores = self.router_scores_on(&pair, RouterKind::Trans, &test)?;
+            body.push_str(&format!(
+                "\n## {small} vs {large} ({regime})\n\n```\ncost_adv\trouter\trandom\n"
+            ));
+            for k in 1..10 {
+                let target = k as f64 / 10.0;
+                let diff_router = gap_diff(&scores, &gap, target);
+                let rnd_scores: Vec<f32> = {
+                    let mut rng = crate::rng::Rng::new(1234 + k as u64);
+                    (0..gap.len()).map(|_| rng.next_f32()).collect()
+                };
+                let diff_rnd = gap_diff(&rnd_scores, &gap, target);
+                body.push_str(&format!("{target:.1}\t{diff_router:+.3}\t{diff_rnd:+.3}\n"));
+            }
+            body.push_str("```\n");
+        }
+        self.write(id, &body)
+    }
+
+    // ------------------------------------------------------------------
+    // Table 3 — threshold calibration (§4.5)
+    // ------------------------------------------------------------------
+    pub fn table3(&self) -> Result<String> {
+        let val = self.ids(Split::Val);
+        let test = self.ids(Split::Test);
+        let nval = val.len().min(500);
+        let mut body = String::from(
+            "# Table 3 — thresholds from 500 validation samples (<=1% drop)\n\n",
+        );
+        let mut rows = Vec::new();
+        for kind in ALL_ROUTERS {
+            for (small, large, _) in &MAIN_PAIRS {
+                let pair = pair_id(small, large);
+                let sub = crate::calibrate::subsample(val.len(), nval, 0xCAFE);
+                let val_ids: Vec<usize> = sub.iter().map(|&i| val[i]).collect();
+                let (qs_v, ql_v) = self.pair_quality(small, large, &val_ids)?;
+                let scores_v = self.router_scores_on(&pair, kind, &val_ids)?;
+                let cal = crate::calibrate::calibrate(&scores_v, &qs_v, &ql_v, 1.0);
+                let (qs_t, ql_t) = self.pair_quality(small, large, &test)?;
+                let scores_t = self.router_scores_on(&pair, kind, &test)?;
+                let on_test =
+                    crate::calibrate::evaluate_threshold(cal.threshold, &scores_t, &qs_t, &ql_t);
+                rows.push(vec![
+                    format!("r_{}", kind.name()),
+                    format!("{small}/{large}"),
+                    format!("{:.2}", cal.drop_pct),
+                    format!("{:.1}", cal.cost_advantage * 100.0),
+                    format!("{:.2}", on_test.drop_pct),
+                    format!("{:.1}", on_test.cost_advantage * 100.0),
+                ]);
+            }
+        }
+        body.push_str(&md_table(
+            &["router", "pair", "val drop %", "val cost adv %", "test drop %", "test cost adv %"],
+            &rows,
+        ));
+        self.write("table3", &body)
+    }
+
+    // ------------------------------------------------------------------
+    // Fig 7 — alternate (oracle) metric evaluation
+    // ------------------------------------------------------------------
+    pub fn fig7(&self) -> Result<String> {
+        let test = self.ids(Split::Test);
+        let mut body = String::from(
+            "# Fig 7 — routing evaluated under the oracle rating (GPT-4-judge analogue)\n",
+        );
+        for (small, large, regime) in &MAIN_PAIRS {
+            let pair = pair_id(small, large);
+            // correlations between BART-analogue gap and oracle gap
+            let (qs_b, ql_b) = self.pair_quality(small, large, &test)?;
+            let gap_bart: Vec<f64> = qs_b.iter().zip(&ql_b).map(|(a, b)| a - b).collect();
+            let qs_o = subset(&self.pl.load_oracle_quality(small, self.corpus)?, &test).mean();
+            let ql_o = subset(&self.pl.load_oracle_quality(large, self.corpus)?, &test).mean();
+            let gap_orc: Vec<f64> = qs_o.iter().zip(&ql_o).map(|(a, b)| a - b).collect();
+            let r = stats::pearson(&gap_bart, &gap_orc);
+            let rho = stats::spearman(&gap_bart, &gap_orc);
+            body.push_str(&format!(
+                "\n## {small} vs {large} ({regime}) — r = {r:.2}, rho = {rho:.2}\n\n\
+                 drop % under oracle rating:\n\n"
+            ));
+            let mut rows = Vec::new();
+            for ca in [0.10, 0.20, 0.40] {
+                let mut row = vec![format!("{:.0}", ca * 100.0)];
+                for kind in ALL_ROUTERS {
+                    let scores = self.router_scores_on(&pair, kind, &test)?;
+                    let p = tradeoff_at(&scores, &qs_o, &ql_o, ca);
+                    row.push(format!("{:+.1}", p.drop_pct));
+                }
+                rows.push(row);
+            }
+            body.push_str(&md_table(&["cost adv %", "r_det", "r_prob", "r_trans"], &rows));
+        }
+        self.write("fig7", &body)
+    }
+
+    // ------------------------------------------------------------------
+    // Fig 8 — generalization across model pairs
+    // ------------------------------------------------------------------
+    pub fn fig8(&self) -> Result<String> {
+        let test = self.ids(Split::Test);
+        let mut body = String::from("# Fig 8 — routers applied to pairs they were not trained on\n");
+        // train-pair -> test-pair combos spanning correlation regimes
+        let combos = [
+            ("small", "medium", "medium", "large"),
+            ("medium", "large", "small", "large"),
+            ("nano", "medium", "small", "medium"),
+            ("small", "medium", "nano", "large"),
+        ];
+        for (tr_s, tr_l, te_s, te_l) in combos {
+            let tr_pair = pair_id(tr_s, tr_l);
+            // gap correlation between train pair and test pair (test split)
+            let (qs_tr, ql_tr) = self.pair_quality(tr_s, tr_l, &test)?;
+            let gap_tr: Vec<f64> = qs_tr.iter().zip(&ql_tr).map(|(a, b)| a - b).collect();
+            let (qs_te, ql_te) = self.pair_quality(te_s, te_l, &test)?;
+            let gap_te: Vec<f64> = qs_te.iter().zip(&ql_te).map(|(a, b)| a - b).collect();
+            let r = stats::pearson(&gap_tr, &gap_te);
+            let rho = stats::spearman(&gap_tr, &gap_te);
+            body.push_str(&format!(
+                "\n## trained on {tr_s}/{tr_l}, tested on {te_s}/{te_l} — r = {r:.2}, rho = {rho:.2}\n\n"
+            ));
+            let mut rows = Vec::new();
+            for ca in [0.10, 0.20, 0.40] {
+                let mut row = vec![format!("{:.0}", ca * 100.0)];
+                for kind in ALL_ROUTERS {
+                    let scores = self.router_scores_on(&tr_pair, kind, &test)?;
+                    let p = tradeoff_at(&scores, &qs_te, &ql_te, ca);
+                    row.push(format!("{:+.1}", p.drop_pct));
+                }
+                rows.push(row);
+            }
+            body.push_str(&md_table(&["cost adv %", "r_det", "r_prob", "r_trans"], &rows));
+        }
+        self.write("fig8", &body)
+    }
+
+    // ------------------------------------------------------------------
+    // Table 5 — dataset statistics
+    // ------------------------------------------------------------------
+    pub fn table5(&self) -> Result<String> {
+        let mut body = String::from("# Table 5 — MixSynth dataset statistics\n\n");
+        let mut by_source: std::collections::BTreeMap<&str, usize> = Default::default();
+        for q in self.corpus {
+            *by_source.entry(q.task.source()).or_default() += 1;
+        }
+        let rows: Vec<Vec<String>> = by_source
+            .iter()
+            .map(|(s, n)| vec![s.to_string(), n.to_string()])
+            .collect();
+        body.push_str(&md_table(&["source", "#examples"], &rows));
+        body.push_str(&format!("\ntotal: {}\n\n", self.corpus.len()));
+
+        let mut rows = Vec::new();
+        for t in ALL_TASKS {
+            let n = self.corpus.iter().filter(|q| q.task == t).count();
+            let (ntr, nv, nte) = (
+                self.corpus.iter().filter(|q| q.task == t && q.split == Split::Train).count(),
+                self.corpus.iter().filter(|q| q.task == t && q.split == Split::Val).count(),
+                self.corpus.iter().filter(|q| q.task == t && q.split == Split::Test).count(),
+            );
+            rows.push(vec![
+                t.name().to_string(),
+                t.difficulty().to_string(),
+                n.to_string(),
+                ntr.to_string(),
+                nv.to_string(),
+                nte.to_string(),
+            ]);
+        }
+        body.push_str(&md_table(
+            &["task", "difficulty", "total", "train", "val", "test"],
+            &rows,
+        ));
+        self.write("table5", &body)
+    }
+
+    // ------------------------------------------------------------------
+    // §5 extension — N-model routing
+    // ------------------------------------------------------------------
+    pub fn nmodel(&self) -> Result<String> {
+        let test = self.ids(Split::Test);
+        // roster ladder nano -> medium -> large with the two trained
+        // adjacent pair-routers
+        let ladder = ["nano", "medium", "large"];
+        let pairs = [pair_id("nano", "medium"), pair_id("medium", "large")];
+        let mut pair_scores = Vec::new();
+        for p in &pairs {
+            pair_scores.push(self.router_scores_on(p, RouterKind::Trans, &test)?);
+        }
+        let mut quals = Vec::new();
+        for m in ladder {
+            quals.push(subset(&self.pl.load_quality(m, self.corpus)?, &test).mean());
+        }
+        let base = stats::mean(&quals[2]);
+        let mut body = String::from(
+            "# N-model routing (§5 extension 2): nano -> medium -> large ladder\n\n\
+             Thresholds swept jointly; quality drop vs all-at-largest.\n\n```\n\
+             thr\tfrac_nano\tfrac_medium\tfrac_large\tdrop_pct\n",
+        );
+        for k in 0..=10 {
+            let thr = k as f32 / 10.0;
+            let assign = policy::nmodel_assign(&pair_scores, &[thr, thr], test.len());
+            let mut frac = [0.0f64; 3];
+            let mut q = 0.0;
+            for (i, &m) in assign.iter().enumerate() {
+                frac[m] += 1.0;
+                q += quals[m][i];
+            }
+            let n = assign.len() as f64;
+            q /= n;
+            body.push_str(&format!(
+                "{thr:.1}\t{:.2}\t{:.2}\t{:.2}\t{:+.2}\n",
+                frac[0] / n,
+                frac[1] / n,
+                frac[2] / n,
+                crate::metrics::quality_drop_pct(base, q)
+            ));
+        }
+        body.push_str("```\n");
+        self.write("nmodel", &body)
+    }
+}
+
+/// Difference between average quality gaps of small-routed vs
+/// large-routed queries at a target cost advantage (Fig. 6 quantity).
+pub fn gap_diff(scores: &[f32], gap: &[f64], target: f64) -> f64 {
+    let n = scores.len();
+    let k = ((target * n as f64).round() as usize).clamp(1, n.saturating_sub(1));
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    let small: Vec<f64> = idx[..k].iter().map(|&i| gap[i]).collect();
+    let large: Vec<f64> = idx[k..].iter().map(|&i| gap[i]).collect();
+    stats::mean(&small) - stats::mean(&large)
+}
+
+fn pick(q: &QualitySamples, i: usize) -> QualitySamples {
+    QualitySamples::new(vec![q.q[i].clone()])
+}
+
+/// Ensure result invariants used by integration tests.
+pub fn sanity_check_report(report: &str) -> Result<()> {
+    ensure!(!report.is_empty());
+    ensure!(report.starts_with('#'), "report must start with a title");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn md_table_renders() {
+        let t = md_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
+        assert!(t.contains("|---|---|"));
+    }
+
+    #[test]
+    fn gap_diff_positive_for_informative_scores() {
+        // scores aligned with gap: top-scored queries have the biggest gap
+        let gap: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        let scores: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        let d = gap_diff(&scores, &gap, 0.3);
+        assert!(d > 0.4, "{d}");
+        // uninformative scores: near zero (use a shuffled permutation)
+        let mut rng = crate::rng::Rng::new(5);
+        let mut perm: Vec<f32> = scores.clone();
+        rng.shuffle(&mut perm);
+        let d0 = gap_diff(&perm, &gap, 0.3);
+        assert!(d0.abs() < 0.25, "{d0}");
+    }
+
+    #[test]
+    fn sanity_check_works() {
+        assert!(sanity_check_report("# title\nbody").is_ok());
+        assert!(sanity_check_report("").is_err());
+        assert!(sanity_check_report("no title").is_err());
+    }
+}

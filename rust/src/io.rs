@@ -1,0 +1,306 @@
+//! On-disk formats for run state (no serde in the offline environment):
+//!
+//! * **Tensor files** (`*.tz`): a tiny binary format — magic `RTEN`,
+//!   dtype tag, rank, little-endian u32 dims, raw LE data. Used for model
+//!   parameters, generated responses, and score matrices.
+//! * **Key-value text** (`*.kv`): `key<TAB>value` lines for small run
+//!   metadata (thresholds, t*, counts).
+
+use std::fs::{self, File};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"RTEN";
+
+/// Element type tag for tensor files.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::U32 => 2,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U32,
+            _ => bail!("unknown dtype tag {t}"),
+        })
+    }
+}
+
+/// A host-side dense tensor (f32/i32/u32 payloads).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    U32 { dims: Vec<usize>, data: Vec<u32> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } | Tensor::U32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+            Tensor::U32 { .. } => DType::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+            Tensor::U32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor::F32 { dims, data }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor::I32 { dims, data }
+    }
+
+    pub fn u32(dims: Vec<usize>, data: Vec<u32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor::U32 { dims, data }
+    }
+
+    /// Write in the `RTEN` binary format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+        w.write_all(MAGIC)?;
+        w.write_all(&[self.dtype().tag(), self.dims().len() as u8])?;
+        for &d in self.dims() {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match self {
+            Tensor::F32 { data, .. } => {
+                for &x in data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Tensor::I32 { data, .. } => {
+                for &x in data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Tensor::U32 { data, .. } => {
+                for &x in data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Read an `RTEN` file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+        let mut head = [0u8; 6];
+        r.read_exact(&mut head)?;
+        if &head[..4] != MAGIC {
+            bail!("{path:?}: bad magic");
+        }
+        let dtype = DType::from_tag(head[4])?;
+        let rank = head[5] as usize;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            dims.push(u32::from_le_bytes(b) as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut raw = vec![0u8; n * 4];
+        r.read_exact(&mut raw)?;
+        Ok(match dtype {
+            DType::F32 => Tensor::F32 {
+                dims,
+                data: raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            },
+            DType::I32 => Tensor::I32 {
+                dims,
+                data: raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            },
+            DType::U32 => Tensor::U32 {
+                dims,
+                data: raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect(),
+            },
+        })
+    }
+}
+
+/// Save a list of named tensors as `<dir>/<name>.tz` (name slashes -> `_`).
+pub fn save_tensors(dir: &Path, tensors: &[(String, Tensor)]) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    for (name, t) in tensors {
+        t.save(&dir.join(format!("{}.tz", name.replace('/', "_"))))?;
+    }
+    Ok(())
+}
+
+/// Load `<dir>/<name>.tz` for each requested name, in order.
+pub fn load_tensors(dir: &Path, names: &[String]) -> Result<Vec<Tensor>> {
+    names
+        .iter()
+        .map(|n| Tensor::load(&dir.join(format!("{}.tz", n.replace('/', "_")))))
+        .collect()
+}
+
+/// Write `key<TAB>value` lines.
+pub fn save_kv(path: &Path, pairs: &[(String, String)]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut s = String::new();
+    for (k, v) in pairs {
+        assert!(!k.contains('\t') && !v.contains('\n'));
+        s.push_str(&format!("{k}\t{v}\n"));
+    }
+    fs::write(path, s)?;
+    Ok(())
+}
+
+/// Read `key<TAB>value` lines.
+pub fn load_kv(path: &Path) -> Result<Vec<(String, String)>> {
+    let text = fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('\t')
+            .with_context(|| format!("bad kv line: {line}"))?;
+        out.push((k.to_string(), v.to_string()));
+    }
+    Ok(out)
+}
+
+/// Look up a key in kv pairs.
+pub fn kv_get<'a>(pairs: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("hybrid_llm_io_{name}_{}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn tensor_roundtrip_f32() {
+        let d = tmpdir("f32");
+        let t = Tensor::f32(vec![2, 3], vec![1.0, -2.5, 3.25, 0.0, f32::MIN, f32::MAX]);
+        let p = d.join("a.tz");
+        t.save(&p).unwrap();
+        assert_eq!(Tensor::load(&p).unwrap(), t);
+    }
+
+    #[test]
+    fn tensor_roundtrip_i32_u32() {
+        let d = tmpdir("i32");
+        let t = Tensor::i32(vec![4], vec![i32::MIN, -1, 0, i32::MAX]);
+        let p = d.join("b.tz");
+        t.save(&p).unwrap();
+        assert_eq!(Tensor::load(&p).unwrap(), t);
+        let u = Tensor::u32(vec![2, 1], vec![0, u32::MAX]);
+        let q = d.join("c.tz");
+        u.save(&q).unwrap();
+        assert_eq!(Tensor::load(&q).unwrap(), u);
+    }
+
+    #[test]
+    fn tensor_scalar_rank0() {
+        let d = tmpdir("scalar");
+        let t = Tensor::f32(vec![], vec![3.5]);
+        let p = d.join("s.tz");
+        t.save(&p).unwrap();
+        let r = Tensor::load(&p).unwrap();
+        assert_eq!(r.dims(), &[] as &[usize]);
+        assert_eq!(r.as_f32().unwrap(), &[3.5]);
+    }
+
+    #[test]
+    fn named_tensor_roundtrip() {
+        let d = tmpdir("named");
+        let ts = vec![
+            ("p.emb".to_string(), Tensor::f32(vec![2], vec![1.0, 2.0])),
+            ("p.l00.wq".to_string(), Tensor::f32(vec![1], vec![3.0])),
+        ];
+        save_tensors(&d, &ts).unwrap();
+        let names: Vec<String> = ts.iter().map(|(n, _)| n.clone()).collect();
+        let back = load_tensors(&d, &names).unwrap();
+        assert_eq!(back[0], ts[0].1);
+        assert_eq!(back[1], ts[1].1);
+    }
+
+    #[test]
+    fn kv_roundtrip() {
+        let d = tmpdir("kv");
+        let p = d.join("meta.kv");
+        let pairs = vec![
+            ("tstar".to_string(), "0.25".to_string()),
+            ("n_train".to_string(), "2000".to_string()),
+        ];
+        save_kv(&p, &pairs).unwrap();
+        let back = load_kv(&p).unwrap();
+        assert_eq!(back, pairs);
+        assert_eq!(kv_get(&back, "tstar"), Some("0.25"));
+        assert_eq!(kv_get(&back, "missing"), None);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let d = tmpdir("bad");
+        let p = d.join("x.tz");
+        fs::write(&p, b"NOPE\x00\x00").unwrap();
+        assert!(Tensor::load(&p).is_err());
+    }
+}

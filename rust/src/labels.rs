@@ -1,0 +1,271 @@
+//! Label pipeline — the heart of the paper's §3.
+//!
+//! Given, for every query `x`, `ns` sampled response qualities from the
+//! small model (`qs`) and the large model (`ql`):
+//!
+//! * `y_det(x)  = 1[q(S(x)) >= q(L(x))]` on a single sample pair (§3.1),
+//! * `y_prob(x) = Pr[H(x) >= 0]`, estimated over all `ns²` sample pairs
+//!   (§3.2; the paper says "sample average of the indicator" — we use the
+//!   full product estimator for the lowest variance),
+//! * `y_trans(x; t) = Pr[H(x) >= -t]` (§3.3), with `t*` maximizing the
+//!   average pairwise label difference (Eq. 3) — computed exactly in
+//!   O(N log N) via the sorted-prefix identity rather than the naive
+//!   O(N²) double sum.
+
+use anyhow::{ensure, Result};
+
+/// Per-pair quality samples: `q[i][k]` = quality of the k-th sampled
+/// response of query i under the BART-analogue scorer.
+#[derive(Debug, Clone)]
+pub struct QualitySamples {
+    pub q: Vec<Vec<f32>>,
+}
+
+impl QualitySamples {
+    pub fn new(q: Vec<Vec<f32>>) -> Self {
+        QualitySamples { q }
+    }
+
+    pub fn n_queries(&self) -> usize {
+        self.q.len()
+    }
+
+    /// Mean quality per query.
+    pub fn mean(&self) -> Vec<f64> {
+        self.q
+            .iter()
+            .map(|s| s.iter().map(|&x| x as f64).sum::<f64>() / s.len().max(1) as f64)
+            .collect()
+    }
+}
+
+/// §3.1 deterministic labels from the first sample of each model.
+pub fn y_det(qs: &QualitySamples, ql: &QualitySamples) -> Result<Vec<f32>> {
+    ensure!(qs.n_queries() == ql.n_queries());
+    Ok(qs
+        .q
+        .iter()
+        .zip(&ql.q)
+        .map(|(s, l)| {
+            ensure_nonempty(s, l);
+            f32::from(u8::from(s[0] >= l[0]))
+        })
+        .collect())
+}
+
+fn ensure_nonempty(s: &[f32], l: &[f32]) {
+    debug_assert!(!s.is_empty() && !l.is_empty());
+}
+
+/// §3.2 probabilistic labels: `Pr[q(S) >= q(L) - t]` over all sample
+/// pairs (t = 0 gives `y_prob`).
+pub fn y_trans(qs: &QualitySamples, ql: &QualitySamples, t: f32) -> Result<Vec<f32>> {
+    ensure!(qs.n_queries() == ql.n_queries());
+    Ok(qs
+        .q
+        .iter()
+        .zip(&ql.q)
+        .map(|(s, l)| {
+            let mut hits = 0usize;
+            for &a in s {
+                for &b in l {
+                    if a >= b - t {
+                        hits += 1;
+                    }
+                }
+            }
+            hits as f32 / (s.len() * l.len()).max(1) as f32
+        })
+        .collect())
+}
+
+/// §3.2 probabilistic labels (`t = 0`).
+pub fn y_prob(qs: &QualitySamples, ql: &QualitySamples) -> Result<Vec<f32>> {
+    y_trans(qs, ql, 0.0)
+}
+
+/// Mean quality gap `E[q(S(x))] - E[q(L(x))]` per query — used by the
+/// router-validation (Fig 6) and generalization (Fig 8) experiments.
+pub fn mean_gap(qs: &QualitySamples, ql: &QualitySamples) -> Result<Vec<f64>> {
+    ensure!(qs.n_queries() == ql.n_queries());
+    Ok(qs
+        .mean()
+        .iter()
+        .zip(ql.mean())
+        .map(|(a, b)| a - b)
+        .collect())
+}
+
+/// Average pairwise absolute difference `1/N² Σ_{i,i'} |y_i - y_{i'}|`
+/// (the Eq. 3 objective), exact, via the sorted identity:
+/// `Σ_{i<j} (y_(j) - y_(i)) = Σ_j y_(j) (2j - N + 1)` (ascending order).
+pub fn pairwise_mean_abs_diff(ys: &[f32]) -> f64 {
+    let n = ys.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = ys.iter().map(|&y| y as f64).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut acc = 0.0;
+    for (j, &y) in sorted.iter().enumerate() {
+        acc += y * (2.0 * j as f64 - (n as f64 - 1.0));
+    }
+    2.0 * acc / (n as f64 * n as f64)
+}
+
+/// Naive O(N²) reference for the Eq. 3 objective (tests + tiny inputs).
+pub fn pairwise_mean_abs_diff_naive(ys: &[f32]) -> f64 {
+    let n = ys.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for &a in ys {
+        for &b in ys {
+            acc += (a as f64 - b as f64).abs();
+        }
+    }
+    acc / (n as f64 * n as f64)
+}
+
+/// Result of the Eq. 3 grid search.
+#[derive(Debug, Clone)]
+pub struct TStarSearch {
+    pub tstar: f32,
+    /// (t, J(t)) for the whole grid — the Fig. 4b curve.
+    pub curve: Vec<(f32, f64)>,
+}
+
+/// Grid-search `t*` (Eq. 3). The grid spans `[0, t_max]`; `t_max`
+/// defaults to the 95th percentile of observed |gap| so the search
+/// brackets the label-spreading optimum at any scorer scale.
+pub fn find_tstar(
+    qs: &QualitySamples,
+    ql: &QualitySamples,
+    grid_points: usize,
+) -> Result<TStarSearch> {
+    ensure!(grid_points >= 2);
+    let gaps = mean_gap(qs, ql)?;
+    let mut mags: Vec<f64> = gaps.iter().map(|g| g.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let t_max = (crate::stats::percentile_sorted(&mags, 95.0) * 2.0).max(1e-3);
+    let mut curve = Vec::with_capacity(grid_points);
+    let mut best = (0.0f32, f64::MIN);
+    for i in 0..grid_points {
+        let t = (t_max * i as f64 / (grid_points - 1) as f64) as f32;
+        let ys = y_trans(qs, ql, t)?;
+        let j = pairwise_mean_abs_diff(&ys);
+        curve.push((t, j));
+        if j > best.1 {
+            best = (t, j);
+        }
+    }
+    Ok(TStarSearch { tstar: best.0, curve })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn qsamples(v: Vec<Vec<f32>>) -> QualitySamples {
+        QualitySamples::new(v)
+    }
+
+    #[test]
+    fn det_uses_first_sample() {
+        let qs = qsamples(vec![vec![-1.0, -9.0], vec![-3.0, 0.0]]);
+        let ql = qsamples(vec![vec![-2.0, 0.0], vec![-2.0, -9.0]]);
+        assert_eq!(y_det(&qs, &ql).unwrap(), vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn prob_counts_all_pairs() {
+        let qs = qsamples(vec![vec![-1.0, -3.0]]);
+        let ql = qsamples(vec![vec![-2.0, -2.0]]);
+        // pairs: (-1>=-2) yes, (-1>=-2) yes, (-3>=-2) no, no => 0.5
+        assert_eq!(y_prob(&qs, &ql).unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn trans_relaxation_monotone_in_t() {
+        let mut rng = Rng::new(3);
+        let mk = |rng: &mut Rng| {
+            (0..20)
+                .map(|_| (0..5).map(|_| -(rng.next_f32() * 5.0)).collect())
+                .collect::<Vec<Vec<f32>>>()
+        };
+        let qs = qsamples(mk(&mut rng));
+        let ql = qsamples(mk(&mut rng));
+        let y0 = y_trans(&qs, &ql, 0.0).unwrap();
+        let y1 = y_trans(&qs, &ql, 0.5).unwrap();
+        let y2 = y_trans(&qs, &ql, 2.0).unwrap();
+        for i in 0..y0.len() {
+            assert!(y1[i] >= y0[i]);
+            assert!(y2[i] >= y1[i]);
+        }
+        // extreme relaxation saturates at 1
+        let ybig = y_trans(&qs, &ql, 100.0).unwrap();
+        assert!(ybig.iter().all(|&y| y == 1.0));
+    }
+
+    #[test]
+    fn sorted_objective_matches_naive_property() {
+        crate::testing::check("pairwise abs diff sorted == naive", 100, |rng| {
+            let n = rng.range(1, 40);
+            let ys: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let fast = pairwise_mean_abs_diff(&ys);
+            let naive = pairwise_mean_abs_diff_naive(&ys);
+            assert!((fast - naive).abs() < 1e-9, "{fast} vs {naive}");
+        });
+    }
+
+    #[test]
+    fn objective_prefers_balanced_labels() {
+        // all-equal labels have zero spread; half/half has max spread
+        assert_eq!(pairwise_mean_abs_diff(&[0.1; 10]), 0.0);
+        let balanced = pairwise_mean_abs_diff(&[0.0, 0.0, 1.0, 1.0]);
+        let skewed = pairwise_mean_abs_diff(&[0.0, 0.0, 0.0, 1.0]);
+        assert!(balanced > skewed);
+    }
+
+    #[test]
+    fn tstar_balances_imbalanced_labels() {
+        // large model much better: gaps around -2; y_prob ~ 0 everywhere.
+        // t* should move labels toward the spread-out regime.
+        let mut rng = Rng::new(9);
+        let n = 60;
+        let qs = qsamples(
+            (0..n)
+                .map(|i| {
+                    let base = -3.0 - (i as f32 / n as f32); // -3..-4
+                    (0..5).map(|_| base + 0.2 * (rng.next_f32() - 0.5)).collect()
+                })
+                .collect(),
+        );
+        let ql = qsamples(
+            (0..n)
+                .map(|i| {
+                    let base = -1.0 - 2.0 * (i as f32 / n as f32); // -1..-3
+                    (0..5).map(|_| base + 0.2 * (rng.next_f32() - 0.5)).collect()
+                })
+                .collect(),
+        );
+        let y0 = y_prob(&qs, &ql).unwrap();
+        let j0 = pairwise_mean_abs_diff(&y0);
+        let search = find_tstar(&qs, &ql, 41).unwrap();
+        assert!(search.tstar > 0.0);
+        let jstar = pairwise_mean_abs_diff(&y_trans(&qs, &ql, search.tstar).unwrap());
+        assert!(jstar >= j0, "{jstar} vs {j0}");
+        // curve has the grid size and contains (0, j0)
+        assert_eq!(search.curve.len(), 41);
+        assert!((search.curve[0].1 - j0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_gap_math() {
+        let qs = qsamples(vec![vec![-1.0, -2.0]]);
+        let ql = qsamples(vec![vec![-4.0, -4.0]]);
+        assert_eq!(mean_gap(&qs, &ql).unwrap(), vec![2.5]);
+    }
+}

@@ -1,0 +1,45 @@
+//! # hybrid-llm — Hybrid LLM query routing (ICLR 2024) reproduction
+//!
+//! A three-layer serving stack reproducing *"Hybrid LLM: Cost-Efficient and
+//! Quality-Aware Query Routing"*:
+//!
+//! * **L3 (this crate)** — the serving coordinator: query-router service,
+//!   continuous-batching LLM workers, KV-cache slot management, the label
+//!   pipeline (`y_det` / `y_prob` / `y_trans(t*)`), router training,
+//!   threshold calibration, metrics, and one experiment driver per table
+//!   and figure of the paper.
+//! * **L2 (JAX, build time)** — transformer LMs / router encoder / scorer,
+//!   AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * **L1 (Pallas, build time)** — flash-style attention kernels on the
+//!   serving hot path.
+//!
+//! Python never runs at request time: this crate loads `artifacts/*.hlo.txt`
+//! through the PJRT C API (the `xla` crate) and drives everything —
+//! including *training* the LMs and routers — from Rust.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod batching;
+pub mod bench;
+pub mod calibrate;
+pub mod cli;
+pub mod corpus;
+pub mod eval;
+pub mod io;
+pub mod labels;
+pub mod lm;
+pub mod metrics;
+pub mod pipeline;
+pub mod policy;
+pub mod rng;
+pub mod router;
+pub mod runtime;
+pub mod scorer;
+pub mod serve;
+pub mod stats;
+pub mod testing;
+pub mod tokenizer;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

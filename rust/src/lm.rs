@@ -1,0 +1,390 @@
+//! LM engine: everything the coordinator does with one roster LM —
+//! seeded init, AdamW pre-training (driving the fused `*.train` artifact),
+//! and batched autoregressive generation (prefill + decode artifacts with
+//! the Pallas attention kernels inside).
+//!
+//! Training happens *from rust*: python only lowered the train-step graph;
+//! the data loop, LR schedule, and checkpointing live here.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::corpus::{Query, A_MAX};
+use crate::io::Tensor;
+use crate::rng::Rng;
+use crate::runtime::{ModelMeta, ParamSet, Runtime};
+use crate::tokenizer as tok;
+
+/// A generated response: answer tokens (EOS stripped) + mean sampled
+/// token log-prob (generation-time confidence, not the quality score).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub tokens: Vec<i32>,
+    pub mean_logprob: f32,
+}
+
+/// Build the teacher-forced training / scoring sequence for (query, answer):
+/// `[prompt..., answer..., EOS, PAD...]` of length `sctx`, plus the f32
+/// mask marking answer+EOS token positions (the loss / score region).
+pub fn build_sequence(
+    sctx: usize,
+    prompt: &[i32],
+    answer: &[i32],
+) -> Result<(Vec<i32>, Vec<f32>)> {
+    let total = prompt.len() + answer.len() + 1;
+    ensure!(total <= sctx, "sequence too long: {total} > {sctx}");
+    let mut seq = vec![tok::PAD; sctx];
+    let mut mask = vec![0.0f32; sctx];
+    seq[..prompt.len()].copy_from_slice(prompt);
+    seq[prompt.len()..prompt.len() + answer.len()].copy_from_slice(answer);
+    seq[prompt.len() + answer.len()] = tok::EOS;
+    for m in mask.iter_mut().skip(prompt.len()).take(answer.len() + 1) {
+        *m = 1.0;
+    }
+    Ok((seq, mask))
+}
+
+/// Linear-warmup + cosine-decay learning-rate schedule.
+pub fn lr_schedule(base: f32, step: usize, total: usize, warmup: usize) -> f32 {
+    let warmup = warmup.max(1);
+    if step < warmup {
+        return base * (step as f32 + 1.0) / warmup as f32;
+    }
+    let t = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+    let min_ratio = 0.1;
+    base * (min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + (std::f32::consts::PI * t).cos()))
+}
+
+/// One roster LM bound to the runtime.
+pub struct LmEngine {
+    rt: Arc<Runtime>,
+    pub name: String,
+    pub meta: ModelMeta,
+    pub params: ParamSet,
+}
+
+impl LmEngine {
+    /// Fresh seeded parameters via the `<name>.init` artifact.
+    pub fn init(rt: Arc<Runtime>, name: &str, seed: u32) -> Result<LmEngine> {
+        let meta = *rt.manifest.model(name)?;
+        let init = rt.exec(&format!("{name}.init"))?;
+        let host = init.run(&[&Tensor::u32(vec![], vec![seed])])?;
+        let names: Vec<String> = init.spec.outs.iter().map(|o| o.name.clone()).collect();
+        let params = ParamSet::from_host(&rt, names, host)?;
+        Ok(LmEngine { rt, name: name.to_string(), meta, params })
+    }
+
+    /// Load previously-trained parameters from `<dir>` (saved by [`Self::save`]).
+    pub fn load(rt: Arc<Runtime>, name: &str, dir: &Path) -> Result<LmEngine> {
+        let meta = *rt.manifest.model(name)?;
+        let init = rt.exec(&format!("{name}.init"))?;
+        let names: Vec<String> = init.spec.outs.iter().map(|o| o.name.clone()).collect();
+        let params = ParamSet::load(&rt, dir, names)
+            .with_context(|| format!("load params for {name} from {dir:?}"))?;
+        Ok(LmEngine { rt, name: name.to_string(), meta, params })
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        self.params.save(dir)
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    /// Pre-train on the MixSynth corpus: `steps` AdamW steps of batch
+    /// `trainb`, batches drawn uniformly from `queries` with seeded RNG.
+    /// Returns the per-step losses.
+    pub fn train(
+        &mut self,
+        queries: &[&Query],
+        steps: usize,
+        base_lr: f32,
+        seed: u64,
+        mut progress: impl FnMut(usize, f32),
+    ) -> Result<Vec<f32>> {
+        ensure!(!queries.is_empty());
+        let g = self.rt.manifest.globals;
+        let train = self.rt.exec(&format!("{}.train", self.name))?;
+        let n = self.params.len();
+        // optimizer state lives host-side between steps
+        let mut m: Vec<Tensor> = self
+            .params
+            .host
+            .iter()
+            .map(|t| Tensor::f32(t.dims().to_vec(), vec![0.0; t.len()]))
+            .collect();
+        let mut v = m.clone();
+        let mut rng = Rng::new(seed);
+        let mut losses = Vec::with_capacity(steps);
+
+        for step in 0..steps {
+            let mut toks = vec![tok::PAD; g.trainb * g.sctx];
+            let mut mask = vec![0.0f32; g.trainb * g.sctx];
+            for b in 0..g.trainb {
+                let q = queries[rng.below(queries.len())];
+                let (s, mk) = build_sequence(g.sctx, &q.prompt, &q.reference)?;
+                toks[b * g.sctx..(b + 1) * g.sctx].copy_from_slice(&s);
+                mask[b * g.sctx..(b + 1) * g.sctx].copy_from_slice(&mk);
+            }
+            let toks = Tensor::i32(vec![g.trainb, g.sctx], toks);
+            let mask = Tensor::f32(vec![g.trainb, g.sctx], mask);
+            let lr = Tensor::f32(vec![], vec![lr_schedule(base_lr, step, steps, steps / 20 + 1)]);
+            let stept = Tensor::i32(vec![], vec![step as i32 + 1]);
+
+            let mut ins: Vec<&Tensor> = Vec::with_capacity(3 * n + 4);
+            ins.extend(self.params.host.iter());
+            ins.extend(m.iter());
+            ins.extend(v.iter());
+            ins.extend([&toks, &mask, &lr, &stept]);
+            let mut out = train.run(&ins)?;
+
+            let loss = out.pop().context("train: missing loss")?;
+            let loss = loss.as_f32()?[0];
+            losses.push(loss);
+            let new_v: Vec<Tensor> = out.drain(2 * n..).collect();
+            let new_m: Vec<Tensor> = out.drain(n..).collect();
+            let new_p = out;
+            m = new_m;
+            v = new_v;
+            self.params.update(&self.rt, new_p)?;
+            progress(step, loss);
+        }
+        Ok(losses)
+    }
+
+    /// Resident-param input map for generation artifacts (params are
+    /// always inputs `0..n` by the manifest contract).
+    fn resident(&self) -> HashMap<usize, Arc<xla::PjRtBuffer>> {
+        self.params.device.iter().cloned().enumerate().collect()
+    }
+
+    /// Generate one response per prompt with the *batched* (B = `genb`)
+    /// prefill/decode artifacts. `seeds[i]` individualizes sampling per
+    /// sequence; `temp = 0` is greedy. Prompts beyond `genb` are processed
+    /// in successive waves (run-to-completion batching; the serving layer
+    /// does continuous batching instead).
+    pub fn generate(&self, prompts: &[&[i32]], seeds: &[u32], temp: f32) -> Result<Vec<Response>> {
+        ensure!(prompts.len() == seeds.len());
+        let g = self.rt.manifest.globals;
+        let bsz = g.genb;
+        let mut out = Vec::with_capacity(prompts.len());
+        for (chunk_p, chunk_s) in prompts.chunks(bsz).zip(seeds.chunks(bsz)) {
+            out.extend(self.generate_wave(chunk_p, chunk_s, temp, bsz)?);
+        }
+        Ok(out)
+    }
+
+    fn generate_wave(
+        &self,
+        prompts: &[&[i32]],
+        seeds: &[u32],
+        temp: f32,
+        bsz: usize,
+    ) -> Result<Vec<Response>> {
+        let g = self.rt.manifest.globals;
+        let nb = prompts.len();
+        ensure!(nb <= bsz && nb > 0);
+        let prefill = self.rt.exec(&format!("{}.prefill", self.name))?;
+        let decode = self.rt.exec(&format!("{}.decode", self.name))?;
+        let n = self.params.len();
+        let resident = self.resident();
+
+        // right-pad prompts into [bsz, sprompt]
+        let mut ptoks = vec![tok::PAD; bsz * g.sprompt];
+        let mut lens = vec![1i32; bsz];
+        for (b, p) in prompts.iter().enumerate() {
+            ensure!(p.len() <= g.sprompt, "prompt too long");
+            ptoks[b * g.sprompt..b * g.sprompt + p.len()].copy_from_slice(p);
+            lens[b] = p.len() as i32;
+        }
+        let ptoks = Tensor::i32(vec![bsz, g.sprompt], ptoks);
+        let lens_t = Tensor::i32(vec![bsz], lens.clone());
+        let mut seedv = vec![0u32; bsz];
+        seedv[..nb].copy_from_slice(seeds);
+        let seeds_t = Tensor::u32(vec![bsz], seedv);
+        let temp_t = Tensor::f32(vec![], vec![temp]);
+
+        let host: Vec<(usize, &Tensor)> = vec![
+            (n, &ptoks),
+            (n + 1, &lens_t),
+            (n + 2, &seeds_t),
+            (n + 3, &temp_t),
+        ];
+        let mut outs = prefill.run_with_resident(&resident, &host)?;
+        let mut vcache = outs.pop().context("prefill: vcache")?;
+        let mut kcache = outs.pop().context("prefill: kcache")?;
+        let logp = outs.pop().context("prefill: logp")?;
+        let first = outs.pop().context("prefill: next")?;
+
+        let mut answers: Vec<Vec<i32>> = vec![Vec::new(); nb];
+        let mut lps: Vec<Vec<f32>> = vec![Vec::new(); nb];
+        let mut done = vec![false; nb];
+        let mut cur = first.as_i32()?.to_vec();
+        let logp0 = logp.as_f32()?;
+        for b in 0..nb {
+            if cur[b] == tok::EOS {
+                done[b] = true;
+            } else {
+                answers[b].push(cur[b]);
+                lps[b].push(logp0[b]);
+            }
+        }
+        let mut pos: Vec<i32> = lens.clone();
+
+        // decode until every live slot hit EOS or the answer budget
+        for step in 0..A_MAX - 1 {
+            if done.iter().take(nb).all(|&d| d) {
+                break;
+            }
+            if pos.iter().any(|&p| p as usize >= g.sctx - 1) {
+                break;
+            }
+            let cur_t = Tensor::i32(vec![bsz], cur.clone());
+            let pos_t = Tensor::i32(vec![bsz], pos.clone());
+            let step_t = Tensor::i32(vec![], vec![step as i32 + 1]);
+            let host: Vec<(usize, &Tensor)> = vec![
+                (n, &kcache),
+                (n + 1, &vcache),
+                (n + 2, &cur_t),
+                (n + 3, &pos_t),
+                (n + 4, &step_t),
+                (n + 5, &seeds_t),
+                (n + 6, &temp_t),
+            ];
+            let mut outs = decode.run_with_resident(&resident, &host)?;
+            vcache = outs.pop().context("decode: vcache")?;
+            kcache = outs.pop().context("decode: kcache")?;
+            let logp = outs.pop().context("decode: logp")?;
+            let next = outs.pop().context("decode: next")?;
+            let next = next.as_i32()?;
+            let logp = logp.as_f32()?;
+            for b in 0..bsz {
+                pos[b] += 1;
+                if b >= nb || done[b] {
+                    continue;
+                }
+                if next[b] == tok::EOS || answers[b].len() + 1 >= A_MAX {
+                    done[b] = true;
+                } else {
+                    answers[b].push(next[b]);
+                    lps[b].push(logp[b]);
+                }
+                cur[b] = next[b];
+            }
+        }
+
+        Ok((0..nb)
+            .map(|b| Response {
+                tokens: answers[b].clone(),
+                mean_logprob: if lps[b].is_empty() {
+                    0.0
+                } else {
+                    lps[b].iter().sum::<f32>() / lps[b].len() as f32
+                },
+            })
+            .collect())
+    }
+
+    /// Single-request latency path (B=1 artifacts) — used by the Table 2
+    /// driver and the latency benches. Returns the response and the
+    /// number of decode steps executed.
+    pub fn generate_one(&self, prompt: &[i32], seed: u32, temp: f32) -> Result<(Response, usize)> {
+        let g = self.rt.manifest.globals;
+        let prefill = self.rt.exec(&format!("{}.prefill1", self.name))?;
+        let decode = self.rt.exec(&format!("{}.decode1", self.name))?;
+        let n = self.params.len();
+        let resident = self.resident();
+
+        let mut ptoks = vec![tok::PAD; g.sprompt];
+        ensure!(prompt.len() <= g.sprompt);
+        ptoks[..prompt.len()].copy_from_slice(prompt);
+        let ptoks = Tensor::i32(vec![1, g.sprompt], ptoks);
+        let lens_t = Tensor::i32(vec![1], vec![prompt.len() as i32]);
+        let seeds_t = Tensor::u32(vec![1], vec![seed]);
+        let temp_t = Tensor::f32(vec![], vec![temp]);
+        let host: Vec<(usize, &Tensor)> = vec![
+            (n, &ptoks),
+            (n + 1, &lens_t),
+            (n + 2, &seeds_t),
+            (n + 3, &temp_t),
+        ];
+        let mut outs = prefill.run_with_resident(&resident, &host)?;
+        let mut vcache = outs.pop().context("vcache")?;
+        let mut kcache = outs.pop().context("kcache")?;
+        let mut lp_cur = outs.pop().context("logp")?.as_f32()?[0];
+        let mut cur = outs.pop().context("next")?.as_i32()?[0];
+
+        let mut tokens = Vec::new();
+        let mut lps: Vec<f32> = Vec::new();
+        let mut pos = prompt.len() as i32;
+        let mut steps = 0usize;
+        while cur != tok::EOS && tokens.len() + 1 < A_MAX && (pos as usize) < g.sctx - 1 {
+            tokens.push(cur);
+            lps.push(lp_cur);
+            let cur_t = Tensor::i32(vec![1], vec![cur]);
+            let pos_t = Tensor::i32(vec![1], vec![pos]);
+            let step_t = Tensor::i32(vec![], vec![steps as i32 + 1]);
+            let host: Vec<(usize, &Tensor)> = vec![
+                (n, &kcache),
+                (n + 1, &vcache),
+                (n + 2, &cur_t),
+                (n + 3, &pos_t),
+                (n + 4, &step_t),
+                (n + 5, &seeds_t),
+                (n + 6, &temp_t),
+            ];
+            let mut outs = decode.run_with_resident(&resident, &host)?;
+            vcache = outs.pop().context("vcache")?;
+            kcache = outs.pop().context("kcache")?;
+            lp_cur = outs.pop().context("logp")?.as_f32()?[0];
+            cur = outs.pop().context("next")?.as_i32()?[0];
+            pos += 1;
+            steps += 1;
+        }
+        let mean_logprob = if lps.is_empty() {
+            0.0
+        } else {
+            lps.iter().sum::<f32>() / lps.len() as f32
+        };
+        Ok((Response { tokens, mean_logprob }, steps))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_sequence_layout() {
+        let prompt = vec![tok::BOS, tok::TASK0, tok::COLON, 9, tok::SEP];
+        let answer = vec![9];
+        let (seq, mask) = build_sequence(16, &prompt, &answer).unwrap();
+        assert_eq!(
+            &seq[..7],
+            &[tok::BOS, tok::TASK0, tok::COLON, 9, tok::SEP, 9, tok::EOS]
+        );
+        assert!(seq[7..].iter().all(|&t| t == tok::PAD));
+        assert_eq!(&mask[..8], &[0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn build_sequence_rejects_overflow() {
+        let prompt = vec![1; 10];
+        let answer = vec![9; 10];
+        assert!(build_sequence(16, &prompt, &answer).is_err());
+        assert!(build_sequence(21, &prompt, &answer).is_ok());
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let base = 1e-2;
+        assert!(lr_schedule(base, 0, 100, 10) < lr_schedule(base, 9, 100, 10));
+        assert!((lr_schedule(base, 9, 100, 10) - base).abs() / base < 0.11);
+        assert!(lr_schedule(base, 99, 100, 10) < 0.2 * base);
+        assert!(lr_schedule(base, 99, 100, 10) >= 0.09 * base);
+    }
+}

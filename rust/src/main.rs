@@ -1,0 +1,255 @@
+//! `repro` — CLI for the Hybrid-LLM reproduction.
+//!
+//! ```text
+//! repro pipeline --run runs/default [--scale smoke|default|paper]
+//! repro eval <id>... --run runs/default      # fig1 fig3 ... table5, or `all`
+//! repro table2 --run runs/default [--queries 200]
+//! repro serve-demo --run runs/default [--requests 64] [--threshold 0.5]
+//! repro corpus-stats [--scale default]
+//! ```
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+use hybrid_llm::batching::BatchMode;
+use hybrid_llm::cli::Args;
+use hybrid_llm::corpus::{self, Scale};
+use hybrid_llm::eval::Eval;
+use hybrid_llm::pipeline::Pipeline;
+use hybrid_llm::runtime::Runtime;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "pipeline" => cmd_pipeline(&args),
+        "eval" => cmd_eval(&args),
+        "table2" => cmd_table2(&args),
+        "serve-demo" => cmd_serve_demo(&args),
+        "corpus-stats" => cmd_corpus_stats(&args),
+        "" | "help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand {other}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "repro — Hybrid LLM (ICLR 2024) reproduction
+subcommands:
+  pipeline     --run DIR [--scale smoke|default|paper]   run all stages
+  eval ID...   --run DIR                                  regenerate tables/figures (or `all`)
+  table2       --run DIR [--queries N]                    live latency measurement (Table 2)
+  serve-demo   --run DIR [--requests N] [--threshold T] [--mode cont|rtc]
+  corpus-stats [--scale S]                                print corpus stats without a run";
+
+fn scale_of(args: &Args) -> Result<Scale> {
+    Scale::from_name(args.get("scale", "default")).context("bad --scale")
+}
+
+fn open(args: &Args) -> Result<(std::sync::Arc<Runtime>, Pipeline)> {
+    let run_dir = PathBuf::from(args.get("run", "runs/default"));
+    let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
+    let rt = Runtime::load(&artifacts)?;
+    let scale = scale_of(args)?;
+    let pl = Pipeline::new(rt.clone(), &run_dir, scale);
+    Ok((rt, pl))
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let (_rt, pl) = open(args)?;
+    pl.run_all()?;
+    println!("[pipeline] complete: {:?}", pl.paths.root);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (_rt, pl) = open(args)?;
+    let corpus = pl.ensure_corpus()?;
+    let ev = Eval::new(&pl, &corpus);
+    let ids: Vec<String> = if args.positional.is_empty()
+        || args.positional.iter().any(|s| s == "all")
+    {
+        Eval::all_ids().iter().map(|s| s.to_string()).collect()
+    } else {
+        args.positional.clone()
+    };
+    for id in ids {
+        let report = ev.run(&id)?;
+        println!("\n{report}");
+    }
+    Ok(())
+}
+
+/// Table 2 — live per-query latency: router vs each LM (B=1 artifacts).
+fn cmd_table2(args: &Args) -> Result<()> {
+    let (rt, pl) = open(args)?;
+    let corpus = pl.ensure_corpus()?;
+    let n: usize = args.get_parse("queries", 100)?;
+    let test: Vec<&corpus::Query> = corpus
+        .iter()
+        .filter(|q| q.split == corpus::Split::Test)
+        .take(n)
+        .collect();
+    anyhow::ensure!(!test.is_empty(), "no test queries");
+
+    let mut body = String::from("# Table 2 — per-query latency (mean ± stderr)\n\n");
+    let mut rows = Vec::new();
+
+    // router
+    let router_dir = pl.paths.router_dir(
+        &hybrid_llm::pipeline::pair_id("medium", "large"),
+        hybrid_llm::router::RouterKind::Trans,
+    );
+    let router = hybrid_llm::router::RouterEngine::load(rt.clone(), &router_dir)?;
+    let mut samples = Vec::new();
+    router.score_one(&test[0].prompt)?; // warm compile
+    for q in &test {
+        let t0 = std::time::Instant::now();
+        router.score_one(&q.prompt)?;
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    rows.push(vec![
+        "router".to_string(),
+        format!(
+            "{:.4} ± {:.4}",
+            hybrid_llm::stats::mean(&samples),
+            hybrid_llm::stats::std_err(&samples)
+        ),
+        "1 (encoder pass)".to_string(),
+    ]);
+
+    for model in hybrid_llm::pipeline::ROSTER {
+        let eng = hybrid_llm::lm::LmEngine::load(rt.clone(), model, &pl.paths.params(model))?;
+        eng.generate_one(&test[0].prompt, 0, 0.0)?; // warm compile
+        let mut samples = Vec::new();
+        let mut steps_total = 0usize;
+        for q in &test {
+            let t0 = std::time::Instant::now();
+            let (_r, steps) = eng.generate_one(&q.prompt, q.id as u32, 0.0)?;
+            samples.push(t0.elapsed().as_secs_f64());
+            steps_total += steps + 1;
+        }
+        rows.push(vec![
+            model.to_string(),
+            format!(
+                "{:.4} ± {:.4}",
+                hybrid_llm::stats::mean(&samples),
+                hybrid_llm::stats::std_err(&samples)
+            ),
+            format!("{:.1} (autoregressive)", steps_total as f64 / test.len() as f64),
+        ]);
+    }
+    body.push_str(&hybrid_llm::eval::md_table(
+        &["model", "latency (s)", "fwd passes/query"],
+        &rows,
+    ));
+    std::fs::create_dir_all(pl.paths.results())?;
+    std::fs::write(pl.paths.results().join("table2.md"), &body)?;
+    println!("{body}");
+    Ok(())
+}
+
+/// End-to-end serving demo: batched requests through router + workers.
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    let run_dir = PathBuf::from(args.get("run", "runs/default"));
+    let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
+    let n: usize = args.get_parse("requests", 64)?;
+    let threshold: f32 = args.get_parse("threshold", 0.5)?;
+    let mode = match args.get("mode", "cont") {
+        "rtc" => BatchMode::RunToCompletion,
+        _ => BatchMode::Continuous,
+    };
+    let pair_small = args.get("small", "medium").to_string();
+    let pair_large = args.get("large", "large").to_string();
+    let default_router = format!("{}_{}_trans", pair_small, pair_large);
+    let router = args.get("router", &default_router).to_string();
+
+    // corpus for prompts
+    let rt = Runtime::load(&artifacts)?;
+    let scale = scale_of(args)?;
+    let pl = Pipeline::new(rt, &run_dir, scale);
+    let corpus = pl.ensure_corpus()?;
+    let test: Vec<_> = corpus
+        .iter()
+        .filter(|q| q.split == corpus::Split::Test)
+        .take(n)
+        .collect();
+
+    let cfg = hybrid_llm::serve::ServeConfig {
+        artifacts_dir: artifacts,
+        run_dir,
+        small: pair_small.clone(),
+        large: pair_large.clone(),
+        router,
+        threshold,
+        temp: 0.0,
+        mode,
+        batch_window: Duration::from_millis(5),
+    };
+    println!(
+        "[serve] starting: {pair_small} (small) / {pair_large} (large), thr {threshold}, {mode:?}"
+    );
+    let server = hybrid_llm::serve::Server::start(cfg)?;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = test
+        .iter()
+        .map(|q| server.submit(q.prompt.clone()))
+        .collect();
+    let mut completions = Vec::new();
+    for rx in rxs {
+        completions.push(rx.recv().context("completion dropped")?);
+    }
+    let wall = t0.elapsed();
+    let stats = server.shutdown()?;
+
+    println!("\n== serving report ==");
+    println!(
+        "requests: {}   wall: {:.2}s   throughput: {:.1} req/s",
+        completions.len(),
+        wall.as_secs_f64(),
+        completions.len() as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "cost advantage: {:.1}% ({} small / {} large)",
+        stats.routing.cost_advantage * 100.0,
+        stats.routing.to_small,
+        stats.routing.to_large
+    );
+    println!(
+        "router latency: mean {:.2} ms   e2e p50 {:.0} ms  p95 {:.0} ms",
+        stats.router_latency.mean_ms, stats.e2e_latency.p50_ms, stats.e2e_latency.p95_ms
+    );
+    let eff = if stats.decode_steps > 0 {
+        stats.decode_slot_steps as f64 / (stats.decode_steps as f64 * 16.0)
+    } else {
+        0.0
+    };
+    println!(
+        "decode iterations: {}   slot efficiency: {:.2}",
+        stats.decode_steps, eff
+    );
+    Ok(())
+}
+
+fn cmd_corpus_stats(args: &Args) -> Result<()> {
+    let scale = scale_of(args)?;
+    let c = corpus::generate(0xDEED, scale);
+    let mut by: std::collections::BTreeMap<&str, usize> = Default::default();
+    for q in &c {
+        *by.entry(q.task.source()).or_default() += 1;
+    }
+    println!("MixSynth @ {scale:?}: {} examples", c.len());
+    for (s, n) in by {
+        println!("  {s:<14} {n}");
+    }
+    Ok(())
+}

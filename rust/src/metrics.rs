@@ -1,0 +1,199 @@
+//! Serving metrics: latency histograms, routing counters, cost advantage
+//! (§2.3 — the fraction of queries routed to the small model), and
+//! quality-drop bookkeeping relative to the `all-at-large` baseline.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::stats;
+
+/// Latency recorder with exact percentiles (stores samples; serving runs
+/// here are ≤ millions of requests, exactness beats HDR bucketing).
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    samples_us: Mutex<Vec<u64>>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.samples_us.lock().unwrap().push(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.lock().unwrap().len()
+    }
+
+    pub fn snapshot(&self) -> LatencySummary {
+        let samples = self.samples_us.lock().unwrap().clone();
+        LatencySummary::from_us(&samples)
+    }
+}
+
+/// Point-in-time latency summary (microseconds internally).
+#[derive(Debug, Clone, Default)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean_ms: f64,
+    pub std_err_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    pub fn from_us(samples: &[u64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let ms: Vec<f64> = samples.iter().map(|&x| x as f64 / 1000.0).collect();
+        let mut sorted = ms.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            n: ms.len(),
+            mean_ms: stats::mean(&ms),
+            std_err_ms: stats::std_err(&ms),
+            p50_ms: stats::percentile_sorted(&sorted, 50.0),
+            p95_ms: stats::percentile_sorted(&sorted, 95.0),
+            p99_ms: stats::percentile_sorted(&sorted, 99.0),
+            max_ms: *sorted.last().unwrap(),
+        }
+    }
+}
+
+/// Routing counters — tracks the paper's *cost advantage* online.
+#[derive(Debug, Default)]
+pub struct RoutingCounters {
+    inner: Mutex<RoutingCountersInner>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct RoutingCountersInner {
+    to_small: u64,
+    to_large: u64,
+    completed: u64,
+    quality_sum: f64,
+}
+
+impl RoutingCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn route_small(&self) {
+        self.inner.lock().unwrap().to_small += 1;
+    }
+
+    pub fn route_large(&self) {
+        self.inner.lock().unwrap().to_large += 1;
+    }
+
+    pub fn complete(&self, quality: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        g.quality_sum += quality;
+    }
+
+    pub fn snapshot(&self) -> RoutingSnapshot {
+        let g = self.inner.lock().unwrap().clone();
+        let total = g.to_small + g.to_large;
+        RoutingSnapshot {
+            to_small: g.to_small,
+            to_large: g.to_large,
+            completed: g.completed,
+            cost_advantage: if total == 0 {
+                0.0
+            } else {
+                g.to_small as f64 / total as f64
+            },
+            mean_quality: if g.completed == 0 {
+                0.0
+            } else {
+                g.quality_sum / g.completed as f64
+            },
+        }
+    }
+}
+
+/// Point-in-time routing summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutingSnapshot {
+    pub to_small: u64,
+    pub to_large: u64,
+    pub completed: u64,
+    /// Fraction of queries routed to the small model (paper §2.3).
+    pub cost_advantage: f64,
+    pub mean_quality: f64,
+}
+
+/// Percentage response-quality drop w.r.t. the all-at-large baseline —
+/// the y-axis of Fig. 5 / the cells of Table 1. BART-analogue scores are
+/// negative (log-probs), so "drop" is measured on the score magnitude:
+/// positive = worse than all-at-large, negative = better.
+pub fn quality_drop_pct(all_at_large: f64, achieved: f64) -> f64 {
+    let denom = all_at_large.abs().max(1e-9);
+    (all_at_large - achieved) / denom * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary_percentiles() {
+        let us: Vec<u64> = (1..=100).map(|i| i * 1000).collect(); // 1..100 ms
+        let s = LatencySummary::from_us(&us);
+        assert_eq!(s.n, 100);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+        assert!((s.p50_ms - 50.5).abs() < 1.0);
+        assert!(s.p99_ms > 98.0 && s.p99_ms <= 100.0);
+        assert_eq!(s.max_ms, 100.0);
+    }
+
+    #[test]
+    fn recorder_thread_safe() {
+        use std::sync::Arc;
+        let r = Arc::new(LatencyRecorder::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    for i in 0..250 {
+                        r.record(Duration::from_micros(i));
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(r.count(), 1000);
+    }
+
+    #[test]
+    fn cost_advantage_math() {
+        let c = RoutingCounters::new();
+        for _ in 0..3 {
+            c.route_small();
+        }
+        for _ in 0..7 {
+            c.route_large();
+        }
+        let s = c.snapshot();
+        assert!((s.cost_advantage - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quality_drop_sign_convention() {
+        // all-at-large -2.0; achieved -2.2 => 10% drop (worse)
+        assert!((quality_drop_pct(-2.0, -2.2) - 10.0).abs() < 1e-9);
+        // achieved better than baseline => negative drop
+        assert!(quality_drop_pct(-2.0, -1.9) < 0.0);
+        // zero when identical
+        assert_eq!(quality_drop_pct(-2.0, -2.0), 0.0);
+    }
+}

@@ -1,0 +1,533 @@
+//! Reproduction pipeline orchestrator: corpus → LM pre-training →
+//! response sampling → quality scoring → labels (t* search) → router
+//! training → router scoring. Every stage is resumable (skipped when its
+//! outputs already exist) and the whole thing is driven from rust — the
+//! python side only ever produced the HLO artifacts.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::corpus::{self, Query, Scale, Split};
+use crate::io::{self, Tensor};
+use crate::labels::{self, QualitySamples};
+use crate::lm::LmEngine;
+use crate::router::{RouterEngine, RouterKind, TrainCfg, ALL_ROUTERS};
+use crate::runtime::Runtime;
+use crate::scorer::{oracle_rating, ScorerEngine};
+
+/// Sampling temperature for the 10-responses-per-query protocol (§3.2).
+pub const SAMPLE_TEMP: f32 = 0.8;
+
+/// The LM roster, quality-ordered (weakest first).
+pub const ROSTER: [&str; 5] = ["nano", "micro", "small", "medium", "large"];
+
+/// Main-paper pairs: (small model, large model, regime) — §4.2.
+pub const MAIN_PAIRS: [(&str, &str, &str); 3] = [
+    ("small", "medium", "small-gap"),   // Llama-2 7b vs 13b
+    ("medium", "large", "medium-gap"),  // Llama-2 13b vs GPT-3.5
+    ("nano", "medium", "large-gap"),    // FLAN-t5 800m vs Llama-2 13b
+];
+
+/// Appendix pairs (Fig. 9 / Table 4).
+pub const APPENDIX_PAIRS: [(&str, &str, &str); 4] = [
+    ("nano", "micro", "small-gap"),   // FLAN-t5 800m vs 11b
+    ("small", "large", "medium-gap"), // Llama-2 7b vs GPT-3.5
+    ("nano", "large", "large-gap"),   // FLAN-t5 800m vs GPT-3.5
+    ("micro", "large", "large-gap"),  // FLAN-t5 11b vs GPT-3.5
+];
+
+/// All pairs (main + appendix).
+pub fn all_pairs() -> Vec<(&'static str, &'static str, &'static str)> {
+    MAIN_PAIRS.iter().chain(APPENDIX_PAIRS.iter()).copied().collect()
+}
+
+/// Canonical pair id, e.g. `nano_medium`.
+pub fn pair_id(small: &str, large: &str) -> String {
+    format!("{small}_{large}")
+}
+
+/// Pre-training budget per roster entry (scaled by [`Scale::train_mult`]).
+pub fn train_steps(model: &str, scale: Scale) -> usize {
+    let base = match model {
+        "nano" => 300,
+        "micro" => 500,
+        "small" => 800,
+        "medium" => 1100,
+        "large" => 1400,
+        "scorer" => 1200,
+        _ => 500,
+    };
+    ((base as f64 * scale.train_mult()) as usize).max(20)
+}
+
+/// Base LR per roster entry.
+pub fn base_lr(model: &str) -> f32 {
+    match model {
+        "nano" | "micro" => 1e-2,
+        "small" => 7e-3,
+        "medium" | "scorer" => 5e-3,
+        _ => 4e-3,
+    }
+}
+
+/// On-disk layout of one run.
+#[derive(Debug, Clone)]
+pub struct RunPaths {
+    pub root: PathBuf,
+}
+
+impl RunPaths {
+    pub fn new(root: &Path) -> Self {
+        RunPaths { root: root.to_path_buf() }
+    }
+
+    pub fn corpus(&self) -> PathBuf {
+        self.root.join("corpus.tsv")
+    }
+
+    pub fn params(&self, model: &str) -> PathBuf {
+        self.root.join("params").join(model)
+    }
+
+    pub fn losses(&self, model: &str) -> PathBuf {
+        self.root.join("params").join(format!("{model}.losses.tz"))
+    }
+
+    pub fn responses(&self, model: &str) -> PathBuf {
+        self.root.join("responses").join(format!("{model}.tz"))
+    }
+
+    pub fn response_lens(&self, model: &str) -> PathBuf {
+        self.root.join("responses").join(format!("{model}.lens.tz"))
+    }
+
+    pub fn scores(&self, model: &str) -> PathBuf {
+        self.root.join("scores").join(format!("{model}.tz"))
+    }
+
+    pub fn oracle(&self, model: &str) -> PathBuf {
+        self.root.join("scores").join(format!("{model}.oracle.tz"))
+    }
+
+    pub fn labels_kv(&self, pair: &str) -> PathBuf {
+        self.root.join("labels").join(format!("{pair}.kv"))
+    }
+
+    pub fn labels_tz(&self, pair: &str, kind: RouterKind) -> PathBuf {
+        self.root
+            .join("labels")
+            .join(format!("{pair}.{}.tz", kind.name()))
+    }
+
+    pub fn tstar_curve(&self, pair: &str) -> PathBuf {
+        self.root.join("labels").join(format!("{pair}.curve.tz"))
+    }
+
+    pub fn router_dir(&self, pair: &str, kind: RouterKind) -> PathBuf {
+        self.root
+            .join("routers")
+            .join(format!("{pair}_{}", kind.name()))
+    }
+
+    pub fn router_scores(&self, pair: &str, kind: RouterKind) -> PathBuf {
+        self.root
+            .join("router_scores")
+            .join(format!("{pair}_{}.tz", kind.name()))
+    }
+
+    pub fn results(&self) -> PathBuf {
+        self.root.join("results")
+    }
+
+    pub fn meta(&self) -> PathBuf {
+        self.root.join("run.kv")
+    }
+}
+
+/// The pipeline driver.
+pub struct Pipeline {
+    pub rt: Arc<Runtime>,
+    pub paths: RunPaths,
+    pub scale: Scale,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Pipeline {
+    pub fn new(rt: Arc<Runtime>, run_dir: &Path, scale: Scale) -> Pipeline {
+        Pipeline {
+            rt,
+            paths: RunPaths::new(run_dir),
+            scale,
+            seed: 0xDEED,
+            verbose: true,
+        }
+    }
+
+    fn log(&self, msg: &str) {
+        if self.verbose {
+            println!("[pipeline] {msg}");
+        }
+    }
+
+    /// Stage 1: corpus.
+    pub fn ensure_corpus(&self) -> Result<Vec<Query>> {
+        if self.paths.corpus().exists() {
+            return corpus::load(&self.paths.corpus());
+        }
+        self.log(&format!("generating corpus (scale {:?})", self.scale));
+        let c = corpus::generate(self.seed, self.scale);
+        corpus::save(&self.paths.corpus(), &c)?;
+        io::save_kv(
+            &self.paths.meta(),
+            &[
+                ("scale".into(), format!("{:?}", self.scale)),
+                ("seed".into(), self.seed.to_string()),
+                ("n_samples".into(), self.scale.n_samples().to_string()),
+            ],
+        )?;
+        Ok(c)
+    }
+
+    /// Stage 2: pre-train the roster + scorer (skips models already saved).
+    pub fn ensure_lms(&self, corpus: &[Query]) -> Result<()> {
+        let train_ids = corpus::split_ids(corpus, Split::Train);
+        let queries: Vec<&Query> = train_ids.iter().map(|&i| &corpus[i]).collect();
+        for (mi, model) in ROSTER.iter().chain(std::iter::once(&"scorer")).enumerate() {
+            let dir = self.paths.params(model);
+            if dir.join("p.emb.tz").exists() {
+                continue;
+            }
+            let steps = train_steps(model, self.scale);
+            let lr = base_lr(model);
+            self.log(&format!("training {model}: {steps} steps @ lr {lr}"));
+            let t0 = Instant::now();
+            let losses: Vec<f32> = if *model == "scorer" {
+                let mut eng = ScorerEngine::init(self.rt.clone(), 1000 + mi as u32)?;
+                let losses = eng.train(&queries, steps, lr, self.seed ^ mi as u64, |s, l| {
+                    if s % 100 == 0 {
+                        println!("  [{model}] step {s}: loss {l:.4}");
+                    }
+                })?;
+                eng.save(&dir)?;
+                losses
+            } else {
+                let mut eng = LmEngine::init(self.rt.clone(), model, 1000 + mi as u32)?;
+                let losses = eng.train(&queries, steps, lr, self.seed ^ mi as u64, |s, l| {
+                    if s % 100 == 0 {
+                        println!("  [{model}] step {s}: loss {l:.4}");
+                    }
+                })?;
+                eng.save(&dir)?;
+                losses
+            };
+            Tensor::f32(vec![losses.len()], losses.clone()).save(&self.paths.losses(model))?;
+            self.log(&format!(
+                "trained {model} in {:.1}s (final loss {:.4})",
+                t0.elapsed().as_secs_f64(),
+                losses.last().copied().unwrap_or(f32::NAN)
+            ));
+        }
+        Ok(())
+    }
+
+    /// Stage 3: sample `n_samples` responses per (query, roster model).
+    pub fn ensure_responses(&self, corpus: &[Query]) -> Result<()> {
+        let ns = self.scale.n_samples();
+        let nq = corpus.len();
+        let amax = corpus::A_MAX;
+        for model in ROSTER {
+            if self.paths.responses(model).exists() {
+                continue;
+            }
+            let t0 = Instant::now();
+            self.log(&format!("sampling {ns} responses/query from {model} ({nq} queries)"));
+            let eng = LmEngine::load(self.rt.clone(), model, &self.paths.params(model))?;
+            let mut toks = vec![-1i32; nq * ns * amax];
+            let mut lens = vec![0u32; nq * ns];
+            // batch across queries for each sample index
+            for s in 0..ns {
+                let prompts: Vec<&[i32]> = corpus.iter().map(|q| q.prompt.as_slice()).collect();
+                let seeds: Vec<u32> = corpus
+                    .iter()
+                    .map(|q| (q.id as u32).wrapping_mul(1699) ^ (s as u32).wrapping_mul(7919))
+                    .collect();
+                let resp = eng.generate(&prompts, &seeds, SAMPLE_TEMP)?;
+                for (qi, r) in resp.iter().enumerate() {
+                    let off = (qi * ns + s) * amax;
+                    lens[qi * ns + s] = r.tokens.len() as u32;
+                    toks[off..off + r.tokens.len()].copy_from_slice(&r.tokens);
+                }
+                self.log(&format!(
+                    "  {model}: sample {}/{} done ({:.1}s elapsed)",
+                    s + 1,
+                    ns,
+                    t0.elapsed().as_secs_f64()
+                ));
+            }
+            Tensor::i32(vec![nq, ns, amax], toks).save(&self.paths.responses(model))?;
+            Tensor::u32(vec![nq, ns], lens).save(&self.paths.response_lens(model))?;
+        }
+        Ok(())
+    }
+
+    /// Stage 4: quality scores — BART-analogue (scorer LM) + oracle rating.
+    pub fn ensure_scores(&self, corpus: &[Query]) -> Result<()> {
+        let ns = self.scale.n_samples();
+        let nq = corpus.len();
+        let scorer = ScorerEngine::load(self.rt.clone(), &self.paths.params("scorer"))?;
+        for model in ROSTER {
+            if self.paths.scores(model).exists() {
+                continue;
+            }
+            self.log(&format!("scoring responses of {model}"));
+            let responses = self.load_responses(model, corpus)?;
+            let mut flat_pairs: Vec<(&[i32], &[i32])> = Vec::with_capacity(nq * ns);
+            for (qi, q) in corpus.iter().enumerate() {
+                for s in 0..ns {
+                    flat_pairs.push((q.prompt.as_slice(), responses[qi][s].as_slice()));
+                }
+            }
+            let scores = scorer.score(&flat_pairs)?;
+            ensure!(scores.len() == nq * ns);
+            Tensor::f32(vec![nq, ns], scores).save(&self.paths.scores(model))?;
+
+            // oracle ratings (GPT-4-judge analogue)
+            let mut oracle = vec![0.0f32; nq * ns];
+            for (qi, q) in corpus.iter().enumerate() {
+                for s in 0..ns {
+                    oracle[qi * ns + s] = oracle_rating(&responses[qi][s], &q.reference) as f32;
+                }
+            }
+            Tensor::f32(vec![nq, ns], oracle).save(&self.paths.oracle(model))?;
+        }
+        Ok(())
+    }
+
+    /// Stage 5: labels for every pair (t* from the train split only).
+    pub fn ensure_labels(&self, corpus: &[Query]) -> Result<()> {
+        for (small, large, _) in all_pairs() {
+            let pair = pair_id(small, large);
+            if self.paths.labels_kv(&pair).exists() {
+                continue;
+            }
+            self.log(&format!("labels for pair {pair}"));
+            let qs = self.load_quality(small, corpus)?;
+            let ql = self.load_quality(large, corpus)?;
+            let train_ids = corpus::split_ids(corpus, Split::Train);
+            let qs_train = subset(&qs, &train_ids);
+            let ql_train = subset(&ql, &train_ids);
+            let search = labels::find_tstar(&qs_train, &ql_train, 41)?;
+
+            let y_det = labels::y_det(&qs, &ql)?;
+            let y_prob = labels::y_prob(&qs, &ql)?;
+            let y_trans = labels::y_trans(&qs, &ql, search.tstar)?;
+            let n = corpus.len();
+            Tensor::f32(vec![n], y_det).save(&self.paths.labels_tz(&pair, RouterKind::Det))?;
+            Tensor::f32(vec![n], y_prob).save(&self.paths.labels_tz(&pair, RouterKind::Prob))?;
+            Tensor::f32(vec![n], y_trans).save(&self.paths.labels_tz(&pair, RouterKind::Trans))?;
+            let curve: Vec<f32> = search
+                .curve
+                .iter()
+                .flat_map(|(t, j)| [*t, *j as f32])
+                .collect();
+            Tensor::f32(vec![search.curve.len(), 2], curve).save(&self.paths.tstar_curve(&pair))?;
+            io::save_kv(
+                &self.paths.labels_kv(&pair),
+                &[("tstar".into(), search.tstar.to_string())],
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Stage 6: train r_det / r_prob / r_trans for the main pairs (and any
+    /// extra pairs requested), with best-checkpoint selection on val.
+    pub fn ensure_routers(&self, corpus: &[Query], pairs: &[(String, String)]) -> Result<()> {
+        let train_ids = corpus::split_ids(corpus, Split::Train);
+        let val_ids = corpus::split_ids(corpus, Split::Val);
+        for (small, large) in pairs {
+            let pair = pair_id(small, large);
+            for kind in ALL_ROUTERS {
+                let dir = self.paths.router_dir(&pair, kind);
+                if dir.join("p.emb.tz").exists() {
+                    continue;
+                }
+                self.log(&format!("training router r_{} for {pair}", kind.name()));
+                let y = Tensor::load(&self.paths.labels_tz(&pair, kind))?;
+                let y = y.as_f32()?;
+                let tp: Vec<&[i32]> = train_ids.iter().map(|&i| corpus[i].prompt.as_slice()).collect();
+                let ty: Vec<f32> = train_ids.iter().map(|&i| y[i]).collect();
+                let vp: Vec<&[i32]> = val_ids.iter().map(|&i| corpus[i].prompt.as_slice()).collect();
+                let vy: Vec<f32> = val_ids.iter().map(|&i| y[i]).collect();
+                let mut eng = RouterEngine::init(self.rt.clone(), 77)?;
+                let cfg = TrainCfg { seed: self.seed ^ 0x50, ..TrainCfg::default() };
+                let t0 = Instant::now();
+                let (_losses, best) = eng.train(&tp, &ty, &vp, &vy, cfg, |e, s, l| {
+                    if s % 50 == 0 {
+                        println!("  [{pair}/{}] epoch {e} step {s}: loss {l:.4}", kind.name());
+                    }
+                })?;
+                eng.save(&dir)?;
+                self.log(&format!(
+                    "router r_{} {pair}: best val BCE {best:.4} ({:.1}s)",
+                    kind.name(),
+                    t0.elapsed().as_secs_f64()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Stage 7: router scores over the full corpus for every trained router.
+    pub fn ensure_router_scores(&self, corpus: &[Query], pairs: &[(String, String)]) -> Result<()> {
+        for (small, large) in pairs {
+            let pair = pair_id(small, large);
+            for kind in ALL_ROUTERS {
+                let path = self.paths.router_scores(&pair, kind);
+                if path.exists() {
+                    continue;
+                }
+                self.log(&format!("scoring corpus with router r_{} {pair}", kind.name()));
+                let eng = RouterEngine::load(self.rt.clone(), &self.paths.router_dir(&pair, kind))?;
+                let prompts: Vec<&[i32]> = corpus.iter().map(|q| q.prompt.as_slice()).collect();
+                let scores = eng.scores(&prompts)?;
+                Tensor::f32(vec![scores.len()], scores).save(&path)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run every stage for the main pairs (+ appendix pairs' labels).
+    pub fn run_all(&self) -> Result<()> {
+        let corpus = self.ensure_corpus()?;
+        self.ensure_lms(&corpus)?;
+        self.ensure_responses(&corpus)?;
+        self.ensure_scores(&corpus)?;
+        self.ensure_labels(&corpus)?;
+        let pairs: Vec<(String, String)> = all_pairs()
+            .iter()
+            .map(|(s, l, _)| (s.to_string(), l.to_string()))
+            .collect();
+        self.ensure_routers(&corpus, &pairs)?;
+        self.ensure_router_scores(&corpus, &pairs)?;
+        fs::create_dir_all(self.paths.results())?;
+        Ok(())
+    }
+
+    // ----- accessors for the eval drivers --------------------------------
+
+    /// Responses as ragged token vectors `[nq][ns]`.
+    pub fn load_responses(&self, model: &str, corpus: &[Query]) -> Result<Vec<Vec<Vec<i32>>>> {
+        let t = Tensor::load(&self.paths.responses(model))?;
+        let l = Tensor::load(&self.paths.response_lens(model))?;
+        let dims = t.dims().to_vec();
+        ensure!(dims.len() == 3 && dims[0] == corpus.len());
+        let (nq, ns, amax) = (dims[0], dims[1], dims[2]);
+        let toks = t.as_i32()?;
+        let lens = match &l {
+            Tensor::U32 { data, .. } => data,
+            _ => anyhow::bail!("lens must be u32"),
+        };
+        Ok((0..nq)
+            .map(|qi| {
+                (0..ns)
+                    .map(|s| {
+                        let len = lens[qi * ns + s] as usize;
+                        let off = (qi * ns + s) * amax;
+                        toks[off..off + len].to_vec()
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// BART-analogue quality samples for a model.
+    pub fn load_quality(&self, model: &str, corpus: &[Query]) -> Result<QualitySamples> {
+        load_samples(&self.paths.scores(model), corpus.len())
+    }
+
+    /// Oracle-rating samples for a model.
+    pub fn load_oracle_quality(&self, model: &str, corpus: &[Query]) -> Result<QualitySamples> {
+        load_samples(&self.paths.oracle(model), corpus.len())
+    }
+
+    /// Stored router scores over the full corpus.
+    pub fn load_router_scores(&self, pair: &str, kind: RouterKind) -> Result<Vec<f32>> {
+        Ok(Tensor::load(&self.paths.router_scores(pair, kind))?
+            .as_f32()?
+            .to_vec())
+    }
+
+    /// The t* recorded for a pair.
+    pub fn load_tstar(&self, pair: &str) -> Result<f32> {
+        let kv = io::load_kv(&self.paths.labels_kv(pair))?;
+        io::kv_get(&kv, "tstar")
+            .context("tstar missing")?
+            .parse()
+            .context("bad tstar")
+    }
+}
+
+fn load_samples(path: &Path, nq: usize) -> Result<QualitySamples> {
+    let t = Tensor::load(path)?;
+    let dims = t.dims().to_vec();
+    ensure!(dims.len() == 2 && dims[0] == nq, "bad sample tensor {dims:?}");
+    let ns = dims[1];
+    let data = t.as_f32()?;
+    Ok(QualitySamples::new(
+        (0..nq)
+            .map(|i| data[i * ns..(i + 1) * ns].to_vec())
+            .collect(),
+    ))
+}
+
+/// Subset of quality samples by query ids.
+pub fn subset(q: &QualitySamples, ids: &[usize]) -> QualitySamples {
+    QualitySamples::new(ids.iter().map(|&i| q.q[i].clone()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_ids() {
+        assert_eq!(pair_id("nano", "medium"), "nano_medium");
+        assert_eq!(all_pairs().len(), 7);
+    }
+
+    #[test]
+    fn step_budgets_ordered() {
+        // larger models get more training
+        let s = Scale::Default;
+        assert!(train_steps("nano", s) < train_steps("micro", s));
+        assert!(train_steps("micro", s) < train_steps("small", s));
+        assert!(train_steps("small", s) < train_steps("medium", s));
+        assert!(train_steps("medium", s) < train_steps("large", s));
+        // smoke is cheaper
+        assert!(train_steps("large", Scale::Smoke) < train_steps("large", Scale::Default));
+    }
+
+    #[test]
+    fn run_paths_layout() {
+        let p = RunPaths::new(Path::new("/tmp/run"));
+        assert!(p.responses("nano").ends_with("responses/nano.tz"));
+        assert!(p
+            .router_dir("nano_medium", RouterKind::Trans)
+            .ends_with("routers/nano_medium_trans"));
+        assert!(p
+            .router_scores("a_b", RouterKind::Det)
+            .ends_with("router_scores/a_b_det.tz"));
+    }
+
+    #[test]
+    fn subset_picks_rows() {
+        let q = QualitySamples::new(vec![vec![1.0], vec![2.0], vec![3.0]]);
+        let s = subset(&q, &[2, 0]);
+        assert_eq!(s.q, vec![vec![3.0], vec![1.0]]);
+    }
+}

@@ -1,0 +1,288 @@
+//! Routing policies and tradeoff evaluation (§2.2, §4.1 baselines).
+//!
+//! A policy decides, per query, small (`true`) vs large (`false`). The
+//! learned policies threshold the router score; the baselines are
+//! `all-at-small`, `all-at-large`, and `random`. [`tradeoff_curve`]
+//! sweeps cost advantage and reports the quality drop w.r.t.
+//! all-at-large — the Fig. 5 series and Table 1 cells.
+
+use crate::metrics::quality_drop_pct;
+use crate::rng::Rng;
+use crate::stats;
+
+/// A routing decision source.
+#[derive(Debug, Clone)]
+pub enum Policy {
+    AllSmall,
+    AllLarge,
+    /// Route to small with probability `p_small` (seeded).
+    Random { p_small: f64, seed: u64 },
+    /// Route to small when the router score >= `threshold`.
+    Threshold { threshold: f32 },
+}
+
+impl Policy {
+    /// Per-query assignments; `scores[i]` is the router score (ignored by
+    /// the baselines).
+    pub fn assign(&self, scores: &[f32]) -> Vec<bool> {
+        match self {
+            Policy::AllSmall => vec![true; scores.len()],
+            Policy::AllLarge => vec![false; scores.len()],
+            Policy::Random { p_small, seed } => {
+                let mut rng = Rng::new(*seed);
+                scores.iter().map(|_| rng.next_f64() < *p_small).collect()
+            }
+            Policy::Threshold { threshold } => scores.iter().map(|&s| s >= *threshold).collect(),
+        }
+    }
+}
+
+/// Threshold achieving (approximately) a target cost advantage: route the
+/// top `target` fraction of scores to the small model.
+pub fn threshold_for_cost_advantage(scores: &[f32], target: f64) -> f32 {
+    assert!(!scores.is_empty());
+    let xs: Vec<f64> = scores.iter().map(|&s| s as f64).collect();
+    // scores >= thr go to small; thr = (1-target) quantile
+    stats::percentile(&xs, (1.0 - target.clamp(0.0, 1.0)) * 100.0) as f32
+}
+
+/// Achieved cost advantage of an assignment.
+pub fn cost_advantage(assign: &[bool]) -> f64 {
+    if assign.is_empty() {
+        return 0.0;
+    }
+    assign.iter().filter(|&&s| s).count() as f64 / assign.len() as f64
+}
+
+/// Mean achieved quality under an assignment, given per-query expected
+/// qualities of each model's response.
+pub fn achieved_quality(assign: &[bool], q_small: &[f64], q_large: &[f64]) -> f64 {
+    assert_eq!(assign.len(), q_small.len());
+    assert_eq!(assign.len(), q_large.len());
+    if assign.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = assign
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| if s { q_small[i] } else { q_large[i] })
+        .sum();
+    total / assign.len() as f64
+}
+
+/// One point on an error–cost curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TradeoffPoint {
+    pub target_cost_advantage: f64,
+    pub achieved_cost_advantage: f64,
+    pub quality: f64,
+    /// % drop w.r.t. all-at-large (negative = better than baseline).
+    pub drop_pct: f64,
+}
+
+/// Sweep cost advantages `0..=1` in `steps` increments for a score-based
+/// policy (Fig. 5 series).
+pub fn tradeoff_curve(
+    scores: &[f32],
+    q_small: &[f64],
+    q_large: &[f64],
+    steps: usize,
+) -> Vec<TradeoffPoint> {
+    let base = stats::mean(q_large);
+    (0..=steps)
+        .map(|k| {
+            let target = k as f64 / steps as f64;
+            let point = tradeoff_at(scores, q_small, q_large, target);
+            TradeoffPoint { target_cost_advantage: target, ..point }
+        })
+        .map(|mut p| {
+            p.drop_pct = quality_drop_pct(base, p.quality);
+            p
+        })
+        .collect()
+}
+
+/// Single tradeoff point at a target cost advantage.
+pub fn tradeoff_at(
+    scores: &[f32],
+    q_small: &[f64],
+    q_large: &[f64],
+    target: f64,
+) -> TradeoffPoint {
+    // exact target: route the top ceil(target*n) scores to small (ties
+    // broken by index) — avoids quantile-threshold granularity noise
+    let n = scores.len();
+    let k = ((target * n as f64).round() as usize).min(n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    let mut assign = vec![false; n];
+    for &i in idx.iter().take(k) {
+        assign[i] = true;
+    }
+    let quality = achieved_quality(&assign, q_small, q_large);
+    TradeoffPoint {
+        target_cost_advantage: target,
+        achieved_cost_advantage: cost_advantage(&assign),
+        quality,
+        drop_pct: quality_drop_pct(stats::mean(q_large), quality),
+    }
+}
+
+/// Random-baseline curve (expected values via seeded assignment).
+pub fn random_curve(
+    n: usize,
+    q_small: &[f64],
+    q_large: &[f64],
+    steps: usize,
+    seed: u64,
+) -> Vec<TradeoffPoint> {
+    let base = stats::mean(q_large);
+    (0..=steps)
+        .map(|k| {
+            let target = k as f64 / steps as f64;
+            let assign = Policy::Random { p_small: target, seed: seed ^ k as u64 }
+                .assign(&vec![0.0; n]);
+            let quality = achieved_quality(&assign, q_small, q_large);
+            TradeoffPoint {
+                target_cost_advantage: target,
+                achieved_cost_advantage: cost_advantage(&assign),
+                quality,
+                drop_pct: quality_drop_pct(base, quality),
+            }
+        })
+        .collect()
+}
+
+/// §5 extension (2): N-model routing. Given scores from one router per
+/// *adjacent pair* in a quality-ordered roster and per-model per-query
+/// qualities, assign each query to the cheapest model whose pair-router
+/// deems it "easy enough" all the way down. Models are ordered cheapest
+/// first; `pair_scores[m]` is the router score of "model m can replace
+/// model m+1".
+pub fn nmodel_assign(pair_scores: &[Vec<f32>], thresholds: &[f32], n_queries: usize) -> Vec<usize> {
+    let m = pair_scores.len(); // m pair-routers => m+1 models
+    assert_eq!(thresholds.len(), m);
+    (0..n_queries)
+        .map(|i| {
+            // walk from the most expensive model downwards while the
+            // pair-router keeps saying "the cheaper one matches"
+            let mut choice = m; // most expensive
+            for level in (0..m).rev() {
+                if pair_scores[level][i] >= thresholds[level] {
+                    choice = level;
+                } else {
+                    break;
+                }
+            }
+            choice
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baselines() {
+        let scores = vec![0.1, 0.9, 0.5];
+        assert_eq!(Policy::AllSmall.assign(&scores), vec![true; 3]);
+        assert_eq!(Policy::AllLarge.assign(&scores), vec![false; 3]);
+        let r = Policy::Random { p_small: 1.0, seed: 1 }.assign(&scores);
+        assert_eq!(r, vec![true; 3]);
+        let r = Policy::Random { p_small: 0.0, seed: 1 }.assign(&scores);
+        assert_eq!(r, vec![false; 3]);
+    }
+
+    #[test]
+    fn threshold_policy_routes_high_scores_to_small() {
+        let scores = vec![0.2, 0.8, 0.5];
+        let a = Policy::Threshold { threshold: 0.5 }.assign(&scores);
+        assert_eq!(a, vec![false, true, true]);
+    }
+
+    #[test]
+    fn threshold_for_target() {
+        let scores: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        let thr = threshold_for_cost_advantage(&scores, 0.2);
+        let a = Policy::Threshold { threshold: thr }.assign(&scores);
+        let ca = cost_advantage(&a);
+        assert!((ca - 0.2).abs() < 0.03, "{ca}");
+    }
+
+    #[test]
+    fn tradeoff_at_exact_fraction() {
+        let scores = vec![0.9, 0.1, 0.5, 0.7];
+        let qs = vec![-2.0, -2.0, -2.0, -2.0];
+        let ql = vec![-1.0, -1.0, -1.0, -1.0];
+        let p = tradeoff_at(&scores, &qs, &ql, 0.5);
+        assert_eq!(p.achieved_cost_advantage, 0.5);
+        // top-2 scores (0.9, 0.7) go small => quality = (-2-2-1-1)/4
+        assert!((p.quality + 1.5).abs() < 1e-12);
+        // drop = (-1 - (-1.5))/1 = 50%
+        assert!((p.drop_pct - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_router_has_no_drop_when_small_matches() {
+        // small matches large on half the queries; a perfect router
+        // achieves 50% cost advantage with zero drop
+        let n = 100;
+        let mut scores = vec![0.0f32; n];
+        let mut qs = vec![0.0f64; n];
+        let mut ql = vec![-1.0f64; n];
+        for i in 0..n {
+            if i % 2 == 0 {
+                scores[i] = 0.9; // easy
+                qs[i] = -1.0;
+            } else {
+                scores[i] = 0.1; // hard
+                qs[i] = -3.0;
+            }
+            ql[i] = -1.0;
+        }
+        let p = tradeoff_at(&scores, &qs, &ql, 0.5);
+        assert!((p.quality + 1.0).abs() < 1e-12);
+        assert!(p.drop_pct.abs() < 1e-9);
+    }
+
+    #[test]
+    fn curve_monotone_cost() {
+        let scores: Vec<f32> = (0..50).map(|i| (i as f32) / 50.0).collect();
+        let qs: Vec<f64> = (0..50).map(|i| -2.0 - i as f64 * 0.01).collect();
+        let ql = vec![-1.0; 50];
+        let c = tradeoff_curve(&scores, &qs, &ql, 10);
+        assert_eq!(c.len(), 11);
+        assert_eq!(c[0].achieved_cost_advantage, 0.0);
+        assert_eq!(c[10].achieved_cost_advantage, 1.0);
+        // at 0 cost advantage drop is 0
+        assert!(c[0].drop_pct.abs() < 1e-9);
+        // drop grows along the curve for a weak small model
+        assert!(c[10].drop_pct > c[5].drop_pct);
+    }
+
+    #[test]
+    fn nmodel_walks_down_while_easy() {
+        // 3 models, 2 pair-routers
+        let pair_scores = vec![
+            vec![0.9, 0.1, 0.9, 0.1], // model0 replaces model1
+            vec![0.9, 0.9, 0.1, 0.1], // model1 replaces model2
+        ];
+        let thr = vec![0.5, 0.5];
+        let a = nmodel_assign(&pair_scores, &thr, 4);
+        // q0: both easy -> model0; q1: level1 easy but level0 hard -> model1
+        // q2: level1 hard -> stop at model2 even though level0 says easy
+        // q3: both hard -> model2
+        assert_eq!(a, vec![0, 1, 2, 2]);
+    }
+
+    #[test]
+    fn random_curve_cost_tracks_target() {
+        let qs = vec![-2.0; 1000];
+        let ql = vec![-1.0; 1000];
+        let c = random_curve(1000, &qs, &ql, 4, 42);
+        for p in &c {
+            assert!((p.achieved_cost_advantage - p.target_cost_advantage).abs() < 0.06);
+        }
+    }
+}

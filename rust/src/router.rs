@@ -1,0 +1,268 @@
+//! Router engine — the paper's §3 contribution: a BERT-style encoder
+//! (DeBERTa analogue) scoring each query in [0, 1], trained with BCE on
+//! one of three label constructions (deterministic / probabilistic /
+//! probabilistic-with-transformation — see [`crate::labels`]).
+//!
+//! Training runs from rust over the `router.train` artifact (fused
+//! fwd+bwd+AdamW), 5 epochs by default with best-checkpoint selection on
+//! the validation split, mirroring the paper's §4.1 setup.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::io::Tensor;
+use crate::rng::Rng;
+use crate::runtime::{ParamSet, Runtime};
+use crate::tokenizer as tok;
+
+/// The three router variants of §3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RouterKind {
+    /// §3.1 — hard labels from a single sample pair.
+    Det,
+    /// §3.2 — soft labels Pr[H(x) >= 0].
+    Prob,
+    /// §3.3 — soft labels Pr[H(x) >= -t*] with the data transformation.
+    Trans,
+}
+
+pub const ALL_ROUTERS: [RouterKind; 3] = [RouterKind::Det, RouterKind::Prob, RouterKind::Trans];
+
+impl RouterKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterKind::Det => "det",
+            RouterKind::Prob => "prob",
+            RouterKind::Trans => "trans",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RouterKind> {
+        match s {
+            "det" => Some(RouterKind::Det),
+            "prob" => Some(RouterKind::Prob),
+            "trans" => Some(RouterKind::Trans),
+            _ => None,
+        }
+    }
+}
+
+/// Hyper-parameters for router training.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainCfg {
+    pub epochs: usize,
+    pub base_lr: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        // 5 epochs as in the paper (§4.1)
+        TrainCfg { epochs: 5, base_lr: 1e-3, seed: 17 }
+    }
+}
+
+/// Encoder + score head bound to the runtime.
+pub struct RouterEngine {
+    rt: Arc<Runtime>,
+    pub params: ParamSet,
+}
+
+impl RouterEngine {
+    pub fn init(rt: Arc<Runtime>, seed: u32) -> Result<RouterEngine> {
+        let init = rt.exec("router.init")?;
+        let host = init.run(&[&Tensor::u32(vec![], vec![seed])])?;
+        let names: Vec<String> = init.spec.outs.iter().map(|o| o.name.clone()).collect();
+        let params = ParamSet::from_host(&rt, names, host)?;
+        Ok(RouterEngine { rt, params })
+    }
+
+    pub fn load(rt: Arc<Runtime>, dir: &Path) -> Result<RouterEngine> {
+        let init = rt.exec("router.init")?;
+        let names: Vec<String> = init.spec.outs.iter().map(|o| o.name.clone()).collect();
+        let params = ParamSet::load(&rt, dir, names)?;
+        Ok(RouterEngine { rt, params })
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        self.params.save(dir)
+    }
+
+    fn resident(&self) -> HashMap<usize, Arc<xla::PjRtBuffer>> {
+        self.params.device.iter().cloned().enumerate().collect()
+    }
+
+    /// Pack prompts into the router's fixed [B, sprompt] layout.
+    fn pack(&self, prompts: &[&[i32]], bsz: usize) -> Result<(Tensor, Tensor)> {
+        let g = self.rt.manifest.globals;
+        ensure!(prompts.len() <= bsz);
+        let mut toks = vec![tok::PAD; bsz * g.sprompt];
+        let mut lens = vec![1i32; bsz];
+        for (b, p) in prompts.iter().enumerate() {
+            ensure!(p.len() <= g.sprompt, "prompt too long");
+            toks[b * g.sprompt..b * g.sprompt + p.len()].copy_from_slice(p);
+            lens[b] = p.len() as i32;
+        }
+        Ok((
+            Tensor::i32(vec![bsz, g.sprompt], toks),
+            Tensor::i32(vec![bsz], lens),
+        ))
+    }
+
+    /// Router scores `p_w(x)` for a set of prompts (batched, resident
+    /// params — the serving hot path uses this).
+    pub fn scores(&self, prompts: &[&[i32]]) -> Result<Vec<f32>> {
+        let g = self.rt.manifest.globals;
+        let exec = self.rt.exec("router.fwd")?;
+        let n = self.params.len();
+        let resident = self.resident();
+        let bsz = g.trainb;
+        let mut out = Vec::with_capacity(prompts.len());
+        for chunk in prompts.chunks(bsz) {
+            let (toks, lens) = self.pack(chunk, bsz)?;
+            let host: Vec<(usize, &Tensor)> = vec![(n, &toks), (n + 1, &lens)];
+            let res = exec.run_with_resident(&resident, &host)?;
+            out.extend(res[0].as_f32()?[..chunk.len()].iter().copied());
+        }
+        Ok(out)
+    }
+
+    /// Single-query score via the B=1 artifact (latency path, Table 2).
+    pub fn score_one(&self, prompt: &[i32]) -> Result<f32> {
+        let g = self.rt.manifest.globals;
+        let exec = self.rt.exec("router.fwd1")?;
+        let n = self.params.len();
+        let resident = self.resident();
+        let mut toks = vec![tok::PAD; g.sprompt];
+        ensure!(prompt.len() <= g.sprompt);
+        toks[..prompt.len()].copy_from_slice(prompt);
+        let toks = Tensor::i32(vec![1, g.sprompt], toks);
+        let lens = Tensor::i32(vec![1], vec![prompt.len() as i32]);
+        let host: Vec<(usize, &Tensor)> = vec![(n, &toks), (n + 1, &lens)];
+        let res = exec.run_with_resident(&resident, &host)?;
+        Ok(res[0].as_f32()?[0])
+    }
+
+    /// Mean BCE of current params on a labelled set (validation metric).
+    pub fn bce(&self, prompts: &[&[i32]], labels: &[f32]) -> Result<f64> {
+        let scores = self.scores(prompts)?;
+        ensure!(scores.len() == labels.len());
+        let mut acc = 0.0f64;
+        for (s, y) in scores.iter().zip(labels) {
+            let s = (*s as f64).clamp(1e-6, 1.0 - 1e-6);
+            let y = *y as f64;
+            acc -= y * s.ln() + (1.0 - y) * (1.0 - s).ln();
+        }
+        Ok(acc / scores.len().max(1) as f64)
+    }
+
+    /// Train with (soft) BCE labels; keeps the best-validation-loss
+    /// checkpoint (paper §4.1: "use the validation set to choose the best
+    /// checkpoints"). Returns (train losses per step, best val loss).
+    pub fn train(
+        &mut self,
+        train_prompts: &[&[i32]],
+        train_labels: &[f32],
+        val_prompts: &[&[i32]],
+        val_labels: &[f32],
+        cfg: TrainCfg,
+        mut progress: impl FnMut(usize, usize, f32),
+    ) -> Result<(Vec<f32>, f64)> {
+        ensure!(train_prompts.len() == train_labels.len());
+        ensure!(!train_prompts.is_empty());
+        let g = self.rt.manifest.globals;
+        let train = self.rt.exec("router.train")?;
+        let n = self.params.len();
+        let bsz = g.trainb;
+        let mut m: Vec<Tensor> = self
+            .params
+            .host
+            .iter()
+            .map(|t| Tensor::f32(t.dims().to_vec(), vec![0.0; t.len()]))
+            .collect();
+        let mut v = m.clone();
+        let mut rng = Rng::new(cfg.seed);
+        let steps_per_epoch = train_prompts.len().div_ceil(bsz);
+        let total_steps = steps_per_epoch * cfg.epochs;
+        let mut losses = Vec::with_capacity(total_steps);
+        let mut best: Option<(f64, Vec<Tensor>)> = None;
+        let mut order: Vec<usize> = (0..train_prompts.len()).collect();
+        let mut gstep = 0usize;
+
+        for epoch in 0..cfg.epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(bsz) {
+                // assemble batch (wrap around to fill fixed B)
+                let mut idx = chunk.to_vec();
+                while idx.len() < bsz {
+                    idx.push(order[rng.below(order.len())]);
+                }
+                let prompts: Vec<&[i32]> = idx.iter().map(|&i| train_prompts[i]).collect();
+                let (toks, lens) = self.pack(&prompts, bsz)?;
+                let labels: Vec<f32> = idx.iter().map(|&i| train_labels[i]).collect();
+                let labels = Tensor::f32(vec![bsz], labels);
+                let lr = Tensor::f32(
+                    vec![],
+                    vec![crate::lm::lr_schedule(
+                        cfg.base_lr,
+                        gstep,
+                        total_steps,
+                        total_steps / 20 + 1,
+                    )],
+                );
+                let stept = Tensor::i32(vec![], vec![gstep as i32 + 1]);
+                let mut ins: Vec<&Tensor> = Vec::with_capacity(3 * n + 5);
+                ins.extend(self.params.host.iter());
+                ins.extend(m.iter());
+                ins.extend(v.iter());
+                ins.extend([&toks, &lens, &labels, &lr, &stept]);
+                let mut out = train.run(&ins)?;
+                let loss = out.pop().context("loss")?.as_f32()?[0];
+                losses.push(loss);
+                let new_v: Vec<Tensor> = out.drain(2 * n..).collect();
+                let new_m: Vec<Tensor> = out.drain(n..).collect();
+                m = new_m;
+                v = new_v;
+                self.params.update(&self.rt, out)?;
+                progress(epoch, gstep, loss);
+                gstep += 1;
+            }
+            // checkpoint selection on validation
+            if !val_prompts.is_empty() {
+                let vloss = self.bce(val_prompts, val_labels)?;
+                if best.as_ref().map(|(b, _)| vloss < *b).unwrap_or(true) {
+                    best = Some((vloss, self.params.host.clone()));
+                }
+            }
+        }
+        let best_loss = if let Some((vloss, params)) = best {
+            self.params.update(&self.rt, params)?;
+            vloss
+        } else {
+            f64::NAN
+        };
+        Ok((losses, best_loss))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in ALL_ROUTERS {
+            assert_eq!(RouterKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(RouterKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn default_cfg_matches_paper() {
+        let c = TrainCfg::default();
+        assert_eq!(c.epochs, 5);
+    }
+}

@@ -1,0 +1,361 @@
+//! Parser for `artifacts/manifest.txt` — the contract between the
+//! build-time python AOT path and this runtime (see `python/compile/aot.py`
+//! for the writer). Line-oriented, whitespace-separated; unknown versions
+//! are rejected.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::DType;
+
+pub const SUPPORTED_VERSION: u32 = 1;
+
+/// Global dims shared by all artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Globals {
+    pub vocab: usize,
+    pub sctx: usize,
+    pub sprompt: usize,
+    pub amax: usize,
+    pub genb: usize,
+    pub trainb: usize,
+    pub scoreb: usize,
+}
+
+/// Transformer dims of one roster entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelMeta {
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ff: usize,
+    pub headdim: usize,
+    pub nparams: usize,
+    pub has_head: bool,
+}
+
+/// Input classification (drives device-residency decisions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArgClass {
+    /// Model parameter — resident on device between calls.
+    Param,
+    /// Optimizer state — resident during training.
+    Opt,
+    /// Mutable model state (KV caches) — round-trips through the host
+    /// (PJRT returns a fused tuple; see DESIGN.md §8 / runtime docs).
+    State,
+    /// Per-call data (tokens, seeds, temperatures, ...).
+    Data,
+}
+
+impl ArgClass {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "param" => ArgClass::Param,
+            "opt" => ArgClass::Opt,
+            "state" => ArgClass::State,
+            "data" => ArgClass::Data,
+            _ => bail!("unknown arg class {s}"),
+        })
+    }
+}
+
+/// One input or output tensor of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    /// Empty = scalar.
+    pub dims: Vec<usize>,
+    pub class: ArgClass,
+}
+
+impl IoSpec {
+    pub fn elem_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT-lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub ins: Vec<IoSpec>,
+    pub outs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    /// Indices of inputs with the given class, in order.
+    pub fn input_indices(&self, class: ArgClass) -> Vec<usize> {
+        self.ins
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.class == class)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.ins
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {}: no input named {name}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {}: no output named {name}", self.name))
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub globals: Globals,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_dtype(s: &str) -> Result<DType> {
+    Ok(match s {
+        "f32" => DType::F32,
+        "s32" => DType::I32,
+        "u32" => DType::U32,
+        _ => bail!("unknown dtype {s}"),
+    })
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+fn kvmap<'a>(parts: &'a [&'a str]) -> BTreeMap<&'a str, &'a str> {
+    parts
+        .chunks_exact(2)
+        .map(|c| (c[0], c[1]))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut globals = None;
+        let mut models = BTreeMap::new();
+        let mut artifacts: BTreeMap<String, ArtifactSpec> = BTreeMap::new();
+        let mut cur: Option<ArtifactSpec> = None;
+        let mut saw_end = false;
+        let mut version_ok = false;
+
+        for (lineno, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("manifest line {}", lineno + 1);
+            match parts.first().copied() {
+                None => {}
+                Some("version") => {
+                    let v: u32 = parts.get(1).context("version missing")?.parse()?;
+                    if v != SUPPORTED_VERSION {
+                        bail!("unsupported manifest version {v} (supported: {SUPPORTED_VERSION})");
+                    }
+                    version_ok = true;
+                }
+                Some("global") => {
+                    let m = kvmap(&parts[1..]);
+                    let g = |k: &str| -> Result<usize> {
+                        m.get(k)
+                            .with_context(|| format!("global {k} missing"))?
+                            .parse()
+                            .context("bad global")
+                    };
+                    globals = Some(Globals {
+                        vocab: g("vocab")?,
+                        sctx: g("sctx")?,
+                        sprompt: g("sprompt")?,
+                        amax: g("amax")?,
+                        genb: g("genb")?,
+                        trainb: g("trainb")?,
+                        scoreb: g("scoreb")?,
+                    });
+                }
+                Some("model") => {
+                    let name = parts.get(1).with_context(ctx)?.to_string();
+                    let m = kvmap(&parts[2..]);
+                    let g = |k: &str| -> Result<usize> {
+                        m.get(k)
+                            .with_context(|| format!("model {name}: {k} missing"))?
+                            .parse()
+                            .context("bad model field")
+                    };
+                    models.insert(
+                        name.clone(),
+                        ModelMeta {
+                            d: g("d")?,
+                            layers: g("layers")?,
+                            heads: g("heads")?,
+                            ff: g("ff")?,
+                            headdim: g("headdim")?,
+                            nparams: g("nparams")?,
+                            has_head: g("head")? == 1,
+                        },
+                    );
+                }
+                Some("artifact") => {
+                    if let Some(a) = cur.take() {
+                        artifacts.insert(a.name.clone(), a);
+                    }
+                    // artifact <name> file <fname>
+                    let name = parts.get(1).with_context(ctx)?.to_string();
+                    let file = parts.get(3).with_context(ctx)?.to_string();
+                    cur = Some(ArtifactSpec { name, file, ins: vec![], outs: vec![] });
+                }
+                Some("in") => {
+                    let a = cur.as_mut().with_context(ctx)?;
+                    a.ins.push(IoSpec {
+                        name: parts.get(1).with_context(ctx)?.to_string(),
+                        dtype: parse_dtype(parts.get(2).with_context(ctx)?)?,
+                        dims: parse_dims(parts.get(3).with_context(ctx)?)?,
+                        class: ArgClass::parse(parts.get(4).with_context(ctx)?)?,
+                    });
+                }
+                Some("out") => {
+                    let a = cur.as_mut().with_context(ctx)?;
+                    a.outs.push(IoSpec {
+                        name: parts.get(1).with_context(ctx)?.to_string(),
+                        dtype: parse_dtype(parts.get(2).with_context(ctx)?)?,
+                        dims: parse_dims(parts.get(3).with_context(ctx)?)?,
+                        class: ArgClass::Data,
+                    });
+                }
+                Some("end") => saw_end = true,
+                Some(other) => bail!("{}: unknown directive {other}", ctx()),
+            }
+        }
+        if let Some(a) = cur.take() {
+            artifacts.insert(a.name.clone(), a);
+        }
+        if !version_ok {
+            bail!("manifest missing version line");
+        }
+        if !saw_end {
+            bail!("manifest truncated (missing `end`)");
+        }
+        Ok(Manifest {
+            globals: globals.context("manifest missing global line")?,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Manifest::parse(&text).with_context(|| format!("parse {path:?}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("manifest has no artifact {name}"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .with_context(|| format!("manifest has no model {name}"))
+    }
+
+    /// Parameter names (without the `p.` prefix) of a model, in artifact
+    /// order, derived from its `init` artifact outputs.
+    pub fn param_names(&self, model: &str) -> Result<Vec<String>> {
+        let a = self.artifact(&format!("{model}.init"))?;
+        Ok(a.outs
+            .iter()
+            .map(|o| o.name.strip_prefix("p.").unwrap_or(&o.name).to_string())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version 1
+global vocab 64 sctx 64 sprompt 40 amax 24 genb 16 trainb 32 scoreb 32
+model nano d 32 layers 1 heads 2 ff 64 headdim 16 nparams 2 head 0
+artifact nano.init file nano.init.hlo.txt
+in seed u32 scalar data
+out p.emb f32 64x32
+out p.pos f32 64x32
+artifact nano.fwd file nano.fwd.hlo.txt
+in p.emb f32 64x32 param
+in p.pos f32 64x32 param
+in tok s32 16 data
+out logits f32 16x64
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.globals.vocab, 64);
+        assert_eq!(m.globals.genb, 16);
+        assert_eq!(m.models["nano"].d, 32);
+        assert!(!m.models["nano"].has_head);
+        let a = m.artifact("nano.fwd").unwrap();
+        assert_eq!(a.ins.len(), 3);
+        assert_eq!(a.ins[2].dims, vec![16]);
+        assert_eq!(a.ins[2].class, ArgClass::Data);
+        assert_eq!(a.input_indices(ArgClass::Param), vec![0, 1]);
+        assert_eq!(a.output_index("logits").unwrap(), 0);
+        assert_eq!(m.param_names("nano").unwrap(), vec!["emb", "pos"]);
+    }
+
+    #[test]
+    fn scalar_dims_empty() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("nano.init").unwrap();
+        assert!(a.ins[0].dims.is_empty());
+        assert_eq!(a.ins[0].elem_count(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("version 1", "version 99");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let bad = SAMPLE.replace("end\n", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_directive() {
+        let bad = format!("{SAMPLE}\nwhatever 3\n");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.txt");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.artifacts.len() >= 38, "{}", m.artifacts.len());
+            for name in ["nano", "micro", "small", "medium", "large"] {
+                for kind in ["init", "prefill", "decode", "train"] {
+                    assert!(m.artifacts.contains_key(&format!("{name}.{kind}")));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,346 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client (the `xla` crate). This is the only module that
+//! touches XLA; everything above it works with [`crate::io::Tensor`]s.
+//!
+//! ## Residency model
+//!
+//! * **Parameters** live on device as [`xla::PjRtBuffer`]s ([`ParamSet`]),
+//!   uploaded once (or after each train step) — the hot path never
+//!   re-uploads weights (`execute_b`).
+//! * **Outputs** come back as a *single fused tuple buffer* (the shim's
+//!   `ExecuteOptions` does not untuple, and tuple buffers cannot be split
+//!   on-device through this API), so every output round-trips through a
+//!   host [`xla::Literal`]. KV caches therefore flow host↔device each
+//!   decode call; the fused multi-step decode artifact amortizes this
+//!   (see DESIGN.md §8 and EXPERIMENTS.md §Perf).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::{DType, Tensor};
+pub use manifest::{ArgClass, ArtifactSpec, Globals, IoSpec, Manifest, ModelMeta};
+
+/// Convert a host tensor to an XLA literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let (ty, bytes): (xla::ElementType, Vec<u8>) = match t {
+        Tensor::F32 { data, .. } => (
+            xla::ElementType::F32,
+            data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        Tensor::I32 { data, .. } => (
+            xla::ElementType::S32,
+            data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        Tensor::U32 { data, .. } => (
+            xla::ElementType::U32,
+            data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, t.dims(), &bytes)
+        .map_err(|e| anyhow::anyhow!("literal create: {e}"))
+}
+
+/// Convert an XLA literal back to a host tensor.
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().map_err(|e| anyhow::anyhow!("shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = l.ty().map_err(|e| anyhow::anyhow!("ty: {e}"))?;
+    Ok(match ty {
+        xla::ElementType::F32 => Tensor::f32(
+            dims,
+            l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e}"))?,
+        ),
+        xla::ElementType::S32 => Tensor::i32(
+            dims,
+            l.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec i32: {e}"))?,
+        ),
+        xla::ElementType::U32 => Tensor::u32(
+            dims,
+            l.to_vec::<u32>().map_err(|e| anyhow::anyhow!("to_vec u32: {e}"))?,
+        ),
+        other => bail!("unsupported element type {other:?}"),
+    })
+}
+
+fn dtype_matches(spec: DType, t: &Tensor) -> bool {
+    spec == t.dtype()
+}
+
+/// Upload a host tensor synchronously.
+///
+/// IMPORTANT: this must use `buffer_from_host_buffer` (semantics
+/// `kImmutableOnlyDuringCall`, i.e. the copy completes before returning)
+/// and NOT `buffer_from_host_literal`, whose H2D transfer is *async* and
+/// requires the literal to outlive it — dropping the literal right after
+/// (as a naive wrapper would) is a use-after-free that corrupts weights.
+fn upload_tensor(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
+    let r = match t {
+        Tensor::F32 { dims, data } => client.buffer_from_host_buffer::<f32>(data, dims, None),
+        Tensor::I32 { dims, data } => client.buffer_from_host_buffer::<i32>(data, dims, None),
+        Tensor::U32 { dims, data } => client.buffer_from_host_buffer::<u32>(data, dims, None),
+    };
+    r.map_err(|e| anyhow::anyhow!("upload: {e}"))
+}
+
+/// A compiled artifact plus its manifest spec.
+pub struct Exec {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Exec {
+    /// Validate `ins` against the manifest spec (shape + dtype + count).
+    fn validate(&self, ins: &[&Tensor]) -> Result<()> {
+        if ins.len() != self.spec.ins.len() {
+            bail!(
+                "artifact {}: got {} inputs, expected {}",
+                self.spec.name,
+                ins.len(),
+                self.spec.ins.len()
+            );
+        }
+        for (t, s) in ins.iter().zip(&self.spec.ins) {
+            if !dtype_matches(s.dtype, t) {
+                bail!("artifact {} input {}: dtype mismatch", self.spec.name, s.name);
+            }
+            if t.dims() != s.dims.as_slice() {
+                bail!(
+                    "artifact {} input {}: dims {:?}, expected {:?}",
+                    self.spec.name,
+                    s.name,
+                    t.dims(),
+                    s.dims
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors (uploads everything; convenient path).
+    pub fn run(&self, ins: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.validate(ins)?;
+        let literals: Vec<xla::Literal> =
+            ins.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.spec.name))?;
+        self.collect_outputs(bufs)
+    }
+
+    /// Execute with a mix of device-resident buffers (params/opt) and host
+    /// tensors (data/state). `resident[i]` overrides input `i`.
+    pub fn run_with_resident(
+        &self,
+        resident: &HashMap<usize, Arc<xla::PjRtBuffer>>,
+        host: &[(usize, &Tensor)],
+    ) -> Result<Vec<Tensor>> {
+        let client = self.exe.client();
+        let mut slots: Vec<Option<Arc<xla::PjRtBuffer>>> = vec![None; self.spec.ins.len()];
+        for (i, b) in resident {
+            slots[*i] = Some(b.clone());
+        }
+        for (i, t) in host {
+            let spec = &self.spec.ins[*i];
+            if t.dims() != spec.dims.as_slice() || !dtype_matches(spec.dtype, t) {
+                bail!("artifact {} input {}: shape/dtype mismatch", self.spec.name, spec.name);
+            }
+            let buf = upload_tensor(client, t)
+                .with_context(|| format!("upload {}", spec.name))?;
+            slots[*i] = Some(Arc::new(buf));
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(slots.len());
+        for (i, s) in slots.iter().enumerate() {
+            match s {
+                Some(b) => args.push(b),
+                None => bail!(
+                    "artifact {}: input {} ({}) not provided",
+                    self.spec.name,
+                    i,
+                    self.spec.ins[i].name
+                ),
+            }
+        }
+        let bufs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow::anyhow!("execute_b {}: {e}", self.spec.name))?;
+        self.collect_outputs(bufs)
+    }
+
+    fn collect_outputs(&self, bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Tensor>> {
+        // single device, single fused tuple output (return_tuple=True)
+        let buf = &bufs[0][0];
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download {}: {e}", self.spec.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e}", self.spec.name))?;
+        if parts.len() != self.spec.outs.len() {
+            bail!(
+                "artifact {}: got {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outs.len()
+            );
+        }
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+/// The runtime: PJRT client + manifest + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Exec>>>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and create the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Arc<Runtime>> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
+        if manifest.globals.vocab != crate::tokenizer::VOCAB {
+            bail!(
+                "manifest vocab {} != tokenizer VOCAB {}",
+                manifest.globals.vocab,
+                crate::tokenizer::VOCAB
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        Ok(Arc::new(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    /// Default artifacts directory (`$HYBRID_LLM_ARTIFACTS` or `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("HYBRID_LLM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Get (compiling and caching on first use) an executable by name.
+    pub fn exec(&self, name: &str) -> Result<Arc<Exec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        let exec = Arc::new(Exec { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Upload a host tensor to a device buffer (synchronous copy).
+    pub fn upload(&self, t: &Tensor) -> Result<Arc<xla::PjRtBuffer>> {
+        Ok(Arc::new(upload_tensor(&self.client, t)?))
+    }
+}
+
+/// A named set of model parameters: host copies (for persistence) plus
+/// device-resident buffers (for `execute_b` hot paths).
+pub struct ParamSet {
+    pub names: Vec<String>,
+    pub host: Vec<Tensor>,
+    pub device: Vec<Arc<xla::PjRtBuffer>>,
+}
+
+impl ParamSet {
+    /// Build from host tensors, uploading each to the device.
+    pub fn from_host(rt: &Runtime, names: Vec<String>, host: Vec<Tensor>) -> Result<ParamSet> {
+        anyhow::ensure!(names.len() == host.len());
+        let device = host
+            .iter()
+            .map(|t| rt.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamSet { names, host, device })
+    }
+
+    /// Replace the host copies and re-upload (after a train step).
+    pub fn update(&mut self, rt: &Runtime, host: Vec<Tensor>) -> Result<()> {
+        anyhow::ensure!(host.len() == self.host.len());
+        self.device = host
+            .iter()
+            .map(|t| rt.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        self.host = host;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.host.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.host.is_empty()
+    }
+
+    /// Total parameter count (elements).
+    pub fn elem_count(&self) -> usize {
+        self.host.iter().map(|t| t.len()).sum()
+    }
+
+    /// Save host copies as `<dir>/<name>.tz`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let pairs: Vec<(String, Tensor)> = self
+            .names
+            .iter()
+            .cloned()
+            .zip(self.host.iter().cloned())
+            .collect();
+        crate::io::save_tensors(dir, &pairs)
+    }
+
+    /// Load from `<dir>/<name>.tz` for the given names and upload.
+    pub fn load(rt: &Runtime, dir: &Path, names: Vec<String>) -> Result<ParamSet> {
+        let host = crate::io::load_tensors(dir, &names)?;
+        ParamSet::from_host(rt, names, host)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, -3.5, 0.0, 1e-9, -1e9]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tensor_literal_roundtrip_i32_u32_scalar() {
+        let t = Tensor::i32(vec![4], vec![-5, 0, 7, i32::MAX]);
+        assert_eq!(literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap(), t);
+        let u = Tensor::u32(vec![], vec![42]);
+        assert_eq!(literal_to_tensor(&tensor_to_literal(&u).unwrap()).unwrap(), u);
+    }
+}

@@ -1,0 +1,220 @@
+//! Response-quality evaluation.
+//!
+//! * [`ScorerEngine`] — the **BART-score analogue** (paper §2.3): a
+//!   medium-size LM trained on (query → reference) pairs; the quality of
+//!   a response is its mean per-token log-likelihood under this scorer,
+//!   conditioned on the query. Same mathematical object as BART score,
+//!   same scale (negative; higher = better).
+//! * [`oracle_rating`] — the **GPT-4-judge analogue** (paper §4.6): an
+//!   integer 1–10 rating derived from token-level edit similarity against
+//!   the algorithmic reference (MixSynth gives us an exact judge).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::io::Tensor;
+use crate::lm::build_sequence;
+use crate::runtime::{ParamSet, Runtime};
+
+/// The scorer model name in the manifest.
+pub const SCORER: &str = "scorer";
+
+/// BART-score-analogue engine.
+pub struct ScorerEngine {
+    rt: Arc<Runtime>,
+    pub params: ParamSet,
+}
+
+impl ScorerEngine {
+    pub fn init(rt: Arc<Runtime>, seed: u32) -> Result<ScorerEngine> {
+        let init = rt.exec(&format!("{SCORER}.init"))?;
+        let host = init.run(&[&Tensor::u32(vec![], vec![seed])])?;
+        let names: Vec<String> = init.spec.outs.iter().map(|o| o.name.clone()).collect();
+        let params = ParamSet::from_host(&rt, names, host)?;
+        Ok(ScorerEngine { rt, params })
+    }
+
+    pub fn load(rt: Arc<Runtime>, dir: &Path) -> Result<ScorerEngine> {
+        let init = rt.exec(&format!("{SCORER}.init"))?;
+        let names: Vec<String> = init.spec.outs.iter().map(|o| o.name.clone()).collect();
+        let params = ParamSet::load(&rt, dir, names)?;
+        Ok(ScorerEngine { rt, params })
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        self.params.save(dir)
+    }
+
+    /// Quality `q(z) = mean log p(z | x)` for each (prompt, response)
+    /// pair, batched through the `scorer.score` artifact.
+    pub fn score(&self, pairs: &[(&[i32], &[i32])]) -> Result<Vec<f32>> {
+        let g = self.rt.manifest.globals;
+        let exec = self.rt.exec(&format!("{SCORER}.score"))?;
+        let n = self.params.len();
+        let resident: std::collections::HashMap<usize, Arc<xla::PjRtBuffer>> =
+            self.params.device.iter().cloned().enumerate().collect();
+        let bsz = g.scoreb;
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(bsz) {
+            let mut toks = vec![0i32; bsz * g.sctx];
+            let mut mask = vec![0.0f32; bsz * g.sctx];
+            for (b, (prompt, resp)) in chunk.iter().enumerate() {
+                // truncate over-long responses defensively (can happen at
+                // high temperature before EOS)
+                let budget = g.sctx - prompt.len() - 1;
+                let resp = &resp[..resp.len().min(budget)];
+                let (s, m) = build_sequence(g.sctx, prompt, resp)?;
+                toks[b * g.sctx..(b + 1) * g.sctx].copy_from_slice(&s);
+                mask[b * g.sctx..(b + 1) * g.sctx].copy_from_slice(&m);
+            }
+            let toks = Tensor::i32(vec![bsz, g.sctx], toks);
+            let mask = Tensor::f32(vec![bsz, g.sctx], mask);
+            let host: Vec<(usize, &Tensor)> = vec![(n, &toks), (n + 1, &mask)];
+            let res = exec.run_with_resident(&resident, &host)?;
+            out.extend(res[0].as_f32()?[..chunk.len()].iter().copied());
+        }
+        Ok(out)
+    }
+
+    /// Train the scorer exactly like an LM (query → reference answer).
+    /// Delegates to the shared train artifact via a thin inline loop so
+    /// the scorer does not need a full [`crate::lm::LmEngine`].
+    pub fn train(
+        &mut self,
+        queries: &[&crate::corpus::Query],
+        steps: usize,
+        base_lr: f32,
+        seed: u64,
+        mut progress: impl FnMut(usize, f32),
+    ) -> Result<Vec<f32>> {
+        ensure!(!queries.is_empty());
+        let g = self.rt.manifest.globals;
+        let train = self.rt.exec(&format!("{SCORER}.train"))?;
+        let n = self.params.len();
+        let mut m: Vec<Tensor> = self
+            .params
+            .host
+            .iter()
+            .map(|t| Tensor::f32(t.dims().to_vec(), vec![0.0; t.len()]))
+            .collect();
+        let mut v = m.clone();
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut losses = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let mut toks = vec![0i32; g.trainb * g.sctx];
+            let mut mask = vec![0.0f32; g.trainb * g.sctx];
+            for b in 0..g.trainb {
+                let q = queries[rng.below(queries.len())];
+                let (s, mk) = build_sequence(g.sctx, &q.prompt, &q.reference)?;
+                toks[b * g.sctx..(b + 1) * g.sctx].copy_from_slice(&s);
+                mask[b * g.sctx..(b + 1) * g.sctx].copy_from_slice(&mk);
+            }
+            let toks = Tensor::i32(vec![g.trainb, g.sctx], toks);
+            let mask = Tensor::f32(vec![g.trainb, g.sctx], mask);
+            let lr = Tensor::f32(
+                vec![],
+                vec![crate::lm::lr_schedule(base_lr, step, steps, steps / 20 + 1)],
+            );
+            let stept = Tensor::i32(vec![], vec![step as i32 + 1]);
+            let mut ins: Vec<&Tensor> = Vec::with_capacity(3 * n + 4);
+            ins.extend(self.params.host.iter());
+            ins.extend(m.iter());
+            ins.extend(v.iter());
+            ins.extend([&toks, &mask, &lr, &stept]);
+            let mut out = train.run(&ins)?;
+            let loss = out.pop().context("loss")?.as_f32()?[0];
+            losses.push(loss);
+            let new_v: Vec<Tensor> = out.drain(2 * n..).collect();
+            let new_m: Vec<Tensor> = out.drain(n..).collect();
+            m = new_m;
+            v = new_v;
+            self.params.update(&self.rt, out)?;
+            progress(step, loss);
+        }
+        Ok(losses)
+    }
+}
+
+/// Levenshtein distance between token sequences.
+pub fn levenshtein(a: &[i32], b: &[i32]) -> usize {
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Normalized edit similarity in [0, 1].
+pub fn edit_similarity(a: &[i32], b: &[i32]) -> f64 {
+    let ml = a.len().max(b.len());
+    if ml == 0 {
+        return 1.0;
+    }
+    1.0 - levenshtein(a, b) as f64 / ml as f64
+}
+
+/// GPT-4-judge analogue: integer rating 1..=10 from edit similarity
+/// against the algorithmic reference.
+pub fn oracle_rating(response: &[i32], reference: &[i32]) -> u8 {
+    let sim = edit_similarity(response, reference);
+    (1.0 + (9.0 * sim).round()).clamp(1.0, 10.0) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein(&[], &[]), 0);
+        assert_eq!(levenshtein(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(levenshtein(&[1, 2, 3], &[1, 3]), 1);
+        assert_eq!(levenshtein(&[1, 2, 3], &[4, 5, 6]), 3);
+        assert_eq!(levenshtein(&[], &[1, 2]), 2);
+        // kitten -> sitting (classic): 3
+        let kitten: Vec<i32> = "kitten".bytes().map(|b| b as i32).collect();
+        let sitting: Vec<i32> = "sitting".bytes().map(|b| b as i32).collect();
+        assert_eq!(levenshtein(&kitten, &sitting), 3);
+    }
+
+    #[test]
+    fn similarity_and_rating() {
+        assert_eq!(edit_similarity(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(oracle_rating(&[1, 2], &[1, 2]), 10);
+        assert_eq!(oracle_rating(&[9, 9, 9], &[1, 2, 3]), 1);
+        let half = oracle_rating(&[1, 2, 9, 9], &[1, 2, 3, 4]);
+        assert!((5..=6).contains(&half), "{half}");
+        assert_eq!(oracle_rating(&[], &[]), 10);
+    }
+
+    #[test]
+    fn levenshtein_symmetry_property() {
+        crate::testing::check("lev symmetry + triangle-ish", 200, |rng| {
+            let mk = |rng: &mut crate::rng::Rng| {
+                let n = rng.below(12);
+                (0..n).map(|_| rng.below(5) as i32).collect::<Vec<_>>()
+            };
+            let a = mk(rng);
+            let b = mk(rng);
+            assert_eq!(levenshtein(&a, &b), levenshtein(&b, &a));
+            // distance bounded by max length
+            assert!(levenshtein(&a, &b) <= a.len().max(b.len()));
+            // identity
+            assert_eq!(levenshtein(&a, &a), 0);
+        });
+    }
+}

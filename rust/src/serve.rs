@@ -1,0 +1,564 @@
+//! The serving system (Fig. 2): a query-router front end dispatching to
+//! two continuous-batching decode workers (edge/small and cloud/large).
+//!
+//! Threading model: the `xla` crate's PJRT client is `Rc`-based and
+//! therefore `!Send`, so **each worker thread owns its own PJRT client,
+//! runtime, and engine** (loaded from the shared artifacts + run
+//! directories); channels carry only plain data. This mirrors a real
+//! deployment more closely anyway — the edge device and the cloud
+//! backend do not share an address space.
+//!
+//! * router thread — drains the ingress queue with a batching window,
+//!   scores queries through the router encoder (single pass, §3), and
+//!   dispatches on the threshold;
+//! * decode workers — slot-based continuous batching ([`BatchMode`]),
+//!   persistent KV caches, iteration-level admission.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::batching::{BatchMode, KvCache, Slot, SlotTable};
+use crate::io::Tensor;
+use crate::lm::LmEngine;
+use crate::metrics::{LatencyRecorder, LatencySummary, RoutingCounters, RoutingSnapshot};
+use crate::router::RouterEngine;
+use crate::runtime::Runtime;
+use crate::tokenizer as tok;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts_dir: PathBuf,
+    /// Run directory holding trained params (`params/<model>/`,
+    /// `routers/<router>/`).
+    pub run_dir: PathBuf,
+    pub small: String,
+    pub large: String,
+    /// Router params subdirectory under `run_dir/routers/` (empty =>
+    /// random routing at `threshold` interpreted as p(large)).
+    pub router: String,
+    pub threshold: f32,
+    pub temp: f32,
+    pub mode: BatchMode,
+    /// How long the router waits to fill a batch.
+    pub batch_window: Duration,
+}
+
+/// A finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub routed_small: bool,
+    pub router_score: f32,
+    pub mean_logprob: f32,
+    /// Ingress → completion.
+    pub e2e: Duration,
+    /// Ingress → routed to a worker queue.
+    pub routing: Duration,
+}
+
+struct Request {
+    id: u64,
+    prompt: Vec<i32>,
+    t0: Instant,
+    tx: Sender<Completion>,
+}
+
+enum RouterMsg {
+    Req(Request),
+    Shutdown,
+}
+
+struct Work {
+    req: Request,
+    score: f32,
+    routed: Instant,
+}
+
+enum WorkMsg {
+    Work(Work),
+    Shutdown,
+}
+
+/// Shared (Send) metrics.
+pub struct ServerMetrics {
+    pub router_latency: LatencyRecorder,
+    pub e2e_latency: LatencyRecorder,
+    pub small_latency: LatencyRecorder,
+    pub large_latency: LatencyRecorder,
+    pub routing: RoutingCounters,
+    pub decode_steps: AtomicU64,
+    pub decode_slot_steps: AtomicU64,
+}
+
+/// Point-in-time server report.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub router_latency: LatencySummary,
+    pub e2e_latency: LatencySummary,
+    pub small_latency: LatencySummary,
+    pub large_latency: LatencySummary,
+    pub routing: RoutingSnapshot,
+    pub decode_steps: u64,
+    /// Occupied-slot decode steps (batching efficiency =
+    /// `decode_slot_steps / (decode_steps * capacity)`).
+    pub decode_slot_steps: u64,
+}
+
+/// Handle to a running server.
+pub struct Server {
+    ingress: Sender<RouterMsg>,
+    small_tx: Sender<WorkMsg>,
+    large_tx: Sender<WorkMsg>,
+    handles: Vec<JoinHandle<Result<()>>>,
+    metrics: Arc<ServerMetrics>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// Spawn router + two decode workers.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let metrics = Arc::new(ServerMetrics {
+            router_latency: LatencyRecorder::new(),
+            e2e_latency: LatencyRecorder::new(),
+            small_latency: LatencyRecorder::new(),
+            large_latency: LatencyRecorder::new(),
+            routing: RoutingCounters::new(),
+            decode_steps: AtomicU64::new(0),
+            decode_slot_steps: AtomicU64::new(0),
+        });
+        let (ingress, router_rx) = mpsc::channel::<RouterMsg>();
+        let (small_tx, small_rx) = mpsc::channel::<WorkMsg>();
+        let (large_tx, large_rx) = mpsc::channel::<WorkMsg>();
+        // readiness barrier: threads ack after compiling their executables
+        // so `start` returns a warm server (PJRT compilation is seconds;
+        // without this the first requests' latency measures the compiler)
+        let (ready_tx, ready_rx) = mpsc::channel::<()>();
+
+        let mut handles = Vec::new();
+        {
+            let cfg = cfg.clone();
+            let m = metrics.clone();
+            let (stx, ltx) = (small_tx.clone(), large_tx.clone());
+            let rtx = ready_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("router".into())
+                    .spawn(move || router_thread(cfg, router_rx, stx, ltx, m, rtx))?,
+            );
+        }
+        for (model, rx, is_small) in [
+            (cfg.small.clone(), small_rx, true),
+            (cfg.large.clone(), large_rx, false),
+        ] {
+            let cfg = cfg.clone();
+            let m = metrics.clone();
+            let rtx = ready_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("worker-{model}"))
+                    .spawn(move || worker_thread(cfg, model, rx, is_small, m, rtx))?,
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..3 {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("server thread died during warm-up"))?;
+        }
+        Ok(Server {
+            ingress,
+            small_tx,
+            large_tx,
+            handles,
+            metrics,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Submit a query; returns the receiver for its completion.
+    pub fn submit(&self, prompt: Vec<i32>) -> Receiver<Completion> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let _ = self.ingress.send(RouterMsg::Req(Request {
+            id,
+            prompt,
+            t0: Instant::now(),
+            tx,
+        }));
+        rx
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            router_latency: self.metrics.router_latency.snapshot(),
+            e2e_latency: self.metrics.e2e_latency.snapshot(),
+            small_latency: self.metrics.small_latency.snapshot(),
+            large_latency: self.metrics.large_latency.snapshot(),
+            routing: self.metrics.routing.snapshot(),
+            decode_steps: self.metrics.decode_steps.load(Ordering::Relaxed),
+            decode_slot_steps: self.metrics.decode_slot_steps.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Graceful shutdown: drains in-flight work, joins all threads.
+    pub fn shutdown(self) -> Result<ServerStats> {
+        let _ = self.ingress.send(RouterMsg::Shutdown);
+        let _ = self.small_tx.send(WorkMsg::Shutdown);
+        let _ = self.large_tx.send(WorkMsg::Shutdown);
+        let stats = self.stats();
+        for h in self.handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => anyhow::bail!("server thread panicked"),
+            }
+        }
+        Ok(stats)
+    }
+}
+
+fn router_thread(
+    cfg: ServeConfig,
+    rx: Receiver<RouterMsg>,
+    small_tx: Sender<WorkMsg>,
+    large_tx: Sender<WorkMsg>,
+    metrics: Arc<ServerMetrics>,
+    ready: Sender<()>,
+) -> Result<()> {
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let router = if cfg.router.is_empty() {
+        None
+    } else {
+        let eng = RouterEngine::load(
+            rt.clone(),
+            &cfg.run_dir.join("routers").join(&cfg.router),
+        )?;
+        rt.exec("router.fwd")?; // warm compile
+        Some(eng)
+    };
+    let _ = ready.send(());
+    let mut rng = crate::rng::Rng::new(0xA5);
+    let max_batch = rt.manifest.globals.trainb;
+    let mut pending: Vec<Request> = Vec::new();
+    let mut shutdown = false;
+
+    while !shutdown {
+        // batching window: collect until deadline or max batch
+        let deadline = Instant::now() + cfg.batch_window;
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            let wait = if pending.is_empty() {
+                Duration::from_millis(50)
+            } else if now >= deadline {
+                break;
+            } else {
+                deadline - now
+            };
+            match rx.recv_timeout(wait) {
+                Ok(RouterMsg::Req(r)) => pending.push(r),
+                Ok(RouterMsg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if !pending.is_empty() {
+                        break;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        let batch: Vec<Request> = pending.drain(..).collect();
+        let t_score = Instant::now();
+        let scores = match &router {
+            Some(r) => {
+                let prompts: Vec<&[i32]> = batch.iter().map(|r| r.prompt.as_slice()).collect();
+                r.scores(&prompts)?
+            }
+            None => batch.iter().map(|_| rng.next_f32()).collect(),
+        };
+        let per_query = t_score.elapsed() / batch.len() as u32;
+        for (req, score) in batch.into_iter().zip(scores) {
+            metrics.router_latency.record(per_query);
+            let routed = Instant::now();
+            let routing = routed - req.t0;
+            let to_small = score >= cfg.threshold;
+            if to_small {
+                metrics.routing.route_small();
+            } else {
+                metrics.routing.route_large();
+            }
+            let msg = WorkMsg::Work(Work { req, score, routed });
+            let tx = if to_small { &small_tx } else { &large_tx };
+            let _ = routing; // recorded at completion time
+            tx.send(msg).ok().context("worker channel closed")?;
+        }
+    }
+    Ok(())
+}
+
+struct WorkerCtx {
+    engine: LmEngine,
+    table: SlotTable<Work>,
+    kv: KvCache,
+    temp: f32,
+}
+
+fn worker_thread(
+    cfg: ServeConfig,
+    model: String,
+    rx: Receiver<WorkMsg>,
+    is_small: bool,
+    metrics: Arc<ServerMetrics>,
+    ready: Sender<()>,
+) -> Result<()> {
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let g = rt.manifest.globals;
+    let meta = *rt.manifest.model(&model)?;
+    let engine = LmEngine::load(rt.clone(), &model, &cfg.run_dir.join("params").join(&model))?;
+    // warm compiles before accepting work (PJRT compile is seconds)
+    rt.exec(&format!("{model}.prefill"))?;
+    rt.exec(&format!("{model}.decode"))?;
+    let _ = ready.send(());
+    let mut ctx = WorkerCtx {
+        engine,
+        table: SlotTable::new(g.genb),
+        kv: KvCache::zeros(meta.layers, g.genb, g.sctx, meta.heads, meta.headdim),
+        temp: cfg.temp,
+    };
+    let mut backlog: Vec<Work> = Vec::new();
+    let mut shutdown = false;
+
+    while !(shutdown && ctx.table.is_empty() && backlog.is_empty()) {
+        // 1. pull work (non-blocking while busy; blocking when idle)
+        loop {
+            let msg = if ctx.table.is_empty() && backlog.is_empty() && !shutdown {
+                match rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                WorkMsg::Work(w) => backlog.push(w),
+                WorkMsg::Shutdown => shutdown = true,
+            }
+        }
+
+        // 2. admission per batching mode
+        let can_admit = match cfg.mode {
+            BatchMode::Continuous => true,
+            BatchMode::RunToCompletion => ctx.table.is_empty(),
+        };
+        if can_admit && !backlog.is_empty() && !ctx.table.free_indices().is_empty() {
+            let free = ctx.table.free_indices();
+            let n_new = free.len().min(backlog.len());
+            let admitted: Vec<Work> = backlog.drain(..n_new).collect();
+            admit(&mut ctx, &free[..n_new], admitted, &metrics, is_small)?;
+        }
+
+        // 3. one decode iteration over the occupied slots
+        if !ctx.table.is_empty() {
+            let t0 = Instant::now();
+            decode_step(&mut ctx, &metrics, is_small)?;
+            if std::env::var_os("HYBRID_SERVE_TRACE").is_some() {
+                eprintln!(
+                    "[trace {model}] decode iter {:.1} ms occ {}",
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    ctx.table.occupied()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Prefill newly-admitted requests and install them into slots.
+fn admit(
+    ctx: &mut WorkerCtx,
+    slots: &[usize],
+    work: Vec<Work>,
+    metrics: &Arc<ServerMetrics>,
+    is_small: bool,
+) -> Result<()> {
+    let rt = ctx.engine.runtime().clone();
+    let g = rt.manifest.globals;
+    let prompts: Vec<Vec<i32>> = work.iter().map(|w| w.req.prompt.clone()).collect();
+    let seeds: Vec<u32> = work.iter().map(|w| w.req.id as u32).collect();
+
+    // run prefill in waves of genb (slots are per worker, genb capacity)
+    let prefill = rt.exec(&format!("{}.prefill", ctx.engine.name))?;
+    let n = ctx.engine.params.len();
+    let resident: std::collections::HashMap<usize, Arc<xla::PjRtBuffer>> =
+        ctx.engine.params.device.iter().cloned().enumerate().collect();
+
+    let bsz = g.genb;
+    let mut ptoks = vec![tok::PAD; bsz * g.sprompt];
+    let mut lens = vec![1i32; bsz];
+    let mut seedv = vec![0u32; bsz];
+    for (b, p) in prompts.iter().enumerate() {
+        ptoks[b * g.sprompt..b * g.sprompt + p.len()].copy_from_slice(p);
+        lens[b] = p.len() as i32;
+        seedv[b] = seeds[b];
+    }
+    let ptoks = Tensor::i32(vec![bsz, g.sprompt], ptoks);
+    let lens_t = Tensor::i32(vec![bsz], lens.clone());
+    let seeds_t = Tensor::u32(vec![bsz], seedv);
+    let temp_t = Tensor::f32(vec![], vec![ctx.temp]);
+    let host: Vec<(usize, &Tensor)> = vec![
+        (n, &ptoks),
+        (n + 1, &lens_t),
+        (n + 2, &seeds_t),
+        (n + 3, &temp_t),
+    ];
+    let mut outs = prefill.run_with_resident(&resident, &host)?;
+    let vc = outs.pop().context("vcache")?;
+    let kc = outs.pop().context("kcache")?;
+    let logp = outs.pop().context("logp")?;
+    let first = outs.pop().context("next")?;
+    let fresh = KvCache::from_tensors(kc, vc)?;
+    let first = first.as_i32()?;
+    let logp = logp.as_f32()?;
+
+    for (b, (w, &slot_idx)) in work.into_iter().zip(slots).enumerate() {
+        ctx.kv.copy_slot_from(&fresh, b, slot_idx)?;
+        let prompt_len = ctx.table.capacity(); // placeholder, replaced below
+        let _ = prompt_len;
+        let plen = lens[b];
+        if first[b] == tok::EOS {
+            complete(ctx, w, vec![], 0.0, metrics, is_small);
+            continue;
+        }
+        let slot = Slot {
+            answer: vec![first[b]],
+            logprob_sum: logp[b],
+            cur: first[b],
+            pos: plen,
+            seed: w.req.id as u32,
+            payload: w,
+        };
+        ctx.table.insert(slot_idx, slot)?;
+    }
+    Ok(())
+}
+
+/// One decode iteration for every occupied slot.
+fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>, is_small: bool) -> Result<()> {
+    let rt = ctx.engine.runtime().clone();
+    let g = rt.manifest.globals;
+    let decode = rt.exec(&format!("{}.decode", ctx.engine.name))?;
+    let n = ctx.engine.params.len();
+    let resident: std::collections::HashMap<usize, Arc<xla::PjRtBuffer>> =
+        ctx.engine.params.device.iter().cloned().enumerate().collect();
+
+    let (cur, pos, seeds) = ctx.table.decode_inputs();
+    let bsz = ctx.table.capacity();
+    let cur_t = Tensor::i32(vec![bsz], cur);
+    let pos_t = Tensor::i32(vec![bsz], pos.clone());
+    let step_t = Tensor::i32(vec![], vec![(pos.iter().max().copied().unwrap_or(0)) + 1]);
+    let seeds_t = Tensor::u32(vec![bsz], seeds);
+    let temp_t = Tensor::f32(vec![], vec![ctx.temp]);
+    let host: Vec<(usize, &Tensor)> = vec![
+        (n, &ctx.kv.k),
+        (n + 1, &ctx.kv.v),
+        (n + 2, &cur_t),
+        (n + 3, &pos_t),
+        (n + 4, &step_t),
+        (n + 5, &seeds_t),
+        (n + 6, &temp_t),
+    ];
+    let mut outs = decode.run_with_resident(&resident, &host)?;
+    let vc = outs.pop().context("vcache")?;
+    let kc = outs.pop().context("kcache")?;
+    let logp = outs.pop().context("logp")?;
+    let next = outs.pop().context("next")?;
+    ctx.kv.replace(kc, vc)?;
+    let next = next.as_i32()?;
+    let logp = logp.as_f32()?;
+
+    metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .decode_slot_steps
+        .fetch_add(ctx.table.occupied() as u64, Ordering::Relaxed);
+
+    for idx in ctx.table.occupied_indices() {
+        let (finished, answer, lpsum, nlen);
+        {
+            let slot = ctx.table.get_mut(idx).unwrap();
+            slot.pos += 1;
+            let nxt = next[idx];
+            let full = slot.answer.len() + 1 >= g.amax || slot.pos as usize >= g.sctx - 1;
+            if nxt == tok::EOS || full {
+                finished = true;
+            } else {
+                slot.answer.push(nxt);
+                slot.logprob_sum += logp[idx];
+                slot.cur = nxt;
+                finished = false;
+            }
+            answer = slot.answer.clone();
+            lpsum = slot.logprob_sum;
+            nlen = slot.answer.len().max(1);
+        }
+        if finished {
+            let slot = ctx.table.take(idx).unwrap();
+            complete(
+                ctx,
+                slot.payload,
+                answer,
+                lpsum / nlen as f32,
+                metrics,
+                is_small,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn complete(
+    _ctx: &mut WorkerCtx,
+    w: Work,
+    tokens: Vec<i32>,
+    mean_logprob: f32,
+    metrics: &Arc<ServerMetrics>,
+    is_small: bool,
+) {
+    let e2e = w.req.t0.elapsed();
+    metrics.e2e_latency.record(e2e);
+    if is_small {
+        metrics.small_latency.record(e2e);
+    } else {
+        metrics.large_latency.record(e2e);
+    }
+    metrics.routing.complete(0.0);
+    let _ = w.req.tx.send(Completion {
+        id: w.req.id,
+        tokens,
+        routed_small: is_small,
+        router_score: w.score,
+        mean_logprob,
+        e2e,
+        routing: w.routed - w.req.t0,
+    });
+}

@@ -1,0 +1,175 @@
+//! Synthetic-vocabulary tokenizer shared with the build-time python side
+//! (`python/compile/common.py`); the manifest's `vocab` field is checked
+//! against [`VOCAB`] at runtime startup.
+//!
+//! Token map (64 entries): `0 PAD, 1 BOS, 2 EOS, 3 SEP, 4..=29 'a'..'z',
+//! 30..=39 '0'..'9', 40..=49 task keywords, 50 ':', 51..=63 reserved`.
+
+pub const VOCAB: usize = 64;
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const LETTER0: i32 = 4;
+pub const DIGIT0: i32 = 30;
+pub const TASK0: i32 = 40;
+pub const COLON: i32 = 50;
+
+pub const N_LETTERS: i32 = 26;
+pub const N_DIGITS: i32 = 10;
+
+/// Task keyword names in token order (token = TASK0 + index).
+pub const TASK_NAMES: [&str; 10] = [
+    "COPY", "DOUBLE", "REV", "SORT", "DEDUP", "SUCC", "ADD", "COUNT", "EXTR", "ROT",
+];
+
+/// Letter token for `c` in `a..=z`.
+pub fn letter(c: char) -> i32 {
+    debug_assert!(c.is_ascii_lowercase());
+    LETTER0 + (c as i32 - 'a' as i32)
+}
+
+/// Digit token for `d` in `0..=9`.
+pub fn digit(d: u32) -> i32 {
+    debug_assert!(d < 10);
+    DIGIT0 + d as i32
+}
+
+/// Is `t` a letter token?
+pub fn is_letter(t: i32) -> bool {
+    (LETTER0..LETTER0 + N_LETTERS).contains(&t)
+}
+
+/// Is `t` a digit token?
+pub fn is_digit(t: i32) -> bool {
+    (DIGIT0..DIGIT0 + N_DIGITS).contains(&t)
+}
+
+/// Digit value of a digit token.
+pub fn digit_val(t: i32) -> u32 {
+    debug_assert!(is_digit(t));
+    (t - DIGIT0) as u32
+}
+
+/// Encode a non-negative number as digit tokens (most-significant first).
+pub fn encode_number(mut n: u32) -> Vec<i32> {
+    if n == 0 {
+        return vec![digit(0)];
+    }
+    let mut ds = Vec::new();
+    while n > 0 {
+        ds.push(digit(n % 10));
+        n /= 10;
+    }
+    ds.reverse();
+    ds
+}
+
+/// Human-readable rendering of a token sequence (for reports/examples).
+pub fn detokenize(tokens: &[i32]) -> String {
+    let mut s = String::new();
+    for &t in tokens {
+        match t {
+            PAD => s.push('_'),
+            BOS => s.push('^'),
+            EOS => s.push('$'),
+            SEP => s.push('|'),
+            COLON => s.push(':'),
+            t if is_letter(t) => s.push((b'a' + (t - LETTER0) as u8) as char),
+            t if is_digit(t) => s.push((b'0' + (t - DIGIT0) as u8) as char),
+            t if (TASK0..TASK0 + 10).contains(&t) => {
+                s.push('[');
+                s.push_str(TASK_NAMES[(t - TASK0) as usize]);
+                s.push(']');
+            }
+            _ => s.push('?'),
+        }
+    }
+    s
+}
+
+/// Parse the rendering produced by [`detokenize`] (used in tests and to
+/// load hand-written example queries).
+pub fn tokenize(text: &str) -> Option<Vec<i32>> {
+    let mut out = Vec::new();
+    let bytes: Vec<char> = text.chars().collect();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            '_' => out.push(PAD),
+            '^' => out.push(BOS),
+            '$' => out.push(EOS),
+            '|' => out.push(SEP),
+            ':' => out.push(COLON),
+            'a'..='z' => out.push(letter(c)),
+            '0'..='9' => out.push(digit(c as u32 - '0' as u32)),
+            '[' => {
+                let end = bytes[i..].iter().position(|&x| x == ']')? + i;
+                let name: String = bytes[i + 1..end].iter().collect();
+                let idx = TASK_NAMES.iter().position(|&n| n == name)? as i32;
+                out.push(TASK0 + idx);
+                i = end;
+            }
+            _ => return None,
+        }
+        i += 1;
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_simple() {
+        let toks = vec![BOS, TASK0, COLON, letter('h'), letter('i'), SEP, EOS];
+        let s = detokenize(&toks);
+        assert_eq!(s, "^[COPY]:hi|$");
+        assert_eq!(tokenize(&s).unwrap(), toks);
+    }
+
+    #[test]
+    fn roundtrip_property_random_tokens() {
+        // property: detokenize->tokenize is the identity on valid tokens
+        let mut rng = Rng::new(123);
+        for _ in 0..200 {
+            let n = rng.range(1, 30);
+            let toks: Vec<i32> = (0..n)
+                .map(|_| {
+                    // any token in [0, 51) — the renderable range
+                    let t = rng.below(51) as i32;
+                    t
+                })
+                .collect();
+            let s = detokenize(&toks);
+            assert_eq!(tokenize(&s).unwrap(), toks, "{s}");
+        }
+    }
+
+    #[test]
+    fn number_encoding() {
+        assert_eq!(encode_number(0), vec![digit(0)]);
+        assert_eq!(encode_number(7), vec![digit(7)]);
+        assert_eq!(encode_number(42), vec![digit(4), digit(2)]);
+        assert_eq!(encode_number(105), vec![digit(1), digit(0), digit(5)]);
+    }
+
+    #[test]
+    fn classifications() {
+        assert!(is_letter(letter('a')) && is_letter(letter('z')));
+        assert!(!is_letter(DIGIT0) && !is_letter(PAD));
+        assert!(is_digit(digit(0)) && is_digit(digit(9)));
+        assert!(!is_digit(LETTER0));
+        assert_eq!(digit_val(digit(7)), 7);
+    }
+
+    #[test]
+    fn vocab_fits() {
+        // highest used token must be < VOCAB
+        assert!(COLON < VOCAB as i32);
+        assert!(TASK0 + TASK_NAMES.len() as i32 <= COLON);
+    }
+}

@@ -1,0 +1,166 @@
+//! Integration: the full label→router chain on a micro workload with
+//! real artifacts (train a tiny LM a few steps, sample, score, label,
+//! train a router, calibrate). Complements the smoke-scale pipeline run
+//! recorded in EXPERIMENTS.md — this is the fast CI-sized version.
+
+use std::path::{Path, PathBuf};
+
+use hybrid_llm::corpus::{make_query, Split, Task};
+use hybrid_llm::labels::{self, QualitySamples};
+use hybrid_llm::lm::LmEngine;
+use hybrid_llm::rng::Rng;
+use hybrid_llm::router::{RouterEngine, TrainCfg};
+use hybrid_llm::runtime::Runtime;
+use hybrid_llm::scorer::ScorerEngine;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.txt").exists().then_some(p)
+}
+
+#[test]
+fn micro_pipeline_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&dir).unwrap();
+    let mut rng = Rng::new(42);
+
+    // tiny corpus: 48 queries over two tasks of different difficulty
+    let mut corpus = Vec::new();
+    for i in 0..48 {
+        let task = if i % 2 == 0 { Task::Copy } else { Task::Sort };
+        let split = if i < 32 { Split::Train } else { Split::Val };
+        corpus.push(make_query(i, split, task, &mut rng));
+    }
+    let train_refs: Vec<&hybrid_llm::corpus::Query> =
+        corpus.iter().filter(|q| q.split == Split::Train).collect();
+
+    // 1. train nano briefly — loss must drop
+    let mut eng = LmEngine::init(rt.clone(), "nano", 7).unwrap();
+    let losses = eng.train(&train_refs, 30, 1e-2, 1, |_, _| {}).unwrap();
+    assert_eq!(losses.len(), 30);
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[25..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head, "loss did not drop: {head} -> {tail}");
+
+    // 2. save + reload round-trips
+    let tmp = std::env::temp_dir().join(format!("hybrid_pi_{}", std::process::id()));
+    eng.save(&tmp.join("nano")).unwrap();
+    let eng2 = LmEngine::load(rt.clone(), "nano", &tmp.join("nano")).unwrap();
+    assert_eq!(eng2.params.host[0], eng.params.host[0]);
+
+    // 3. sample 2 responses per query from nano and an un-trained micro
+    let eng_big = LmEngine::init(rt.clone(), "micro", 9).unwrap();
+    let prompts: Vec<&[i32]> = corpus.iter().map(|q| q.prompt.as_slice()).collect();
+    let seeds1: Vec<u32> = (0..corpus.len() as u32).collect();
+    let seeds2: Vec<u32> = (100..100 + corpus.len() as u32).collect();
+    let rs1 = eng.generate(&prompts, &seeds1, 0.8).unwrap();
+    let rs2 = eng.generate(&prompts, &seeds2, 0.8).unwrap();
+    let rb1 = eng_big.generate(&prompts, &seeds1, 0.8).unwrap();
+    let rb2 = eng_big.generate(&prompts, &seeds2, 0.8).unwrap();
+    assert_eq!(rs1.len(), corpus.len());
+    // answers respect the budget and never contain EOS
+    for r in rs1.iter().chain(&rb1) {
+        assert!(r.tokens.len() < hybrid_llm::corpus::A_MAX);
+        assert!(!r.tokens.contains(&hybrid_llm::tokenizer::EOS));
+    }
+
+    // 4. score with a fresh scorer (values finite, log-prob scale)
+    let scorer = ScorerEngine::init(rt.clone(), 3).unwrap();
+    let score_of = |resp: &[hybrid_llm::lm::Response]| -> Vec<f32> {
+        let flat: Vec<(&[i32], &[i32])> = corpus
+            .iter()
+            .zip(resp)
+            .map(|(q, r)| (q.prompt.as_slice(), r.tokens.as_slice()))
+            .collect();
+        scorer.score(&flat).unwrap()
+    };
+    let sc = score_of(&rs1);
+    assert_eq!(sc.len(), corpus.len());
+    assert!(sc.iter().all(|s| s.is_finite() && *s < 1.0));
+    let sc2 = score_of(&rs2);
+    let scb = score_of(&rb1);
+    let scb2 = score_of(&rb2);
+
+    // 5. labels from 2-sample quality matrices
+    let mk = |a: &[f32], b: &[f32]| -> QualitySamples {
+        QualitySamples::new(a.iter().zip(b).map(|(&x, &y)| vec![x, y]).collect())
+    };
+    let qs = mk(&sc, &sc2);
+    let ql = mk(&scb, &scb2);
+    let y_prob = labels::y_prob(&qs, &ql).unwrap();
+    assert!(y_prob.iter().all(|&y| (0.0..=1.0).contains(&y)));
+    let search = labels::find_tstar(&qs, &ql, 11).unwrap();
+    let y_trans = labels::y_trans(&qs, &ql, search.tstar).unwrap();
+    // relaxation can only raise labels
+    for (a, b) in y_prob.iter().zip(&y_trans) {
+        assert!(b >= a);
+    }
+
+    // 6. router trains on these labels without blowing up
+    let mut router = RouterEngine::init(rt.clone(), 5).unwrap();
+    let (rl, best) = router
+        .train(
+            &prompts[..32],
+            &y_trans[..32],
+            &prompts[32..],
+            &y_trans[32..],
+            TrainCfg { epochs: 2, base_lr: 1e-3, seed: 3 },
+            |_, _, _| {},
+        )
+        .unwrap();
+    assert!(!rl.is_empty());
+    assert!(rl.iter().all(|l| l.is_finite()));
+    assert!(best.is_finite());
+    let scores = router.scores(&prompts).unwrap();
+    assert!(scores.iter().all(|&s| (0.0..=1.0).contains(&s)));
+
+    // 7. calibration respects the drop budget on this data
+    let qsm = qs.mean();
+    let qlm = ql.mean();
+    let cal = hybrid_llm::calibrate::calibrate(&scores, &qsm, &qlm, 1.0);
+    assert!(cal.drop_pct <= 1.0 + 1e-9);
+
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn generation_is_reproducible_per_seed() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&dir).unwrap();
+    let eng = LmEngine::init(rt, "nano", 7).unwrap();
+    let mut rng = Rng::new(1);
+    let q = make_query(0, Split::Test, Task::Copy, &mut rng);
+    let prompts = vec![q.prompt.as_slice(); 4];
+    let seeds = vec![5u32, 5, 9, 9];
+    let r = eng.generate(&prompts, &seeds, 0.9).unwrap();
+    // same seed → same sample
+    assert_eq!(r[0].tokens, r[1].tokens);
+    assert_eq!(r[2].tokens, r[3].tokens);
+    let r2 = eng.generate(&prompts, &seeds, 0.9).unwrap();
+    assert_eq!(r[0].tokens, r2[0].tokens);
+}
+
+#[test]
+fn greedy_generation_is_temp_invariant_at_zero() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&dir).unwrap();
+    let eng = LmEngine::init(rt, "nano", 7).unwrap();
+    let mut rng = Rng::new(2);
+    let q = make_query(0, Split::Test, Task::Rev, &mut rng);
+    let prompts = vec![q.prompt.as_slice(); 2];
+    let r = eng.generate(&prompts, &[1, 999], 0.0).unwrap();
+    assert_eq!(r[0].tokens, r[1].tokens, "greedy must ignore seeds");
+    // single-request path agrees with the batched path under greedy
+    let (one, _steps) = eng.generate_one(&q.prompt, 7, 0.0).unwrap();
+    assert_eq!(one.tokens, r[0].tokens);
+}

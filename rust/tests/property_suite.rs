@@ -1,0 +1,205 @@
+//! Artifact-free property suite over the coordinator's pure logic:
+//! seeded-random cases for routing/batching/label/stat invariants that
+//! must hold for *any* input, not just the unit-test examples.
+
+use hybrid_llm::corpus::{self, Scale};
+use hybrid_llm::io::Tensor;
+use hybrid_llm::labels::{self, QualitySamples};
+use hybrid_llm::policy;
+use hybrid_llm::rng::Rng;
+use hybrid_llm::stats;
+use hybrid_llm::testing::check;
+
+fn rand_quality(rng: &mut Rng, n: usize, ns: usize) -> QualitySamples {
+    QualitySamples::new(
+        (0..n)
+            .map(|_| (0..ns).map(|_| -(rng.next_f32() * 6.0)).collect())
+            .collect(),
+    )
+}
+
+#[test]
+fn labels_are_probabilities_and_monotone_in_t() {
+    check("labels in [0,1], monotone in t", 60, |rng| {
+        let n = rng.range(1, 40);
+        let ns = rng.range(1, 6);
+        let qs = rand_quality(rng, n, ns);
+        let ql = rand_quality(rng, n, ns);
+        let t1 = rng.next_f32() * 2.0;
+        let t2 = t1 + rng.next_f32();
+        let y1 = labels::y_trans(&qs, &ql, t1).unwrap();
+        let y2 = labels::y_trans(&qs, &ql, t2).unwrap();
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((0.0..=1.0).contains(a));
+            assert!(b >= a, "monotone violated: {a} > {b}");
+        }
+    });
+}
+
+#[test]
+fn tstar_objective_never_below_t0() {
+    check("J(t*) >= J(0)", 30, |rng| {
+        let n = rng.range(4, 50);
+        let ns = rng.range(1, 5);
+        let qs = rand_quality(rng, n, ns);
+        let ql = rand_quality(rng, n, ns);
+        let s = labels::find_tstar(&qs, &ql, 21).unwrap();
+        let j0 = labels::pairwise_mean_abs_diff(&labels::y_prob(&qs, &ql).unwrap());
+        let jstar =
+            labels::pairwise_mean_abs_diff(&labels::y_trans(&qs, &ql, s.tstar).unwrap());
+        assert!(jstar >= j0 - 1e-12);
+    });
+}
+
+#[test]
+fn tradeoff_extremes_equal_baselines() {
+    check("tradeoff(0)=all-large, tradeoff(1)=all-small", 50, |rng| {
+        let n = rng.range(2, 60);
+        let scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let qs: Vec<f64> = (0..n).map(|_| -(rng.next_f64() * 5.0)).collect();
+        let ql: Vec<f64> = (0..n).map(|_| -(rng.next_f64() * 5.0)).collect();
+        let p0 = policy::tradeoff_at(&scores, &qs, &ql, 0.0);
+        assert!((p0.quality - stats::mean(&ql)).abs() < 1e-9);
+        assert!(p0.drop_pct.abs() < 1e-9);
+        let p1 = policy::tradeoff_at(&scores, &qs, &ql, 1.0);
+        assert!((p1.quality - stats::mean(&qs)).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn tradeoff_cost_advantage_is_exact() {
+    check("achieved cost advantage == target fraction", 50, |rng| {
+        let n = rng.range(10, 200);
+        let scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let q: Vec<f64> = vec![-1.0; n];
+        for k in 0..=4 {
+            let target = k as f64 / 4.0;
+            let p = policy::tradeoff_at(&scores, &q, &q, target);
+            let expect = (target * n as f64).round() / n as f64;
+            assert!((p.achieved_cost_advantage - expect).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn perfect_router_never_beaten_by_random() {
+    check("oracle scores dominate random routing", 25, |rng| {
+        let n = rng.range(20, 100);
+        let ql: Vec<f64> = (0..n).map(|_| -(rng.next_f64() * 2.0)).collect();
+        // small is strictly worse by a random margin; oracle score = -margin
+        let margins: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let qs: Vec<f64> = ql.iter().zip(&margins).map(|(q, m)| q - m).collect();
+        let oracle: Vec<f32> = margins.iter().map(|&m| 1.0 - m as f32).collect();
+        let random: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        for k in 1..4 {
+            let t = k as f64 / 4.0;
+            let po = policy::tradeoff_at(&oracle, &qs, &ql, t);
+            let pr = policy::tradeoff_at(&random, &qs, &ql, t);
+            assert!(po.quality >= pr.quality - 1e-9);
+        }
+    });
+}
+
+#[test]
+fn calibration_threshold_transfers_within_noise() {
+    // calibrate on one seeded sample, evaluate on another from the same
+    // distribution: the drop may differ but must stay bounded
+    check("calibration transfer bounded", 20, |rng| {
+        let gen = |rng: &mut Rng, n: usize| {
+            let mut scores = Vec::new();
+            let mut qs = Vec::new();
+            let mut ql = Vec::new();
+            for _ in 0..n {
+                let easy = rng.next_f64() < 0.3;
+                scores.push(if easy { 0.6 + 0.4 * rng.next_f32() } else { 0.4 * rng.next_f32() });
+                ql.push(-1.0 - 0.1 * rng.next_f64());
+                qs.push(if easy { -1.0 - 0.1 * rng.next_f64() } else { -3.0 - rng.next_f64() });
+            }
+            (scores, qs, ql)
+        };
+        let (s1, q1, l1) = gen(rng, 300);
+        let (s2, q2, l2) = gen(rng, 300);
+        let cal = hybrid_llm::calibrate::calibrate(&s1, &q1, &l1, 1.0);
+        let te = hybrid_llm::calibrate::evaluate_threshold(cal.threshold, &s2, &q2, &l2);
+        assert!(te.drop_pct < 6.0, "calibrated threshold fell apart: {te:?}");
+    });
+}
+
+#[test]
+fn corpus_references_deterministic_under_reload() {
+    check("corpus tsv roundtrip via detok strings", 5, |rng| {
+        let seed = rng.next_u64();
+        let c = corpus::generate(seed, Scale::Smoke);
+        let dir = std::env::temp_dir().join(format!(
+            "hybrid_prop_corpus_{}_{seed}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.tsv");
+        corpus::save(&p, &c).unwrap();
+        let back = corpus::load(&p).unwrap();
+        for (a, b) in c.iter().zip(&back) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.reference, b.reference);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn tensor_io_roundtrip_random_shapes() {
+    check("tensor io roundtrip", 40, |rng| {
+        let rank = rng.below(4);
+        let dims: Vec<usize> = (0..rank).map(|_| rng.range(1, 6)).collect();
+        let n: usize = dims.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.next_f32() * 100.0 - 50.0).collect();
+        let t = Tensor::f32(dims, data);
+        let dir = std::env::temp_dir().join(format!("hybrid_prop_io_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.tz");
+        t.save(&p).unwrap();
+        assert_eq!(Tensor::load(&p).unwrap(), t);
+    });
+}
+
+#[test]
+fn spearman_invariant_under_monotone_transform() {
+    check("spearman(x, f(x)) == 1 for increasing f", 40, |rng| {
+        let n = rng.range(3, 50);
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 10.0).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup();
+        if xs.len() < 3 {
+            return;
+        }
+        let ys: Vec<f64> = xs.iter().map(|&x| x.exp() + x * 3.0).collect();
+        let rho = stats::spearman(&xs, &ys);
+        assert!((rho - 1.0).abs() < 1e-9, "{rho}");
+    });
+}
+
+#[test]
+fn histogram_conserves_mass() {
+    check("histogram counts sum to n", 40, |rng| {
+        let n = rng.range(1, 300);
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 20.0 - 10.0).collect();
+        let h = stats::Histogram::build(&xs, -5.0, 5.0, rng.range(1, 12));
+        assert_eq!(h.counts.iter().sum::<u64>(), n as u64);
+    });
+}
+
+#[test]
+fn gap_diff_antisymmetric_in_score_inversion() {
+    check("inverting scores flips the gap-diff sign", 30, |rng| {
+        // even n and distinct scores: the 50% split is then exactly
+        // mirrored under score inversion
+        let n = rng.range(5, 40) * 2;
+        let mut scores: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        rng.shuffle(&mut scores);
+        let gap: Vec<f64> = (0..n).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let inv: Vec<f32> = scores.iter().map(|&s| -s).collect();
+        let d = hybrid_llm::eval::gap_diff(&scores, &gap, 0.5);
+        let di = hybrid_llm::eval::gap_diff(&inv, &gap, 0.5);
+        assert!((d + di).abs() < 1e-6, "{d} vs {di}");
+    });
+}

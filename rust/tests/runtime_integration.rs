@@ -1,0 +1,123 @@
+//! Integration: load + execute real AOT artifacts through PJRT.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! note) when the artifacts directory is absent so `cargo test` stays
+//! usable in a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use hybrid_llm::io::Tensor;
+use hybrid_llm::runtime::Runtime;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.txt").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn init_artifact_runs_and_is_seed_deterministic() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let exec = rt.exec("nano.init").unwrap();
+    let seed = Tensor::u32(vec![], vec![7]);
+    let out1 = exec.run(&[&seed]).unwrap();
+    let out2 = exec.run(&[&seed]).unwrap();
+    assert_eq!(out1.len(), exec.spec.outs.len());
+    assert_eq!(out1[0], out2[0]);
+    // emb is [VOCAB, d]
+    assert_eq!(out1[0].dims()[0], 64);
+    let other = exec.run(&[&Tensor::u32(vec![], vec![8])]).unwrap();
+    assert_ne!(out1[0], other[0]);
+}
+
+#[test]
+fn router_fwd_scores_in_unit_interval() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let init = rt.exec("router.init").unwrap();
+    let params = init.run(&[&Tensor::u32(vec![], vec![0])]).unwrap();
+    let fwd = rt.exec("router.fwd").unwrap();
+    let g = rt.manifest.globals;
+    let b = g.trainb;
+    let mut tokens = vec![0i32; b * g.sprompt];
+    for s in tokens.iter_mut().step_by(g.sprompt) {
+        *s = 1; // BOS
+    }
+    let toks = Tensor::i32(vec![b, g.sprompt], tokens);
+    let lens = Tensor::i32(vec![b], vec![1; b]);
+    let mut ins: Vec<&Tensor> = params.iter().collect();
+    ins.push(&toks);
+    ins.push(&lens);
+    let out = fwd.run(&ins).unwrap();
+    let scores = out[0].as_f32().unwrap();
+    assert_eq!(scores.len(), b);
+    for &s in scores {
+        assert!(s > 0.0 && s < 1.0, "{s}");
+    }
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let exec = rt.exec("nano.init").unwrap();
+    // wrong dtype
+    assert!(exec.run(&[&Tensor::i32(vec![], vec![7])]).is_err());
+    // wrong count
+    assert!(exec.run(&[]).is_err());
+}
+
+#[test]
+fn resident_params_execute_matches_literal_path() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let init = rt.exec("nano.init").unwrap();
+    let params = init.run(&[&Tensor::u32(vec![], vec![3])]).unwrap();
+
+    let g = rt.manifest.globals;
+    let fwd = rt.exec("nano.prefill1").unwrap();
+    let mut prompt = vec![0i32; g.sprompt];
+    prompt[0] = 1;
+    prompt[1] = 40;
+    prompt[2] = 50;
+    prompt[3] = 9;
+    prompt[4] = 3;
+    let prompt = Tensor::i32(vec![1, g.sprompt], prompt);
+    let lens = Tensor::i32(vec![1], vec![5]);
+    let seeds = Tensor::u32(vec![1], vec![0]);
+    let temp = Tensor::f32(vec![], vec![0.0]);
+
+    // literal path
+    let mut ins: Vec<&Tensor> = params.iter().collect();
+    ins.extend([&prompt, &lens, &seeds, &temp]);
+    let out_lit = fwd.run(&ins).unwrap();
+
+    // resident path
+    let mut resident = std::collections::HashMap::new();
+    for (i, p) in params.iter().enumerate() {
+        resident.insert(i, rt.upload(p).unwrap());
+    }
+    let n = params.len();
+    let host: Vec<(usize, &Tensor)> = vec![
+        (n, &prompt),
+        (n + 1, &lens),
+        (n + 2, &seeds),
+        (n + 3, &temp),
+    ];
+    let out_res = fwd.run_with_resident(&resident, &host).unwrap();
+
+    assert_eq!(out_lit[0], out_res[0], "sampled token must match");
+    assert_eq!(out_lit[2], out_res[2], "kcache must match");
+}

@@ -1,0 +1,145 @@
+//! Integration: the threaded serving system against real artifacts —
+//! request lifecycle, continuous batching, both scheduling modes, and
+//! clean shutdown under load.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use hybrid_llm::batching::BatchMode;
+use hybrid_llm::corpus::{generate, Scale, Split};
+use hybrid_llm::lm::LmEngine;
+use hybrid_llm::runtime::Runtime;
+use hybrid_llm::serve::{ServeConfig, Server};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.txt").exists().then_some(p)
+}
+
+fn seed_run_dir(artifacts: &Path, tag: &str) -> PathBuf {
+    let run = std::env::temp_dir().join(format!("hybrid_serve_{}_{tag}", std::process::id()));
+    let rt = Runtime::load(artifacts).unwrap();
+    for model in ["nano", "micro"] {
+        let dir = run.join("params").join(model);
+        if !dir.join("p.emb.tz").exists() {
+            let eng = LmEngine::init(rt.clone(), model, 3).unwrap();
+            eng.save(&dir).unwrap();
+        }
+    }
+    run
+}
+
+fn base_cfg(artifacts: PathBuf, run_dir: PathBuf, mode: BatchMode) -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: artifacts,
+        run_dir,
+        small: "nano".into(),
+        large: "micro".into(),
+        router: String::new(), // random routing (no trained router needed)
+        threshold: 0.5,
+        temp: 0.8,
+        mode,
+        batch_window: Duration::from_millis(2),
+    }
+}
+
+#[test]
+fn serves_all_requests_continuous() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "cont");
+    let server =
+        Server::start(base_cfg(artifacts, run_dir.clone(), BatchMode::Continuous)).unwrap();
+    let corpus = generate(3, Scale::Smoke);
+    let reqs: Vec<_> = corpus
+        .iter()
+        .filter(|q| q.split == Split::Test)
+        .take(24)
+        .collect();
+    let rxs: Vec<_> = reqs.iter().map(|q| server.submit(q.prompt.clone())).collect();
+    let mut ids = std::collections::HashSet::new();
+    let mut small = 0;
+    for rx in rxs {
+        let c = rx.recv_timeout(Duration::from_secs(120)).expect("completion");
+        assert!(ids.insert(c.id), "duplicate completion id");
+        assert!(c.tokens.len() < hybrid_llm::corpus::A_MAX);
+        assert!((0.0..=1.0).contains(&c.router_score));
+        if c.routed_small {
+            small += 1;
+        }
+    }
+    assert_eq!(ids.len(), 24, "every request completed exactly once");
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.routing.to_small + stats.routing.to_large, 24);
+    assert_eq!(stats.routing.to_small as usize, small);
+    assert!(stats.decode_steps > 0);
+    assert_eq!(stats.e2e_latency.n, 24);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn serves_all_requests_run_to_completion() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "rtc");
+    let server =
+        Server::start(base_cfg(artifacts, run_dir.clone(), BatchMode::RunToCompletion)).unwrap();
+    let corpus = generate(5, Scale::Smoke);
+    let rxs: Vec<_> = corpus
+        .iter()
+        .take(20)
+        .map(|q| server.submit(q.prompt.clone()))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(120)).expect("completion");
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.e2e_latency.n, 20);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn shutdown_with_no_traffic_is_clean() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "idle");
+    let server =
+        Server::start(base_cfg(artifacts, run_dir.clone(), BatchMode::Continuous)).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.routing.to_small + stats.routing.to_large, 0);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn threshold_extremes_route_everything_one_way() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "thr");
+    // threshold 0.0 => every score >= 0 => all small
+    let mut cfg = base_cfg(artifacts.clone(), run_dir.clone(), BatchMode::Continuous);
+    cfg.threshold = 0.0;
+    let server = Server::start(cfg).unwrap();
+    let corpus = generate(7, Scale::Smoke);
+    let rxs: Vec<_> = corpus
+        .iter()
+        .take(8)
+        .map(|q| server.submit(q.prompt.clone()))
+        .collect();
+    for rx in rxs {
+        let c = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(c.routed_small);
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.routing.to_large, 0);
+    assert!((stats.routing.cost_advantage - 1.0).abs() < 1e-9);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
