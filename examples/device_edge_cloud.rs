@@ -1,0 +1,134 @@
+//! Device–edge–cloud routing scenario (companion to `edge_cloud.rs`,
+//! generalized to the 3-tier fleet): a tiny on-device model (`nano`), a
+//! mid-size edge model (`medium`), and a strong cloud model (`large`).
+//! A single router score is partitioned into three bands by the ladder
+//! policy; the sweep prints the per-tier traffic split, cost-weighted
+//! cost advantage, and quality drop, then calibrates a §4.5-style
+//! ladder operating point on the validation split. When the AOT
+//! artifacts and trained params are present, the same ladder is also
+//! exercised live through a 3-tier `Server`.
+//!
+//! Requires a completed pipeline run (default `runs/smoke`):
+//! `cargo run --release --example device_edge_cloud [RUN_DIR]`
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+use hybrid_llm::batching::BatchMode;
+use hybrid_llm::calibrate::{calibrate_ladder, evaluate_ladder, ladder_from_pivot};
+use hybrid_llm::corpus::{Scale, Split};
+use hybrid_llm::pipeline::{ladder_specs, model_cost, pair_id, subset, Pipeline};
+use hybrid_llm::policy::{self, TierPolicy};
+use hybrid_llm::router::RouterKind;
+use hybrid_llm::runtime::Runtime;
+use hybrid_llm::serve::{ReplicaSelect, ServeConfig, Server};
+use hybrid_llm::stats;
+
+const FLEET: [&str; 3] = ["nano", "medium", "large"];
+
+fn main() -> Result<()> {
+    let run_dir = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "runs/smoke".into()),
+    );
+    let artifacts = Runtime::default_dir();
+    let rt = Runtime::load(&artifacts)?;
+    let pl = Pipeline::new(rt, &run_dir, Scale::Smoke);
+    let corpus = pl.ensure_corpus()?;
+    let costs: Vec<f64> = FLEET.iter().map(|m| model_cost(m)).collect();
+    // one router score for the whole ladder: the medium/large r_trans
+    let pair = pair_id("medium", "large");
+    let all_scores = pl
+        .load_router_scores(&pair, RouterKind::Trans)
+        .context("run the pipeline first")?;
+
+    let test = hybrid_llm::corpus::split_ids(&corpus, Split::Test);
+    let val = hybrid_llm::corpus::split_ids(&corpus, Split::Val);
+    let scores: Vec<f32> = test.iter().map(|&i| all_scores[i]).collect();
+    // one tensor load per model, subset for both splits
+    let mut quals: Vec<Vec<f64>> = Vec::new();
+    let mut quals_v: Vec<Vec<f64>> = Vec::new();
+    for m in FLEET {
+        let q = pl.load_quality(m, &corpus)?;
+        quals.push(subset(&q, &test).mean());
+        quals_v.push(subset(&q, &val).mean());
+    }
+
+    println!("== device–edge–cloud: {} ==\n", FLEET.join(" -> "));
+    for (m, (q, c)) in FLEET.iter().zip(quals.iter().zip(&costs)) {
+        println!("  {m:<8} mean quality {:+.3}   relative cost {c:.2}", stats::mean(q));
+    }
+    println!("\npivot  frac_device  frac_edge  frac_cloud  cost_adv%  quality_drop%");
+    for k in 0..=10 {
+        let pivot = k as f32 / 10.0;
+        let thresholds = ladder_from_pivot(pivot, FLEET.len());
+        let assign = TierPolicy::Ladder { thresholds }.assign(&scores);
+        let frac = policy::tier_fractions(&assign, FLEET.len());
+        let ca = policy::cost_advantage_tiers(&assign, &costs);
+        let q = policy::achieved_quality_tiers(&assign, &quals);
+        let drop = hybrid_llm::metrics::quality_drop_pct(stats::mean(&quals[2]), q);
+        println!(
+            "  {pivot:.1}      {:5.2}       {:5.2}      {:5.2}     {:6.1}      {drop:+7.2}",
+            frac[0], frac[1], frac[2], ca * 100.0
+        );
+    }
+
+    // §4.5 generalized: calibrate the ladder pivot on val for <=1% drop
+    let scores_v: Vec<f32> = val.iter().map(|&i| all_scores[i]).collect();
+    let cal = calibrate_ladder(&scores_v, &quals_v, &costs, 1.0);
+    let on_test = evaluate_ladder(&cal.thresholds, &scores, &quals, &costs);
+    println!(
+        "\ncalibrated ladder {:?}: saves {:.1}% of cloud-equivalent spend at {:+.2}% drop on test",
+        cal.thresholds,
+        on_test.cost_advantage * 100.0,
+        on_test.drop_pct
+    );
+
+    // live 3-tier serving, when the fleet's params are trained
+    let have_params = FLEET
+        .iter()
+        .all(|m| pl.paths.params(m).join("p.emb.tz").exists());
+    if !have_params {
+        println!("\n(skipping live serving: fleet params not trained — run the pipeline)");
+        return Ok(());
+    }
+    println!("\n== live 3-tier serving (ladder {:?}) ==", cal.thresholds);
+    let cfg = ServeConfig {
+        artifacts_dir: artifacts,
+        run_dir: run_dir.clone(),
+        tiers: ladder_specs(&FLEET),
+        router: format!("{pair}_trans"),
+        policy: TierPolicy::Ladder { thresholds: cal.thresholds.clone() },
+        select: ReplicaSelect::ShortestQueue,
+        temp: 0.0,
+        mode: BatchMode::Continuous,
+        batch_window: Duration::from_millis(5),
+    };
+    let server = Server::start(cfg)?;
+    let reqs: Vec<_> = corpus
+        .iter()
+        .filter(|q| q.split == Split::Test)
+        .take(24)
+        .collect();
+    let rxs: Vec<_> = reqs.iter().map(|q| server.submit(q.prompt.clone())).collect();
+    for rx in rxs {
+        rx.recv().context("completion dropped")?;
+    }
+    let live = server.shutdown()?;
+    let total = live.routing.total().max(1);
+    for (ts, tr) in live.tiers.iter().zip(&live.routing.tiers) {
+        println!(
+            "tier {:<8} routed {:>3} ({:>5.1}%)   e2e p50 {:>6.0} ms",
+            ts.name,
+            tr.routed,
+            tr.routed as f64 / total as f64 * 100.0,
+            ts.latency.p50_ms
+        );
+    }
+    println!(
+        "live cost advantage {:.1}%   e2e p95 {:.0} ms",
+        live.routing.cost_advantage * 100.0,
+        live.e2e_latency.p95_ms
+    );
+    Ok(())
+}

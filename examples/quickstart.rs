@@ -45,17 +45,16 @@ fn main() -> Result<()> {
 
     // 3. live serving demo: medium (small/edge) vs large (cloud)
     let (small, large) = ("medium", "large");
-    let cfg = ServeConfig {
-        artifacts_dir: artifacts,
-        run_dir: run_dir.clone(),
-        small: small.into(),
-        large: large.into(),
-        router: format!("{}_trans", pair_id(small, large)),
-        threshold: 0.5,
-        temp: 0.0,
-        mode: BatchMode::Continuous,
-        batch_window: Duration::from_millis(5),
-    };
+    let mut cfg = ServeConfig::two_tier(
+        artifacts,
+        run_dir.clone(),
+        small,
+        large,
+        format!("{}_trans", pair_id(small, large)),
+        0.5,
+    );
+    cfg.mode = BatchMode::Continuous;
+    cfg.batch_window = Duration::from_millis(5);
     println!("== live serving: {small} vs {large}, r_trans ==");
     let server = Server::start(cfg)?;
     let test: Vec<_> = corpus

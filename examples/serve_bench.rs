@@ -50,17 +50,10 @@ fn main() -> Result<()> {
         (String::new(), BatchMode::Continuous, "random + continuous"),
         (String::new(), BatchMode::RunToCompletion, "random + run-to-completion"),
     ] {
-        let cfg = ServeConfig {
-            artifacts_dir: artifacts.clone(),
-            run_dir: run_dir.clone(),
-            small: small.into(),
-            large: large.into(),
-            router,
-            threshold: 0.5,
-            temp: 0.0,
-            mode,
-            batch_window: Duration::from_millis(5),
-        };
+        let mut cfg =
+            ServeConfig::two_tier(artifacts.clone(), run_dir.clone(), small, large, router, 0.5);
+        cfg.mode = mode;
+        cfg.batch_window = Duration::from_millis(5);
         let server = Server::start(cfg)?;
         let t0 = std::time::Instant::now();
         let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone())).collect();

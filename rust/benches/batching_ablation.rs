@@ -39,17 +39,17 @@ fn main() -> anyhow::Result<()> {
         (BatchMode::Continuous, "continuous"),
         (BatchMode::RunToCompletion, "run-to-completion"),
     ] {
-        let cfg = ServeConfig {
-            artifacts_dir: artifacts.clone(),
-            run_dir: run_dir.clone(),
-            small: "small".into(),
-            large: "medium".into(),
-            router: String::new(),
-            threshold: 0.5,
-            temp: 0.8,
-            mode,
-            batch_window: Duration::from_millis(2),
-        };
+        let mut cfg = ServeConfig::two_tier(
+            artifacts.clone(),
+            run_dir.clone(),
+            "small",
+            "medium",
+            String::new(),
+            0.5,
+        );
+        cfg.temp = 0.8;
+        cfg.mode = mode;
+        cfg.batch_window = Duration::from_millis(2);
         let server = Server::start(cfg)?;
         let t0 = Instant::now();
         // staggered arrivals: 4 waves to exercise admission policy

@@ -3,16 +3,81 @@
 //! path (B=1 artifact) and the batched path (B=32), plus the pure
 //! manifest-validation overhead. Uses seeded-init router params (latency
 //! is weight-independent), so this runs without a pipeline run.
+//!
+//! Also reports the fleet's **tier-dispatch overhead** — threshold-ladder
+//! assignment plus replica selection — at 2, 3, and 5 tiers, so the
+//! N-tier refactor's hot-path cost stays visible in the bench
+//! trajectory. The dispatch section is pure CPU and runs even without
+//! artifacts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use hybrid_llm::bench::{report, Bencher};
 use hybrid_llm::corpus::{generate, Scale};
+use hybrid_llm::policy::TierPolicy;
 use hybrid_llm::router::RouterEngine;
 use hybrid_llm::runtime::Runtime;
 
+const DISPATCH_BATCH: usize = 1024;
+
+/// Ladder assignment + shortest-queue replica pick over a simulated
+/// fleet — the router thread's per-batch dispatch work, minus the
+/// channels. Policy and depth counters are built once by the caller,
+/// as the real router thread does at startup.
+fn dispatch_overhead(policy: &TierPolicy, depths: &[Vec<AtomicU64>], scores: &[f32]) -> u64 {
+    let assigns = policy.assign(scores);
+    let mut picked = 0u64;
+    for &tier in &assigns {
+        let tier = tier.min(depths.len() - 1);
+        let rep = depths[tier]
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| q.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        depths[tier][rep].fetch_add(1, Ordering::Relaxed);
+        picked += rep as u64 + tier as u64;
+    }
+    picked
+}
+
 fn main() -> anyhow::Result<()> {
+    // --- tier dispatch overhead (artifact-free, pure CPU) -------------
+    let mut rng = hybrid_llm::rng::Rng::new(42);
+    let scores: Vec<f32> = (0..DISPATCH_BATCH).map(|_| rng.next_f32()).collect();
+    let b = Bencher::quick();
+    let mut results = Vec::new();
+    for k in [2usize, 3, 5] {
+        let policy = TierPolicy::even_ladder(k);
+        let depths: Vec<Vec<AtomicU64>> = (0..k)
+            .map(|_| (0..2).map(|_| AtomicU64::new(0)).collect())
+            .collect();
+        results.push(b.bench_items(
+            &format!("tier dispatch (K={k}, B={DISPATCH_BATCH})"),
+            DISPATCH_BATCH as f64,
+            &mut || {
+                std::hint::black_box(dispatch_overhead(
+                    &policy,
+                    &depths,
+                    std::hint::black_box(&scores),
+                ));
+            },
+        ));
+    }
+    report("tier_dispatch", &results);
+    let two = results[0].mean.as_secs_f64();
+    let five = results[2].mean.as_secs_f64();
+    println!(
+        "\nper-query dispatch: K=2 {:.1} ns, K=5 {:.1} ns ({:.2}x)",
+        two / DISPATCH_BATCH as f64 * 1e9,
+        five / DISPATCH_BATCH as f64 * 1e9,
+        five / two.max(1e-12)
+    );
+
+    // --- router scoring (needs artifacts) -----------------------------
     let dir = Runtime::default_dir();
     if !dir.join("manifest.txt").exists() {
-        eprintln!("skipping bench: artifacts not built (run `make artifacts`)");
+        eprintln!("skipping router scoring bench: artifacts not built (run `make artifacts`)");
         return Ok(());
     }
     let rt = Runtime::load(&dir)?;

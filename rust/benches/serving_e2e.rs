@@ -37,17 +37,17 @@ fn main() -> anyhow::Result<()> {
         "requests", "wall s", "req/s", "p50 ms", "p95 ms", "slot eff"
     );
     for n in [16, 48, 96] {
-        let cfg = ServeConfig {
-            artifacts_dir: artifacts.clone(),
-            run_dir: run_dir.clone(),
-            small: "small".into(),
-            large: "medium".into(),
-            router: String::new(), // random routing
-            threshold: 0.5,
-            temp: 0.8,
-            mode: BatchMode::Continuous,
-            batch_window: Duration::from_millis(2),
-        };
+        let mut cfg = ServeConfig::two_tier(
+            artifacts.clone(),
+            run_dir.clone(),
+            "small",
+            "medium",
+            String::new(), // random routing
+            0.5,
+        );
+        cfg.temp = 0.8;
+        cfg.mode = BatchMode::Continuous;
+        cfg.batch_window = Duration::from_millis(2);
         let server = Server::start(cfg)?;
         let t0 = Instant::now();
         let rxs: Vec<_> = prompts[..n].iter().map(|p| server.submit(p.clone())).collect();

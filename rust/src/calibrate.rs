@@ -1,9 +1,14 @@
 //! Empirical threshold determination (paper §4.5): pick the router-score
 //! threshold on a small validation sample that maximizes cost advantage
 //! subject to a performance-drop limit (default ≤ 1%), then report how it
-//! generalizes to the test split (Table 3).
+//! generalizes to the test split (Table 3). [`calibrate_ladder`] is the
+//! N-tier generalization: a proportional threshold ladder swept by a
+//! single pivot under per-tier cost weights.
 
-use crate::policy::{achieved_quality, cost_advantage, Policy};
+use crate::policy::{
+    achieved_quality, achieved_quality_tiers, cost_advantage, cost_advantage_tiers, Policy,
+    TierPolicy,
+};
 use crate::stats;
 
 /// Outcome of calibrating on one labelled set.
@@ -41,7 +46,13 @@ pub fn calibrate(
     q_large: &[f64],
     max_drop_pct: f64,
 ) -> Calibration {
-    assert!(!scores.is_empty());
+    if scores.is_empty() {
+        // documented fallback instead of panicking: with nothing to
+        // calibrate on, operate all-at-large (cost advantage 0, no
+        // drop). INFINITY (not f32::MAX, a reachable score value)
+        // guarantees no future score can clear the threshold.
+        return Calibration { threshold: f32::INFINITY, cost_advantage: 0.0, drop_pct: 0.0 };
+    }
     let mut candidates: Vec<f32> = scores.to_vec();
     candidates.push(f32::MAX); // all-at-large fallback (cost advantage 0)
     candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -62,8 +73,86 @@ pub fn calibrate(
             }
         }
     }
-    // the f32::MAX fallback always satisfies the constraint (0% drop)
-    best.expect("calibrate: all-at-large candidate must be feasible")
+    // the f32::MAX candidate (0% drop) is feasible for any non-negative
+    // limit; a negative limit falls back to all-at-large rather than
+    // panicking
+    best.unwrap_or_else(|| evaluate_threshold(f32::MAX, scores, q_small, q_large))
+}
+
+/// Outcome of calibrating a threshold ladder over an N-tier fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LadderCalibration {
+    pub thresholds: Vec<f32>,
+    pub cost_advantage: f64,
+    pub drop_pct: f64,
+}
+
+/// Proportional K-tier ladder from a single pivot:
+/// `t_i = pivot * (K-1-i)/(K-1)` for `i` in `0..K-1` — descending, with
+/// `K == 2` reducing to the paper's single threshold `pivot`.
+pub fn ladder_from_pivot(pivot: f32, k: usize) -> Vec<f32> {
+    if k <= 1 {
+        return Vec::new();
+    }
+    (0..k - 1)
+        .map(|i| pivot * (k - 1 - i) as f32 / (k - 1) as f32)
+        .collect()
+}
+
+/// Evaluate a fixed threshold ladder on a labelled set; `q_tiers[t][i]`
+/// is query `i`'s expected quality at tier `t`, `costs` the per-tier
+/// cost weights. Drop is vs all-at-most-expensive (the last tier).
+pub fn evaluate_ladder(
+    thresholds: &[f32],
+    scores: &[f32],
+    q_tiers: &[Vec<f64>],
+    costs: &[f64],
+) -> LadderCalibration {
+    let assign = TierPolicy::Ladder { thresholds: thresholds.to_vec() }.assign(scores);
+    let base = q_tiers.last().map(|row| stats::mean(row)).unwrap_or(0.0);
+    let q = achieved_quality_tiers(&assign, q_tiers);
+    LadderCalibration {
+        thresholds: thresholds.to_vec(),
+        cost_advantage: cost_advantage_tiers(&assign, costs),
+        drop_pct: crate::metrics::quality_drop_pct(base, q),
+    }
+}
+
+/// §4.5 generalized to K tiers: grid-search the proportional-ladder
+/// pivot over the observed scores, keeping the ladder with the highest
+/// cost advantage whose drop stays within `max_drop_pct`. The infinite
+/// pivot (all-at-most-expensive, zero drop) keeps the search total on
+/// any input, including empty score sets.
+pub fn calibrate_ladder(
+    scores: &[f32],
+    q_tiers: &[Vec<f64>],
+    costs: &[f64],
+    max_drop_pct: f64,
+) -> LadderCalibration {
+    let k = q_tiers.len().max(1);
+    let mut candidates: Vec<f32> = scores.iter().copied().filter(|s| s.is_finite()).collect();
+    candidates.push(f32::INFINITY);
+    candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    candidates.dedup();
+    let mut best: Option<LadderCalibration> = None;
+    for &pivot in &candidates {
+        let c = evaluate_ladder(&ladder_from_pivot(pivot, k), scores, q_tiers, costs);
+        if c.drop_pct <= max_drop_pct {
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    c.cost_advantage > b.cost_advantage
+                        || (c.cost_advantage == b.cost_advantage && c.drop_pct < b.drop_pct)
+                }
+            };
+            if better {
+                best = Some(c);
+            }
+        }
+    }
+    best.unwrap_or_else(|| {
+        evaluate_ladder(&ladder_from_pivot(f32::INFINITY, k), scores, q_tiers, costs)
+    })
 }
 
 /// Subsample `k` indices for the §4.5 "500 validation samples" protocol.
@@ -132,6 +221,60 @@ mod tests {
         let all_small = evaluate_threshold(0.0, &scores, &qs, &ql);
         assert_eq!(all_small.cost_advantage, 1.0);
         assert!(all_small.drop_pct > 0.0);
+    }
+
+    #[test]
+    fn calibrate_empty_input_falls_back_to_all_large() {
+        let c = calibrate(&[], &[], &[], 1.0);
+        assert_eq!(c.cost_advantage, 0.0);
+        assert_eq!(c.drop_pct, 0.0);
+        // INFINITY: unsatisfiable by any future score, unlike f32::MAX
+        assert_eq!(c.threshold, f32::INFINITY);
+        assert!(Policy::Threshold { threshold: c.threshold }
+            .assign(&[f32::MAX])
+            .iter()
+            .all(|&s| !s));
+    }
+
+    #[test]
+    fn ladder_from_pivot_shapes() {
+        assert_eq!(ladder_from_pivot(0.6, 2), vec![0.6]);
+        let t = ladder_from_pivot(0.6, 3);
+        assert_eq!(t.len(), 2);
+        assert!((t[0] - 0.6).abs() < 1e-6 && (t[1] - 0.3).abs() < 1e-6);
+        assert!(ladder_from_pivot(0.6, 1).is_empty());
+    }
+
+    #[test]
+    fn ladder_calibration_k2_matches_pair_calibration() {
+        let (scores, qs, ql) = perfect_case(100);
+        let pair = calibrate(&scores, &qs, &ql, 1.0);
+        let ladder = calibrate_ladder(&scores, &[qs, ql], &[0.0, 1.0], 1.0);
+        assert!((ladder.cost_advantage - pair.cost_advantage).abs() < 1e-9);
+        assert!((ladder.drop_pct - pair.drop_pct).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ladder_calibration_three_tiers_respects_limit() {
+        crate::testing::check("3-tier ladder respects drop limit", 30, |rng| {
+            let n = rng.range(10, 150);
+            let scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let q: Vec<Vec<f64>> = (0..3)
+                .map(|_| (0..n).map(|_| -(rng.next_f64() * 5.0)).collect())
+                .collect();
+            let costs = [0.0, 0.4, 1.0];
+            let limit = rng.next_f64() * 4.0;
+            let c = calibrate_ladder(&scores, &q, &costs, limit);
+            assert!(c.drop_pct <= limit + 1e-9, "{c:?} limit {limit}");
+            assert!((0.0..=1.0 + 1e-12).contains(&c.cost_advantage));
+        });
+    }
+
+    #[test]
+    fn ladder_calibration_empty_scores_is_total() {
+        let c = calibrate_ladder(&[], &[vec![], vec![]], &[0.0, 1.0], 1.0);
+        assert_eq!(c.cost_advantage, 0.0);
+        assert_eq!(c.drop_pct, 0.0);
     }
 
     #[test]

@@ -47,6 +47,30 @@ impl Args {
         self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
     }
 
+    /// Optional string flag (`None` when absent) — for flags whose
+    /// default is computed from other flags, like `--tiers`.
+    pub fn get_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Comma-separated list flag parsed element-wise (`None` when
+    /// absent), e.g. `--thresholds 0.7,0.4`.
+    pub fn get_csv<T: std::str::FromStr>(&self, key: &str) -> Option<Result<Vec<T>>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.flags.get(key).map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.parse::<T>()
+                        .map_err(|e| anyhow::anyhow!("--{key}={v}: bad element {p:?}: {e}"))
+                })
+                .collect()
+        })
+    }
+
     /// Required string flag.
     pub fn require(&self, key: &str) -> Result<&str> {
         self.flags
@@ -122,6 +146,18 @@ mod tests {
         assert!(a.get_parse::<usize>("steps", 0).is_ok());
         let b = parse("train --steps abc");
         assert!(b.get_parse::<usize>("steps", 0).is_err());
+    }
+
+    #[test]
+    fn opt_and_csv_flags() {
+        let a = parse("serve-demo --tiers nano:2,large --thresholds 0.7,0.4");
+        assert_eq!(a.get_opt("tiers"), Some("nano:2,large"));
+        assert_eq!(a.get_opt("missing"), None);
+        let t: Vec<f32> = a.get_csv("thresholds").unwrap().unwrap();
+        assert_eq!(t, vec![0.7, 0.4]);
+        assert!(a.get_csv::<f32>("missing").is_none());
+        let b = parse("x --thresholds 0.7,abc");
+        assert!(b.get_csv::<f32>("thresholds").unwrap().is_err());
     }
 
     #[test]

@@ -84,6 +84,7 @@ impl<'a> Eval<'a> {
             "table4" => self.table1(&crate::pipeline::APPENDIX_PAIRS, "table4"),
             "table5" => self.table5(),
             "nmodel" => self.nmodel(),
+            "ladder" => self.ladder(),
             other => anyhow::bail!("unknown experiment id {other} (see DESIGN.md §6)"),
         }
     }
@@ -93,7 +94,7 @@ impl<'a> Eval<'a> {
     pub fn all_ids() -> &'static [&'static str] {
         &[
             "table5", "fig1", "fig3", "fig4", "fig5", "fig6", "table1", "table3", "fig7",
-            "fig8", "fig9", "fig10", "table4", "nmodel",
+            "fig8", "fig9", "fig10", "table4", "nmodel", "ladder",
         ]
     }
 
@@ -522,24 +523,79 @@ impl<'a> Eval<'a> {
         for k in 0..=10 {
             let thr = k as f32 / 10.0;
             let assign = policy::nmodel_assign(&pair_scores, &[thr, thr], test.len());
-            let mut frac = [0.0f64; 3];
-            let mut q = 0.0;
-            for (i, &m) in assign.iter().enumerate() {
-                frac[m] += 1.0;
-                q += quals[m][i];
-            }
-            let n = assign.len() as f64;
-            q /= n;
+            let frac = policy::tier_fractions(&assign, ladder.len());
+            let q = policy::achieved_quality_tiers(&assign, &quals);
             body.push_str(&format!(
                 "{thr:.1}\t{:.2}\t{:.2}\t{:.2}\t{:+.2}\n",
-                frac[0] / n,
-                frac[1] / n,
-                frac[2] / n,
+                frac[0],
+                frac[1],
+                frac[2],
                 crate::metrics::quality_drop_pct(base, q)
             ));
         }
         body.push_str("```\n");
         self.write("nmodel", &body)
+    }
+
+    // ------------------------------------------------------------------
+    // Fleet extension — N-tier ladder routing over a single router score
+    // ------------------------------------------------------------------
+
+    /// 3-tier ladder: one router score (medium/large r_trans) partitioned
+    /// into bands over a nano → medium → large fleet, with [`model_cost`]
+    /// weights. Reports per-tier fractions, cost-weighted cost advantage,
+    /// and drop vs all-at-large as the proportional-ladder pivot sweeps.
+    pub fn ladder(&self) -> Result<String> {
+        let test = self.ids(Split::Test);
+        let val = self.ids(Split::Val);
+        let fleet = ["nano", "medium", "large"];
+        let costs: Vec<f64> = fleet.iter().map(|m| crate::pipeline::model_cost(m)).collect();
+        let scores =
+            self.router_scores_on(&pair_id("medium", "large"), RouterKind::Trans, &test)?;
+        // one tensor load per model, subset for both splits
+        let mut quals = Vec::new();
+        let mut quals_v = Vec::new();
+        for m in fleet {
+            let q = self.pl.load_quality(m, self.corpus)?;
+            quals.push(subset(&q, &test).mean());
+            quals_v.push(subset(&q, &val).mean());
+        }
+        let mut body = String::from(
+            "# ladder — 3-tier fleet (nano / medium / large), single-score bands\n\n\
+             Proportional ladder `t_i = pivot * (K-1-i)/(K-1)`; cost advantage is\n\
+             cost-weighted spend saved vs all-at-large.\n\n```\n\
+             pivot\tfrac_nano\tfrac_medium\tfrac_large\tcost_adv\tdrop_pct\n",
+        );
+        for k in 0..=10 {
+            let pivot = k as f32 / 10.0;
+            let thresholds = crate::calibrate::ladder_from_pivot(pivot, fleet.len());
+            let assign =
+                policy::TierPolicy::Ladder { thresholds }.assign(&scores);
+            let frac = policy::tier_fractions(&assign, fleet.len());
+            let q = policy::achieved_quality_tiers(&assign, &quals);
+            let ca = policy::cost_advantage_tiers(&assign, &costs);
+            body.push_str(&format!(
+                "{pivot:.1}\t{:.2}\t{:.2}\t{:.2}\t{:.2}\t{:+.2}\n",
+                frac[0],
+                frac[1],
+                frac[2],
+                ca,
+                crate::metrics::quality_drop_pct(stats::mean(&quals[2]), q)
+            ));
+        }
+        body.push_str("```\n");
+        // §4.5-style ladder operating point on the validation split
+        let scores_v =
+            self.router_scores_on(&pair_id("medium", "large"), RouterKind::Trans, &val)?;
+        let cal = crate::calibrate::calibrate_ladder(&scores_v, &quals_v, &costs, 1.0);
+        let on_test = crate::calibrate::evaluate_ladder(&cal.thresholds, &scores, &quals, &costs);
+        body.push_str(&format!(
+            "\ncalibrated ladder {:?} (<=1% drop on val): test cost advantage {:.1}% at {:+.2}% drop\n",
+            cal.thresholds,
+            on_test.cost_advantage * 100.0,
+            on_test.drop_pct
+        ));
+        self.write("ladder", &body)
     }
 }
 

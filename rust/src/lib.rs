@@ -3,11 +3,13 @@
 //! A three-layer serving stack reproducing *"Hybrid LLM: Cost-Efficient and
 //! Quality-Aware Query Routing"*:
 //!
-//! * **L3 (this crate)** — the serving coordinator: query-router service,
-//!   continuous-batching LLM workers, KV-cache slot management, the label
-//!   pipeline (`y_det` / `y_prob` / `y_trans(t*)`), router training,
-//!   threshold calibration, metrics, and one experiment driver per table
-//!   and figure of the paper.
+//! * **L3 (this crate)** — the serving coordinator: query-router service
+//!   dispatching over an N-tier model fleet ([`serve::TierSpec`]),
+//!   continuous-batching LLM workers (1..N replicas per tier), KV-cache
+//!   slot management, the label pipeline (`y_det` / `y_prob` /
+//!   `y_trans(t*)`), router training, threshold(-ladder) calibration,
+//!   per-tier metrics, and one experiment driver per table and figure of
+//!   the paper.
 //! * **L2 (JAX, build time)** — transformer LMs / router encoder / scorer,
 //!   AOT-lowered to HLO text by `python/compile/aot.py`.
 //! * **L1 (Pallas, build time)** — flash-style attention kernels on the
@@ -17,8 +19,9 @@
 //! through the PJRT C API (the `xla` crate) and drives everything —
 //! including *training* the LMs and routers — from Rust.
 //!
-//! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the full system inventory, the tier-fleet serving
+//! architecture, and the per-experiment index (§6); measured results are
+//! rendered into `runs/<name>/results/` by the `eval` drivers.
 
 pub mod batching;
 pub mod bench;

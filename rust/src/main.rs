@@ -17,6 +17,7 @@ use hybrid_llm::cli::Args;
 use hybrid_llm::corpus::{self, Scale};
 use hybrid_llm::eval::Eval;
 use hybrid_llm::pipeline::Pipeline;
+use hybrid_llm::policy::TierPolicy;
 use hybrid_llm::runtime::Runtime;
 
 fn main() {
@@ -49,6 +50,7 @@ subcommands:
   eval ID...   --run DIR                                  regenerate tables/figures (or `all`)
   table2       --run DIR [--queries N]                    live latency measurement (Table 2)
   serve-demo   --run DIR [--requests N] [--threshold T] [--mode cont|rtc]
+               [--tiers m[:replicas[:cost]],...] [--thresholds T1,T2,...] [--select rr|sq]
   corpus-stats [--scale S]                                print corpus stats without a run";
 
 fn scale_of(args: &Args) -> Result<Scale> {
@@ -158,7 +160,8 @@ fn cmd_table2(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// End-to-end serving demo: batched requests through router + workers.
+/// End-to-end serving demo: batched requests through the router and the
+/// tier fleet (default: the paper's two-tier small/large pair).
 fn cmd_serve_demo(args: &Args) -> Result<()> {
     let run_dir = PathBuf::from(args.get("run", "runs/default"));
     let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
@@ -170,7 +173,25 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     };
     let pair_small = args.get("small", "medium").to_string();
     let pair_large = args.get("large", "large").to_string();
-    let default_router = format!("{}_{}_trans", pair_small, pair_large);
+
+    // fleet: --tiers spec, else the seed-compatible two-tier pair
+    let tiers = match args.get_opt("tiers") {
+        Some(spec) => hybrid_llm::serve::parse_tiers(spec)?,
+        None => hybrid_llm::serve::two_tier(&pair_small, &pair_large),
+    };
+    // ladder: --thresholds, else --threshold for two tiers / even bands
+    let policy = match args.get_csv::<f32>("thresholds") {
+        Some(t) => TierPolicy::Ladder { thresholds: t? },
+        None if tiers.len() == 2 => TierPolicy::Ladder { thresholds: vec![threshold] },
+        None => TierPolicy::even_ladder(tiers.len()),
+    };
+    let select = match args.get("select", "rr") {
+        "sq" => hybrid_llm::serve::ReplicaSelect::ShortestQueue,
+        _ => hybrid_llm::serve::ReplicaSelect::RoundRobin,
+    };
+    let first = tiers.first().map(|t| t.model.clone()).unwrap_or_default();
+    let last = tiers.last().map(|t| t.model.clone()).unwrap_or_default();
+    let default_router = format!("{first}_{last}_trans");
     let router = args.get("router", &default_router).to_string();
 
     // corpus for prompts
@@ -184,20 +205,22 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         .take(n)
         .collect();
 
+    let fleet_desc: Vec<String> = tiers
+        .iter()
+        .map(|t| format!("{}x{} (cost {:.2})", t.name, t.replicas, t.cost))
+        .collect();
     let cfg = hybrid_llm::serve::ServeConfig {
         artifacts_dir: artifacts,
         run_dir,
-        small: pair_small.clone(),
-        large: pair_large.clone(),
+        tiers,
         router,
-        threshold,
+        policy,
+        select,
         temp: 0.0,
         mode,
         batch_window: Duration::from_millis(5),
     };
-    println!(
-        "[serve] starting: {pair_small} (small) / {pair_large} (large), thr {threshold}, {mode:?}"
-    );
+    println!("[serve] starting fleet [{}], {mode:?}", fleet_desc.join(", "));
     let server = hybrid_llm::serve::Server::start(cfg)?;
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = test
@@ -221,13 +244,24 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     println!(
         "cost advantage: {:.1}% ({} small / {} large)",
         stats.routing.cost_advantage * 100.0,
-        stats.routing.to_small,
-        stats.routing.to_large
+        stats.routing.to_small(),
+        stats.routing.to_large()
     );
     println!(
         "router latency: mean {:.2} ms   e2e p50 {:.0} ms  p95 {:.0} ms",
         stats.router_latency.mean_ms, stats.e2e_latency.p50_ms, stats.e2e_latency.p95_ms
     );
+    let total = stats.routing.total().max(1);
+    for (ts, tr) in stats.tiers.iter().zip(&stats.routing.tiers) {
+        println!(
+            "tier {:<10} routed {:>5} ({:>5.1}%)   e2e p50 {:>6.0} ms  p95 {:>6.0} ms",
+            ts.name,
+            tr.routed,
+            tr.routed as f64 / total as f64 * 100.0,
+            ts.latency.p50_ms,
+            ts.latency.p95_ms
+        );
+    }
     let eff = if stats.decode_steps > 0 {
         stats.decode_slot_steps as f64 / (stats.decode_steps as f64 * 16.0)
     } else {

@@ -1,5 +1,6 @@
-//! Serving metrics: latency histograms, routing counters, cost advantage
-//! (§2.3 — the fraction of queries routed to the small model), and
+//! Serving metrics: latency histograms, per-tier routing counters, cost
+//! advantage (§2.3 — the fraction of queries routed to the small model,
+//! generalized to cost-weighted spend saved across an N-tier fleet), and
 //! quality-drop bookkeeping relative to the `all-at-large` baseline.
 
 use std::sync::Mutex;
@@ -65,31 +66,49 @@ impl LatencySummary {
     }
 }
 
-/// Routing counters — tracks the paper's *cost advantage* online.
-#[derive(Debug, Default)]
+/// Per-tier routing counters keyed by tier name — tracks the paper's
+/// *cost advantage* online, generalized to an N-tier fleet with per-tier
+/// cost weights (tier 0 = cheapest, last tier = most expensive).
+#[derive(Debug)]
 pub struct RoutingCounters {
+    names: Vec<String>,
+    costs: Vec<f64>,
     inner: Mutex<RoutingCountersInner>,
 }
 
 #[derive(Debug, Default, Clone)]
 struct RoutingCountersInner {
-    to_small: u64,
-    to_large: u64,
+    routed: Vec<u64>,
     completed: u64,
     quality_sum: f64,
 }
 
 impl RoutingCounters {
-    pub fn new() -> Self {
-        Self::default()
+    /// `names[i]` / `costs[i]` describe tier `i`. A short `costs` vector
+    /// is padded with 1.0 (the most-expensive-tier weight).
+    pub fn new(names: Vec<String>, mut costs: Vec<f64>) -> Self {
+        costs.resize(names.len(), 1.0);
+        let routed = vec![0u64; names.len()];
+        RoutingCounters {
+            names,
+            costs,
+            inner: Mutex::new(RoutingCountersInner { routed, completed: 0, quality_sum: 0.0 }),
+        }
     }
 
-    pub fn route_small(&self) {
-        self.inner.lock().unwrap().to_small += 1;
+    /// The paper's small/large pair with costs 0 and 1, under which
+    /// cost advantage reduces to the fraction routed small.
+    pub fn two_tier() -> Self {
+        RoutingCounters::new(vec!["small".into(), "large".into()], vec![0.0, 1.0])
     }
 
-    pub fn route_large(&self) {
-        self.inner.lock().unwrap().to_large += 1;
+    /// Count one query routed to `tier` (clamped to the last tier).
+    pub fn route(&self, tier: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(last) = g.routed.len().checked_sub(1) {
+            let i = tier.min(last);
+            g.routed[i] += 1;
+        }
     }
 
     pub fn complete(&self, quality: f64) {
@@ -100,16 +119,29 @@ impl RoutingCounters {
 
     pub fn snapshot(&self) -> RoutingSnapshot {
         let g = self.inner.lock().unwrap().clone();
-        let total = g.to_small + g.to_large;
+        let total: u64 = g.routed.iter().sum();
+        let cmax = self.costs.iter().cloned().fold(0.0f64, f64::max);
+        let cost_advantage = if total == 0 || cmax <= 0.0 {
+            0.0
+        } else {
+            let spent: f64 = g
+                .routed
+                .iter()
+                .zip(&self.costs)
+                .map(|(&n, &c)| n as f64 * c)
+                .sum();
+            1.0 - spent / (total as f64 * cmax)
+        };
         RoutingSnapshot {
-            to_small: g.to_small,
-            to_large: g.to_large,
+            tiers: self
+                .names
+                .iter()
+                .zip(&self.costs)
+                .zip(&g.routed)
+                .map(|((name, &cost), &routed)| TierRouting { name: name.clone(), cost, routed })
+                .collect(),
             completed: g.completed,
-            cost_advantage: if total == 0 {
-                0.0
-            } else {
-                g.to_small as f64 / total as f64
-            },
+            cost_advantage,
             mean_quality: if g.completed == 0 {
                 0.0
             } else {
@@ -119,15 +151,42 @@ impl RoutingCounters {
     }
 }
 
+/// One tier's routing count in a snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierRouting {
+    pub name: String,
+    pub cost: f64,
+    pub routed: u64,
+}
+
 /// Point-in-time routing summary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RoutingSnapshot {
-    pub to_small: u64,
-    pub to_large: u64,
+    /// Per-tier counts, cheapest first.
+    pub tiers: Vec<TierRouting>,
     pub completed: u64,
-    /// Fraction of queries routed to the small model (paper §2.3).
+    /// Cost-weighted spend saved vs all-at-most-expensive; with two
+    /// tiers at costs 0/1 this is the paper's fraction routed small
+    /// (§2.3).
     pub cost_advantage: f64,
     pub mean_quality: f64,
+}
+
+impl RoutingSnapshot {
+    /// Total routed queries across tiers.
+    pub fn total(&self) -> u64 {
+        self.tiers.iter().map(|t| t.routed).sum()
+    }
+
+    /// Queries routed to the cheapest tier (the seed's `to_small`).
+    pub fn to_small(&self) -> u64 {
+        self.tiers.first().map(|t| t.routed).unwrap_or(0)
+    }
+
+    /// Queries routed to the most expensive tier (the seed's `to_large`).
+    pub fn to_large(&self) -> u64 {
+        self.tiers.last().map(|t| t.routed).unwrap_or(0)
+    }
 }
 
 /// Percentage response-quality drop w.r.t. the all-at-large baseline —
@@ -176,15 +235,54 @@ mod tests {
 
     #[test]
     fn cost_advantage_math() {
-        let c = RoutingCounters::new();
+        let c = RoutingCounters::two_tier();
         for _ in 0..3 {
-            c.route_small();
+            c.route(0);
         }
         for _ in 0..7 {
-            c.route_large();
+            c.route(1);
         }
         let s = c.snapshot();
         assert!((s.cost_advantage - 0.3).abs() < 1e-12);
+        assert_eq!(s.to_small(), 3);
+        assert_eq!(s.to_large(), 7);
+        assert_eq!(s.total(), 10);
+    }
+
+    #[test]
+    fn cost_advantage_weighted_three_tiers() {
+        let c = RoutingCounters::new(
+            vec!["device".into(), "edge".into(), "cloud".into()],
+            vec![0.0, 0.5, 1.0],
+        );
+        for _ in 0..4 {
+            c.route(0);
+        }
+        for _ in 0..4 {
+            c.route(1);
+        }
+        for _ in 0..2 {
+            c.route(2);
+        }
+        let s = c.snapshot();
+        // spend = 4*0 + 4*0.5 + 2*1 = 4 of a 10-query all-at-cloud budget
+        assert!((s.cost_advantage - 0.6).abs() < 1e-12, "{s:?}");
+        assert_eq!(s.tiers[1].name, "edge");
+        assert_eq!(s.tiers[1].routed, 4);
+        // out-of-range tier clamps to the last
+        c.route(99);
+        assert_eq!(c.snapshot().to_large(), 3);
+    }
+
+    #[test]
+    fn empty_fleet_snapshot_is_inert() {
+        let c = RoutingCounters::new(Vec::new(), Vec::new());
+        c.route(0); // must not panic
+        let s = c.snapshot();
+        assert_eq!(s.total(), 0);
+        assert_eq!(s.cost_advantage, 0.0);
+        assert_eq!(s.to_small(), 0);
+        assert_eq!(s.to_large(), 0);
     }
 
     #[test]

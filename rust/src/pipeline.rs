@@ -50,6 +50,29 @@ pub fn pair_id(small: &str, large: &str) -> String {
     format!("{small}_{large}")
 }
 
+/// Relative serving cost per roster model (large ≡ 1.0) — rough
+/// parameter-count ratios, used as default tier cost weights for fleet
+/// configs over the roster.
+pub fn model_cost(model: &str) -> f64 {
+    match model {
+        "nano" => 0.02,
+        "micro" => 0.08,
+        "small" => 0.20,
+        "medium" => 0.45,
+        _ => 1.0,
+    }
+}
+
+/// Quality-ordered tier specs over roster models (cheapest first), one
+/// replica each, with [`model_cost`] weights — the fleet analogue of a
+/// `MAIN_PAIRS` entry.
+pub fn ladder_specs(models: &[&str]) -> Vec<crate::serve::TierSpec> {
+    models
+        .iter()
+        .map(|m| crate::serve::TierSpec::new(*m, 1, model_cost(m)))
+        .collect()
+}
+
 /// Pre-training budget per roster entry (scaled by [`Scale::train_mult`]).
 pub fn train_steps(model: &str, scale: Scale) -> usize {
     let base = match model {
@@ -510,6 +533,19 @@ mod tests {
         assert!(train_steps("medium", s) < train_steps("large", s));
         // smoke is cheaper
         assert!(train_steps("large", Scale::Smoke) < train_steps("large", Scale::Default));
+    }
+
+    #[test]
+    fn model_costs_ordered_along_roster() {
+        for w in ROSTER.windows(2) {
+            assert!(model_cost(w[0]) < model_cost(w[1]), "{w:?}");
+        }
+        assert_eq!(model_cost("large"), 1.0);
+        let specs = ladder_specs(&["nano", "medium", "large"]);
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].name, "nano");
+        assert!(specs[0].cost < specs[1].cost && specs[1].cost < specs[2].cost);
+        assert!(specs.iter().all(|s| s.replicas == 1));
     }
 
     #[test]

@@ -1,10 +1,17 @@
-//! Routing policies and tradeoff evaluation (§2.2, §4.1 baselines).
+//! Routing policies and tradeoff evaluation (§2.2, §4.1 baselines),
+//! generalized to an N-tier model fleet.
 //!
-//! A policy decides, per query, small (`true`) vs large (`false`). The
-//! learned policies threshold the router score; the baselines are
-//! `all-at-small`, `all-at-large`, and `random`. [`tradeoff_curve`]
+//! The paper's policy decides, per query, small (`true`) vs large
+//! (`false`); [`Policy`] keeps that two-model API. [`TierPolicy`] is the
+//! N-tier generalization used by the serving fleet: assignments are tier
+//! indices (`Vec<usize>`, tier 0 = cheapest), the two-tier threshold
+//! policy is the `K == 2` special case of the multi-threshold
+//! [`TierPolicy::Ladder`], and [`cost_argmax_assign`] is the cost-aware
+//! argmax policy over per-tier quality estimates. [`tradeoff_curve`]
 //! sweeps cost advantage and reports the quality drop w.r.t.
-//! all-at-large — the Fig. 5 series and Table 1 cells.
+//! all-at-large — the Fig. 5 series and Table 1 cells;
+//! [`cost_advantage_tiers`] / [`achieved_quality_tiers`] /
+//! [`ladder_tradeoff_at`] are the per-tier-cost-weighted counterparts.
 
 use crate::metrics::quality_drop_pct;
 use crate::rng::Rng;
@@ -37,11 +44,105 @@ impl Policy {
     }
 }
 
+/// An N-tier routing decision source; assignments are tier indices with
+/// tier 0 the cheapest and the last tier the most capable. The two-model
+/// [`Policy`] maps onto `K == 2` with `small == tier 0`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TierPolicy {
+    /// Every query to one fixed tier.
+    Fixed { tier: usize },
+    /// Seeded random assignment with (unnormalized) per-tier weights.
+    /// An offline baseline: each `assign` call replays the same stream.
+    Random { weights: Vec<f64>, seed: u64 },
+    /// Multi-threshold ladder: `thresholds[i]` is the minimum router
+    /// score for tier `i`, descending; a query lands in the first tier
+    /// whose threshold it clears, else the last (most capable) tier.
+    /// `K` tiers take `K - 1` thresholds, and `K == 2` reproduces
+    /// [`Policy::Threshold`] bit for bit (same `>=` comparison, so NaN
+    /// scores fall through to the last tier either way).
+    Ladder { thresholds: Vec<f32> },
+}
+
+impl TierPolicy {
+    /// Number of tiers this policy distinguishes (`None` for `Fixed`,
+    /// which works with any fleet that has its tier).
+    pub fn n_tiers(&self) -> Option<usize> {
+        match self {
+            TierPolicy::Fixed { .. } => None,
+            TierPolicy::Random { weights, .. } => Some(weights.len()),
+            TierPolicy::Ladder { thresholds } => Some(thresholds.len() + 1),
+        }
+    }
+
+    /// Evenly spaced descending ladder over `[0, 1]` score space for `k`
+    /// tiers: thresholds `(k-1)/k, …, 1/k`. `k == 2` gives `[0.5]`, the
+    /// seed default threshold.
+    pub fn even_ladder(k: usize) -> TierPolicy {
+        let k = k.max(1);
+        TierPolicy::Ladder {
+            thresholds: (1..k).map(|i| (k - i) as f32 / k as f32).collect(),
+        }
+    }
+
+    /// Per-query tier assignments; `scores[i]` is the router score
+    /// (ignored by `Fixed` and `Random`).
+    pub fn assign(&self, scores: &[f32]) -> Vec<usize> {
+        match self {
+            TierPolicy::Fixed { tier } => vec![*tier; scores.len()],
+            TierPolicy::Random { weights, seed } => {
+                let total: f64 = weights.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+                let last = weights.len().saturating_sub(1);
+                let mut rng = Rng::new(*seed);
+                scores
+                    .iter()
+                    .map(|_| {
+                        if total <= 0.0 {
+                            return last;
+                        }
+                        let mut u = rng.next_f64() * total;
+                        for (i, &w) in weights.iter().enumerate() {
+                            if w.is_finite() && w > 0.0 {
+                                u -= w;
+                                if u < 0.0 {
+                                    return i;
+                                }
+                            }
+                        }
+                        last
+                    })
+                    .collect()
+            }
+            TierPolicy::Ladder { thresholds } => {
+                scores.iter().map(|&s| ladder_tier(thresholds, s)).collect()
+            }
+        }
+    }
+}
+
+/// First tier whose threshold the score clears (thresholds descending),
+/// else the last tier.
+fn ladder_tier(thresholds: &[f32], score: f32) -> usize {
+    for (i, &t) in thresholds.iter().enumerate() {
+        if score >= t {
+            return i;
+        }
+    }
+    thresholds.len()
+}
+
 /// Threshold achieving (approximately) a target cost advantage: route the
-/// top `target` fraction of scores to the small model.
+/// top `target` fraction of scores to the small model. Non-finite scores
+/// are ignored; if no usable score remains, the all-at-large threshold
+/// (`f32::INFINITY`, cost advantage 0) is returned instead of panicking.
 pub fn threshold_for_cost_advantage(scores: &[f32], target: f64) -> f32 {
-    assert!(!scores.is_empty());
-    let xs: Vec<f64> = scores.iter().map(|&s| s as f64).collect();
+    let xs: Vec<f64> = scores
+        .iter()
+        .filter(|s| s.is_finite())
+        .map(|&s| s as f64)
+        .collect();
+    if xs.is_empty() {
+        return f32::INFINITY;
+    }
     // scores >= thr go to small; thr = (1-target) quantile
     stats::percentile(&xs, (1.0 - target.clamp(0.0, 1.0)) * 100.0) as f32
 }
@@ -55,19 +156,104 @@ pub fn cost_advantage(assign: &[bool]) -> f64 {
 }
 
 /// Mean achieved quality under an assignment, given per-query expected
-/// qualities of each model's response.
+/// qualities of each model's response. Instead of panicking on
+/// mismatched lengths, evaluates over the common prefix of the three
+/// slices; empty input yields 0.0.
 pub fn achieved_quality(assign: &[bool], q_small: &[f64], q_large: &[f64]) -> f64 {
-    assert_eq!(assign.len(), q_small.len());
-    assert_eq!(assign.len(), q_large.len());
-    if assign.is_empty() {
+    let n = assign.len().min(q_small.len()).min(q_large.len());
+    if n == 0 {
         return 0.0;
     }
-    let total: f64 = assign
+    let total: f64 = (0..n)
+        .map(|i| if assign[i] { q_small[i] } else { q_large[i] })
+        .sum();
+    total / n as f64
+}
+
+/// Fraction of queries assigned to each of `k` tiers (out-of-range
+/// assignments clamp to the last tier).
+pub fn tier_fractions(assign: &[usize], k: usize) -> Vec<f64> {
+    let mut frac = vec![0.0f64; k];
+    if assign.is_empty() || k == 0 {
+        return frac;
+    }
+    for &a in assign {
+        frac[a.min(k - 1)] += 1.0;
+    }
+    for f in &mut frac {
+        *f /= assign.len() as f64;
+    }
+    frac
+}
+
+/// Cost advantage of an N-tier assignment under per-tier cost weights:
+/// `1 - mean(costs[a_i]) / max(costs)` — the relative spend saved
+/// against all-at-most-expensive. With costs `[0, 1]` this reduces to
+/// the paper's fraction-routed-small. Empty or degenerate (no positive
+/// cost) inputs yield 0.0.
+pub fn cost_advantage_tiers(assign: &[usize], costs: &[f64]) -> f64 {
+    if assign.is_empty() || costs.is_empty() {
+        return 0.0;
+    }
+    let cmax = costs.iter().cloned().fold(f64::MIN, f64::max);
+    if !(cmax > 0.0) {
+        return 0.0;
+    }
+    let spent: f64 = assign.iter().map(|&a| costs[a.min(costs.len() - 1)]).sum();
+    1.0 - spent / (assign.len() as f64 * cmax)
+}
+
+/// Mean achieved quality of an N-tier assignment; `q[t][i]` is query
+/// `i`'s expected quality when served by tier `t`. Out-of-range tiers
+/// clamp to the last row; mismatched lengths evaluate over the common
+/// prefix of `assign` and every quality row (fabricating 0.0 for a
+/// missing query would read as *perfect* on the negative log-prob
+/// scale); empty inputs yield 0.0. No panics.
+pub fn achieved_quality_tiers(assign: &[usize], q: &[Vec<f64>]) -> f64 {
+    if q.is_empty() {
+        return 0.0;
+    }
+    let n = q
+        .iter()
+        .map(|row| row.len())
+        .min()
+        .unwrap_or(0)
+        .min(assign.len());
+    if n == 0 {
+        return 0.0;
+    }
+    let total: f64 = assign[..n]
         .iter()
         .enumerate()
-        .map(|(i, &s)| if s { q_small[i] } else { q_large[i] })
+        .map(|(i, &a)| q[a.min(q.len() - 1)][i])
         .sum();
-    total / assign.len() as f64
+    total / n as f64
+}
+
+/// Cost-aware argmax policy: assign each query to the tier maximizing
+/// `q[t][i] - lambda * costs[t]`. `lambda` prices cost in quality units
+/// (`0` → pure quality argmax; large → always the cheapest tier wins on
+/// any quality tie). Ties break toward the lower-index (cheaper) tier.
+pub fn cost_argmax_assign(q: &[Vec<f64>], costs: &[f64], lambda: f64) -> Vec<usize> {
+    let k = q.len().min(costs.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let n = q[..k].iter().map(|row| row.len()).min().unwrap_or(0);
+    (0..n)
+        .map(|i| {
+            let mut best = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            for t in 0..k {
+                let v = q[t][i] - lambda * costs[t];
+                if v > best_v {
+                    best_v = v;
+                    best = t;
+                }
+            }
+            best
+        })
+        .collect()
 }
 
 /// One point on an error–cost curve.
@@ -128,6 +314,29 @@ pub fn tradeoff_at(
     }
 }
 
+/// One tradeoff point of a threshold ladder over an N-tier fleet:
+/// evaluate the full ladder against per-tier qualities `q[t][i]` and
+/// cost weights, with the drop measured vs all-at-most-expensive (the
+/// last tier). `target_cost_advantage` is set to the achieved value —
+/// a ladder is parameterized by thresholds, not a target fraction.
+pub fn ladder_tradeoff_at(
+    scores: &[f32],
+    q: &[Vec<f64>],
+    costs: &[f64],
+    thresholds: &[f32],
+) -> TradeoffPoint {
+    let assign = TierPolicy::Ladder { thresholds: thresholds.to_vec() }.assign(scores);
+    let base = q.last().map(|row| stats::mean(row)).unwrap_or(0.0);
+    let quality = achieved_quality_tiers(&assign, q);
+    let ca = cost_advantage_tiers(&assign, costs);
+    TradeoffPoint {
+        target_cost_advantage: ca,
+        achieved_cost_advantage: ca,
+        quality,
+        drop_pct: quality_drop_pct(base, quality),
+    }
+}
+
 /// Random-baseline curve (expected values via seeded assignment).
 pub fn random_curve(
     n: usize,
@@ -160,15 +369,18 @@ pub fn random_curve(
 /// first; `pair_scores[m]` is the router score of "model m can replace
 /// model m+1".
 pub fn nmodel_assign(pair_scores: &[Vec<f32>], thresholds: &[f32], n_queries: usize) -> Vec<usize> {
-    let m = pair_scores.len(); // m pair-routers => m+1 models
-    assert_eq!(thresholds.len(), m);
+    // m pair-routers => m+1 models; extra thresholds are ignored, and a
+    // level with no threshold is treated as "never route down past it"
+    // (queries stay at the expensive end) — conservative, not a panic
+    let m = pair_scores.len();
     (0..n_queries)
         .map(|i| {
             // walk from the most expensive model downwards while the
             // pair-router keeps saying "the cheaper one matches"
             let mut choice = m; // most expensive
             for level in (0..m).rev() {
-                if pair_scores[level][i] >= thresholds[level] {
+                let Some(&thr) = thresholds.get(level) else { break };
+                if pair_scores[level][i] >= thr {
                     choice = level;
                 } else {
                     break;
@@ -274,6 +486,133 @@ mod tests {
         // q2: level1 hard -> stop at model2 even though level0 says easy
         // q3: both hard -> model2
         assert_eq!(a, vec![0, 1, 2, 2]);
+        // missing thresholds never shrink the model universe: with no
+        // threshold for the top level the walk stops immediately and
+        // everything stays at the most expensive model
+        let a = nmodel_assign(&pair_scores, &[0.5], 4);
+        assert_eq!(a, vec![2, 2, 2, 2]);
+        // extra thresholds are ignored
+        let a = nmodel_assign(&pair_scores, &[0.5, 0.5, 0.1], 4);
+        assert_eq!(a, vec![0, 1, 2, 2]);
+    }
+
+    #[test]
+    fn threshold_for_cost_advantage_degenerate_inputs() {
+        // empty => all-at-large fallback instead of a panic
+        let thr = threshold_for_cost_advantage(&[], 0.5);
+        assert_eq!(thr, f32::INFINITY);
+        assert_eq!(Policy::Threshold { threshold: thr }.assign(&[0.3, 0.9]), vec![false, false]);
+        // all-NaN => same fallback
+        let thr = threshold_for_cost_advantage(&[f32::NAN, f32::NAN], 0.5);
+        assert_eq!(thr, f32::INFINITY);
+        // non-finite scores are ignored, finite ones still calibrate
+        let mut scores: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        scores.push(f32::NAN);
+        scores.push(f32::INFINITY);
+        let thr = threshold_for_cost_advantage(&scores, 0.2);
+        assert!(thr.is_finite());
+        assert!((0.7..=0.9).contains(&thr), "{thr}");
+    }
+
+    #[test]
+    fn achieved_quality_degenerate_inputs() {
+        // empty => 0.0, not a panic
+        assert_eq!(achieved_quality(&[], &[], &[]), 0.0);
+        // mismatched lengths => common prefix, not a panic
+        let q = achieved_quality(&[true, false, true], &[-1.0, -1.0], &[-2.0, -2.0, -2.0]);
+        assert!((q - (-1.0 - 2.0) / 2.0).abs() < 1e-12, "{q}");
+    }
+
+    #[test]
+    fn ladder_bands_partition_scores() {
+        // 3 tiers, thresholds [0.6, 0.3]
+        let p = TierPolicy::Ladder { thresholds: vec![0.6, 0.3] };
+        assert_eq!(p.n_tiers(), Some(3));
+        let a = p.assign(&[0.9, 0.6, 0.5, 0.3, 0.1, f32::NAN]);
+        assert_eq!(a, vec![0, 0, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn even_ladder_matches_seed_default() {
+        assert_eq!(TierPolicy::even_ladder(2), TierPolicy::Ladder { thresholds: vec![0.5] });
+        let TierPolicy::Ladder { thresholds } = TierPolicy::even_ladder(4) else {
+            unreachable!()
+        };
+        assert_eq!(thresholds.len(), 3);
+        for w in thresholds.windows(2) {
+            assert!(w[0] > w[1], "ladder must descend: {thresholds:?}");
+        }
+    }
+
+    #[test]
+    fn tier_policy_fixed_and_random() {
+        let scores = vec![0.1, 0.9, 0.5];
+        assert_eq!(TierPolicy::Fixed { tier: 2 }.assign(&scores), vec![2; 3]);
+        // all weight on one tier => deterministic
+        let p = TierPolicy::Random { weights: vec![0.0, 1.0, 0.0], seed: 9 };
+        assert_eq!(p.assign(&scores), vec![1; 3]);
+        // degenerate weights => last tier fallback
+        let p = TierPolicy::Random { weights: vec![0.0, 0.0], seed: 9 };
+        assert_eq!(p.assign(&scores), vec![1; 3]);
+        // weights roughly respected over a long stream
+        let p = TierPolicy::Random { weights: vec![3.0, 1.0], seed: 4 };
+        let a = p.assign(&vec![0.0; 4000]);
+        let frac = tier_fractions(&a, 2);
+        assert!((frac[0] - 0.75).abs() < 0.05, "{frac:?}");
+    }
+
+    #[test]
+    fn tier_cost_advantage_reduces_to_two_tier() {
+        // costs [0, 1]: cost advantage == fraction at tier 0
+        let assign = vec![0, 1, 0, 0];
+        let ca = cost_advantage_tiers(&assign, &[0.0, 1.0]);
+        assert!((ca - 0.75).abs() < 1e-12);
+        let two: Vec<bool> = assign.iter().map(|&a| a == 0).collect();
+        assert!((ca - cost_advantage(&two)).abs() < 1e-12);
+        // degenerate: empty or non-positive costs
+        assert_eq!(cost_advantage_tiers(&[], &[0.0, 1.0]), 0.0);
+        assert_eq!(cost_advantage_tiers(&assign, &[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn tier_quality_matches_manual_sum() {
+        let q = vec![vec![-3.0, -3.0, -3.0], vec![-2.0, -2.0, -2.0], vec![-1.0, -1.0, -1.0]];
+        let a = vec![0, 2, 1];
+        let got = achieved_quality_tiers(&a, &q);
+        assert!((got - (-3.0 - 1.0 - 2.0) / 3.0).abs() < 1e-12);
+        // out-of-range tier clamps to the last row
+        let got = achieved_quality_tiers(&[9, 9, 9], &q);
+        assert!((got + 1.0).abs() < 1e-12);
+        assert_eq!(achieved_quality_tiers(&[], &q), 0.0);
+    }
+
+    #[test]
+    fn cost_argmax_prices_quality_against_cost() {
+        // tier 1 is slightly better but 10x the cost
+        let q = vec![vec![-1.1, -3.0], vec![-1.0, -1.0]];
+        let costs = vec![0.1, 1.0];
+        // lambda 0: pure quality argmax
+        assert_eq!(cost_argmax_assign(&q, &costs, 0.0), vec![1, 1]);
+        // moderate lambda: the near-tie flips cheap, the big gap stays
+        assert_eq!(cost_argmax_assign(&q, &costs, 0.5), vec![0, 1]);
+        // huge lambda: everything at the cheapest tier
+        assert_eq!(cost_argmax_assign(&q, &costs, 100.0), vec![0, 0]);
+        assert_eq!(cost_argmax_assign(&[], &costs, 1.0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn ladder_tradeoff_extremes_equal_baselines() {
+        let scores = vec![0.9, 0.1, 0.5, 0.7];
+        let q = vec![vec![-3.0; 4], vec![-2.0; 4], vec![-1.0; 4]];
+        let costs = vec![0.0, 0.5, 1.0];
+        // impossible thresholds: everything at the last tier
+        let p = ladder_tradeoff_at(&scores, &q, &costs, &[2.0, 1.5]);
+        assert_eq!(p.achieved_cost_advantage, 0.0);
+        assert!(p.drop_pct.abs() < 1e-9);
+        // free thresholds: everything at tier 0
+        let p = ladder_tradeoff_at(&scores, &q, &costs, &[0.0, 0.0]);
+        assert!((p.achieved_cost_advantage - 1.0).abs() < 1e-12);
+        assert!((p.quality + 3.0).abs() < 1e-12);
     }
 
     #[test]

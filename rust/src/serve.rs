@@ -1,16 +1,22 @@
-//! The serving system (Fig. 2): a query-router front end dispatching to
-//! two continuous-batching decode workers (edge/small and cloud/large).
+//! The serving system (Fig. 2), generalized from the paper's two-model
+//! pair to an **N-tier model fleet**: a query-router front end
+//! dispatching to per-tier continuous-batching decode workers. Each
+//! [`TierSpec`] names a tier (e.g. `device` / `edge` / `cloud`), the
+//! model it serves, a relative cost weight, and `1..N` replica worker
+//! threads; the default [`two_tier`] fleet reproduces the paper's
+//! small/large setup exactly.
 //!
 //! Threading model: the `xla` crate's PJRT client is `Rc`-based and
-//! therefore `!Send`, so **each worker thread owns its own PJRT client,
+//! therefore `!Send`, so **each replica thread owns its own PJRT client,
 //! runtime, and engine** (loaded from the shared artifacts + run
 //! directories); channels carry only plain data. This mirrors a real
-//! deployment more closely anyway — the edge device and the cloud
-//! backend do not share an address space.
+//! deployment more closely anyway — the device, edge, and cloud backends
+//! do not share an address space.
 //!
 //! * router thread — drains the ingress queue with a batching window,
-//!   scores queries through the router encoder (single pass, §3), and
-//!   dispatches on the threshold;
+//!   scores queries through the router encoder (single pass, §3), maps
+//!   scores to tiers via a [`TierPolicy`] (threshold ladder), and picks
+//!   a replica by round-robin or shortest-queue;
 //! * decode workers — slot-based continuous batching ([`BatchMode`]),
 //!   persistent KV caches, iteration-level admission.
 
@@ -27,9 +33,100 @@ use crate::batching::{BatchMode, KvCache, Slot, SlotTable};
 use crate::io::Tensor;
 use crate::lm::LmEngine;
 use crate::metrics::{LatencyRecorder, LatencySummary, RoutingCounters, RoutingSnapshot};
+use crate::policy::TierPolicy;
 use crate::router::RouterEngine;
 use crate::runtime::Runtime;
 use crate::tokenizer as tok;
+
+/// One tier of the fleet: a named model backend with a relative cost
+/// weight and a replica count (worker threads serving this tier).
+#[derive(Debug, Clone)]
+pub struct TierSpec {
+    /// Display/metrics name (defaults to the model name).
+    pub name: String,
+    /// Roster model this tier serves.
+    pub model: String,
+    /// Worker threads for this tier (each owns its own PJRT client).
+    pub replicas: usize,
+    /// Relative per-query cost weight (most expensive tier defines the
+    /// cost-advantage baseline).
+    pub cost: f64,
+}
+
+impl TierSpec {
+    pub fn new(model: impl Into<String>, replicas: usize, cost: f64) -> TierSpec {
+        let model = model.into();
+        TierSpec { name: model.clone(), model, replicas, cost }
+    }
+
+    pub fn named(name: impl Into<String>, model: impl Into<String>, replicas: usize, cost: f64) -> TierSpec {
+        TierSpec { name: name.into(), model: model.into(), replicas, cost }
+    }
+}
+
+/// The paper's two-model fleet: `small` (tier 0, cost 0) and `large`
+/// (tier 1, cost 1), one replica each — cost advantage reduces to the
+/// fraction routed small, as in §2.3.
+pub fn two_tier(small: &str, large: &str) -> Vec<TierSpec> {
+    vec![TierSpec::new(small, 1, 0.0), TierSpec::new(large, 1, 1.0)]
+}
+
+/// Parse a `--tiers` fleet spec: comma-separated `model[:replicas[:cost]]`
+/// entries, cheapest tier first, e.g. `small:1,large:1` or
+/// `nano:2:0.02,medium:1:0.45,large:1:1`. Omitted costs default to even
+/// spacing over `[0, 1]` (two tiers → `0, 1`, matching the seed).
+pub fn parse_tiers(spec: &str) -> Result<Vec<TierSpec>> {
+    let mut parsed: Vec<(String, usize, Option<f64>)> = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let mut fields = part.split(':');
+        let model = fields.next().unwrap_or("").trim().to_string();
+        anyhow::ensure!(!model.is_empty(), "empty tier name in --tiers spec {spec:?}");
+        let replicas = match fields.next() {
+            None => 1,
+            Some(r) => r
+                .trim()
+                .parse::<usize>()
+                .with_context(|| format!("bad replica count in tier {part:?}"))?,
+        };
+        anyhow::ensure!(replicas >= 1, "tier {part:?} needs at least one replica");
+        let cost = match fields.next() {
+            None => None,
+            Some(c) => {
+                let c = c
+                    .trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("bad cost in tier {part:?}"))?;
+                anyhow::ensure!(
+                    c.is_finite() && c >= 0.0,
+                    "tier {part:?} cost must be finite and >= 0"
+                );
+                Some(c)
+            }
+        };
+        anyhow::ensure!(fields.next().is_none(), "too many `:` fields in tier {part:?}");
+        parsed.push((model, replicas, cost));
+    }
+    anyhow::ensure!(!parsed.is_empty(), "--tiers spec {spec:?} names no tiers");
+    let k = parsed.len();
+    Ok(parsed
+        .into_iter()
+        .enumerate()
+        .map(|(i, (model, replicas, cost))| {
+            let cost =
+                cost.unwrap_or(if k <= 1 { 1.0 } else { i as f64 / (k - 1) as f64 });
+            TierSpec::new(model, replicas, cost)
+        })
+        .collect())
+}
+
+/// Replica selection within a tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaSelect {
+    /// Rotate through replicas (fair under uniform work).
+    RoundRobin,
+    /// Send to the replica with the fewest in-flight requests.
+    ShortestQueue,
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -38,16 +135,45 @@ pub struct ServeConfig {
     /// Run directory holding trained params (`params/<model>/`,
     /// `routers/<router>/`).
     pub run_dir: PathBuf,
-    pub small: String,
-    pub large: String,
+    /// The fleet, cheapest tier first.
+    pub tiers: Vec<TierSpec>,
     /// Router params subdirectory under `run_dir/routers/` (empty =>
-    /// random routing at `threshold` interpreted as p(large)).
+    /// random scores fed through `policy`).
     pub router: String,
-    pub threshold: f32,
+    /// Score → tier mapping (a threshold ladder in the paper's setup).
+    pub policy: TierPolicy,
+    /// Replica selection within a tier.
+    pub select: ReplicaSelect,
     pub temp: f32,
     pub mode: BatchMode,
     /// How long the router waits to fill a batch.
     pub batch_window: Duration,
+}
+
+impl ServeConfig {
+    /// Seed-compatible two-tier config: `score >= threshold` routes to
+    /// `small`, one replica per tier. Adjust `temp`/`mode`/`batch_window`
+    /// on the returned value as needed.
+    pub fn two_tier(
+        artifacts_dir: PathBuf,
+        run_dir: PathBuf,
+        small: &str,
+        large: &str,
+        router: String,
+        threshold: f32,
+    ) -> ServeConfig {
+        ServeConfig {
+            artifacts_dir,
+            run_dir,
+            tiers: two_tier(small, large),
+            router,
+            policy: TierPolicy::Ladder { thresholds: vec![threshold] },
+            select: ReplicaSelect::RoundRobin,
+            temp: 0.0,
+            mode: BatchMode::Continuous,
+            batch_window: Duration::from_millis(5),
+        }
+    }
 }
 
 /// A finished request.
@@ -55,7 +181,8 @@ pub struct ServeConfig {
 pub struct Completion {
     pub id: u64,
     pub tokens: Vec<i32>,
-    pub routed_small: bool,
+    /// Index of the tier that served the request (0 = cheapest).
+    pub tier: usize,
     pub router_score: f32,
     pub mean_logprob: f32,
     /// Ingress → completion.
@@ -87,15 +214,31 @@ enum WorkMsg {
     Shutdown,
 }
 
+/// Dispatch state for one tier, owned by the router thread.
+struct TierDispatch {
+    txs: Vec<Sender<WorkMsg>>,
+    /// Per-replica in-flight counts (incremented at dispatch,
+    /// decremented at completion) for shortest-queue selection.
+    depths: Vec<Arc<AtomicU64>>,
+    rr: usize,
+}
+
 /// Shared (Send) metrics.
 pub struct ServerMetrics {
     pub router_latency: LatencyRecorder,
     pub e2e_latency: LatencyRecorder,
-    pub small_latency: LatencyRecorder,
-    pub large_latency: LatencyRecorder,
+    /// Per-tier e2e latency, indexed like `ServeConfig::tiers`.
+    pub tier_latency: Vec<LatencyRecorder>,
     pub routing: RoutingCounters,
     pub decode_steps: AtomicU64,
     pub decode_slot_steps: AtomicU64,
+}
+
+/// Point-in-time per-tier report.
+#[derive(Debug, Clone)]
+pub struct TierStats {
+    pub name: String,
+    pub latency: LatencySummary,
 }
 
 /// Point-in-time server report.
@@ -103,8 +246,9 @@ pub struct ServerMetrics {
 pub struct ServerStats {
     pub router_latency: LatencySummary,
     pub e2e_latency: LatencySummary,
-    pub small_latency: LatencySummary,
-    pub large_latency: LatencySummary,
+    /// Per-tier latency keyed by tier name, cheapest first (routing
+    /// counts live in `routing.tiers`).
+    pub tiers: Vec<TierStats>,
     pub routing: RoutingSnapshot,
     pub decode_steps: u64,
     /// Occupied-slot decode steps (batching efficiency =
@@ -115,68 +259,92 @@ pub struct ServerStats {
 /// Handle to a running server.
 pub struct Server {
     ingress: Sender<RouterMsg>,
-    small_tx: Sender<WorkMsg>,
-    large_tx: Sender<WorkMsg>,
+    tier_txs: Vec<Vec<Sender<WorkMsg>>>,
+    tier_names: Vec<String>,
     handles: Vec<JoinHandle<Result<()>>>,
     metrics: Arc<ServerMetrics>,
     next_id: AtomicU64,
 }
 
 impl Server {
-    /// Spawn router + two decode workers.
+    /// Spawn the router plus one decode worker per tier replica.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
+        anyhow::ensure!(!cfg.tiers.is_empty(), "fleet needs at least one tier");
+        for t in &cfg.tiers {
+            anyhow::ensure!(t.replicas >= 1, "tier {} needs at least one replica", t.name);
+        }
+        if let Some(k) = cfg.policy.n_tiers() {
+            anyhow::ensure!(
+                k == cfg.tiers.len(),
+                "policy distinguishes {k} tiers but the fleet has {}",
+                cfg.tiers.len()
+            );
+        }
+        if let TierPolicy::Fixed { tier } = &cfg.policy {
+            anyhow::ensure!(*tier < cfg.tiers.len(), "fixed tier {tier} out of range");
+        }
+        let tier_names: Vec<String> = cfg.tiers.iter().map(|t| t.name.clone()).collect();
+        let costs: Vec<f64> = cfg.tiers.iter().map(|t| t.cost).collect();
         let metrics = Arc::new(ServerMetrics {
             router_latency: LatencyRecorder::new(),
             e2e_latency: LatencyRecorder::new(),
-            small_latency: LatencyRecorder::new(),
-            large_latency: LatencyRecorder::new(),
-            routing: RoutingCounters::new(),
+            tier_latency: cfg.tiers.iter().map(|_| LatencyRecorder::new()).collect(),
+            routing: RoutingCounters::new(tier_names.clone(), costs),
             decode_steps: AtomicU64::new(0),
             decode_slot_steps: AtomicU64::new(0),
         });
         let (ingress, router_rx) = mpsc::channel::<RouterMsg>();
-        let (small_tx, small_rx) = mpsc::channel::<WorkMsg>();
-        let (large_tx, large_rx) = mpsc::channel::<WorkMsg>();
         // readiness barrier: threads ack after compiling their executables
         // so `start` returns a warm server (PJRT compilation is seconds;
         // without this the first requests' latency measures the compiler)
         let (ready_tx, ready_rx) = mpsc::channel::<()>();
 
         let mut handles = Vec::new();
+        let mut dispatch = Vec::new();
+        let mut tier_txs = Vec::new();
+        let mut n_workers = 0usize;
+        for (ti, tier) in cfg.tiers.iter().enumerate() {
+            let mut txs = Vec::new();
+            let mut depths = Vec::new();
+            for r in 0..tier.replicas {
+                let (tx, rx) = mpsc::channel::<WorkMsg>();
+                let depth = Arc::new(AtomicU64::new(0));
+                let cfg = cfg.clone();
+                let m = metrics.clone();
+                let rtx = ready_tx.clone();
+                let d = depth.clone();
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("worker-{}-{r}", tier.name))
+                        .spawn(move || worker_thread(cfg, ti, rx, d, m, rtx))?,
+                );
+                txs.push(tx);
+                depths.push(depth);
+                n_workers += 1;
+            }
+            dispatch.push(TierDispatch { txs: txs.clone(), depths, rr: 0 });
+            tier_txs.push(txs);
+        }
         {
             let cfg = cfg.clone();
             let m = metrics.clone();
-            let (stx, ltx) = (small_tx.clone(), large_tx.clone());
             let rtx = ready_tx.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name("router".into())
-                    .spawn(move || router_thread(cfg, router_rx, stx, ltx, m, rtx))?,
-            );
-        }
-        for (model, rx, is_small) in [
-            (cfg.small.clone(), small_rx, true),
-            (cfg.large.clone(), large_rx, false),
-        ] {
-            let cfg = cfg.clone();
-            let m = metrics.clone();
-            let rtx = ready_tx.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("worker-{model}"))
-                    .spawn(move || worker_thread(cfg, model, rx, is_small, m, rtx))?,
+                    .spawn(move || router_thread(cfg, router_rx, dispatch, m, rtx))?,
             );
         }
         drop(ready_tx);
-        for _ in 0..3 {
+        for _ in 0..n_workers + 1 {
             ready_rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("server thread died during warm-up"))?;
         }
         Ok(Server {
             ingress,
-            small_tx,
-            large_tx,
+            tier_txs,
+            tier_names,
             handles,
             metrics,
             next_id: AtomicU64::new(0),
@@ -200,8 +368,12 @@ impl Server {
         ServerStats {
             router_latency: self.metrics.router_latency.snapshot(),
             e2e_latency: self.metrics.e2e_latency.snapshot(),
-            small_latency: self.metrics.small_latency.snapshot(),
-            large_latency: self.metrics.large_latency.snapshot(),
+            tiers: self
+                .tier_names
+                .iter()
+                .zip(&self.metrics.tier_latency)
+                .map(|(name, rec)| TierStats { name: name.clone(), latency: rec.snapshot() })
+                .collect(),
             routing: self.metrics.routing.snapshot(),
             decode_steps: self.metrics.decode_steps.load(Ordering::Relaxed),
             decode_slot_steps: self.metrics.decode_slot_steps.load(Ordering::Relaxed),
@@ -211,8 +383,11 @@ impl Server {
     /// Graceful shutdown: drains in-flight work, joins all threads.
     pub fn shutdown(self) -> Result<ServerStats> {
         let _ = self.ingress.send(RouterMsg::Shutdown);
-        let _ = self.small_tx.send(WorkMsg::Shutdown);
-        let _ = self.large_tx.send(WorkMsg::Shutdown);
+        for txs in &self.tier_txs {
+            for tx in txs {
+                let _ = tx.send(WorkMsg::Shutdown);
+            }
+        }
         let stats = self.stats();
         for h in self.handles {
             match h.join() {
@@ -227,8 +402,7 @@ impl Server {
 fn router_thread(
     cfg: ServeConfig,
     rx: Receiver<RouterMsg>,
-    small_tx: Sender<WorkMsg>,
-    large_tx: Sender<WorkMsg>,
+    mut tiers: Vec<TierDispatch>,
     metrics: Arc<ServerMetrics>,
     ready: Sender<()>,
 ) -> Result<()> {
@@ -246,6 +420,7 @@ fn router_thread(
     let _ = ready.send(());
     let mut rng = crate::rng::Rng::new(0xA5);
     let max_batch = rt.manifest.globals.trainb;
+    let last_tier = tiers.len() - 1;
     let mut pending: Vec<Request> = Vec::new();
     let mut shutdown = false;
 
@@ -291,20 +466,32 @@ fn router_thread(
             None => batch.iter().map(|_| rng.next_f32()).collect(),
         };
         let per_query = t_score.elapsed() / batch.len() as u32;
-        for (req, score) in batch.into_iter().zip(scores) {
+        let assigns = cfg.policy.assign(&scores);
+        for ((req, score), tier) in batch.into_iter().zip(scores).zip(assigns) {
             metrics.router_latency.record(per_query);
             let routed = Instant::now();
-            let routing = routed - req.t0;
-            let to_small = score >= cfg.threshold;
-            if to_small {
-                metrics.routing.route_small();
-            } else {
-                metrics.routing.route_large();
-            }
-            let msg = WorkMsg::Work(Work { req, score, routed });
-            let tx = if to_small { &small_tx } else { &large_tx };
-            let _ = routing; // recorded at completion time
-            tx.send(msg).ok().context("worker channel closed")?;
+            let tier = tier.min(last_tier);
+            metrics.routing.route(tier);
+            let d = &mut tiers[tier];
+            let rep = match cfg.select {
+                ReplicaSelect::RoundRobin => {
+                    let r = d.rr % d.txs.len();
+                    d.rr = d.rr.wrapping_add(1);
+                    r
+                }
+                ReplicaSelect::ShortestQueue => d
+                    .depths
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, q)| q.load(Ordering::Relaxed))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0),
+            };
+            d.depths[rep].fetch_add(1, Ordering::Relaxed);
+            d.txs[rep]
+                .send(WorkMsg::Work(Work { req, score, routed }))
+                .ok()
+                .context("worker channel closed")?;
         }
     }
     Ok(())
@@ -315,16 +502,19 @@ struct WorkerCtx {
     table: SlotTable<Work>,
     kv: KvCache,
     temp: f32,
+    tier: usize,
+    depth: Arc<AtomicU64>,
 }
 
 fn worker_thread(
     cfg: ServeConfig,
-    model: String,
+    tier: usize,
     rx: Receiver<WorkMsg>,
-    is_small: bool,
+    depth: Arc<AtomicU64>,
     metrics: Arc<ServerMetrics>,
     ready: Sender<()>,
 ) -> Result<()> {
+    let model = cfg.tiers[tier].model.clone();
     let rt = Runtime::load(&cfg.artifacts_dir)?;
     let g = rt.manifest.globals;
     let meta = *rt.manifest.model(&model)?;
@@ -338,6 +528,8 @@ fn worker_thread(
         table: SlotTable::new(g.genb),
         kv: KvCache::zeros(meta.layers, g.genb, g.sctx, meta.heads, meta.headdim),
         temp: cfg.temp,
+        tier,
+        depth,
     };
     let mut backlog: Vec<Work> = Vec::new();
     let mut shutdown = false;
@@ -375,13 +567,13 @@ fn worker_thread(
             let free = ctx.table.free_indices();
             let n_new = free.len().min(backlog.len());
             let admitted: Vec<Work> = backlog.drain(..n_new).collect();
-            admit(&mut ctx, &free[..n_new], admitted, &metrics, is_small)?;
+            admit(&mut ctx, &free[..n_new], admitted, &metrics)?;
         }
 
         // 3. one decode iteration over the occupied slots
         if !ctx.table.is_empty() {
             let t0 = Instant::now();
-            decode_step(&mut ctx, &metrics, is_small)?;
+            decode_step(&mut ctx, &metrics)?;
             if std::env::var_os("HYBRID_SERVE_TRACE").is_some() {
                 eprintln!(
                     "[trace {model}] decode iter {:.1} ms occ {}",
@@ -400,7 +592,6 @@ fn admit(
     slots: &[usize],
     work: Vec<Work>,
     metrics: &Arc<ServerMetrics>,
-    is_small: bool,
 ) -> Result<()> {
     let rt = ctx.engine.runtime().clone();
     let g = rt.manifest.globals;
@@ -443,11 +634,9 @@ fn admit(
 
     for (b, (w, &slot_idx)) in work.into_iter().zip(slots).enumerate() {
         ctx.kv.copy_slot_from(&fresh, b, slot_idx)?;
-        let prompt_len = ctx.table.capacity(); // placeholder, replaced below
-        let _ = prompt_len;
         let plen = lens[b];
         if first[b] == tok::EOS {
-            complete(ctx, w, vec![], 0.0, metrics, is_small);
+            complete(ctx, w, vec![], 0.0, metrics);
             continue;
         }
         let slot = Slot {
@@ -464,7 +653,7 @@ fn admit(
 }
 
 /// One decode iteration for every occupied slot.
-fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>, is_small: bool) -> Result<()> {
+fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) -> Result<()> {
     let rt = ctx.engine.runtime().clone();
     let g = rt.manifest.globals;
     let decode = rt.exec(&format!("{}.decode", ctx.engine.name))?;
@@ -523,42 +712,91 @@ fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>, is_small: bool
         }
         if finished {
             let slot = ctx.table.take(idx).unwrap();
-            complete(
-                ctx,
-                slot.payload,
-                answer,
-                lpsum / nlen as f32,
-                metrics,
-                is_small,
-            );
+            complete(ctx, slot.payload, answer, lpsum / nlen as f32, metrics);
         }
     }
     Ok(())
 }
 
 fn complete(
-    _ctx: &mut WorkerCtx,
+    ctx: &mut WorkerCtx,
     w: Work,
     tokens: Vec<i32>,
     mean_logprob: f32,
     metrics: &Arc<ServerMetrics>,
-    is_small: bool,
 ) {
     let e2e = w.req.t0.elapsed();
     metrics.e2e_latency.record(e2e);
-    if is_small {
-        metrics.small_latency.record(e2e);
-    } else {
-        metrics.large_latency.record(e2e);
-    }
+    metrics.tier_latency[ctx.tier].record(e2e);
     metrics.routing.complete(0.0);
+    ctx.depth.fetch_sub(1, Ordering::Relaxed);
     let _ = w.req.tx.send(Completion {
         id: w.req.id,
         tokens,
-        routed_small: is_small,
+        tier: ctx.tier,
         router_score: w.score,
         mean_logprob,
         e2e,
         routing: w.routed - w.req.t0,
     });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tiers_defaults_and_overrides() {
+        let t = parse_tiers("small:1,large:1").unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].model, "small");
+        assert_eq!(t[0].replicas, 1);
+        assert_eq!(t[0].cost, 0.0);
+        assert_eq!(t[1].cost, 1.0);
+
+        let t = parse_tiers("nano:2:0.02, medium, large:1:1.0").unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].replicas, 2);
+        assert!((t[0].cost - 0.02).abs() < 1e-12);
+        // omitted cost => even spacing over [0, 1]
+        assert!((t[1].cost - 0.5).abs() < 1e-12);
+        assert_eq!(t[1].replicas, 1);
+        assert_eq!(t[2].cost, 1.0);
+
+        // bare single tier
+        let t = parse_tiers("large").unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].cost, 1.0);
+    }
+
+    #[test]
+    fn parse_tiers_rejects_malformed_specs() {
+        assert!(parse_tiers("").is_err());
+        assert!(parse_tiers(" , ").is_err());
+        assert!(parse_tiers("small:x").is_err());
+        assert!(parse_tiers("small:0").is_err());
+        assert!(parse_tiers("small:1:abc").is_err());
+        assert!(parse_tiers("small:1:0.5:extra").is_err());
+        assert!(parse_tiers("small:1:-1").is_err());
+        assert!(parse_tiers("small:1:inf").is_err());
+    }
+
+    #[test]
+    fn two_tier_matches_seed_semantics() {
+        let t = two_tier("nano", "micro");
+        assert_eq!(t[0].name, "nano");
+        assert_eq!(t[0].cost, 0.0);
+        assert_eq!(t[1].cost, 1.0);
+        let cfg = ServeConfig::two_tier(
+            PathBuf::from("a"),
+            PathBuf::from("r"),
+            "nano",
+            "micro",
+            String::new(),
+            0.5,
+        );
+        assert_eq!(cfg.policy, TierPolicy::Ladder { thresholds: vec![0.5] });
+        assert_eq!(cfg.policy.n_tiers(), Some(2));
+        assert_eq!(cfg.tiers.len(), 2);
+    }
 }

@@ -101,6 +101,55 @@ fn perfect_router_never_beaten_by_random() {
 }
 
 #[test]
+fn ladder_k2_reproduces_threshold_policy_bitwise() {
+    // the two-tier threshold policy must be the exact K=2 special case
+    // of the multi-threshold ladder: same `>=` comparison, bit for bit
+    check("K=2 ladder == Policy::Threshold", 80, |rng| {
+        let n = rng.range(1, 200);
+        let thr = rng.next_f32();
+        let mut scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        // force boundary cases: exact threshold equality and the extremes
+        if n >= 4 {
+            scores[0] = thr;
+            scores[1] = 0.0;
+            scores[2] = 1.0;
+            scores[3] = f32::NAN;
+        }
+        let two = policy::Policy::Threshold { threshold: thr }.assign(&scores);
+        let k2 = policy::TierPolicy::Ladder { thresholds: vec![thr] }.assign(&scores);
+        assert_eq!(two.len(), k2.len());
+        for (i, (b, t)) in two.iter().zip(&k2).enumerate() {
+            assert_eq!(*t, usize::from(!*b), "query {i}: score {}", scores[i]);
+        }
+    });
+}
+
+#[test]
+fn ladder_cost_advantage_monotone_in_pivot_sweep() {
+    // as the proportional-ladder pivot rises, every query's tier index
+    // can only move toward more capable tiers, so the cost-weighted
+    // cost advantage must degrade monotonically
+    check("cost advantage non-increasing as the pivot sweeps up", 40, |rng| {
+        let n = rng.range(5, 150);
+        let k = rng.range(2, 6);
+        let scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let costs: Vec<f64> = (0..k).map(|i| i as f64 / (k - 1) as f64).collect();
+        let mut last = f64::INFINITY;
+        for step in 0..=24 {
+            let pivot = step as f32 / 20.0; // sweeps past 1.0
+            let thresholds = hybrid_llm::calibrate::ladder_from_pivot(pivot, k);
+            let assign = policy::TierPolicy::Ladder { thresholds }.assign(&scores);
+            let ca = policy::cost_advantage_tiers(&assign, &costs);
+            assert!(
+                ca <= last + 1e-12,
+                "cost advantage rose from {last} to {ca} at pivot {pivot}"
+            );
+            last = ca;
+        }
+    });
+}
+
+#[test]
 fn calibration_threshold_transfers_within_noise() {
     // calibrate on one seeded sample, evaluate on another from the same
     // distribution: the drop may differ but must stay bounded

@@ -1,6 +1,6 @@
 //! Integration: the threaded serving system against real artifacts —
-//! request lifecycle, continuous batching, both scheduling modes, and
-//! clean shutdown under load.
+//! request lifecycle, continuous batching, both scheduling modes, clean
+//! shutdown under load, and N-tier fleets with replicated workers.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -8,8 +8,9 @@ use std::time::Duration;
 use hybrid_llm::batching::BatchMode;
 use hybrid_llm::corpus::{generate, Scale, Split};
 use hybrid_llm::lm::LmEngine;
+use hybrid_llm::policy::TierPolicy;
 use hybrid_llm::runtime::Runtime;
-use hybrid_llm::serve::{ServeConfig, Server};
+use hybrid_llm::serve::{ReplicaSelect, ServeConfig, Server, TierSpec};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -30,17 +31,12 @@ fn seed_run_dir(artifacts: &Path, tag: &str) -> PathBuf {
 }
 
 fn base_cfg(artifacts: PathBuf, run_dir: PathBuf, mode: BatchMode) -> ServeConfig {
-    ServeConfig {
-        artifacts_dir: artifacts,
-        run_dir,
-        small: "nano".into(),
-        large: "micro".into(),
-        router: String::new(), // random routing (no trained router needed)
-        threshold: 0.5,
-        temp: 0.8,
-        mode,
-        batch_window: Duration::from_millis(2),
-    }
+    // random routing (no trained router needed) over the seed pair
+    let mut cfg = ServeConfig::two_tier(artifacts, run_dir, "nano", "micro", String::new(), 0.5);
+    cfg.temp = 0.8;
+    cfg.mode = mode;
+    cfg.batch_window = Duration::from_millis(2);
+    cfg
 }
 
 #[test]
@@ -66,16 +62,19 @@ fn serves_all_requests_continuous() {
         assert!(ids.insert(c.id), "duplicate completion id");
         assert!(c.tokens.len() < hybrid_llm::corpus::A_MAX);
         assert!((0.0..=1.0).contains(&c.router_score));
-        if c.routed_small {
+        if c.tier == 0 {
             small += 1;
         }
     }
     assert_eq!(ids.len(), 24, "every request completed exactly once");
     let stats = server.shutdown().unwrap();
-    assert_eq!(stats.routing.to_small + stats.routing.to_large, 24);
-    assert_eq!(stats.routing.to_small as usize, small);
+    assert_eq!(stats.routing.total(), 24);
+    assert_eq!(stats.routing.to_small() as usize, small);
     assert!(stats.decode_steps > 0);
     assert_eq!(stats.e2e_latency.n, 24);
+    // per-tier latency counts partition the e2e count
+    assert_eq!(stats.tiers.len(), 2);
+    assert_eq!(stats.tiers.iter().map(|t| t.latency.n).sum::<usize>(), 24);
     let _ = std::fs::remove_dir_all(&run_dir);
 }
 
@@ -113,7 +112,7 @@ fn shutdown_with_no_traffic_is_clean() {
         Server::start(base_cfg(artifacts, run_dir.clone(), BatchMode::Continuous)).unwrap();
     std::thread::sleep(Duration::from_millis(100));
     let stats = server.shutdown().unwrap();
-    assert_eq!(stats.routing.to_small + stats.routing.to_large, 0);
+    assert_eq!(stats.routing.total(), 0);
     let _ = std::fs::remove_dir_all(&run_dir);
 }
 
@@ -126,7 +125,7 @@ fn threshold_extremes_route_everything_one_way() {
     let run_dir = seed_run_dir(&artifacts, "thr");
     // threshold 0.0 => every score >= 0 => all small
     let mut cfg = base_cfg(artifacts.clone(), run_dir.clone(), BatchMode::Continuous);
-    cfg.threshold = 0.0;
+    cfg.policy = TierPolicy::Ladder { thresholds: vec![0.0] };
     let server = Server::start(cfg).unwrap();
     let corpus = generate(7, Scale::Smoke);
     let rxs: Vec<_> = corpus
@@ -136,10 +135,55 @@ fn threshold_extremes_route_everything_one_way() {
         .collect();
     for rx in rxs {
         let c = rx.recv_timeout(Duration::from_secs(120)).unwrap();
-        assert!(c.routed_small);
+        assert_eq!(c.tier, 0, "everything must route to the small tier");
     }
     let stats = server.shutdown().unwrap();
-    assert_eq!(stats.routing.to_large, 0);
+    assert_eq!(stats.routing.to_large(), 0);
     assert!((stats.routing.cost_advantage - 1.0).abs() < 1e-9);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn three_tier_fleet_with_replicas_serves() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "fleet");
+    // device/edge/cloud fleet over the two seeded models, with a
+    // replicated bottom tier and shortest-queue replica selection
+    let mut cfg = base_cfg(artifacts, run_dir.clone(), BatchMode::Continuous);
+    cfg.tiers = vec![
+        TierSpec::named("device", "nano", 2, 0.0),
+        TierSpec::named("edge", "nano", 1, 0.4),
+        TierSpec::named("cloud", "micro", 1, 1.0),
+    ];
+    cfg.policy = TierPolicy::even_ladder(3);
+    cfg.select = ReplicaSelect::ShortestQueue;
+    let server = Server::start(cfg).unwrap();
+    let corpus = generate(9, Scale::Smoke);
+    let rxs: Vec<_> = corpus
+        .iter()
+        .take(18)
+        .map(|q| server.submit(q.prompt.clone()))
+        .collect();
+    let mut by_tier = [0usize; 3];
+    for rx in rxs {
+        let c = rx.recv_timeout(Duration::from_secs(180)).expect("completion");
+        assert!(c.tier < 3);
+        by_tier[c.tier] += 1;
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.routing.total(), 18);
+    assert_eq!(stats.tiers.len(), 3);
+    assert_eq!(stats.routing.tiers.len(), 3);
+    for (i, tr) in stats.routing.tiers.iter().enumerate() {
+        assert_eq!(tr.routed as usize, by_tier[i], "tier {} count mismatch", tr.name);
+    }
+    assert_eq!(stats.routing.tiers[0].name, "device");
+    assert_eq!(stats.routing.tiers[2].name, "cloud");
+    // per-tier latencies partition e2e completions
+    assert_eq!(stats.tiers.iter().map(|t| t.latency.n).sum::<usize>(), 18);
+    assert_eq!(stats.e2e_latency.n, 18);
     let _ = std::fs::remove_dir_all(&run_dir);
 }
