@@ -14,6 +14,13 @@ plain line-oriented file recording global dims, per-model configs, and for
 every artifact the exact HLO parameter order/shapes/dtypes and output
 structure. Rust refuses to run against a manifest whose version it does
 not know.
+
+Manifest v2: artifacts are lowered with ``return_tuple=False`` so every
+output is its own PJRT buffer (no fused tuple), and each ``out`` line
+carries a residency class — ``state`` outputs (KV caches) stay
+device-resident across decode iterations in the rust runtime
+(``Exec::run_resident``), which is what removes the O(KV-size) host
+round-trip per generated token.
 """
 
 import argparse
@@ -38,7 +45,7 @@ from .common import (
     VOCAB,
 )
 
-MANIFEST_VERSION = 1
+MANIFEST_VERSION = 2
 
 F32 = jnp.float32
 S32 = jnp.int32
@@ -55,10 +62,26 @@ def _shape_str(shape):
     return "scalar" if len(shape) == 0 else "x".join(str(d) for d in shape)
 
 
+def _out_class(name):
+    """Residency class of an output (manifest v2): ``state`` outputs stay
+    device-resident in the rust runtime; everything else is downloaded."""
+    if name in ("kcache", "vcache"):
+        return "state"
+    if name.startswith("p."):
+        return "param"
+    if name.startswith(("m.", "v.")):
+        return "opt"
+    return "data"
+
+
 def to_hlo_text(lowered) -> str:
+    # return_tuple=False: multi-output artifacts come back from PJRT as
+    # one buffer per output instead of a single fused tuple buffer, which
+    # is what lets the rust runtime keep `state` outputs (KV caches)
+    # device-resident between decode calls.
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
     )
     return comp.as_hlo_text()
 
@@ -83,7 +106,9 @@ class ManifestWriter:
         for nm, spec, cls in ins:
             self.lines.append(f"in {nm} {_DTYPE_NAMES[jnp.dtype(spec.dtype)]} {_shape_str(spec.shape)} {cls}")
         for nm, spec in outs:
-            self.lines.append(f"out {nm} {_DTYPE_NAMES[jnp.dtype(spec.dtype)]} {_shape_str(spec.shape)}")
+            self.lines.append(
+                f"out {nm} {_DTYPE_NAMES[jnp.dtype(spec.dtype)]} {_shape_str(spec.shape)} {_out_class(nm)}"
+            )
 
     def write(self, path):
         with open(path, "w") as f:

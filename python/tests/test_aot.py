@@ -35,7 +35,9 @@ def parse_manifest(path):
             elif parts[0] == "in":
                 cur["ins"].append((parts[1], parts[2], parts[3], parts[4]))
             elif parts[0] == "out":
-                cur["outs"].append((parts[1], parts[2], parts[3]))
+                # v2 appends a residency class; v1 lines have none
+                cls = parts[4] if len(parts) > 4 else "data"
+                cur["outs"].append((parts[1], parts[2], parts[3], cls))
     return globals_, models, arts
 
 
@@ -92,6 +94,23 @@ def test_manifest_hlo_param_count_matches():
         entry = text.split("ENTRY")[1]
         params = set(re.findall(r"parameter\((\d+)\)", entry))
         assert len(params) == len(a["ins"]), (name, len(params), len(a["ins"]))
+
+
+@needs_artifacts
+def test_manifest_output_residency_classes():
+    """v2 manifests mark KV-cache outputs `state` (device-resident in the
+    rust runtime) and sampled-token outputs `data` (downloaded)."""
+    _, _, arts = parse_manifest(os.path.join(ART, "manifest.txt"))
+    for s in LM_SIZES:
+        for kind in ("prefill", "decode", "prefill1", "decode1"):
+            outs = {n: c for n, _, _, c in arts[f"{s}.{kind}"]["outs"]}
+            assert outs["kcache"] == "state", (s, kind)
+            assert outs["vcache"] == "state", (s, kind)
+            assert outs["next"] == "data", (s, kind)
+            assert outs["logp"] == "data", (s, kind)
+    # scalar-score artifacts stay plain data
+    outs = {n: c for n, _, _, c in arts["router.fwd"]["outs"]}
+    assert outs["score"] == "data"
 
 
 @needs_artifacts

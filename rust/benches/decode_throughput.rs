@@ -1,11 +1,17 @@
 //! Bench: decode-step throughput per roster model — the serving hot path
 //! (one fused HLO call per generated token for B slots). Reports
 //! tokens/sec at full batch for each model size plus the B=1 latency
-//! path, quantifying the batching win and the model-size cost gradient
-//! that motivates routing in the first place.
+//! path, and the host-transfer bytes per decode step — the number the
+//! device-resident KV-cache path drives to O(B) (the pre-residency
+//! runtime paid the full `[L, B, S, H, Dh]` KV pair both ways per step).
+//! Results land in `BENCH_serving.json` (flat key → value, merged with
+//! the serving bench) as the perf trajectory.
 
-use hybrid_llm::bench::{report, Bencher};
-use hybrid_llm::corpus::{generate, Scale};
+use std::path::Path;
+
+use hybrid_llm::bench::{merge_bench_json, report, Bencher};
+use hybrid_llm::corpus::{generate, Scale, A_MAX};
+use hybrid_llm::io::Tensor;
 use hybrid_llm::lm::LmEngine;
 use hybrid_llm::runtime::Runtime;
 
@@ -24,6 +30,8 @@ fn main() -> anyhow::Result<()> {
         .map(|q| q.prompt.as_slice())
         .collect();
     let seeds: Vec<u32> = (0..g.genb as u32).collect();
+    let json_path = Path::new("BENCH_serving.json");
+    let mut json: Vec<(String, f64)> = Vec::new();
 
     let b = Bencher::default();
     let mut results = Vec::new();
@@ -32,14 +40,38 @@ fn main() -> anyhow::Result<()> {
         // warm compile; untrained weights rarely emit EOS so every wave
         // decodes to the full answer budget — worst-case throughput.
         eng.generate(&prompts, &seeds, 0.8)?;
-        let tokens_per_wave = (g.genb * (hybrid_llm::corpus::A_MAX - 1)) as f64;
-        results.push(b.bench_items(
+        let tokens_per_wave = (g.genb * (A_MAX - 1)) as f64;
+        let r = b.bench_items(
             &format!("{model}.generate wave (B={})", g.genb),
             tokens_per_wave,
             &mut || {
                 eng.generate(&prompts, &seeds, 0.8).unwrap();
             },
+        );
+        json.push((format!("decode.{model}.tokens_per_sec"), r.throughput_per_s()));
+        results.push(r);
+
+        // host traffic per decode step over one measured wave (steady
+        // state decodes A_MAX-1 iterations; the prefill + first-step KV
+        // upload amortize across them)
+        let before = rt.transfers();
+        eng.generate(&prompts, &seeds, 0.8)?;
+        let moved = before.delta(rt.transfers());
+        let steps = (A_MAX - 1) as f64;
+        println!(
+            "{model}: host transfer per decode step  d2h {:>10.0} B  h2d {:>10.0} B",
+            moved.d2h_bytes as f64 / steps,
+            moved.h2d_bytes as f64 / steps
+        );
+        json.push((
+            format!("decode.{model}.d2h_bytes_per_step"),
+            moved.d2h_bytes as f64 / steps,
         ));
+        json.push((
+            format!("decode.{model}.h2d_bytes_per_step"),
+            moved.h2d_bytes as f64 / steps,
+        ));
+
         // B=1 latency path on the largest + smallest only (slow)
         if model == "nano" || model == "large" {
             eng.generate_one(prompts[0], 0, 0.8)?;
@@ -50,29 +82,30 @@ fn main() -> anyhow::Result<()> {
     }
     report("decode_throughput (tokens/s where listed)", &results);
 
-    // ---- perf before/after: params re-uploaded per call (naive literal
-    // path) vs device-resident params (execute_b). This is the L3
-    // optimization recorded in EXPERIMENTS.md §Perf.
+    // ---- perf trajectory: one decode step under the three residency
+    // regimes. (1) naive literal path re-uploads params + KV and
+    // downloads everything; (2) resident params still round-trip the KV
+    // pair through the host; (3) device-resident KV moves only O(B)
+    // tokens/logprobs — the tentpole optimization.
     let eng = LmEngine::init(rt.clone(), "large", 1)?;
     let exec = rt.exec("large.decode")?;
     let meta = *rt.manifest.model("large")?;
     let n = eng.params.len();
     let cache_dims = vec![meta.layers, g.genb, g.sctx, meta.heads, meta.headdim];
     let cache_len: usize = cache_dims.iter().product();
-    let kc = hybrid_llm::io::Tensor::f32(cache_dims.clone(), vec![0.0; cache_len]);
+    let kc = Tensor::f32(cache_dims.clone(), vec![0.0; cache_len]);
     let vc = kc.clone();
-    let tok = hybrid_llm::io::Tensor::i32(vec![g.genb], vec![5; g.genb]);
-    let pos = hybrid_llm::io::Tensor::i32(vec![g.genb], vec![8; g.genb]);
-    let step = hybrid_llm::io::Tensor::i32(vec![], vec![1]);
-    let seeds_t = hybrid_llm::io::Tensor::u32(vec![g.genb], vec![0; g.genb]);
-    let temp = hybrid_llm::io::Tensor::f32(vec![], vec![0.8]);
+    let tok = Tensor::i32(vec![g.genb], vec![5; g.genb]);
+    let pos = Tensor::i32(vec![g.genb], vec![8; g.genb]);
+    let step = Tensor::i32(vec![], vec![1]);
+    let seeds_t = Tensor::u32(vec![g.genb], vec![0; g.genb]);
+    let temp = Tensor::f32(vec![], vec![0.8]);
 
-    let mut ins: Vec<&hybrid_llm::io::Tensor> = eng.params.host.iter().collect();
+    let mut ins: Vec<&Tensor> = eng.params.host.iter().collect();
     ins.extend([&kc, &vc, &tok, &pos, &step, &seeds_t, &temp]);
     exec.run(&ins)?; // warm
-    let resident: std::collections::HashMap<usize, std::sync::Arc<xla::PjRtBuffer>> =
-        eng.params.device.iter().cloned().enumerate().collect();
-    let host: Vec<(usize, &hybrid_llm::io::Tensor)> = vec![
+    let resident = eng.params.resident_map();
+    let host_full: Vec<(usize, &Tensor)> = vec![
         (n, &kc),
         (n + 1, &vc),
         (n + 2, &tok),
@@ -81,17 +114,80 @@ fn main() -> anyhow::Result<()> {
         (n + 5, &seeds_t),
         (n + 6, &temp),
     ];
-    exec.run_with_resident(&resident, &host)?; // warm
+    exec.run_with_resident(&resident, &host_full)?; // warm
 
     let mut results = Vec::new();
-    results.push(b.bench("large.decode literal path (re-upload params)", || {
+    results.push(b.bench("large.decode literal path (re-upload all)", || {
         exec.run(&ins).unwrap();
     }));
-    results.push(b.bench("large.decode resident params (execute_b)", || {
-        exec.run_with_resident(&resident, &host).unwrap();
+    results.push(b.bench("large.decode resident params, host KV", || {
+        exec.run_with_resident(&resident, &host_full).unwrap();
     }));
-    report("decode step: naive vs resident params", &results);
-    let speedup = results[0].mean.as_secs_f64() / results[1].mean.as_secs_f64().max(1e-12);
-    println!("\nresident-params speedup on large.decode: {speedup:.2}x");
+
+    // seed the device-resident caches from one run, then keep feeding the
+    // returned buffers back in — the serving steady state
+    let mut outs = exec.run_resident(&resident, &host_full)?;
+    let vdev = outs.pop().unwrap();
+    let kdev = outs.pop().unwrap();
+    let device_capable = kdev.is_device() && vdev.is_device();
+    if device_capable {
+        let host_small: Vec<(usize, &Tensor)> = vec![
+            (n + 2, &tok),
+            (n + 3, &pos),
+            (n + 4, &step),
+            (n + 5, &seeds_t),
+            (n + 6, &temp),
+        ];
+        let mut res_dev = resident.clone();
+        res_dev.insert(n, kdev.device().unwrap().clone());
+        res_dev.insert(n + 1, vdev.device().unwrap().clone());
+        let before = rt.transfers();
+        let mut steps = 0u64;
+        results.push(b.bench("large.decode device-resident KV", || {
+            let mut outs = exec.run_resident(&res_dev, &host_small).unwrap();
+            let vc = outs.pop().unwrap();
+            let kc = outs.pop().unwrap();
+            res_dev.insert(n, kc.device().unwrap().clone());
+            res_dev.insert(n + 1, vc.device().unwrap().clone());
+            steps += 1;
+        }));
+        let moved = before.delta(rt.transfers());
+        let steps = steps.max(1) as f64;
+        println!(
+            "device-resident steady state: d2h {:.0} B/step, h2d {:.0} B/step \
+             (full KV pair would be {} B)",
+            moved.d2h_bytes as f64 / steps,
+            moved.h2d_bytes as f64 / steps,
+            2 * cache_len * 4,
+        );
+        json.push((
+            "decode.large.resident_d2h_bytes_per_step".to_string(),
+            moved.d2h_bytes as f64 / steps,
+        ));
+        json.push((
+            "decode.large.resident_h2d_bytes_per_step".to_string(),
+            moved.h2d_bytes as f64 / steps,
+        ));
+    } else {
+        println!(
+            "device-resident KV unavailable (pre-v2 fused-tuple artifacts, \
+             manifest v{}); host fallback exercised instead",
+            rt.manifest.version
+        );
+    }
+    report("decode step residency ladder", &results);
+    if results.len() >= 2 {
+        let speedup = results[0].mean.as_secs_f64() / results[1].mean.as_secs_f64().max(1e-12);
+        println!("\nresident-params speedup on large.decode: {speedup:.2}x");
+        json.push(("decode.large.resident_params_speedup".to_string(), speedup));
+    }
+    if device_capable && results.len() >= 3 {
+        let speedup = results[1].mean.as_secs_f64() / results[2].mean.as_secs_f64().max(1e-12);
+        println!("device-resident-KV speedup over host KV round-trip: {speedup:.2}x");
+        json.push(("decode.large.resident_kv_speedup".to_string(), speedup));
+    }
+
+    merge_bench_json(json_path, &json)?;
+    println!("\nwrote {} metrics to {}", json.len(), json_path.display());
     Ok(())
 }

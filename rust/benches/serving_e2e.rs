@@ -1,13 +1,17 @@
 //! Bench: end-to-end serving — requests flow through the router thread
-//! and the two continuous-batching workers. Reports request throughput
-//! and latency percentiles at several offered loads. Uses seeded-init
-//! weights written to a temp run dir (latency is weight-independent), so
-//! it runs without a pipeline run; the router is random at threshold 0.5
-//! giving a ~50% routing split.
+//! and the two continuous-batching workers. Reports request throughput,
+//! latency percentiles, decoded tokens/sec, and host-transfer bytes per
+//! decode step (the device-resident-KV headline) at several offered
+//! loads. Uses seeded-init weights written to a temp run dir (latency is
+//! weight-independent), so it runs without a pipeline run; the router is
+//! random at threshold 0.5 giving a ~50% routing split. The largest-load
+//! point is appended to `BENCH_serving.json` as the perf trajectory.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use hybrid_llm::batching::BatchMode;
+use hybrid_llm::bench::merge_bench_json;
 use hybrid_llm::corpus::{generate, Scale};
 use hybrid_llm::lm::LmEngine;
 use hybrid_llm::runtime::Runtime;
@@ -33,9 +37,10 @@ fn main() -> anyhow::Result<()> {
 
     println!("== serving_e2e: small/medium pair, random router ==");
     println!(
-        "{:>9} {:>9} {:>10} {:>9} {:>9} {:>10}",
-        "requests", "wall s", "req/s", "p50 ms", "p95 ms", "slot eff"
+        "{:>9} {:>9} {:>10} {:>9} {:>9} {:>10} {:>10} {:>12} {:>12}",
+        "requests", "wall s", "req/s", "p50 ms", "p95 ms", "slot eff", "tok/s", "d2h B/step", "h2d B/step"
     );
+    let mut json: Vec<(String, f64)> = Vec::new();
     for n in [16, 48, 96] {
         let mut cfg = ServeConfig::two_tier(
             artifacts.clone(),
@@ -51,8 +56,9 @@ fn main() -> anyhow::Result<()> {
         let server = Server::start(cfg)?;
         let t0 = Instant::now();
         let rxs: Vec<_> = prompts[..n].iter().map(|p| server.submit(p.clone())).collect();
+        let mut tokens = 0usize;
         for rx in rxs {
-            rx.recv()?;
+            tokens += rx.recv()?.tokens.len();
         }
         let wall = t0.elapsed();
         let stats = server.shutdown()?;
@@ -61,16 +67,32 @@ fn main() -> anyhow::Result<()> {
         } else {
             0.0
         };
+        let tok_s = tokens as f64 / wall.as_secs_f64();
         println!(
-            "{:>9} {:>9.2} {:>10.1} {:>9.0} {:>9.0} {:>10.2}",
+            "{:>9} {:>9.2} {:>10.1} {:>9.0} {:>9.0} {:>10.2} {:>10.1} {:>12.0} {:>12.0}",
             n,
             wall.as_secs_f64(),
             n as f64 / wall.as_secs_f64(),
             stats.e2e_latency.p50_ms,
             stats.e2e_latency.p95_ms,
-            eff
+            eff,
+            tok_s,
+            stats.d2h_bytes_per_step(),
+            stats.h2d_bytes_per_step(),
         );
+        if n == 96 {
+            json.push(("serving.req_per_sec".to_string(), n as f64 / wall.as_secs_f64()));
+            json.push(("serving.tokens_per_sec".to_string(), tok_s));
+            json.push(("serving.e2e_p50_ms".to_string(), stats.e2e_latency.p50_ms));
+            json.push(("serving.e2e_p95_ms".to_string(), stats.e2e_latency.p95_ms));
+            json.push(("serving.slot_efficiency".to_string(), eff));
+            json.push(("serving.d2h_bytes_per_step".to_string(), stats.d2h_bytes_per_step()));
+            json.push(("serving.h2d_bytes_per_step".to_string(), stats.h2d_bytes_per_step()));
+        }
     }
+    let json_path = Path::new("BENCH_serving.json");
+    merge_bench_json(json_path, &json)?;
+    println!("\nwrote {} metrics to {}", json.len(), json_path.display());
     let _ = std::fs::remove_dir_all(&run_dir);
     Ok(())
 }

@@ -1,17 +1,35 @@
 //! Continuous-batching primitives for the decode workers: fixed-capacity
 //! slot management (the artifacts have a static batch dimension) and
-//! host-side KV-cache slot surgery (merging freshly-prefilled sequences
-//! into the persistent cache).
+//! KV-cache management over *either* host tensors or device-resident
+//! PJRT buffers.
 //!
 //! This is the Orca/vLLM-style iteration-level scheduler scaled to the
 //! reproduction's fixed-shape artifacts: every decode call steps *all*
 //! occupied slots; free slots ride along as padding; new requests are
 //! admitted into free slots between steps (or, in the run-to-completion
 //! ablation, only when the batch drains empty).
+//!
+//! [`KvCache`] is an enum over two residency states:
+//!
+//! * **Host** — plain `[L, B, S, H, Dh]` tensors. Needed for slot
+//!   surgery at admission ([`KvCache::copy_slot_from`]) and the only
+//!   state reachable with pre-v2 (fused-tuple) artifacts.
+//! * **Device** — `Arc<xla::PjRtBuffer>` pairs that feed straight back
+//!   into the next `execute_b` call ([`KvCache::bind`]), the steady-state
+//!   of the decode loop: zero KV bytes cross the host boundary per
+//!   generated token.
+//!
+//! [`KvCache::update`] follows whatever residency the runtime returns, so
+//! the same decode loop transparently runs device-resident against v2
+//! artifacts and host-round-trip against v1 artifacts.
 
-use anyhow::{ensure, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
 
 use crate::io::Tensor;
+use crate::runtime::{OutValue, Runtime};
 
 /// Scheduling discipline for a decode worker (the batching ablation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,44 +57,54 @@ pub struct Slot<T> {
     pub seed: u32,
 }
 
-/// Fixed-capacity slot table.
+/// Fixed-capacity slot table with an O(1) occupancy count; index
+/// enumeration is allocation-free (iterators) so the per-token decode
+/// loop never heap-allocates for bookkeeping.
 pub struct SlotTable<T> {
     slots: Vec<Option<Slot<T>>>,
+    occupied: usize,
 }
 
 impl<T> SlotTable<T> {
     pub fn new(capacity: usize) -> Self {
-        SlotTable { slots: (0..capacity).map(|_| None).collect() }
+        SlotTable { slots: (0..capacity).map(|_| None).collect(), occupied: 0 }
     }
 
     pub fn capacity(&self) -> usize {
         self.slots.len()
     }
 
+    /// Number of occupied slots — O(1).
     pub fn occupied(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.occupied
     }
 
+    /// O(1).
     pub fn is_empty(&self) -> bool {
-        self.occupied() == 0
+        self.occupied == 0
     }
 
-    pub fn free_indices(&self) -> Vec<usize> {
+    /// O(1): whether at least one slot is free.
+    pub fn has_free(&self) -> bool {
+        self.occupied < self.slots.len()
+    }
+
+    /// Indices of free slots, ascending (allocation-free).
+    pub fn free_indices(&self) -> impl Iterator<Item = usize> + '_ {
         self.slots
             .iter()
             .enumerate()
             .filter(|(_, s)| s.is_none())
             .map(|(i, _)| i)
-            .collect()
     }
 
-    pub fn occupied_indices(&self) -> Vec<usize> {
+    /// Indices of occupied slots, ascending (allocation-free).
+    pub fn occupied_indices(&self) -> impl Iterator<Item = usize> + '_ {
         self.slots
             .iter()
             .enumerate()
             .filter(|(_, s)| s.is_some())
             .map(|(i, _)| i)
-            .collect()
     }
 
     /// Insert into a specific free slot.
@@ -84,6 +112,7 @@ impl<T> SlotTable<T> {
         ensure!(idx < self.slots.len(), "slot index out of range");
         ensure!(self.slots[idx].is_none(), "slot {idx} already occupied");
         self.slots[idx] = Some(slot);
+        self.occupied += 1;
         Ok(())
     }
 
@@ -97,11 +126,17 @@ impl<T> SlotTable<T> {
 
     /// Remove and return the slot contents.
     pub fn take(&mut self, idx: usize) -> Option<Slot<T>> {
-        self.slots.get_mut(idx).and_then(|s| s.take())
+        let s = self.slots.get_mut(idx).and_then(|s| s.take());
+        if s.is_some() {
+            self.occupied -= 1;
+        }
+        s
     }
 
     /// Batched decode inputs over the full (fixed) capacity: free slots
-    /// contribute PAD tokens at pos 0 (pure padding work).
+    /// contribute PAD tokens at pos 0 (pure padding work). These Vecs are
+    /// handed to `Tensor::{i32,u32}` (which take ownership), so a scratch
+    /// variant would buy nothing.
     pub fn decode_inputs(&self) -> (Vec<i32>, Vec<i32>, Vec<u32>) {
         let mut cur = vec![crate::tokenizer::PAD; self.capacity()];
         let mut pos = vec![0i32; self.capacity()];
@@ -117,11 +152,19 @@ impl<T> SlotTable<T> {
     }
 }
 
-/// Persistent KV cache pair for a decode worker: host tensors of shape
-/// `[L, B, S, H, Dh]` that round-trip through each decode call.
+/// Where a KV-cache pair currently lives.
+enum KvStore {
+    /// Plain host tensors of shape `[L, B, S, H, Dh]`.
+    Host { k: Tensor, v: Tensor },
+    /// Device-resident buffers of the same logical shape.
+    Device { k: Arc<xla::PjRtBuffer>, v: Arc<xla::PjRtBuffer> },
+}
+
+/// Persistent KV cache pair for a decode worker, resident on either the
+/// host (admission-time slot surgery, v1-artifact fallback) or the device
+/// (steady-state decode). See the module docs for the residency protocol.
 pub struct KvCache {
-    pub k: Tensor,
-    pub v: Tensor,
+    store: KvStore,
     pub layers: usize,
     pub batch: usize,
     pub seq: usize,
@@ -134,14 +177,164 @@ impl KvCache {
         let dims = vec![layers, batch, seq, heads, head_dim];
         let n: usize = dims.iter().product();
         KvCache {
-            k: Tensor::f32(dims.clone(), vec![0.0; n]),
-            v: Tensor::f32(dims, vec![0.0; n]),
+            store: KvStore::Host {
+                k: Tensor::f32(dims.clone(), vec![0.0; n]),
+                v: Tensor::f32(dims, vec![0.0; n]),
+            },
             layers,
             batch,
             seq,
             heads,
             head_dim,
         }
+    }
+
+    /// Wrap host tensors (e.g. prefill outputs downloaded to the host).
+    pub fn from_tensors(k: Tensor, v: Tensor) -> Result<KvCache> {
+        let d = k.dims().to_vec();
+        ensure!(d.len() == 5, "kv tensors must be rank 5");
+        ensure!(k.dims() == v.dims());
+        Ok(KvCache {
+            layers: d[0],
+            batch: d[1],
+            seq: d[2],
+            heads: d[3],
+            head_dim: d[4],
+            store: KvStore::Host { k, v },
+        })
+    }
+
+    /// Wrap a pair of [`OutValue`]s returned by `Exec::run_resident`,
+    /// adopting whatever residency the runtime produced. `dims` is the
+    /// logical `[L, B, S, H, Dh]` shape from the artifact's output spec
+    /// (device buffers do not carry a host-visible shape).
+    pub fn from_outputs(k: OutValue, v: OutValue, dims: &[usize]) -> Result<KvCache> {
+        ensure!(dims.len() == 5, "kv caches must be rank 5");
+        let store = match (k, v) {
+            (OutValue::Device(k), OutValue::Device(v)) => KvStore::Device { k, v },
+            (k, v) => {
+                let k = k.into_tensor()?;
+                let v = v.into_tensor()?;
+                ensure!(k.dims() == dims && v.dims() == dims, "kv dims mismatch");
+                KvStore::Host { k, v }
+            }
+        };
+        Ok(KvCache {
+            store,
+            layers: dims[0],
+            batch: dims[1],
+            seq: dims[2],
+            heads: dims[3],
+            head_dim: dims[4],
+        })
+    }
+
+    pub fn dims(&self) -> [usize; 5] {
+        [self.layers, self.batch, self.seq, self.heads, self.head_dim]
+    }
+
+    pub fn is_device(&self) -> bool {
+        matches!(self.store, KvStore::Device { .. })
+    }
+
+    /// Total size of both caches in bytes (the per-token transfer the
+    /// host-round-trip path pays and the device-resident path avoids).
+    pub fn byte_size(&self) -> u64 {
+        2 * self.dims().iter().product::<usize>() as u64 * crate::runtime::ELEM_BYTES as u64
+    }
+
+    /// Host tensors, failing when device-resident (call
+    /// [`Self::to_host`] first).
+    pub fn host_tensors(&self) -> Result<(&Tensor, &Tensor)> {
+        match &self.store {
+            KvStore::Host { k, v } => Ok((k, v)),
+            KvStore::Device { .. } => bail!("kv cache is device-resident"),
+        }
+    }
+
+    /// Bind this cache as artifact inputs `k_idx`/`v_idx`: device buffers
+    /// go into `resident` (and stale host entries are cleared), host
+    /// tensors into the `host` upload list (and stale resident entries
+    /// are cleared). The same call sites therefore serve both residency
+    /// states.
+    pub fn bind<'a>(
+        &'a self,
+        k_idx: usize,
+        v_idx: usize,
+        resident: &mut HashMap<usize, Arc<xla::PjRtBuffer>>,
+        host: &mut Vec<(usize, &'a Tensor)>,
+    ) {
+        match &self.store {
+            KvStore::Device { k, v } => {
+                resident.insert(k_idx, k.clone());
+                resident.insert(v_idx, v.clone());
+            }
+            KvStore::Host { k, v } => {
+                resident.remove(&k_idx);
+                resident.remove(&v_idx);
+                host.push((k_idx, k));
+                host.push((v_idx, v));
+            }
+        }
+    }
+
+    /// Adopt the caches returned by a prefill/decode call, following the
+    /// runtime's residency: device buffers keep the cache on device
+    /// (zero-copy steady state), host tensors (v1 fallback) keep it on
+    /// the host.
+    pub fn update(&mut self, k: OutValue, v: OutValue) -> Result<()> {
+        match (k, v) {
+            (OutValue::Device(k), OutValue::Device(v)) => {
+                self.store = KvStore::Device { k, v };
+            }
+            (k, v) => {
+                let k = k.into_tensor()?;
+                let v = v.into_tensor()?;
+                ensure!(
+                    k.dims() == self.dims().as_slice() && v.dims() == self.dims().as_slice(),
+                    "kv dims changed"
+                );
+                self.store = KvStore::Host { k, v };
+            }
+        }
+        Ok(())
+    }
+
+    /// Replace both host tensors (host-path equivalent of [`Self::update`]).
+    pub fn replace(&mut self, k: Tensor, v: Tensor) -> Result<()> {
+        ensure!(
+            k.dims() == self.dims().as_slice() && v.dims() == self.dims().as_slice(),
+            "kv dims changed"
+        );
+        self.store = KvStore::Host { k, v };
+        Ok(())
+    }
+
+    /// Materialize on the host (metered download); no-op when already
+    /// host-resident. Needed before slot surgery.
+    pub fn to_host(&mut self, rt: &Runtime) -> Result<()> {
+        if let KvStore::Device { k, v } = &self.store {
+            let kt = rt.download(k)?;
+            let vt = rt.download(v)?;
+            ensure!(
+                kt.dims() == self.dims().as_slice() && vt.dims() == self.dims().as_slice(),
+                "device kv dims {:?} disagree with cache geometry {:?}",
+                kt.dims(),
+                self.dims()
+            );
+            self.store = KvStore::Host { k: kt, v: vt };
+        }
+        Ok(())
+    }
+
+    /// Upload to the device (metered); no-op when already device-resident.
+    pub fn to_device(&mut self, rt: &Runtime) -> Result<()> {
+        if let KvStore::Host { k, v } = &self.store {
+            let kb = rt.upload(k)?;
+            let vb = rt.upload(v)?;
+            self.store = KvStore::Device { k: kb, v: vb };
+        }
+        Ok(())
     }
 
     fn slot_stride(&self) -> usize {
@@ -153,7 +346,8 @@ impl KvCache {
     }
 
     /// Copy slot `src_b` of `src` (same L/S/H/Dh geometry, any batch) into
-    /// slot `dst_b` of `self`, for both K and V.
+    /// slot `dst_b` of `self`, for both K and V. Host-only slot surgery:
+    /// both caches must be host-resident (`to_host` first).
     pub fn copy_slot_from(&mut self, src: &KvCache, src_b: usize, dst_b: usize) -> Result<()> {
         ensure!(
             src.layers == self.layers
@@ -166,46 +360,28 @@ impl KvCache {
         let ss = src.slot_stride();
         let ds = self.slot_stride();
         debug_assert_eq!(ss, ds);
-        for l in 0..self.layers {
-            let so = l * src.layer_stride() + src_b * ss;
-            let do_ = l * self.layer_stride() + dst_b * ds;
-            let (sk, sv) = (src.k.as_f32()?, src.v.as_f32()?);
-            let dk = match &mut self.k {
-                Tensor::F32 { data, .. } => data,
-                _ => unreachable!(),
-            };
+        let src_ls = src.layer_stride();
+        let dst_ls = self.layer_stride();
+        // match the payloads once, outside the per-layer loop
+        let (sk, sv) = match &src.store {
+            KvStore::Host { k, v } => (k.as_f32()?, v.as_f32()?),
+            KvStore::Device { .. } => bail!("copy_slot_from: src is device-resident"),
+        };
+        let (dk, dv) = match &mut self.store {
+            KvStore::Host {
+                k: Tensor::F32 { data: dk, .. },
+                v: Tensor::F32 { data: dv, .. },
+            } => (dk, dv),
+            KvStore::Host { .. } => bail!("kv caches must be f32"),
+            KvStore::Device { .. } => bail!("copy_slot_from: dst is device-resident"),
+        };
+        for l in 0..src.layers {
+            let so = l * src_ls + src_b * ss;
+            let do_ = l * dst_ls + dst_b * ds;
             dk[do_..do_ + ds].copy_from_slice(&sk[so..so + ss]);
-            let dv = match &mut self.v {
-                Tensor::F32 { data, .. } => data,
-                _ => unreachable!(),
-            };
             dv[do_..do_ + ds].copy_from_slice(&sv[so..so + ss]);
         }
         Ok(())
-    }
-
-    /// Replace both tensors (after a decode call returns updated caches).
-    pub fn replace(&mut self, k: Tensor, v: Tensor) -> Result<()> {
-        ensure!(k.dims() == self.k.dims() && v.dims() == self.v.dims(), "kv dims changed");
-        self.k = k;
-        self.v = v;
-        Ok(())
-    }
-
-    /// Wrap tensors returned by a prefill call.
-    pub fn from_tensors(k: Tensor, v: Tensor) -> Result<KvCache> {
-        let d = k.dims().to_vec();
-        ensure!(d.len() == 5, "kv tensors must be rank 5");
-        ensure!(k.dims() == v.dims());
-        Ok(KvCache {
-            layers: d[0],
-            batch: d[1],
-            seq: d[2],
-            heads: d[3],
-            head_dim: d[4],
-            k,
-            v,
-        })
     }
 }
 
@@ -217,25 +393,58 @@ mod tests {
         Slot { payload: 0, answer: vec![], logprob_sum: 0.0, cur: tok, pos: 5, seed: 1 }
     }
 
+    fn host_k(kv: &KvCache) -> &[f32] {
+        kv.host_tensors().unwrap().0.as_f32().unwrap()
+    }
+
     #[test]
     fn slot_table_lifecycle() {
         let mut t: SlotTable<u32> = SlotTable::new(4);
         assert_eq!(t.capacity(), 4);
         assert!(t.is_empty());
-        assert_eq!(t.free_indices(), vec![0, 1, 2, 3]);
+        assert!(t.has_free());
+        assert_eq!(t.free_indices().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
         t.insert(1, slot(9)).unwrap();
         t.insert(3, slot(10)).unwrap();
         assert_eq!(t.occupied(), 2);
-        assert_eq!(t.occupied_indices(), vec![1, 3]);
-        assert_eq!(t.free_indices(), vec![0, 2]);
-        // double insert fails
+        assert_eq!(t.occupied_indices().collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(t.free_indices().collect::<Vec<_>>(), vec![0, 2]);
+        // double insert fails and does not corrupt the count
         assert!(t.insert(1, slot(8)).is_err());
+        assert_eq!(t.occupied(), 2);
         // out of range fails
         assert!(t.insert(9, slot(8)).is_err());
         let s = t.take(1).unwrap();
         assert_eq!(s.cur, 9);
         assert!(t.take(1).is_none());
         assert_eq!(t.occupied(), 1);
+        assert!(!t.is_empty());
+        t.take(3).unwrap();
+        assert!(t.is_empty());
+        assert!(t.has_free());
+    }
+
+    #[test]
+    fn occupied_count_stays_consistent_with_scan() {
+        let mut t: SlotTable<u32> = SlotTable::new(5);
+        t.insert(0, slot(1)).unwrap();
+        t.insert(4, slot(2)).unwrap();
+        t.insert(2, slot(3)).unwrap();
+        assert_eq!(t.occupied(), t.occupied_indices().count());
+        t.take(0);
+        t.take(0); // double take is a no-op
+        assert_eq!(t.occupied(), t.occupied_indices().count());
+        assert_eq!(t.occupied() + t.free_indices().count(), t.capacity());
+    }
+
+    #[test]
+    fn full_table_has_no_free() {
+        let mut t: SlotTable<u32> = SlotTable::new(2);
+        t.insert(0, slot(1)).unwrap();
+        assert!(t.has_free());
+        t.insert(1, slot(2)).unwrap();
+        assert!(!t.has_free());
+        assert_eq!(t.free_indices().next(), None);
     }
 
     #[test]
@@ -252,22 +461,18 @@ mod tests {
     fn kv_slot_copy_moves_only_target_slot() {
         let (l, b, s, h, dh) = (2, 3, 4, 2, 2);
         let mut dst = KvCache::zeros(l, b, s, h, dh);
-        let mut src = KvCache::zeros(l, 2, s, h, dh);
-        // fill src slot 1 with a recognizable pattern
-        if let Tensor::F32 { data, .. } = &mut src.k {
-            for (i, x) in data.iter_mut().enumerate() {
-                *x = i as f32;
-            }
-        }
-        if let Tensor::F32 { data, .. } = &mut src.v {
-            for (i, x) in data.iter_mut().enumerate() {
-                *x = -(i as f32);
-            }
-        }
-        dst.copy_slot_from(&src, 1, 2).unwrap();
         let stride = s * h * dh;
-        let k = dst.k.as_f32().unwrap();
-        let sk = src.k.as_f32().unwrap();
+        // fill src slot 1 with a recognizable pattern
+        let n = l * 2 * stride;
+        let kdata: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let vdata: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
+        let dims = vec![l, 2, s, h, dh];
+        let src =
+            KvCache::from_tensors(Tensor::f32(dims.clone(), kdata), Tensor::f32(dims, vdata))
+                .unwrap();
+        dst.copy_slot_from(&src, 1, 2).unwrap();
+        let k = host_k(&dst);
+        let sk = host_k(&src);
         for layer in 0..l {
             let dst_off = layer * b * stride + 2 * stride;
             let src_off = layer * 2 * stride + stride;
@@ -288,6 +493,39 @@ mod tests {
     }
 
     #[test]
+    fn kv_host_update_and_replace_check_dims() {
+        let mut a = KvCache::zeros(1, 2, 4, 2, 2);
+        assert!(!a.is_device());
+        assert_eq!(a.dims(), [1, 2, 4, 2, 2]);
+        assert_eq!(a.byte_size(), 2 * 32 * 4);
+        let n = a.dims().iter().product::<usize>();
+        let good = Tensor::f32(a.dims().to_vec(), vec![1.0; n]);
+        a.replace(good.clone(), good.clone()).unwrap();
+        assert_eq!(host_k(&a)[0], 1.0);
+        let bad = Tensor::f32(vec![1, 2, 4, 2, 1], vec![0.0; 16]);
+        assert!(a.replace(bad.clone(), bad.clone()).is_err());
+        // update() with host OutValues follows the same checks
+        a.update(
+            crate::runtime::OutValue::Host(good.clone()),
+            crate::runtime::OutValue::Host(good),
+        )
+        .unwrap();
+        assert!(!a.is_device());
+    }
+
+    #[test]
+    fn kv_bind_host_populates_upload_list() {
+        let a = KvCache::zeros(1, 1, 2, 1, 1);
+        let mut resident: HashMap<usize, Arc<xla::PjRtBuffer>> = HashMap::new();
+        let mut host: Vec<(usize, &Tensor)> = Vec::new();
+        a.bind(3, 4, &mut resident, &mut host);
+        assert_eq!(host.len(), 2);
+        assert_eq!(host[0].0, 3);
+        assert_eq!(host[1].0, 4);
+        assert!(resident.is_empty());
+    }
+
+    #[test]
     fn slot_table_property_no_lost_or_duplicated() {
         crate::testing::check("slot table conservation", 100, |rng| {
             let cap = rng.range(1, 8);
@@ -296,23 +534,21 @@ mod tests {
             let mut next_id = 0u64;
             for _ in 0..50 {
                 if rng.next_f64() < 0.5 {
-                    if let Some(&i) = t.free_indices().first() {
-                        let mut s = slot(1).clone();
-                        // payload type differs; rebuild
+                    if let Some(i) = t.free_indices().next() {
                         let s = Slot {
                             payload: next_id,
                             answer: vec![],
                             logprob_sum: 0.0,
-                            cur: s.cur,
-                            pos: s.pos,
-                            seed: s.seed,
+                            cur: 1,
+                            pos: 5,
+                            seed: 1,
                         };
                         t.insert(i, s).unwrap();
                         live.insert(next_id);
                         next_id += 1;
                     }
                 } else {
-                    let occ = t.occupied_indices();
+                    let occ: Vec<usize> = t.occupied_indices().collect();
                     if !occ.is_empty() {
                         let i = occ[rng.below(occ.len())];
                         let s = t.take(i).unwrap();
@@ -320,7 +556,8 @@ mod tests {
                     }
                 }
                 assert_eq!(t.occupied(), live.len());
-                assert_eq!(t.occupied() + t.free_indices().len(), cap);
+                assert_eq!(t.occupied() + t.free_indices().count(), cap);
+                assert_eq!(t.has_free(), t.occupied() < cap);
             }
         });
     }

@@ -137,6 +137,47 @@ pub fn report(group: &str, results: &[BenchResult]) {
     }
 }
 
+/// Parse a *flat* JSON object of `"key": number` pairs — the only shape
+/// the perf-trajectory files use (no serde in the offline environment).
+/// Keys must not contain `"`/`,`/`:`; returns `None` on anything else.
+pub fn parse_flat_json(text: &str) -> Option<std::collections::BTreeMap<String, f64>> {
+    let body = text.trim().strip_prefix('{')?.strip_suffix('}')?;
+    let mut map = std::collections::BTreeMap::new();
+    for part in body.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part.split_once(':')?;
+        let k = k.trim().strip_prefix('"')?.strip_suffix('"')?;
+        map.insert(k.to_string(), v.trim().parse::<f64>().ok()?);
+    }
+    Some(map)
+}
+
+/// Merge `entries` into the flat JSON metrics file at `path`, creating it
+/// if absent and preserving keys written by other benches. This is how
+/// `BENCH_serving.json` accumulates the perf trajectory (tokens/sec,
+/// host-transfer bytes per decode step, ...) across bench binaries.
+/// Non-finite values are recorded as 0 (JSON has no NaN).
+pub fn merge_bench_json(path: &std::path::Path, entries: &[(String, f64)]) -> std::io::Result<()> {
+    let mut map = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| parse_flat_json(&t))
+        .unwrap_or_default();
+    for (k, v) in entries {
+        debug_assert!(!k.contains(['"', ',', ':']), "unrepresentable bench key {k}");
+        map.insert(k.clone(), if v.is_finite() { *v } else { 0.0 });
+    }
+    let mut s = String::from("{\n");
+    for (i, (k, v)) in map.iter().enumerate() {
+        let sep = if i + 1 < map.len() { "," } else { "" };
+        s.push_str(&format!("  \"{k}\": {v}{sep}\n"));
+    }
+    s.push_str("}\n");
+    std::fs::write(path, s)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,6 +213,39 @@ mod tests {
             items_per_iter: 50.0,
         };
         assert!((r.throughput_per_s() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_json_roundtrip_and_merge() {
+        let d = std::env::temp_dir().join(format!("hybrid_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join("BENCH_test.json");
+        let _ = std::fs::remove_file(&p);
+        merge_bench_json(&p, &[("a.tok_s".to_string(), 10.5), ("b".to_string(), 2.0)]).unwrap();
+        let m = parse_flat_json(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(m["a.tok_s"], 10.5);
+        assert_eq!(m["b"], 2.0);
+        // merge preserves existing keys, overwrites repeated ones, and
+        // sanitizes non-finite values
+        merge_bench_json(
+            &p,
+            &[("b".to_string(), 3.0), ("c".to_string(), f64::NAN)],
+        )
+        .unwrap();
+        let m = parse_flat_json(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m["a.tok_s"], 10.5);
+        assert_eq!(m["b"], 3.0);
+        assert_eq!(m["c"], 0.0);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn flat_json_rejects_garbage() {
+        assert!(parse_flat_json("not json").is_none());
+        assert!(parse_flat_json("{\"a\": x}").is_none());
+        assert_eq!(parse_flat_json("{}").unwrap().len(), 0);
+        assert_eq!(parse_flat_json("{ \"a\" : 1.5 }").unwrap()["a"], 1.5);
     }
 
     #[test]

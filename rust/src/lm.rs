@@ -6,12 +6,12 @@
 //! Training happens *from rust*: python only lowered the train-step graph;
 //! the data loop, LR schedule, and checkpointing live here.
 
-use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::batching::KvCache;
 use crate::corpus::{Query, A_MAX};
 use crate::io::Tensor;
 use crate::rng::Rng;
@@ -156,24 +156,34 @@ impl LmEngine {
         Ok(losses)
     }
 
-    /// Resident-param input map for generation artifacts (params are
-    /// always inputs `0..n` by the manifest contract).
-    fn resident(&self) -> HashMap<usize, Arc<xla::PjRtBuffer>> {
-        self.params.device.iter().cloned().enumerate().collect()
-    }
-
     /// Generate one response per prompt with the *batched* (B = `genb`)
     /// prefill/decode artifacts. `seeds[i]` individualizes sampling per
     /// sequence; `temp = 0` is greedy. Prompts beyond `genb` are processed
     /// in successive waves (run-to-completion batching; the serving layer
-    /// does continuous batching instead).
+    /// does continuous batching instead). KV caches stay device-resident
+    /// across decode iterations (v2 artifacts).
     pub fn generate(&self, prompts: &[&[i32]], seeds: &[u32], temp: f32) -> Result<Vec<Response>> {
+        self.generate_with(prompts, seeds, temp, false)
+    }
+
+    /// [`Self::generate`] with an explicit residency override:
+    /// `force_host_kv = true` pulls the KV caches back to the host after
+    /// every call (the seed's round-trip behavior) — kept for the
+    /// residency-equivalence test and for A/B benchmarking; both paths
+    /// must produce identical tokens for identical seeds.
+    pub fn generate_with(
+        &self,
+        prompts: &[&[i32]],
+        seeds: &[u32],
+        temp: f32,
+        force_host_kv: bool,
+    ) -> Result<Vec<Response>> {
         ensure!(prompts.len() == seeds.len());
         let g = self.rt.manifest.globals;
         let bsz = g.genb;
         let mut out = Vec::with_capacity(prompts.len());
         for (chunk_p, chunk_s) in prompts.chunks(bsz).zip(seeds.chunks(bsz)) {
-            out.extend(self.generate_wave(chunk_p, chunk_s, temp, bsz)?);
+            out.extend(self.generate_wave(chunk_p, chunk_s, temp, bsz, force_host_kv)?);
         }
         Ok(out)
     }
@@ -184,6 +194,7 @@ impl LmEngine {
         seeds: &[u32],
         temp: f32,
         bsz: usize,
+        force_host_kv: bool,
     ) -> Result<Vec<Response>> {
         let g = self.rt.manifest.globals;
         let nb = prompts.len();
@@ -191,7 +202,9 @@ impl LmEngine {
         let prefill = self.rt.exec(&format!("{}.prefill", self.name))?;
         let decode = self.rt.exec(&format!("{}.decode", self.name))?;
         let n = self.params.len();
-        let resident = self.resident();
+        let mut resident = self.params.resident_map();
+        let cache_dims =
+            vec![self.meta.layers, bsz, g.sctx, self.meta.heads, self.meta.headdim];
 
         // right-pad prompts into [bsz, sprompt]
         let mut ptoks = vec![tok::PAD; bsz * g.sprompt];
@@ -214,11 +227,17 @@ impl LmEngine {
             (n + 2, &seeds_t),
             (n + 3, &temp_t),
         ];
-        let mut outs = prefill.run_with_resident(&resident, &host)?;
-        let mut vcache = outs.pop().context("prefill: vcache")?;
-        let mut kcache = outs.pop().context("prefill: kcache")?;
-        let logp = outs.pop().context("prefill: logp")?;
-        let first = outs.pop().context("prefill: next")?;
+        let mut outs = prefill.run_resident(&resident, &host)?;
+        let vc = outs.pop().context("prefill: vcache")?;
+        let kc = outs.pop().context("prefill: kcache")?;
+        let logp = outs.pop().context("prefill: logp")?.into_tensor()?;
+        let first = outs.pop().context("prefill: next")?.into_tensor()?;
+        // the caches never leave the device between iterations unless the
+        // caller forces the host round-trip
+        let mut kv = KvCache::from_outputs(kc, vc, &cache_dims)?;
+        if force_host_kv {
+            kv.to_host(&self.rt)?;
+        }
 
         let mut answers: Vec<Vec<i32>> = vec![Vec::new(); nb];
         let mut lps: Vec<Vec<f32>> = vec![Vec::new(); nb];
@@ -246,20 +265,23 @@ impl LmEngine {
             let cur_t = Tensor::i32(vec![bsz], cur.clone());
             let pos_t = Tensor::i32(vec![bsz], pos.clone());
             let step_t = Tensor::i32(vec![], vec![step as i32 + 1]);
-            let host: Vec<(usize, &Tensor)> = vec![
-                (n, &kcache),
-                (n + 1, &vcache),
+            let mut host: Vec<(usize, &Tensor)> = vec![
                 (n + 2, &cur_t),
                 (n + 3, &pos_t),
                 (n + 4, &step_t),
                 (n + 5, &seeds_t),
                 (n + 6, &temp_t),
             ];
-            let mut outs = decode.run_with_resident(&resident, &host)?;
-            vcache = outs.pop().context("decode: vcache")?;
-            kcache = outs.pop().context("decode: kcache")?;
-            let logp = outs.pop().context("decode: logp")?;
-            let next = outs.pop().context("decode: next")?;
+            kv.bind(n, n + 1, &mut resident, &mut host);
+            let mut outs = decode.run_resident(&resident, &host)?;
+            let vc = outs.pop().context("decode: vcache")?;
+            let kc = outs.pop().context("decode: kcache")?;
+            let logp = outs.pop().context("decode: logp")?.into_tensor()?;
+            let next = outs.pop().context("decode: next")?.into_tensor()?;
+            kv.update(kc, vc)?;
+            if force_host_kv {
+                kv.to_host(&self.rt)?;
+            }
             let next = next.as_i32()?;
             let logp = logp.as_f32()?;
             for b in 0..bsz {
@@ -291,13 +313,15 @@ impl LmEngine {
 
     /// Single-request latency path (B=1 artifacts) — used by the Table 2
     /// driver and the latency benches. Returns the response and the
-    /// number of decode steps executed.
+    /// number of decode steps executed. The single-stream KV cache is
+    /// device-resident across iterations, same as the batched path.
     pub fn generate_one(&self, prompt: &[i32], seed: u32, temp: f32) -> Result<(Response, usize)> {
         let g = self.rt.manifest.globals;
         let prefill = self.rt.exec(&format!("{}.prefill1", self.name))?;
         let decode = self.rt.exec(&format!("{}.decode1", self.name))?;
         let n = self.params.len();
-        let resident = self.resident();
+        let mut resident = self.params.resident_map();
+        let cache_dims = vec![self.meta.layers, 1, g.sctx, self.meta.heads, self.meta.headdim];
 
         let mut ptoks = vec![tok::PAD; g.sprompt];
         ensure!(prompt.len() <= g.sprompt);
@@ -312,11 +336,12 @@ impl LmEngine {
             (n + 2, &seeds_t),
             (n + 3, &temp_t),
         ];
-        let mut outs = prefill.run_with_resident(&resident, &host)?;
-        let mut vcache = outs.pop().context("vcache")?;
-        let mut kcache = outs.pop().context("kcache")?;
-        let mut lp_cur = outs.pop().context("logp")?.as_f32()?[0];
-        let mut cur = outs.pop().context("next")?.as_i32()?[0];
+        let mut outs = prefill.run_resident(&resident, &host)?;
+        let vc = outs.pop().context("vcache")?;
+        let kc = outs.pop().context("kcache")?;
+        let mut lp_cur = outs.pop().context("logp")?.into_tensor()?.as_f32()?[0];
+        let mut cur = outs.pop().context("next")?.into_tensor()?.as_i32()?[0];
+        let mut kv = KvCache::from_outputs(kc, vc, &cache_dims)?;
 
         let mut tokens = Vec::new();
         let mut lps: Vec<f32> = Vec::new();
@@ -328,20 +353,20 @@ impl LmEngine {
             let cur_t = Tensor::i32(vec![1], vec![cur]);
             let pos_t = Tensor::i32(vec![1], vec![pos]);
             let step_t = Tensor::i32(vec![], vec![steps as i32 + 1]);
-            let host: Vec<(usize, &Tensor)> = vec![
-                (n, &kcache),
-                (n + 1, &vcache),
+            let mut host: Vec<(usize, &Tensor)> = vec![
                 (n + 2, &cur_t),
                 (n + 3, &pos_t),
                 (n + 4, &step_t),
                 (n + 5, &seeds_t),
                 (n + 6, &temp_t),
             ];
-            let mut outs = decode.run_with_resident(&resident, &host)?;
-            vcache = outs.pop().context("vcache")?;
-            kcache = outs.pop().context("kcache")?;
-            lp_cur = outs.pop().context("logp")?.as_f32()?[0];
-            cur = outs.pop().context("next")?.as_i32()?[0];
+            kv.bind(n, n + 1, &mut resident, &mut host);
+            let mut outs = decode.run_resident(&resident, &host)?;
+            let vc = outs.pop().context("vcache")?;
+            let kc = outs.pop().context("kcache")?;
+            lp_cur = outs.pop().context("logp")?.into_tensor()?.as_f32()?[0];
+            cur = outs.pop().context("next")?.into_tensor()?.as_i32()?[0];
+            kv.update(kc, vc)?;
             pos += 1;
             steps += 1;
         }

@@ -271,6 +271,14 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         "decode iterations: {}   slot efficiency: {:.2}",
         stats.decode_steps, eff
     );
+    println!(
+        "host transfer per decode step: {:.1} KiB down / {:.1} KiB up (device-resident KV); \
+         admissions moved {:.1} KiB down / {:.1} KiB up total",
+        stats.d2h_bytes_per_step() / 1024.0,
+        stats.h2d_bytes_per_step() / 1024.0,
+        stats.admit_d2h_bytes as f64 / 1024.0,
+        stats.admit_h2d_bytes as f64 / 1024.0
+    );
     Ok(())
 }
 

@@ -2,6 +2,13 @@
 //! build-time python AOT path and this runtime (see `python/compile/aot.py`
 //! for the writer). Line-oriented, whitespace-separated; unknown versions
 //! are rejected.
+//!
+//! Version history:
+//! * **v1** — fused tuple outputs; `out` lines carry name/dtype/dims only
+//!   (every output implicitly `data`, downloaded to the host).
+//! * **v2** — untupled outputs; `out` lines carry a residency class as a
+//!   fourth field (`state` outputs stay device-resident across decode
+//!   iterations, see `Exec::run_resident`).
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -11,7 +18,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::io::DType;
 
-pub const SUPPORTED_VERSION: u32 = 1;
+/// Newest manifest version this runtime understands — what the current
+/// AOT writer (`python/compile/aot.py: MANIFEST_VERSION`) emits.
+pub const SUPPORTED_VERSION: u32 = 2;
+/// All versions this runtime can execute (older versions run through the
+/// fused-tuple host-fallback path).
+pub const SUPPORTED_VERSIONS: [u32; 2] = [1, SUPPORTED_VERSION];
 
 /// Global dims shared by all artifacts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,8 +56,10 @@ pub enum ArgClass {
     Param,
     /// Optimizer state — resident during training.
     Opt,
-    /// Mutable model state (KV caches) — round-trips through the host
-    /// (PJRT returns a fused tuple; see DESIGN.md §8 / runtime docs).
+    /// Mutable model state (KV caches). As an *input* class it marks
+    /// tensors a caller may hold device-resident between calls; as an
+    /// *output* class (manifest v2) it marks outputs `Exec::run_resident`
+    /// leaves on device instead of downloading (see DESIGN.md §8).
     State,
     /// Per-call data (tokens, seeds, temperatures, ...).
     Data,
@@ -117,6 +131,8 @@ impl ArtifactSpec {
 /// Parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest format version (one of [`SUPPORTED_VERSIONS`]).
+    pub version: u32,
     pub globals: Globals,
     pub models: BTreeMap<String, ModelMeta>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
@@ -154,7 +170,7 @@ impl Manifest {
         let mut artifacts: BTreeMap<String, ArtifactSpec> = BTreeMap::new();
         let mut cur: Option<ArtifactSpec> = None;
         let mut saw_end = false;
-        let mut version_ok = false;
+        let mut version: Option<u32> = None;
 
         for (lineno, line) in text.lines().enumerate() {
             let parts: Vec<&str> = line.split_whitespace().collect();
@@ -163,10 +179,12 @@ impl Manifest {
                 None => {}
                 Some("version") => {
                     let v: u32 = parts.get(1).context("version missing")?.parse()?;
-                    if v != SUPPORTED_VERSION {
-                        bail!("unsupported manifest version {v} (supported: {SUPPORTED_VERSION})");
+                    if !SUPPORTED_VERSIONS.contains(&v) {
+                        bail!(
+                            "unsupported manifest version {v} (supported: {SUPPORTED_VERSIONS:?})"
+                        );
                     }
-                    version_ok = true;
+                    version = Some(v);
                 }
                 Some("global") => {
                     let m = kvmap(&parts[1..]);
@@ -228,11 +246,17 @@ impl Manifest {
                 }
                 Some("out") => {
                     let a = cur.as_mut().with_context(ctx)?;
+                    // v1 out lines carry no class (implicitly `data`);
+                    // v2 appends the residency class as a fourth field
+                    let class = match parts.get(4) {
+                        Some(c) => ArgClass::parse(c)?,
+                        None => ArgClass::Data,
+                    };
                     a.outs.push(IoSpec {
                         name: parts.get(1).with_context(ctx)?.to_string(),
                         dtype: parse_dtype(parts.get(2).with_context(ctx)?)?,
                         dims: parse_dims(parts.get(3).with_context(ctx)?)?,
-                        class: ArgClass::Data,
+                        class,
                     });
                 }
                 Some("end") => saw_end = true,
@@ -242,13 +266,12 @@ impl Manifest {
         if let Some(a) = cur.take() {
             artifacts.insert(a.name.clone(), a);
         }
-        if !version_ok {
-            bail!("manifest missing version line");
-        }
+        let version = version.context("manifest missing version line")?;
         if !saw_end {
             bail!("manifest truncated (missing `end`)");
         }
         Ok(Manifest {
+            version,
             globals: globals.context("manifest missing global line")?,
             models,
             artifacts,
@@ -303,9 +326,26 @@ out logits f32 16x64
 end
 ";
 
+    const SAMPLE_V2: &str = "\
+version 2
+global vocab 64 sctx 64 sprompt 40 amax 24 genb 16 trainb 32 scoreb 32
+model nano d 32 layers 1 heads 2 ff 64 headdim 16 nparams 2 head 0
+artifact nano.decode file nano.decode.hlo.txt
+in p.emb f32 64x32 param
+in kcache f32 1x16x64x2x16 state
+in vcache f32 1x16x64x2x16 state
+in tok s32 16 data
+out next s32 16 data
+out logp f32 16 data
+out kcache f32 1x16x64x2x16 state
+out vcache f32 1x16x64x2x16 state
+end
+";
+
     #[test]
     fn parses_sample() {
         let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
         assert_eq!(m.globals.vocab, 64);
         assert_eq!(m.globals.genb, 16);
         assert_eq!(m.models["nano"].d, 32);
@@ -328,9 +368,34 @@ end
     }
 
     #[test]
+    fn v1_outs_default_to_data_class() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("nano.fwd").unwrap();
+        assert!(a.outs.iter().all(|o| o.class == ArgClass::Data));
+    }
+
+    #[test]
+    fn v2_out_classes_parse() {
+        let m = Manifest::parse(SAMPLE_V2).unwrap();
+        assert_eq!(m.version, 2);
+        let a = m.artifact("nano.decode").unwrap();
+        assert_eq!(a.outs.len(), 4);
+        assert_eq!(a.outs[0].class, ArgClass::Data);
+        assert_eq!(a.outs[1].class, ArgClass::Data);
+        assert_eq!(a.outs[2].class, ArgClass::State);
+        assert_eq!(a.outs[3].class, ArgClass::State);
+        assert_eq!(a.output_index("kcache").unwrap(), 2);
+        assert_eq!(a.ins[1].class, ArgClass::State);
+        assert_eq!(a.outs[2].dims, vec![1, 16, 64, 2, 16]);
+    }
+
+    #[test]
     fn rejects_bad_version() {
         let bad = SAMPLE.replace("version 1", "version 99");
         assert!(Manifest::parse(&bad).is_err());
+        // both shipped versions parse
+        assert!(Manifest::parse(SAMPLE).is_ok());
+        assert!(Manifest::parse(SAMPLE_V2).is_ok());
     }
 
     #[test]

@@ -1,23 +1,35 @@
 //! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
 //! the CPU PJRT client (the `xla` crate). This is the only module that
-//! touches XLA; everything above it works with [`crate::io::Tensor`]s.
+//! touches XLA; everything above it works with [`crate::io::Tensor`]s or
+//! opaque device buffers ([`OutValue`]).
 //!
 //! ## Residency model
 //!
 //! * **Parameters** live on device as [`xla::PjRtBuffer`]s ([`ParamSet`]),
 //!   uploaded once (or after each train step) — the hot path never
 //!   re-uploads weights (`execute_b`).
-//! * **Outputs** come back as a *single fused tuple buffer* (the shim's
-//!   `ExecuteOptions` does not untuple, and tuple buffers cannot be split
-//!   on-device through this API), so every output round-trips through a
-//!   host [`xla::Literal`]. KV caches therefore flow host↔device each
-//!   decode call; the fused multi-step decode artifact amortizes this
-//!   (see DESIGN.md §8 and EXPERIMENTS.md §Perf).
+//! * **Outputs** are emitted *untupled* by the AOT path (manifest v2,
+//!   `return_tuple=False` in `python/compile/aot.py`), so every output is
+//!   its own `PjRtBuffer`. [`Exec::run_resident`] downloads only the
+//!   outputs a caller can read (`data` class — sampled tokens, logprobs,
+//!   scores) and hands back `state`-class outputs (KV caches) as
+//!   device-resident buffers that feed straight into the next
+//!   `execute_b` call. Steady-state decode therefore moves O(B) bytes
+//!   per token across the host boundary instead of O(L·B·S·H·Dh).
+//! * **Host fallback**: artifacts lowered before manifest v2 return one
+//!   fused tuple buffer that this API cannot split on-device; for those
+//!   every output falls back to a host download (`OutValue::Host`) and
+//!   callers transparently get the seed's host-round-trip behavior.
+//!
+//! All host↔device traffic through this module is metered by
+//! [`TransferCounters`] (`Runtime::transfers`), which is how the benches
+//! and integration tests assert the zero-copy property.
 
 pub mod manifest;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
@@ -25,27 +37,50 @@ use anyhow::{bail, Context, Result};
 use crate::io::{DType, Tensor};
 pub use manifest::{ArgClass, ArtifactSpec, Globals, IoSpec, Manifest, ModelMeta};
 
-/// Convert a host tensor to an XLA literal.
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let (ty, bytes): (xla::ElementType, Vec<u8>) = match t {
-        Tensor::F32 { data, .. } => (
-            xla::ElementType::F32,
-            data.iter().flat_map(|x| x.to_le_bytes()).collect(),
-        ),
-        Tensor::I32 { data, .. } => (
-            xla::ElementType::S32,
-            data.iter().flat_map(|x| x.to_le_bytes()).collect(),
-        ),
-        Tensor::U32 { data, .. } => (
-            xla::ElementType::U32,
-            data.iter().flat_map(|x| x.to_le_bytes()).collect(),
-        ),
-    };
-    xla::Literal::create_from_shape_and_untyped_data(ty, t.dims(), &bytes)
-        .map_err(|e| anyhow::anyhow!("literal create: {e}"))
+/// Every supported element type (f32/s32/u32) is 4 bytes wide.
+pub const ELEM_BYTES: usize = 4;
+
+fn tensor_bytes(t: &Tensor) -> u64 {
+    (t.len() * ELEM_BYTES) as u64
 }
 
-/// Convert an XLA literal back to a host tensor.
+/// Convert a host tensor to an XLA literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    #[cfg(target_endian = "little")]
+    {
+        // In-memory scalar layout on LE targets is already the LE byte
+        // stream PJRT expects: reinterpret the payload in bulk instead of
+        // converting element by element.
+        let (ty, bytes): (xla::ElementType, &[u8]) = match t {
+            Tensor::F32 { data, .. } => (xla::ElementType::F32, unsafe { data.align_to::<u8>().1 }),
+            Tensor::I32 { data, .. } => (xla::ElementType::S32, unsafe { data.align_to::<u8>().1 }),
+            Tensor::U32 { data, .. } => (xla::ElementType::U32, unsafe { data.align_to::<u8>().1 }),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, t.dims(), bytes)
+            .map_err(|e| anyhow::anyhow!("literal create: {e}"))
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let (ty, bytes): (xla::ElementType, Vec<u8>) = match t {
+            Tensor::F32 { data, .. } => (
+                xla::ElementType::F32,
+                data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+            Tensor::I32 { data, .. } => (
+                xla::ElementType::S32,
+                data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+            Tensor::U32 { data, .. } => (
+                xla::ElementType::U32,
+                data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, t.dims(), &bytes)
+            .map_err(|e| anyhow::anyhow!("literal create: {e}"))
+    }
+}
+
+/// Convert an XLA literal back to a host tensor (bulk `to_vec` copy).
 pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
     let shape = l.array_shape().map_err(|e| anyhow::anyhow!("shape: {e}"))?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -65,6 +100,15 @@ pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
         ),
         other => bail!("unsupported element type {other:?}"),
     })
+}
+
+/// Download a device buffer into a host tensor. Prefer [`Runtime::download`]
+/// where a runtime is at hand so the transfer is metered.
+pub fn download_buffer(buf: &xla::PjRtBuffer) -> Result<Tensor> {
+    let lit = buf
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+    literal_to_tensor(&lit)
 }
 
 fn dtype_matches(spec: DType, t: &Tensor) -> bool {
@@ -87,10 +131,83 @@ fn upload_tensor(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer
     r.map_err(|e| anyhow::anyhow!("upload: {e}"))
 }
 
+/// Cumulative host↔device traffic in bytes, shared by a [`Runtime`] and
+/// every [`Exec`] it compiles. Relaxed counters: they feed perf reports
+/// and residency assertions, not control flow.
+#[derive(Default)]
+pub struct TransferCounters {
+    h2d: AtomicU64,
+    d2h: AtomicU64,
+}
+
+/// Point-in-time copy of [`TransferCounters`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TransferSnapshot {
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+impl TransferCounters {
+    fn add_h2d(&self, bytes: u64) {
+        self.h2d.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn add_d2h(&self, bytes: u64) {
+        self.d2h.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_bytes: self.h2d.load(Ordering::Relaxed),
+            d2h_bytes: self.d2h.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl TransferSnapshot {
+    /// Traffic between two snapshots (`later - self`).
+    pub fn delta(&self, later: TransferSnapshot) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_bytes: later.h2d_bytes.saturating_sub(self.h2d_bytes),
+            d2h_bytes: later.d2h_bytes.saturating_sub(self.d2h_bytes),
+        }
+    }
+}
+
+/// One output of [`Exec::run_resident`]: either downloaded to the host
+/// (`data`/`param`/`opt` classes) or left resident on the device
+/// (`state` class — KV caches on the decode hot path).
+pub enum OutValue {
+    Host(Tensor),
+    Device(Arc<xla::PjRtBuffer>),
+}
+
+impl OutValue {
+    /// Host tensor, downloading first when device-resident.
+    pub fn into_tensor(self) -> Result<Tensor> {
+        match self {
+            OutValue::Host(t) => Ok(t),
+            OutValue::Device(b) => download_buffer(&b),
+        }
+    }
+
+    pub fn device(&self) -> Option<&Arc<xla::PjRtBuffer>> {
+        match self {
+            OutValue::Host(_) => None,
+            OutValue::Device(b) => Some(b),
+        }
+    }
+
+    pub fn is_device(&self) -> bool {
+        matches!(self, OutValue::Device(_))
+    }
+}
+
 /// A compiled artifact plus its manifest spec.
 pub struct Exec {
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
+    transfers: Arc<TransferCounters>,
 }
 
 impl Exec {
@@ -126,36 +243,97 @@ impl Exec {
         self.validate(ins)?;
         let literals: Vec<xla::Literal> =
             ins.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        self.transfers
+            .add_h2d(ins.iter().map(|t| tensor_bytes(t)).sum());
         let bufs = self
             .exe
             .execute::<xla::Literal>(&literals)
             .map_err(|e| anyhow::anyhow!("execute {}: {e}", self.spec.name))?;
-        self.collect_outputs(bufs)
+        let outs = self.first_device_outputs(bufs)?;
+        self.collect_host(outs)
     }
 
-    /// Execute with a mix of device-resident buffers (params/opt) and host
-    /// tensors (data/state). `resident[i]` overrides input `i`.
+    /// Execute with a mix of device-resident buffers and host tensors,
+    /// downloading *every* output. Convenience wrapper over
+    /// [`Self::run_resident`] for artifacts without `state` outputs
+    /// (router/scorer forward passes, tests).
     pub fn run_with_resident(
         &self,
         resident: &HashMap<usize, Arc<xla::PjRtBuffer>>,
         host: &[(usize, &Tensor)],
     ) -> Result<Vec<Tensor>> {
+        self.run_resident(resident, host)?
+            .into_iter()
+            .map(|o| o.into_tensor())
+            .collect()
+    }
+
+    /// Buffer-level execution for the decode hot path: `resident[i]`
+    /// provides input `i` as a device buffer (params, KV caches), `host`
+    /// tensors are uploaded, and each output comes back as an
+    /// [`OutValue`] — `state`-class outputs stay on device, everything
+    /// else is downloaded. Pre-v2 (fused-tuple) artifacts fall back to
+    /// downloading all outputs as `OutValue::Host`.
+    pub fn run_resident(
+        &self,
+        resident: &HashMap<usize, Arc<xla::PjRtBuffer>>,
+        host: &[(usize, &Tensor)],
+    ) -> Result<Vec<OutValue>> {
+        let args = self.assemble(resident, host)?;
+        let arg_refs: Vec<&xla::PjRtBuffer> = args.iter().map(|a| a.as_ref()).collect();
+        let bufs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&arg_refs)
+            .map_err(|e| anyhow::anyhow!("execute_b {}: {e}", self.spec.name))?;
+        let outs = self.first_device_outputs(bufs)?;
+        if outs.len() == self.spec.outs.len() && outs.len() > 1 {
+            // untupled outputs: one buffer per manifest `out` line;
+            // download selectively by residency class
+            outs.into_iter()
+                .zip(&self.spec.outs)
+                .map(|(b, spec)| {
+                    if spec.class == ArgClass::State {
+                        Ok(OutValue::Device(Arc::new(b)))
+                    } else {
+                        let t = self.download_one(&b)?;
+                        Ok(OutValue::Host(t))
+                    }
+                })
+                .collect()
+        } else {
+            // fused tuple (or single output): host fallback
+            Ok(self.collect_host(outs)?.into_iter().map(OutValue::Host).collect())
+        }
+    }
+
+    /// Upload + slot assembly shared by the buffer-level paths.
+    fn assemble(
+        &self,
+        resident: &HashMap<usize, Arc<xla::PjRtBuffer>>,
+        host: &[(usize, &Tensor)],
+    ) -> Result<Vec<Arc<xla::PjRtBuffer>>> {
         let client = self.exe.client();
         let mut slots: Vec<Option<Arc<xla::PjRtBuffer>>> = vec![None; self.spec.ins.len()];
         for (i, b) in resident {
+            if *i >= slots.len() {
+                bail!("artifact {}: resident input {i} out of range", self.spec.name);
+            }
             slots[*i] = Some(b.clone());
         }
         for (i, t) in host {
+            if *i >= slots.len() {
+                bail!("artifact {}: host input {i} out of range", self.spec.name);
+            }
             let spec = &self.spec.ins[*i];
             if t.dims() != spec.dims.as_slice() || !dtype_matches(spec.dtype, t) {
                 bail!("artifact {} input {}: shape/dtype mismatch", self.spec.name, spec.name);
             }
-            let buf = upload_tensor(client, t)
-                .with_context(|| format!("upload {}", spec.name))?;
+            let buf = upload_tensor(client, t).with_context(|| format!("upload {}", spec.name))?;
+            self.transfers.add_h2d(tensor_bytes(t));
             slots[*i] = Some(Arc::new(buf));
         }
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(slots.len());
-        for (i, s) in slots.iter().enumerate() {
+        let mut args: Vec<Arc<xla::PjRtBuffer>> = Vec::with_capacity(slots.len());
+        for (i, s) in slots.into_iter().enumerate() {
             match s {
                 Some(b) => args.push(b),
                 None => bail!(
@@ -166,19 +344,53 @@ impl Exec {
                 ),
             }
         }
-        let bufs = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&args)
-            .map_err(|e| anyhow::anyhow!("execute_b {}: {e}", self.spec.name))?;
-        self.collect_outputs(bufs)
+        Ok(args)
     }
 
-    fn collect_outputs(&self, bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Tensor>> {
-        // single device, single fused tuple output (return_tuple=True)
-        let buf = &bufs[0][0];
-        let lit = buf
+    /// Outputs of the single addressable device, with count sanity-check.
+    fn first_device_outputs(
+        &self,
+        mut bufs: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        if bufs.is_empty() || bufs[0].is_empty() {
+            bail!("artifact {}: execution produced no outputs", self.spec.name);
+        }
+        let outs = bufs.remove(0);
+        if outs.len() != 1 && outs.len() != self.spec.outs.len() {
+            bail!(
+                "artifact {}: got {} output buffers, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Metered single-buffer download.
+    fn download_one(&self, buf: &xla::PjRtBuffer) -> Result<Tensor> {
+        let t = download_buffer(buf)
+            .with_context(|| format!("download output of {}", self.spec.name))?;
+        self.transfers.add_d2h(tensor_bytes(&t));
+        Ok(t)
+    }
+
+    /// Download every output as a host tensor, handling both the
+    /// untupled (one buffer per output) and the fused-tuple layouts.
+    fn collect_host(&self, outs: Vec<xla::PjRtBuffer>) -> Result<Vec<Tensor>> {
+        if outs.len() == self.spec.outs.len() && outs.len() > 1 {
+            return outs.iter().map(|b| self.download_one(b)).collect();
+        }
+        // single buffer: either the sole (untupled) output or a fused tuple
+        let lit = outs[0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("download {}: {e}", self.spec.name))?;
+        if self.spec.outs.len() == 1 {
+            if let Ok(t) = literal_to_tensor(&lit) {
+                self.transfers.add_d2h(tensor_bytes(&t));
+                return Ok(vec![t]);
+            }
+        }
         let parts = lit
             .to_tuple()
             .map_err(|e| anyhow::anyhow!("untuple {}: {e}", self.spec.name))?;
@@ -190,7 +402,10 @@ impl Exec {
                 self.spec.outs.len()
             );
         }
-        parts.iter().map(literal_to_tensor).collect()
+        let ts: Vec<Tensor> = parts.iter().map(literal_to_tensor).collect::<Result<_>>()?;
+        self.transfers
+            .add_d2h(ts.iter().map(tensor_bytes).sum());
+        Ok(ts)
     }
 }
 
@@ -200,6 +415,7 @@ pub struct Runtime {
     dir: PathBuf,
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<Exec>>>,
+    transfers: Arc<TransferCounters>,
 }
 
 impl Runtime {
@@ -219,6 +435,7 @@ impl Runtime {
             dir: dir.to_path_buf(),
             manifest,
             cache: Mutex::new(HashMap::new()),
+            transfers: Arc::new(TransferCounters::default()),
         }))
     }
 
@@ -231,6 +448,11 @@ impl Runtime {
 
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
+    }
+
+    /// Cumulative host↔device traffic through this runtime (all execs).
+    pub fn transfers(&self) -> TransferSnapshot {
+        self.transfers.snapshot()
     }
 
     /// Get (compiling and caching on first use) an executable by name.
@@ -249,7 +471,7 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
-        let exec = Arc::new(Exec { spec, exe });
+        let exec = Arc::new(Exec { spec, exe, transfers: self.transfers.clone() });
         self.cache
             .lock()
             .unwrap()
@@ -257,9 +479,18 @@ impl Runtime {
         Ok(exec)
     }
 
-    /// Upload a host tensor to a device buffer (synchronous copy).
+    /// Upload a host tensor to a device buffer (synchronous, metered).
     pub fn upload(&self, t: &Tensor) -> Result<Arc<xla::PjRtBuffer>> {
-        Ok(Arc::new(upload_tensor(&self.client, t)?))
+        let buf = upload_tensor(&self.client, t)?;
+        self.transfers.add_h2d(tensor_bytes(t));
+        Ok(Arc::new(buf))
+    }
+
+    /// Download a device buffer to a host tensor (synchronous, metered).
+    pub fn download(&self, buf: &xla::PjRtBuffer) -> Result<Tensor> {
+        let t = download_buffer(buf)?;
+        self.transfers.add_d2h(tensor_bytes(&t));
+        Ok(t)
     }
 }
 
@@ -291,6 +522,12 @@ impl ParamSet {
             .collect::<Result<Vec<_>>>()?;
         self.host = host;
         Ok(())
+    }
+
+    /// Resident-input map for generation artifacts (params are always
+    /// inputs `0..n` by the manifest contract).
+    pub fn resident_map(&self) -> HashMap<usize, Arc<xla::PjRtBuffer>> {
+        self.device.iter().cloned().enumerate().collect()
     }
 
     pub fn len(&self) -> usize {
@@ -342,5 +579,34 @@ mod tests {
         assert_eq!(literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap(), t);
         let u = Tensor::u32(vec![], vec![42]);
         assert_eq!(literal_to_tensor(&tensor_to_literal(&u).unwrap()).unwrap(), u);
+    }
+
+    #[test]
+    fn tensor_literal_bulk_bytes_match_per_element() {
+        // the bulk reinterpret must produce exactly the LE byte stream of
+        // the seed's per-element path
+        let t = Tensor::f32(vec![3], vec![1.5, -0.0, f32::MIN_POSITIVE]);
+        let bulk: &[u8] = match &t {
+            Tensor::F32 { data, .. } => unsafe { data.align_to::<u8>().1 },
+            _ => unreachable!(),
+        };
+        let per_elem: Vec<u8> = match &t {
+            Tensor::F32 { data, .. } => data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            _ => unreachable!(),
+        };
+        assert_eq!(bulk, per_elem.as_slice());
+    }
+
+    #[test]
+    fn transfer_counters_accumulate_and_delta() {
+        let c = TransferCounters::default();
+        c.add_h2d(100);
+        c.add_d2h(7);
+        let s0 = c.snapshot();
+        assert_eq!(s0, TransferSnapshot { h2d_bytes: 100, d2h_bytes: 7 });
+        c.add_h2d(1);
+        let d = s0.delta(c.snapshot());
+        assert_eq!(d.h2d_bytes, 1);
+        assert_eq!(d.d2h_bytes, 0);
     }
 }

@@ -20,6 +20,7 @@
 //! * decode workers — slot-based continuous batching ([`BatchMode`]),
 //!   persistent KV caches, iteration-level admission.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -35,7 +36,7 @@ use crate::lm::LmEngine;
 use crate::metrics::{LatencyRecorder, LatencySummary, RoutingCounters, RoutingSnapshot};
 use crate::policy::TierPolicy;
 use crate::router::RouterEngine;
-use crate::runtime::Runtime;
+use crate::runtime::{Exec, Runtime};
 use crate::tokenizer as tok;
 
 /// One tier of the fleet: a named model backend with a relative cost
@@ -232,6 +233,17 @@ pub struct ServerMetrics {
     pub routing: RoutingCounters,
     pub decode_steps: AtomicU64,
     pub decode_slot_steps: AtomicU64,
+    /// Host→device bytes moved by decode iterations (all workers). With
+    /// device-resident KV caches this is the O(B) token/pos/seed upload
+    /// per step; the seed paid the full KV pair both ways on every step.
+    pub decode_h2d_bytes: AtomicU64,
+    /// Device→host bytes moved by decode iterations (all workers).
+    pub decode_d2h_bytes: AtomicU64,
+    /// Host↔device bytes moved by admissions (prefill inputs + the KV
+    /// slot-surgery round-trip), kept separate so the decode counters
+    /// stay a pure per-iteration signal.
+    pub admit_h2d_bytes: AtomicU64,
+    pub admit_d2h_bytes: AtomicU64,
 }
 
 /// Point-in-time per-tier report.
@@ -254,6 +266,35 @@ pub struct ServerStats {
     /// Occupied-slot decode steps (batching efficiency =
     /// `decode_slot_steps / (decode_steps * capacity)`).
     pub decode_slot_steps: u64,
+    /// Host↔device traffic attributable to decode iterations.
+    pub decode_h2d_bytes: u64,
+    pub decode_d2h_bytes: u64,
+    /// Host↔device traffic attributable to admissions (prefill + KV
+    /// slot surgery).
+    pub admit_h2d_bytes: u64,
+    pub admit_d2h_bytes: u64,
+}
+
+impl ServerStats {
+    /// Mean device→host bytes per decode iteration — the residency
+    /// headline number: O(B·token) when KV caches stay on device,
+    /// O(L·B·S·H·Dh) when they round-trip.
+    pub fn d2h_bytes_per_step(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_d2h_bytes as f64 / self.decode_steps as f64
+        }
+    }
+
+    /// Mean host→device bytes per decode iteration.
+    pub fn h2d_bytes_per_step(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_h2d_bytes as f64 / self.decode_steps as f64
+        }
+    }
 }
 
 /// Handle to a running server.
@@ -261,9 +302,29 @@ pub struct Server {
     ingress: Sender<RouterMsg>,
     tier_txs: Vec<Vec<Sender<WorkMsg>>>,
     tier_names: Vec<String>,
-    handles: Vec<JoinHandle<Result<()>>>,
+    router_handle: JoinHandle<Result<()>>,
+    worker_handles: Vec<JoinHandle<Result<()>>>,
     metrics: Arc<ServerMetrics>,
     next_id: AtomicU64,
+}
+
+fn snapshot_stats(metrics: &ServerMetrics, tier_names: &[String]) -> ServerStats {
+    ServerStats {
+        router_latency: metrics.router_latency.snapshot(),
+        e2e_latency: metrics.e2e_latency.snapshot(),
+        tiers: tier_names
+            .iter()
+            .zip(&metrics.tier_latency)
+            .map(|(name, rec)| TierStats { name: name.clone(), latency: rec.snapshot() })
+            .collect(),
+        routing: metrics.routing.snapshot(),
+        decode_steps: metrics.decode_steps.load(Ordering::Relaxed),
+        decode_slot_steps: metrics.decode_slot_steps.load(Ordering::Relaxed),
+        decode_h2d_bytes: metrics.decode_h2d_bytes.load(Ordering::Relaxed),
+        decode_d2h_bytes: metrics.decode_d2h_bytes.load(Ordering::Relaxed),
+        admit_h2d_bytes: metrics.admit_h2d_bytes.load(Ordering::Relaxed),
+        admit_d2h_bytes: metrics.admit_d2h_bytes.load(Ordering::Relaxed),
+    }
 }
 
 impl Server {
@@ -292,6 +353,10 @@ impl Server {
             routing: RoutingCounters::new(tier_names.clone(), costs),
             decode_steps: AtomicU64::new(0),
             decode_slot_steps: AtomicU64::new(0),
+            decode_h2d_bytes: AtomicU64::new(0),
+            decode_d2h_bytes: AtomicU64::new(0),
+            admit_h2d_bytes: AtomicU64::new(0),
+            admit_d2h_bytes: AtomicU64::new(0),
         });
         let (ingress, router_rx) = mpsc::channel::<RouterMsg>();
         // readiness barrier: threads ack after compiling their executables
@@ -299,7 +364,7 @@ impl Server {
         // without this the first requests' latency measures the compiler)
         let (ready_tx, ready_rx) = mpsc::channel::<()>();
 
-        let mut handles = Vec::new();
+        let mut worker_handles = Vec::new();
         let mut dispatch = Vec::new();
         let mut tier_txs = Vec::new();
         let mut n_workers = 0usize;
@@ -313,7 +378,7 @@ impl Server {
                 let m = metrics.clone();
                 let rtx = ready_tx.clone();
                 let d = depth.clone();
-                handles.push(
+                worker_handles.push(
                     std::thread::Builder::new()
                         .name(format!("worker-{}-{r}", tier.name))
                         .spawn(move || worker_thread(cfg, ti, rx, d, m, rtx))?,
@@ -325,16 +390,14 @@ impl Server {
             dispatch.push(TierDispatch { txs: txs.clone(), depths, rr: 0 });
             tier_txs.push(txs);
         }
-        {
+        let router_handle = {
             let cfg = cfg.clone();
             let m = metrics.clone();
             let rtx = ready_tx.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name("router".into())
-                    .spawn(move || router_thread(cfg, router_rx, dispatch, m, rtx))?,
-            );
-        }
+            std::thread::Builder::new()
+                .name("router".into())
+                .spawn(move || router_thread(cfg, router_rx, dispatch, m, rtx))?
+        };
         drop(ready_tx);
         for _ in 0..n_workers + 1 {
             ready_rx
@@ -345,7 +408,8 @@ impl Server {
             ingress,
             tier_txs,
             tier_names,
-            handles,
+            router_handle,
+            worker_handles,
             metrics,
             next_id: AtomicU64::new(0),
         })
@@ -365,37 +429,56 @@ impl Server {
     }
 
     pub fn stats(&self) -> ServerStats {
-        ServerStats {
-            router_latency: self.metrics.router_latency.snapshot(),
-            e2e_latency: self.metrics.e2e_latency.snapshot(),
-            tiers: self
-                .tier_names
-                .iter()
-                .zip(&self.metrics.tier_latency)
-                .map(|(name, rec)| TierStats { name: name.clone(), latency: rec.snapshot() })
-                .collect(),
-            routing: self.metrics.routing.snapshot(),
-            decode_steps: self.metrics.decode_steps.load(Ordering::Relaxed),
-            decode_slot_steps: self.metrics.decode_slot_steps.load(Ordering::Relaxed),
-        }
+        snapshot_stats(&self.metrics, &self.tier_names)
     }
 
     /// Graceful shutdown: drains in-flight work, joins all threads.
+    ///
+    /// Drain protocol: the router is joined *before* the workers are
+    /// signalled. The router may still be dispatching when `Shutdown`
+    /// arrives; signalling workers concurrently let a worker with an
+    /// empty backlog exit while the router still held work for it,
+    /// turning graceful shutdown into a "worker channel closed" error
+    /// (and dropping the request). Joining the router first guarantees
+    /// every routed request sits in a worker queue ahead of the worker's
+    /// `Shutdown` message, and workers drain their queue before exiting.
     pub fn shutdown(self) -> Result<ServerStats> {
-        let _ = self.ingress.send(RouterMsg::Shutdown);
-        for txs in &self.tier_txs {
+        let Server {
+            ingress,
+            tier_txs,
+            tier_names,
+            router_handle,
+            worker_handles,
+            metrics,
+            ..
+        } = self;
+        let _ = ingress.send(RouterMsg::Shutdown);
+        let router_res = match router_handle.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("router thread panicked")),
+        };
+        // all dispatches are now enqueued (or the router failed); workers
+        // may stop once they drain
+        for txs in &tier_txs {
             for tx in txs {
                 let _ = tx.send(WorkMsg::Shutdown);
             }
         }
-        let stats = self.stats();
-        for h in self.handles {
+        let mut worker_err: Option<anyhow::Error> = None;
+        for h in worker_handles {
             match h.join() {
-                Ok(r) => r?,
-                Err(_) => anyhow::bail!("server thread panicked"),
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => worker_err = Some(e),
+                Err(_) => worker_err = Some(anyhow::anyhow!("worker thread panicked")),
             }
         }
-        Ok(stats)
+        router_res?;
+        if let Some(e) = worker_err {
+            return Err(e);
+        }
+        // snapshot after the full drain so completions that raced the
+        // shutdown call are included
+        Ok(snapshot_stats(&metrics, &tier_names))
     }
 }
 
@@ -497,13 +580,34 @@ fn router_thread(
     Ok(())
 }
 
+/// Per-worker state built **once** at thread start: compiled executables,
+/// the resident-params maps, the trace flag, and the persistent KV cache.
+/// The seed rebuilt the resident `HashMap` (and re-read `HYBRID_SERVE_TRACE`)
+/// on every admit/decode call — pure per-token overhead.
 struct WorkerCtx {
     engine: LmEngine,
     table: SlotTable<Work>,
     kv: KvCache,
-    temp: f32,
     tier: usize,
     depth: Arc<AtomicU64>,
+    /// Compiled prefill/decode artifacts (cached `Arc`s, no name lookups
+    /// on the hot path).
+    prefill: Arc<Exec>,
+    decode: Arc<Exec>,
+    /// Params-only resident map for prefill (input layout: params + data;
+    /// never mutated).
+    prefill_resident: HashMap<usize, Arc<xla::PjRtBuffer>>,
+    /// Resident map for decode: params plus — while the cache is
+    /// device-resident — the KV buffers at indices `n`/`n+1`, swapped in
+    /// place each iteration by [`KvCache::bind`].
+    decode_resident: HashMap<usize, Arc<xla::PjRtBuffer>>,
+    /// Logical `[L, genb, sctx, H, Dh]` KV shape (for adopting prefill
+    /// outputs).
+    cache_dims: Vec<usize>,
+    /// Reusable scalar temperature tensor.
+    temp_t: Tensor,
+    /// `HYBRID_SERVE_TRACE` read once at startup.
+    trace: bool,
 }
 
 fn worker_thread(
@@ -520,16 +624,24 @@ fn worker_thread(
     let meta = *rt.manifest.model(&model)?;
     let engine = LmEngine::load(rt.clone(), &model, &cfg.run_dir.join("params").join(&model))?;
     // warm compiles before accepting work (PJRT compile is seconds)
-    rt.exec(&format!("{model}.prefill"))?;
-    rt.exec(&format!("{model}.decode"))?;
+    let prefill = rt.exec(&format!("{model}.prefill"))?;
+    let decode = rt.exec(&format!("{model}.decode"))?;
     let _ = ready.send(());
+    let prefill_resident = engine.params.resident_map();
+    let decode_resident = prefill_resident.clone();
     let mut ctx = WorkerCtx {
-        engine,
         table: SlotTable::new(g.genb),
         kv: KvCache::zeros(meta.layers, g.genb, g.sctx, meta.heads, meta.headdim),
-        temp: cfg.temp,
         tier,
         depth,
+        prefill,
+        decode,
+        prefill_resident,
+        decode_resident,
+        cache_dims: vec![meta.layers, g.genb, g.sctx, meta.heads, meta.headdim],
+        temp_t: Tensor::f32(vec![], vec![cfg.temp]),
+        trace: std::env::var_os("HYBRID_SERVE_TRACE").is_some(),
+        engine,
     };
     let mut backlog: Vec<Work> = Vec::new();
     let mut shutdown = false;
@@ -563,22 +675,25 @@ fn worker_thread(
             BatchMode::Continuous => true,
             BatchMode::RunToCompletion => ctx.table.is_empty(),
         };
-        if can_admit && !backlog.is_empty() && !ctx.table.free_indices().is_empty() {
-            let free = ctx.table.free_indices();
-            let n_new = free.len().min(backlog.len());
+        if can_admit && !backlog.is_empty() && ctx.table.has_free() {
+            let n_new = backlog
+                .len()
+                .min(ctx.table.capacity() - ctx.table.occupied());
+            let free: Vec<usize> = ctx.table.free_indices().take(n_new).collect();
             let admitted: Vec<Work> = backlog.drain(..n_new).collect();
-            admit(&mut ctx, &free[..n_new], admitted, &metrics)?;
+            admit(&mut ctx, &free, admitted, &metrics)?;
         }
 
         // 3. one decode iteration over the occupied slots
         if !ctx.table.is_empty() {
             let t0 = Instant::now();
             decode_step(&mut ctx, &metrics)?;
-            if std::env::var_os("HYBRID_SERVE_TRACE").is_some() {
+            if ctx.trace {
                 eprintln!(
-                    "[trace {model}] decode iter {:.1} ms occ {}",
+                    "[trace {model}] decode iter {:.1} ms occ {} kv {}",
                     t0.elapsed().as_secs_f64() * 1e3,
-                    ctx.table.occupied()
+                    ctx.table.occupied(),
+                    if ctx.kv.is_device() { "device" } else { "host" },
                 );
             }
         }
@@ -587,6 +702,13 @@ fn worker_thread(
 }
 
 /// Prefill newly-admitted requests and install them into slots.
+///
+/// Slot surgery is a host-side operation, so admission is the one place
+/// the persistent cache round-trips the device boundary (`to_host`,
+/// surgery, `to_device`); the steady-state decode loop stays zero-copy.
+/// Admission already pays a full prefill, so the KV hop is amortized
+/// over every token the request will decode. All admission traffic is
+/// metered into `admit_*_bytes`, separate from the decode counters.
 fn admit(
     ctx: &mut WorkerCtx,
     slots: &[usize],
@@ -594,16 +716,13 @@ fn admit(
     metrics: &Arc<ServerMetrics>,
 ) -> Result<()> {
     let rt = ctx.engine.runtime().clone();
+    let before = rt.transfers();
     let g = rt.manifest.globals;
     let prompts: Vec<Vec<i32>> = work.iter().map(|w| w.req.prompt.clone()).collect();
     let seeds: Vec<u32> = work.iter().map(|w| w.req.id as u32).collect();
+    let n = ctx.engine.params.len();
 
     // run prefill in waves of genb (slots are per worker, genb capacity)
-    let prefill = rt.exec(&format!("{}.prefill", ctx.engine.name))?;
-    let n = ctx.engine.params.len();
-    let resident: std::collections::HashMap<usize, Arc<xla::PjRtBuffer>> =
-        ctx.engine.params.device.iter().cloned().enumerate().collect();
-
     let bsz = g.genb;
     let mut ptoks = vec![tok::PAD; bsz * g.sprompt];
     let mut lens = vec![1i32; bsz];
@@ -616,19 +735,20 @@ fn admit(
     let ptoks = Tensor::i32(vec![bsz, g.sprompt], ptoks);
     let lens_t = Tensor::i32(vec![bsz], lens.clone());
     let seeds_t = Tensor::u32(vec![bsz], seedv);
-    let temp_t = Tensor::f32(vec![], vec![ctx.temp]);
     let host: Vec<(usize, &Tensor)> = vec![
         (n, &ptoks),
         (n + 1, &lens_t),
         (n + 2, &seeds_t),
-        (n + 3, &temp_t),
+        (n + 3, &ctx.temp_t),
     ];
-    let mut outs = prefill.run_with_resident(&resident, &host)?;
+    let mut outs = ctx.prefill.run_resident(&ctx.prefill_resident, &host)?;
     let vc = outs.pop().context("vcache")?;
     let kc = outs.pop().context("kcache")?;
-    let logp = outs.pop().context("logp")?;
-    let first = outs.pop().context("next")?;
-    let fresh = KvCache::from_tensors(kc, vc)?;
+    let logp = outs.pop().context("logp")?.into_tensor()?;
+    let first = outs.pop().context("next")?.into_tensor()?;
+    let mut fresh = KvCache::from_outputs(kc, vc, &ctx.cache_dims)?;
+    fresh.to_host(&rt)?;
+    ctx.kv.to_host(&rt)?;
     let first = first.as_i32()?;
     let logp = logp.as_f32()?;
 
@@ -649,17 +769,31 @@ fn admit(
         };
         ctx.table.insert(slot_idx, slot)?;
     }
+    // hand the merged cache back to the device so steady-state decode
+    // starts zero-copy immediately (a no-op gain on pre-v2 artifacts,
+    // whose decode outputs pull it back to the host anyway)
+    ctx.kv.to_device(&rt)?;
+    let moved = before.delta(rt.transfers());
+    metrics
+        .admit_h2d_bytes
+        .fetch_add(moved.h2d_bytes, Ordering::Relaxed);
+    metrics
+        .admit_d2h_bytes
+        .fetch_add(moved.d2h_bytes, Ordering::Relaxed);
     Ok(())
 }
 
 /// One decode iteration for every occupied slot.
+///
+/// Steady state: the KV caches are device-resident, so the only
+/// host↔device traffic is the O(B) token/pos/seed upload and the O(B)
+/// next/logp download — per-token cost scales with model compute, not
+/// KV-cache size (the seed moved the full `[L, B, S, H, Dh]` pair both
+/// ways on every call).
 fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) -> Result<()> {
     let rt = ctx.engine.runtime().clone();
     let g = rt.manifest.globals;
-    let decode = rt.exec(&format!("{}.decode", ctx.engine.name))?;
     let n = ctx.engine.params.len();
-    let resident: std::collections::HashMap<usize, Arc<xla::PjRtBuffer>> =
-        ctx.engine.params.device.iter().cloned().enumerate().collect();
 
     let (cur, pos, seeds) = ctx.table.decode_inputs();
     let bsz = ctx.table.capacity();
@@ -667,22 +801,22 @@ fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) -> Result<()> 
     let pos_t = Tensor::i32(vec![bsz], pos.clone());
     let step_t = Tensor::i32(vec![], vec![(pos.iter().max().copied().unwrap_or(0)) + 1]);
     let seeds_t = Tensor::u32(vec![bsz], seeds);
-    let temp_t = Tensor::f32(vec![], vec![ctx.temp]);
-    let host: Vec<(usize, &Tensor)> = vec![
-        (n, &ctx.kv.k),
-        (n + 1, &ctx.kv.v),
+    let mut host: Vec<(usize, &Tensor)> = vec![
         (n + 2, &cur_t),
         (n + 3, &pos_t),
         (n + 4, &step_t),
         (n + 5, &seeds_t),
-        (n + 6, &temp_t),
+        (n + 6, &ctx.temp_t),
     ];
-    let mut outs = decode.run_with_resident(&resident, &host)?;
+    ctx.kv.bind(n, n + 1, &mut ctx.decode_resident, &mut host);
+    let before = rt.transfers();
+    let mut outs = ctx.decode.run_resident(&ctx.decode_resident, &host)?;
+    let moved = before.delta(rt.transfers());
     let vc = outs.pop().context("vcache")?;
     let kc = outs.pop().context("kcache")?;
-    let logp = outs.pop().context("logp")?;
-    let next = outs.pop().context("next")?;
-    ctx.kv.replace(kc, vc)?;
+    let logp = outs.pop().context("logp")?.into_tensor()?;
+    let next = outs.pop().context("next")?.into_tensor()?;
+    ctx.kv.update(kc, vc)?;
     let next = next.as_i32()?;
     let logp = logp.as_f32()?;
 
@@ -690,8 +824,17 @@ fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) -> Result<()> 
     metrics
         .decode_slot_steps
         .fetch_add(ctx.table.occupied() as u64, Ordering::Relaxed);
+    metrics
+        .decode_h2d_bytes
+        .fetch_add(moved.h2d_bytes, Ordering::Relaxed);
+    metrics
+        .decode_d2h_bytes
+        .fetch_add(moved.d2h_bytes, Ordering::Relaxed);
 
-    for idx in ctx.table.occupied_indices() {
+    for idx in 0..ctx.table.capacity() {
+        if ctx.table.get(idx).is_none() {
+            continue;
+        }
         let (finished, answer, lpsum, nlen);
         {
             let slot = ctx.table.get_mut(idx).unwrap();

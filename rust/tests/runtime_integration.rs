@@ -121,3 +121,85 @@ fn resident_params_execute_matches_literal_path() {
     assert_eq!(out_lit[0], out_res[0], "sampled token must match");
     assert_eq!(out_lit[2], out_res[2], "kcache must match");
 }
+
+#[test]
+fn run_resident_keeps_state_outputs_on_device() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let g = rt.manifest.globals;
+    let init = rt.exec("nano.init").unwrap();
+    let params = init.run(&[&Tensor::u32(vec![], vec![3])]).unwrap();
+    let n = params.len();
+    let mut resident = std::collections::HashMap::new();
+    for (i, p) in params.iter().enumerate() {
+        resident.insert(i, rt.upload(p).unwrap());
+    }
+
+    let prefill = rt.exec("nano.prefill").unwrap();
+    let mut prompt = vec![0i32; g.genb * g.sprompt];
+    for r in prompt.chunks_mut(g.sprompt) {
+        r[0] = 1;
+        r[1] = 9;
+    }
+    let prompt = Tensor::i32(vec![g.genb, g.sprompt], prompt);
+    let lens = Tensor::i32(vec![g.genb], vec![2; g.genb]);
+    let seeds = Tensor::u32(vec![g.genb], vec![0; g.genb]);
+    let temp = Tensor::f32(vec![], vec![0.0]);
+    let host: Vec<(usize, &Tensor)> = vec![
+        (n, &prompt),
+        (n + 1, &lens),
+        (n + 2, &seeds),
+        (n + 3, &temp),
+    ];
+    let mut outs = prefill.run_resident(&resident, &host).unwrap();
+    assert_eq!(outs.len(), 4);
+    let vc = outs.pop().unwrap();
+    let kc = outs.pop().unwrap();
+    let logp = outs.pop().unwrap();
+    let next = outs.pop().unwrap();
+    // data outputs always come back on the host
+    assert!(!next.is_device());
+    assert!(!logp.is_device());
+    if rt.manifest.version < 2 {
+        eprintln!("pre-v2 artifacts: host fallback path (all outputs downloaded)");
+        assert!(!kc.is_device() && !vc.is_device());
+        return;
+    }
+    // v2 untupled artifacts: KV caches stay device-resident, and a decode
+    // step fed from them downloads O(B) bytes, not the O(L·B·S·H·Dh) pair
+    assert!(kc.is_device(), "kcache must stay on device");
+    assert!(vc.is_device(), "vcache must stay on device");
+
+    let decode = rt.exec("nano.decode").unwrap();
+    let mut res2 = resident.clone();
+    res2.insert(n, kc.device().unwrap().clone());
+    res2.insert(n + 1, vc.device().unwrap().clone());
+    let tok = Tensor::i32(vec![g.genb], vec![5; g.genb]);
+    let pos = Tensor::i32(vec![g.genb], vec![2; g.genb]);
+    let step = Tensor::i32(vec![], vec![1]);
+    let host: Vec<(usize, &Tensor)> = vec![
+        (n + 2, &tok),
+        (n + 3, &pos),
+        (n + 4, &step),
+        (n + 5, &seeds),
+        (n + 6, &temp),
+    ];
+    let before = rt.transfers();
+    let outs = decode.run_resident(&res2, &host).unwrap();
+    let moved = before.delta(rt.transfers());
+    assert!(outs[2].is_device() && outs[3].is_device());
+    let meta = *rt.manifest.model("nano").unwrap();
+    let kv_pair_bytes =
+        (2 * meta.layers * g.genb * g.sctx * meta.heads * meta.headdim * 4) as u64;
+    assert!(
+        moved.d2h_bytes < kv_pair_bytes / 4,
+        "decode step downloaded {} B — KV caches are round-tripping (pair = {} B)",
+        moved.d2h_bytes,
+        kv_pair_bytes
+    );
+    assert!(
+        moved.h2d_bytes < kv_pair_bytes / 4,
+        "decode step uploaded {} B — KV caches are round-tripping",
+        moved.h2d_bytes
+    );
+}
