@@ -16,13 +16,15 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 use hybrid_llm::batching::BatchMode;
-use hybrid_llm::calibrate::{calibrate_ladder, evaluate_ladder, ladder_from_pivot};
+use hybrid_llm::calibrate::{
+    calibrate_ladder, calibrate_quality_ladders, evaluate_ladder, ladder_from_pivot,
+};
 use hybrid_llm::corpus::{Scale, Split};
 use hybrid_llm::pipeline::{ladder_specs, model_cost, pair_id, subset, Pipeline};
 use hybrid_llm::policy::{self, TierPolicy};
 use hybrid_llm::router::RouterKind;
 use hybrid_llm::runtime::Runtime;
-use hybrid_llm::serve::{ReplicaSelect, ServeConfig, Server};
+use hybrid_llm::serve::{ReplicaSelect, Request, ServeConfig, Server, DEFAULT_QUEUE_CAP};
 use hybrid_llm::stats;
 
 const FLEET: [&str; 3] = ["nano", "medium", "large"];
@@ -93,6 +95,9 @@ fn main() -> Result<()> {
         return Ok(());
     }
     println!("\n== live 3-tier serving (ladder {:?}) ==", cal.thresholds);
+    // the quality-indexed family: the same validation data, calibrated
+    // at every quality level so each *request* picks its own tradeoff
+    let family = calibrate_quality_ladders(&scores_v, &quals_v, &costs, 8)?;
     let cfg = ServeConfig {
         artifacts_dir: artifacts,
         run_dir: run_dir.clone(),
@@ -103,6 +108,8 @@ fn main() -> Result<()> {
         temp: 0.0,
         mode: BatchMode::Continuous,
         batch_window: Duration::from_millis(5),
+        queue_cap: DEFAULT_QUEUE_CAP,
+        quality_ladders: Some(family),
     };
     let server = Server::start(cfg)?;
     let reqs: Vec<_> = corpus
@@ -110,9 +117,24 @@ fn main() -> Result<()> {
         .filter(|q| q.split == Split::Test)
         .take(24)
         .collect();
-    let rxs: Vec<_> = reqs.iter().map(|q| server.submit(q.prompt.clone())).collect();
-    for rx in rxs {
-        rx.recv().context("completion dropped")?;
+    // interleave per-request quality targets: the same traffic served
+    // cost-first (0.1), calibrated-default (no target), quality-first (0.9)
+    let targets = [Some(0.1f32), None, Some(0.9)];
+    let handles = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, q)| {
+            let mut req = Request::new(q.prompt.clone());
+            if let Some(t) = targets[i % targets.len()] {
+                req = req.quality(t);
+            }
+            server.submit(req).context("submit")
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut tier_by_target = [[0usize; 3]; 3];
+    for (i, h) in handles.into_iter().enumerate() {
+        let c = h.wait().context("completion dropped")?;
+        tier_by_target[i % targets.len()][c.tier.min(2)] += 1;
     }
     let live = server.shutdown()?;
     let total = live.routing.total().max(1);
@@ -123,6 +145,13 @@ fn main() -> Result<()> {
             tr.routed,
             tr.routed as f64 / total as f64 * 100.0,
             ts.latency.p50_ms
+        );
+    }
+    for (t, counts) in targets.iter().zip(&tier_by_target) {
+        let label = t.map_or("default".to_string(), |q| format!("q={q:.1}"));
+        println!(
+            "target {label:<8} device {:>2}  edge {:>2}  cloud {:>2}",
+            counts[0], counts[1], counts[2]
         );
     }
     println!(

@@ -21,7 +21,7 @@ use hybrid_llm::eval::Eval;
 use hybrid_llm::pipeline::{pair_id, Pipeline};
 use hybrid_llm::runtime::Runtime;
 use hybrid_llm::scorer::ScorerEngine;
-use hybrid_llm::serve::{ServeConfig, Server};
+use hybrid_llm::serve::{Request, ServeConfig, Server};
 
 fn main() -> Result<()> {
     let artifacts = Runtime::default_dir();
@@ -63,10 +63,13 @@ fn main() -> Result<()> {
         .take(48)
         .collect();
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = test.iter().map(|q| server.submit(q.prompt.clone())).collect();
-    let completions: Vec<_> = rxs
+    let handles = test
+        .iter()
+        .map(|q| server.submit(Request::new(q.prompt.clone())).context("submit"))
+        .collect::<Result<Vec<_>>>()?;
+    let completions: Vec<_> = handles
         .into_iter()
-        .map(|rx| rx.recv().context("completion"))
+        .map(|h| h.wait().context("completion"))
         .collect::<Result<_>>()?;
     let wall = t0.elapsed();
     let stats = server.shutdown()?;

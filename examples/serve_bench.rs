@@ -14,7 +14,7 @@ use hybrid_llm::batching::BatchMode;
 use hybrid_llm::corpus::{Scale, Split};
 use hybrid_llm::pipeline::{pair_id, Pipeline};
 use hybrid_llm::runtime::Runtime;
-use hybrid_llm::serve::{ServeConfig, Server};
+use hybrid_llm::serve::{Request, ServeConfig, Server};
 
 fn main() -> Result<()> {
     let run_dir = PathBuf::from(
@@ -54,11 +54,18 @@ fn main() -> Result<()> {
             ServeConfig::two_tier(artifacts.clone(), run_dir.clone(), small, large, router, 0.5);
         cfg.mode = mode;
         cfg.batch_window = Duration::from_millis(5);
+        // the bench submits its whole workload upfront — size the
+        // admission window to it so large N_REQUESTS measures serving,
+        // not Busy backpressure
+        cfg.queue_cap = cfg.queue_cap.max(prompts.len());
         let server = Server::start(cfg)?;
         let t0 = std::time::Instant::now();
-        let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone())).collect();
-        for rx in rxs {
-            rx.recv().context("completion dropped")?;
+        let handles = prompts
+            .iter()
+            .map(|p| server.submit(Request::new(p.clone())).context("submit"))
+            .collect::<Result<Vec<_>>>()?;
+        for h in handles {
+            h.wait().context("completion dropped")?;
         }
         let wall = t0.elapsed();
         let stats = server.shutdown()?;

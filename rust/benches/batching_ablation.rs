@@ -10,7 +10,7 @@ use hybrid_llm::batching::BatchMode;
 use hybrid_llm::corpus::{generate, Scale};
 use hybrid_llm::lm::LmEngine;
 use hybrid_llm::runtime::Runtime;
-use hybrid_llm::serve::{ServeConfig, Server};
+use hybrid_llm::serve::{Request, ServeConfig, Server};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = Runtime::default_dir();
@@ -53,15 +53,15 @@ fn main() -> anyhow::Result<()> {
         let server = Server::start(cfg)?;
         let t0 = Instant::now();
         // staggered arrivals: 4 waves to exercise admission policy
-        let mut rxs = Vec::new();
+        let mut handles = Vec::new();
         for chunk in prompts.chunks(16) {
             for p in chunk {
-                rxs.push(server.submit(p.clone()));
+                handles.push(server.submit(Request::new(p.clone()))?);
             }
             std::thread::sleep(Duration::from_millis(120));
         }
-        for rx in rxs {
-            rx.recv()?;
+        for h in handles {
+            h.wait()?;
         }
         let wall = t0.elapsed();
         let stats = server.shutdown()?;

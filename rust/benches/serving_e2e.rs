@@ -1,11 +1,14 @@
 //! Bench: end-to-end serving — requests flow through the router thread
 //! and the two continuous-batching workers. Reports request throughput,
-//! latency percentiles, decoded tokens/sec, and host-transfer bytes per
-//! decode step (the device-resident-KV headline) at several offered
-//! loads. Uses seeded-init weights written to a temp run dir (latency is
-//! weight-independent), so it runs without a pipeline run; the router is
-//! random at threshold 0.5 giving a ~50% routing split. The largest-load
-//! point is appended to `BENCH_serving.json` as the perf trajectory.
+//! latency percentiles, streamed tokens/sec (counted from `Event::Token`s
+//! — the streaming path, not the final completions), and host-transfer
+//! bytes per decode step (the device-resident-KV headline) at several
+//! offered loads, then probes cancel latency (cancel() → terminal
+//! `Cancelled`). Uses seeded-init weights written to a temp run dir
+//! (latency is weight-independent), so it runs without a pipeline run;
+//! the router is random at threshold 0.5 giving a ~50% routing split.
+//! The largest-load point and the cancel probe are appended to
+//! `BENCH_serving.json` as the perf trajectory.
 
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -15,7 +18,7 @@ use hybrid_llm::bench::merge_bench_json;
 use hybrid_llm::corpus::{generate, Scale};
 use hybrid_llm::lm::LmEngine;
 use hybrid_llm::runtime::Runtime;
-use hybrid_llm::serve::{ServeConfig, Server};
+use hybrid_llm::serve::{Event, Request, RequestError, ServeConfig, Server};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = Runtime::default_dir();
@@ -55,13 +58,94 @@ fn main() -> anyhow::Result<()> {
         cfg.batch_window = Duration::from_millis(2);
         let server = Server::start(cfg)?;
         let t0 = Instant::now();
-        let rxs: Vec<_> = prompts[..n].iter().map(|p| server.submit(p.clone())).collect();
+        let handles = prompts[..n]
+            .iter()
+            .map(|p| server.submit(Request::new(p.clone())))
+            .collect::<Result<Vec<_>, _>>()?;
+        // consume the event streams live (round-robin try_recv, so Token
+        // arrival times are real): count streamed tokens per handle, pin
+        // them against the completion's token count, and time the
+        // first-token → last-token window for the streaming rate
         let mut tokens = 0usize;
-        for rx in rxs {
-            tokens += rx.recv()?.tokens.len();
+        let mut streamed = vec![0usize; handles.len()];
+        let mut finished = vec![false; handles.len()];
+        let mut n_done = 0usize;
+        let mut first_tok: Option<Instant> = None;
+        let mut last_tok = t0;
+        while n_done < handles.len() {
+            let mut progressed = false;
+            for (i, h) in handles.iter().enumerate() {
+                if finished[i] {
+                    continue;
+                }
+                loop {
+                    match h.events().try_recv() {
+                        Ok(Event::Token { .. }) => {
+                            let now = Instant::now();
+                            first_tok.get_or_insert(now);
+                            last_tok = now;
+                            streamed[i] += 1;
+                            tokens += 1;
+                            progressed = true;
+                        }
+                        Ok(Event::Done(c)) => {
+                            assert_eq!(
+                                streamed[i],
+                                c.tokens.len(),
+                                "stream diverged from completion"
+                            );
+                            finished[i] = true;
+                            n_done += 1;
+                            progressed = true;
+                            break;
+                        }
+                        Ok(Event::Routed { .. }) => progressed = true,
+                        Ok(ev) => anyhow::bail!("unexpected terminal event: {ev:?}"),
+                        Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                        Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                            anyhow::bail!("event stream closed without a terminal event")
+                        }
+                    }
+                }
+            }
+            if !progressed {
+                std::thread::sleep(Duration::from_micros(200));
+            }
         }
+        let stream_window = first_tok.map(|f| last_tok.duration_since(f).as_secs_f64());
         let wall = t0.elapsed();
-        let stats = server.shutdown()?;
+        // snapshot the load-phase stats *before* the cancel probe so the
+        // trajectory metrics (slot efficiency, e2e percentiles, transfer
+        // bytes) measure the offered load, not the probe's 8 sequential
+        // single-slot decodes
+        let stats = server.stats();
+
+        // cancel-latency probe (server idle): submit, wait until routed,
+        // cancel, time to the terminal event
+        let mut cancel_lat: Option<f64> = None;
+        if n == 96 {
+            for p in prompts.iter().take(8) {
+                let h = server.submit(Request::new(p.clone()).max_new_tokens(64))?;
+                // the first event is the routing decision — wait for it
+                // so the cancel lands on an in-flight request
+                let _ = h.events().recv();
+                let c0 = Instant::now();
+                h.cancel();
+                match h.wait_timeout(Duration::from_secs(30)) {
+                    Err(RequestError::Cancelled) => {
+                        let ms = c0.elapsed().as_secs_f64() * 1e3;
+                        cancel_lat = Some(cancel_lat.map_or(ms, |m: f64| m.min(ms)));
+                    }
+                    // the request can win the race by completing first
+                    Ok(_) => {}
+                    Err(e) => anyhow::bail!("cancel probe: {e}"),
+                }
+            }
+            if let Some(ms) = cancel_lat {
+                json.push(("serving.cancel_latency_ms".to_string(), ms));
+            }
+        }
+        server.shutdown()?;
         let eff = if stats.decode_steps > 0 {
             stats.decode_slot_steps as f64 / (stats.decode_steps as f64 * 16.0)
         } else {
@@ -83,6 +167,18 @@ fn main() -> anyhow::Result<()> {
         if n == 96 {
             json.push(("serving.req_per_sec".to_string(), n as f64 / wall.as_secs_f64()));
             json.push(("serving.tokens_per_sec".to_string(), tok_s));
+            // streaming-mode rate over the first-token → last-token
+            // arrival window — excludes the submit/routing head and
+            // measures the event stream itself, so it can diverge from
+            // the completion-based tokens_per_sec above
+            if let Some(w) = stream_window {
+                if w > 0.0 {
+                    json.push((
+                        "serving.stream_tokens_per_sec".to_string(),
+                        tokens as f64 / w,
+                    ));
+                }
+            }
             json.push(("serving.e2e_p50_ms".to_string(), stats.e2e_latency.p50_ms));
             json.push(("serving.e2e_p95_ms".to_string(), stats.e2e_latency.p95_ms));
             json.push(("serving.slot_efficiency".to_string(), eff));

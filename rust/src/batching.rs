@@ -133,6 +133,26 @@ impl<T> SlotTable<T> {
         s
     }
 
+    /// Remove every occupied slot whose payload matches `pred`, returning
+    /// the removed `(index, slot)` pairs in ascending slot order. This is
+    /// the mid-decode cancellation surgery: a released slot immediately
+    /// reads as free (padding in the next decode wave, reusable by
+    /// admission) while every other slot's KV state and position are
+    /// untouched.
+    pub fn take_matching(
+        &mut self,
+        mut pred: impl FnMut(&T) -> bool,
+    ) -> Vec<(usize, Slot<T>)> {
+        let mut out = Vec::new();
+        for i in 0..self.slots.len() {
+            let hit = self.slots[i].as_ref().is_some_and(|s| pred(&s.payload));
+            if hit {
+                out.push((i, self.take(i).expect("slot checked occupied")));
+            }
+        }
+        out
+    }
+
     /// Batched decode inputs over the full (fixed) capacity: free slots
     /// contribute PAD tokens at pos 0 (pure padding work). These Vecs are
     /// handed to `Tensor::{i32,u32}` (which take ownership), so a scratch
@@ -435,6 +455,26 @@ mod tests {
         t.take(0); // double take is a no-op
         assert_eq!(t.occupied(), t.occupied_indices().count());
         assert_eq!(t.occupied() + t.free_indices().count(), t.capacity());
+    }
+
+    #[test]
+    fn take_matching_releases_only_predicate_slots() {
+        let mut t: SlotTable<u32> = SlotTable::new(4);
+        for (i, p) in [(0usize, 10u32), (1, 11), (3, 13)] {
+            let mut s = slot(1);
+            s.payload = p;
+            t.insert(i, s).unwrap();
+        }
+        let removed = t.take_matching(|&p| p % 2 == 1);
+        assert_eq!(
+            removed.iter().map(|(i, s)| (*i, s.payload)).collect::<Vec<_>>(),
+            vec![(1, 11), (3, 13)]
+        );
+        assert_eq!(t.occupied(), 1);
+        assert_eq!(t.get(0).unwrap().payload, 10);
+        assert_eq!(t.free_indices().collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(t.take_matching(|_| false).is_empty());
+        assert_eq!(t.occupied(), 1);
     }
 
     #[test]

@@ -55,7 +55,9 @@ pub fn calibrate(
     }
     let mut candidates: Vec<f32> = scores.to_vec();
     candidates.push(f32::MAX); // all-at-large fallback (cost advantage 0)
-    candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: observed scores can contain NaN (untrained router) and
+    // the grid sort must not panic on them
+    candidates.sort_by(f32::total_cmp);
     candidates.dedup();
     let mut best: Option<Calibration> = None;
     for &thr in &candidates {
@@ -132,7 +134,7 @@ pub fn calibrate_ladder(
     let k = q_tiers.len().max(1);
     let mut candidates: Vec<f32> = scores.iter().copied().filter(|s| s.is_finite()).collect();
     candidates.push(f32::INFINITY);
-    candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    candidates.sort_by(f32::total_cmp);
     candidates.dedup();
     let mut best: Option<LadderCalibration> = None;
     for &pivot in &candidates {
@@ -153,6 +155,46 @@ pub fn calibrate_ladder(
     best.unwrap_or_else(|| {
         evaluate_ladder(&ladder_from_pivot(f32::INFINITY, k), scores, q_tiers, costs)
     })
+}
+
+/// Build a quality-indexed ladder family — §4.5 generalized along the
+/// *quality* axis, the calibration behind the serving API's per-request
+/// quality knob ([`crate::policy::LadderFamily`]).
+///
+/// Rung `j` of `0..=levels` targets quality level `q_j = j / levels`,
+/// mapped to a drop budget by linear interpolation between the two
+/// anchors the data pins down exactly: quality `1` allows `0%` drop
+/// (all-at-most-expensive is always feasible) and quality `0` allows the
+/// full drop of the all-at-cheapest assignment — the worst this fleet
+/// can do, so the budget is never binding there. Each rung is then
+/// calibrated with [`calibrate_ladder`] (max cost advantage subject to
+/// its budget) and the family constructor enforces pointwise threshold
+/// monotonicity across rungs, so raising a request's quality target can
+/// only move it toward more capable tiers.
+pub fn calibrate_quality_ladders(
+    scores: &[f32],
+    q_tiers: &[Vec<f64>],
+    costs: &[f64],
+    levels: usize,
+) -> crate::Result<crate::policy::LadderFamily> {
+    let k = q_tiers.len().max(1);
+    let levels = levels.max(1);
+    // drop of the all-at-cheapest assignment (thresholds nothing can
+    // miss); a cheap tier that *beats* the top tier gives a negative
+    // drop — clamp so budgets stay non-negative
+    let all_cheap = vec![f32::NEG_INFINITY; k.saturating_sub(1)];
+    let max_drop = evaluate_ladder(&all_cheap, scores, q_tiers, costs)
+        .drop_pct
+        .max(0.0);
+    let rungs = (0..=levels)
+        .map(|j| {
+            let q = j as f32 / levels as f32;
+            let budget = (1.0 - q as f64) * max_drop;
+            let rung = calibrate_ladder(scores, q_tiers, costs, budget);
+            (q, rung.thresholds)
+        })
+        .collect();
+    crate::policy::LadderFamily::new(rungs)
 }
 
 /// Subsample `k` indices for the §4.5 "500 validation samples" protocol.
@@ -275,6 +317,38 @@ mod tests {
         let c = calibrate_ladder(&[], &[vec![], vec![]], &[0.0, 1.0], 1.0);
         assert_eq!(c.cost_advantage, 0.0);
         assert_eq!(c.drop_pct, 0.0);
+    }
+
+    #[test]
+    fn quality_ladders_anchor_the_extremes() {
+        // separable 2-tier data: 25% of queries are free wins for the
+        // cheap tier, the rest cost quality
+        let (scores, qs, ql) = perfect_case(100);
+        let fam = calibrate_quality_ladders(&scores, &[qs.clone(), ql.clone()], &[0.0, 1.0], 4)
+            .unwrap();
+        assert_eq!(fam.n_tiers(), 2);
+        // quality 0: no budget binds — everything at the cheapest tier
+        assert!(scores.iter().all(|&s| fam.assign_one(0.0, s) == 0));
+        // quality 1: zero-drop budget — only the free wins stay cheap
+        let assign: Vec<usize> = scores.iter().map(|&s| fam.assign_one(1.0, s)).collect();
+        let q = crate::policy::achieved_quality_tiers(&assign, &[qs, ql.clone()]);
+        let drop = crate::metrics::quality_drop_pct(crate::stats::mean(&ql), q);
+        assert!(drop <= 1e-9, "quality-1 rung leaked drop: {drop}");
+        let frac_cheap =
+            assign.iter().filter(|&&t| t == 0).count() as f64 / assign.len() as f64;
+        assert!((frac_cheap - 0.25).abs() < 1e-9, "{frac_cheap}");
+    }
+
+    #[test]
+    fn quality_ladders_survive_nan_scores_and_degenerate_inputs() {
+        // NaN scores must not panic the candidate sort (regression) and
+        // empty inputs must produce a usable (all-conservative) family
+        let scores = vec![0.9, f32::NAN, 0.1];
+        let q = vec![vec![-3.0; 3], vec![-1.0; 3]];
+        let fam = calibrate_quality_ladders(&scores, &q, &[0.0, 1.0], 3).unwrap();
+        assert_eq!(fam.n_tiers(), 2);
+        let fam = calibrate_quality_ladders(&[], &[vec![], vec![]], &[0.0, 1.0], 3).unwrap();
+        assert_eq!(fam.assign_one(0.5, 0.9), 1, "no data => route conservatively");
     }
 
     #[test]

@@ -92,6 +92,22 @@ impl Args {
         }
     }
 
+    /// Optional typed flag: `None` when absent, parse errors surfaced —
+    /// for flags whose absence means "feature off" rather than a default
+    /// value, like `serve-demo --quality`.
+    pub fn get_parse_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.flags
+            .get(key)
+            .map(|v| {
+                v.parse::<T>()
+                    .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}"))
+            })
+            .transpose()
+    }
+
     /// Boolean switch (`--verbose` style).
     pub fn switch(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
@@ -146,6 +162,15 @@ mod tests {
         assert!(a.get_parse::<usize>("steps", 0).is_ok());
         let b = parse("train --steps abc");
         assert!(b.get_parse::<usize>("steps", 0).is_err());
+    }
+
+    #[test]
+    fn parse_opt_flag() {
+        let a = parse("serve-demo --quality 0.8");
+        assert_eq!(a.get_parse_opt::<f32>("quality").unwrap(), Some(0.8));
+        assert_eq!(a.get_parse_opt::<f32>("missing").unwrap(), None);
+        let b = parse("serve-demo --quality abc");
+        assert!(b.get_parse_opt::<f32>("quality").is_err());
     }
 
     #[test]

@@ -605,7 +605,8 @@ pub fn gap_diff(scores: &[f32], gap: &[f64], target: f64) -> f64 {
     let n = scores.len();
     let k = ((target * n as f64).round() as usize).clamp(1, n.saturating_sub(1));
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    // total_cmp: NaN router scores must not panic the eval driver
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
     let small: Vec<f64> = idx[..k].iter().map(|&i| gap[i]).collect();
     let large: Vec<f64> = idx[k..].iter().map(|&i| gap[i]).collect();
     stats::mean(&small) - stats::mean(&large)

@@ -19,9 +19,41 @@
 //! through the PJRT C API (the `xla` crate) and drives everything —
 //! including *training* the LMs and routers — from Rust.
 //!
+//! ## The request API
+//!
+//! The paper's quality/cost knob is a **request parameter**, not server
+//! state. A [`serve::Request`] is built fluently — prompt, quality
+//! target in `[0, 1]`, token budget, deadline, optional policy override
+//! — and submitted through a bounded admission window:
+//!
+//! ```ignore
+//! let server = serve::Server::start(cfg)?;
+//! let handle = server.submit(
+//!     serve::Request::new(prompt)
+//!         .quality(0.9)
+//!         .max_new_tokens(32)
+//!         .deadline(Duration::from_secs(2)),
+//! )?; // Err(Busy) = backpressure, Err(Closed) = server gone
+//! for ev in handle.events().iter() {
+//!     // Routed { tier, score }, Token { token, logprob } per decoded
+//!     // token, then one terminal Done / Failed / Cancelled
+//! }
+//! ```
+//!
+//! Per-request quality targets resolve to tiers at routing time through
+//! a calibrated quality-indexed ladder family
+//! ([`policy::LadderFamily`], built by
+//! [`calibrate::calibrate_quality_ladders`]), so requests in the same
+//! batch window can trade quality for cost independently.
+//! [`serve::RequestHandle::cancel`] frees an in-flight request's KV
+//! slot within one decode step; [`serve::RequestHandle::wait`] is the
+//! blocking convenience for callers that only want the final
+//! [`serve::Completion`].
+//!
 //! See `DESIGN.md` for the full system inventory, the tier-fleet serving
-//! architecture, and the per-experiment index (§6); measured results are
-//! rendered into `runs/<name>/results/` by the `eval` drivers.
+//! architecture (§3), the quality→ladder calibration table (§5), and the
+//! per-experiment index (§6); measured results are rendered into
+//! `runs/<name>/results/` by the `eval` drivers.
 
 pub mod batching;
 pub mod bench;

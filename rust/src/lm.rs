@@ -178,12 +178,43 @@ impl LmEngine {
         temp: f32,
         force_host_kv: bool,
     ) -> Result<Vec<Response>> {
+        self.generate_observed(prompts, seeds, temp, force_host_kv, &mut |_, _, _| {})
+    }
+
+    /// Streaming generation: `on_token(i, token, logprob)` fires for
+    /// prompt `i`'s tokens in decode order, as each wave samples them —
+    /// the same stream the serving layer forwards as
+    /// `serve::Event::Token`s. Concatenating prompt `i`'s callbacks
+    /// reproduces `Response::tokens` exactly (pinned by the integration
+    /// suite's streaming-equivalence test).
+    pub fn generate_streaming(
+        &self,
+        prompts: &[&[i32]],
+        seeds: &[u32],
+        temp: f32,
+        on_token: &mut dyn FnMut(usize, i32, f32),
+    ) -> Result<Vec<Response>> {
+        self.generate_observed(prompts, seeds, temp, false, on_token)
+    }
+
+    fn generate_observed(
+        &self,
+        prompts: &[&[i32]],
+        seeds: &[u32],
+        temp: f32,
+        force_host_kv: bool,
+        on_token: &mut dyn FnMut(usize, i32, f32),
+    ) -> Result<Vec<Response>> {
         ensure!(prompts.len() == seeds.len());
         let g = self.rt.manifest.globals;
         let bsz = g.genb;
         let mut out = Vec::with_capacity(prompts.len());
-        for (chunk_p, chunk_s) in prompts.chunks(bsz).zip(seeds.chunks(bsz)) {
-            out.extend(self.generate_wave(chunk_p, chunk_s, temp, bsz, force_host_kv)?);
+        for (wave, (chunk_p, chunk_s)) in
+            prompts.chunks(bsz).zip(seeds.chunks(bsz)).enumerate()
+        {
+            let base = wave * bsz;
+            let mut observe = |b: usize, t: i32, lp: f32| on_token(base + b, t, lp);
+            out.extend(self.generate_wave(chunk_p, chunk_s, temp, bsz, force_host_kv, &mut observe)?);
         }
         Ok(out)
     }
@@ -195,6 +226,7 @@ impl LmEngine {
         temp: f32,
         bsz: usize,
         force_host_kv: bool,
+        on_token: &mut dyn FnMut(usize, i32, f32),
     ) -> Result<Vec<Response>> {
         let g = self.rt.manifest.globals;
         let nb = prompts.len();
@@ -250,6 +282,7 @@ impl LmEngine {
             } else {
                 answers[b].push(cur[b]);
                 lps[b].push(logp0[b]);
+                on_token(b, cur[b], logp0[b]);
             }
         }
         let mut pos: Vec<i32> = lens.clone();
@@ -294,6 +327,7 @@ impl LmEngine {
                 } else {
                     answers[b].push(next[b]);
                     lps[b].push(logp[b]);
+                    on_token(b, next[b], logp[b]);
                 }
                 cur[b] = next[b];
             }

@@ -51,6 +51,7 @@ subcommands:
   table2       --run DIR [--queries N]                    live latency measurement (Table 2)
   serve-demo   --run DIR [--requests N] [--threshold T] [--mode cont|rtc]
                [--tiers m[:replicas[:cost]],...] [--thresholds T1,T2,...] [--select rr|sq]
+               [--quality Q] [--queue-cap N] [--deadline-ms MS]
   corpus-stats [--scale S]                                print corpus stats without a run";
 
 fn scale_of(args: &Args) -> Result<Scale> {
@@ -160,6 +161,40 @@ fn cmd_table2(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Split a router directory name (`<pair>_<kind>`, e.g.
+/// `medium_large_trans`) into the stored-score pair id and kind. Random
+/// routing (empty name) or an unrecognized suffix yields `None`.
+fn router_score_source(router: &str) -> Option<(&str, hybrid_llm::router::RouterKind)> {
+    let (pair, kind) = router.rsplit_once('_')?;
+    Some((pair, hybrid_llm::router::RouterKind::from_name(kind)?))
+}
+
+/// Best-effort calibrated quality→ladder family for the fleet: needs a
+/// completed pipeline run (stored scores for the configured router,
+/// per-tier-model quality samples). `None` when any input is missing —
+/// the server then falls back to its synthetic family.
+fn calibrated_quality_family(
+    pl: &hybrid_llm::pipeline::Pipeline,
+    corpus: &[corpus::Query],
+    tiers: &[hybrid_llm::serve::TierSpec],
+    router_pair: &str,
+    kind: hybrid_llm::router::RouterKind,
+) -> Option<hybrid_llm::policy::LadderFamily> {
+    let val = corpus::split_ids(corpus, corpus::Split::Val);
+    let all_scores = pl.load_router_scores(router_pair, kind).ok()?;
+    let scores: Vec<f32> = val
+        .iter()
+        .map(|&i| all_scores.get(i).copied())
+        .collect::<Option<Vec<f32>>>()?;
+    let mut quals: Vec<Vec<f64>> = Vec::new();
+    for t in tiers {
+        let q = pl.load_quality(&t.model, corpus).ok()?;
+        quals.push(hybrid_llm::pipeline::subset(&q, &val).mean());
+    }
+    let costs: Vec<f64> = tiers.iter().map(|t| t.cost).collect();
+    hybrid_llm::calibrate::calibrate_quality_ladders(&scores, &quals, &costs, 8).ok()
+}
+
 /// End-to-end serving demo: batched requests through the router and the
 /// tier fleet (default: the paper's two-tier small/large pair).
 fn cmd_serve_demo(args: &Args) -> Result<()> {
@@ -167,6 +202,9 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
     let n: usize = args.get_parse("requests", 64)?;
     let threshold: f32 = args.get_parse("threshold", 0.5)?;
+    let quality: Option<f32> = args.get_parse_opt("quality")?;
+    let queue_cap: usize = args.get_parse("queue-cap", hybrid_llm::serve::DEFAULT_QUEUE_CAP)?;
+    let deadline_ms: Option<u64> = args.get_parse_opt("deadline-ms")?;
     let mode = match args.get("mode", "cont") {
         "rtc" => BatchMode::RunToCompletion,
         _ => BatchMode::Continuous,
@@ -209,6 +247,23 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         .iter()
         .map(|t| format!("{}x{} (cost {:.2})", t.name, t.replicas, t.cost))
         .collect();
+    // quality→ladder family: calibrated against the *configured*
+    // router's stored validation scores when available, synthetic
+    // otherwise (only consulted by requests carrying --quality)
+    let quality_ladders = match router_score_source(&router)
+        .and_then(|(pair, kind)| calibrated_quality_family(&pl, &corpus, &tiers, pair, kind))
+    {
+        Some(f) => {
+            println!(
+                "[serve] quality ladders calibrated from {router}'s validation scores in {run_dir:?}"
+            );
+            Some(f)
+        }
+        None => {
+            println!("[serve] quality ladders synthetic (no calibration data in the run dir)");
+            None
+        }
+    };
     let cfg = hybrid_llm::serve::ServeConfig {
         artifacts_dir: artifacts,
         run_dir,
@@ -219,33 +274,66 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         temp: 0.0,
         mode,
         batch_window: Duration::from_millis(5),
+        queue_cap,
+        quality_ladders,
     };
-    println!("[serve] starting fleet [{}], {mode:?}", fleet_desc.join(", "));
+    println!(
+        "[serve] starting fleet [{}], {mode:?}, queue cap {queue_cap}{}",
+        fleet_desc.join(", "),
+        quality.map_or(String::new(), |q| format!(", quality target {q}"))
+    );
     let server = hybrid_llm::serve::Server::start(cfg)?;
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = test
-        .iter()
-        .map(|q| server.submit(q.prompt.clone()))
-        .collect();
+    let mut handles = Vec::new();
+    for q in &test {
+        let mut req = hybrid_llm::serve::Request::new(q.prompt.clone());
+        if let Some(qt) = quality {
+            req = req.quality(qt);
+        }
+        if let Some(ms) = deadline_ms {
+            req = req.deadline(Duration::from_millis(ms));
+        }
+        // bounded admission: on Busy, back off briefly and retry
+        loop {
+            match server.submit(req.clone()) {
+                Ok(h) => {
+                    handles.push(h);
+                    break;
+                }
+                Err(hybrid_llm::serve::SubmitError::Busy) => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(anyhow::anyhow!(e)).context("submit"),
+            }
+        }
+    }
     let mut completions = Vec::new();
-    for rx in rxs {
-        completions.push(rx.recv().context("completion dropped")?);
+    let mut shed = 0usize;
+    for h in handles {
+        match h.wait() {
+            Ok(c) => completions.push(c),
+            Err(hybrid_llm::serve::RequestError::Failed(_)) => shed += 1,
+            Err(e) => return Err(anyhow::anyhow!(e)).context("completion dropped"),
+        }
     }
     let wall = t0.elapsed();
     let stats = server.shutdown()?;
 
     println!("\n== serving report ==");
     println!(
-        "requests: {}   wall: {:.2}s   throughput: {:.1} req/s",
+        "requests: {} completed / {} shed   wall: {:.2}s   throughput: {:.1} req/s",
         completions.len(),
+        shed,
         wall.as_secs_f64(),
         completions.len() as f64 / wall.as_secs_f64()
     );
     println!(
-        "cost advantage: {:.1}% ({} small / {} large)",
+        "cost advantage: {:.1}% ({} small / {} large)   cancelled: {}   deadline-shed: {}",
         stats.routing.cost_advantage * 100.0,
         stats.routing.to_small(),
-        stats.routing.to_large()
+        stats.routing.to_large(),
+        stats.routing.cancelled_total(),
+        stats.routing.shed_total()
     );
     println!(
         "router latency: mean {:.2} ms   e2e p50 {:.0} ms  p95 {:.0} ms",

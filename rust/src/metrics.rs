@@ -79,6 +79,12 @@ pub struct RoutingCounters {
 #[derive(Debug, Default, Clone)]
 struct RoutingCountersInner {
     routed: Vec<u64>,
+    /// Requests cancelled after their routing decision (caller-initiated
+    /// or handle dropped), per tier.
+    cancelled: Vec<u64>,
+    /// Requests shed at dispatch/admission because their deadline had
+    /// already expired, per tier.
+    shed: Vec<u64>,
     completed: u64,
     quality_sum: f64,
 }
@@ -88,11 +94,17 @@ impl RoutingCounters {
     /// is padded with 1.0 (the most-expensive-tier weight).
     pub fn new(names: Vec<String>, mut costs: Vec<f64>) -> Self {
         costs.resize(names.len(), 1.0);
-        let routed = vec![0u64; names.len()];
+        let zeros = vec![0u64; names.len()];
         RoutingCounters {
-            names,
             costs,
-            inner: Mutex::new(RoutingCountersInner { routed, completed: 0, quality_sum: 0.0 }),
+            inner: Mutex::new(RoutingCountersInner {
+                routed: zeros.clone(),
+                cancelled: zeros.clone(),
+                shed: zeros,
+                completed: 0,
+                quality_sum: 0.0,
+            }),
+            names,
         }
     }
 
@@ -108,6 +120,30 @@ impl RoutingCounters {
         if let Some(last) = g.routed.len().checked_sub(1) {
             let i = tier.min(last);
             g.routed[i] += 1;
+        }
+    }
+
+    /// Count one request cancelled at `tier` (clamped). Cancellations
+    /// after dispatch are counted in *both* `routed` and `cancelled`;
+    /// cancellations caught at the routing decision only in `cancelled`.
+    pub fn cancel(&self, tier: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(last) = g.cancelled.len().checked_sub(1) {
+            let i = tier.min(last);
+            g.cancelled[i] += 1;
+        }
+    }
+
+    /// Count one deadline-expired request shed before decode at `tier`
+    /// (clamped). A request shed at the routing decision is not counted
+    /// in `routed`; one shed from a worker backlog (its deadline expired
+    /// *after* dispatch) is in both — like `cancelled`, `routed` tracks
+    /// dispatch, not decode work.
+    pub fn shed(&self, tier: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(last) = g.shed.len().checked_sub(1) {
+            let i = tier.min(last);
+            g.shed[i] += 1;
         }
     }
 
@@ -137,8 +173,14 @@ impl RoutingCounters {
                 .names
                 .iter()
                 .zip(&self.costs)
-                .zip(&g.routed)
-                .map(|((name, &cost), &routed)| TierRouting { name: name.clone(), cost, routed })
+                .enumerate()
+                .map(|(i, (name, &cost))| TierRouting {
+                    name: name.clone(),
+                    cost,
+                    routed: g.routed[i],
+                    cancelled: g.cancelled[i],
+                    shed: g.shed[i],
+                })
                 .collect(),
             completed: g.completed,
             cost_advantage,
@@ -151,12 +193,16 @@ impl RoutingCounters {
     }
 }
 
-/// One tier's routing count in a snapshot.
+/// One tier's routing counts in a snapshot.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TierRouting {
     pub name: String,
     pub cost: f64,
     pub routed: u64,
+    /// Cancelled after the routing decision (see [`RoutingCounters::cancel`]).
+    pub cancelled: u64,
+    /// Deadline-shed before decode (see [`RoutingCounters::shed`]).
+    pub shed: u64,
 }
 
 /// Point-in-time routing summary.
@@ -186,6 +232,16 @@ impl RoutingSnapshot {
     /// Queries routed to the most expensive tier (the seed's `to_large`).
     pub fn to_large(&self) -> u64 {
         self.tiers.last().map(|t| t.routed).unwrap_or(0)
+    }
+
+    /// Total cancelled requests across tiers.
+    pub fn cancelled_total(&self) -> u64 {
+        self.tiers.iter().map(|t| t.cancelled).sum()
+    }
+
+    /// Total deadline-shed requests across tiers.
+    pub fn shed_total(&self) -> u64 {
+        self.tiers.iter().map(|t| t.shed).sum()
     }
 }
 
@@ -275,10 +331,34 @@ mod tests {
     }
 
     #[test]
+    fn cancelled_and_shed_counted_per_tier() {
+        let c = RoutingCounters::two_tier();
+        c.route(0);
+        c.route(1);
+        c.cancel(1); // cancelled after dispatch: stays in routed too
+        c.shed(0); // shed at dispatch: never routed
+        c.shed(99); // clamps to the last tier
+        let s = c.snapshot();
+        assert_eq!(s.total(), 2);
+        assert_eq!(s.tiers[1].cancelled, 1);
+        assert_eq!(s.tiers[0].cancelled, 0);
+        assert_eq!(s.tiers[0].shed, 1);
+        assert_eq!(s.tiers[1].shed, 1);
+        assert_eq!(s.cancelled_total(), 1);
+        assert_eq!(s.shed_total(), 2);
+        // cost advantage is computed over routed traffic only
+        assert!((s.cost_advantage - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
     fn empty_fleet_snapshot_is_inert() {
         let c = RoutingCounters::new(Vec::new(), Vec::new());
         c.route(0); // must not panic
+        c.cancel(0);
+        c.shed(0);
         let s = c.snapshot();
+        assert_eq!(s.cancelled_total(), 0);
+        assert_eq!(s.shed_total(), 0);
         assert_eq!(s.total(), 0);
         assert_eq!(s.cost_advantage, 0.0);
         assert_eq!(s.to_small(), 0);

@@ -120,14 +120,114 @@ impl TierPolicy {
 }
 
 /// First tier whose threshold the score clears (thresholds descending),
-/// else the last tier.
-fn ladder_tier(thresholds: &[f32], score: f32) -> usize {
+/// else the last tier. NaN scores clear nothing and land in the last
+/// (most capable) tier — same fall-through as [`Policy::Threshold`].
+pub fn ladder_tier(thresholds: &[f32], score: f32) -> usize {
     for (i, &t) in thresholds.iter().enumerate() {
         if score >= t {
             return i;
         }
     }
     thresholds.len()
+}
+
+/// A quality-indexed family of threshold ladders: resolves a per-request
+/// quality target in `[0, 1]` to a K-tier ladder at routing time, so two
+/// requests in the same batch window can route under different targets.
+///
+/// A family is a set of **rungs** `(quality level, thresholds)` ascending
+/// in quality. Lookup rounds *up*: a target picks the lowest rung whose
+/// level covers it, so the achieved quality meets or exceeds the target
+/// (grid density controls the slack). The constructor sorts rungs and
+/// enforces pointwise non-decreasing thresholds along the quality axis,
+/// which makes tier assignment monotone: for a fixed router score,
+/// raising the quality target can never route to a *cheaper* tier
+/// (property-tested in `tests/property_suite.rs`).
+///
+/// Build a calibrated family from validation data with
+/// [`crate::calibrate::calibrate_quality_ladders`], or an uncalibrated
+/// placeholder with [`LadderFamily::synthetic`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LadderFamily {
+    /// `(quality level, thresholds)`, ascending in quality, thresholds
+    /// pointwise non-decreasing across rungs.
+    rungs: Vec<(f32, Vec<f32>)>,
+}
+
+impl LadderFamily {
+    /// Validate and normalize rungs: levels must be finite in `[0, 1]`,
+    /// thresholds non-NaN (`±inf` is meaningful: all-cheapest /
+    /// all-most-capable) and all the same length. Rungs are sorted by
+    /// level and thresholds are made pointwise non-decreasing along the
+    /// quality axis by a running max — the monotonicity invariant the
+    /// quality knob relies on.
+    pub fn new(mut rungs: Vec<(f32, Vec<f32>)>) -> anyhow::Result<LadderFamily> {
+        anyhow::ensure!(!rungs.is_empty(), "ladder family needs at least one rung");
+        let width = rungs[0].1.len();
+        for (q, t) in &rungs {
+            anyhow::ensure!(
+                q.is_finite() && (0.0..=1.0).contains(q),
+                "rung quality level {q} outside [0, 1]"
+            );
+            anyhow::ensure!(
+                t.len() == width,
+                "rung threshold counts disagree ({} vs {width})",
+                t.len()
+            );
+            anyhow::ensure!(t.iter().all(|x| !x.is_nan()), "NaN rung threshold");
+        }
+        rungs.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for r in 1..rungs.len() {
+            for i in 0..width {
+                let floor = rungs[r - 1].1[i];
+                if rungs[r].1[i] < floor {
+                    rungs[r].1[i] = floor;
+                }
+            }
+        }
+        Ok(LadderFamily { rungs })
+    }
+
+    /// Number of tiers the family routes across.
+    pub fn n_tiers(&self) -> usize {
+        self.rungs[0].1.len() + 1
+    }
+
+    /// Uncalibrated placeholder family for a `k`-tier fleet, `levels + 1`
+    /// rungs: rung `j` (quality `j / levels`) is the proportional ladder
+    /// with pivot `q / (1 - q)` — quality 0 routes everything to the
+    /// cheapest tier, quality 1 (infinite pivot) everything to the most
+    /// capable. Use [`crate::calibrate::calibrate_quality_ladders`] when
+    /// validation data is available.
+    pub fn synthetic(k: usize, levels: usize) -> LadderFamily {
+        let levels = levels.max(1);
+        let rungs = (0..=levels)
+            .map(|j| {
+                let q = j as f32 / levels as f32;
+                let pivot = if q >= 1.0 { f32::INFINITY } else { q / (1.0 - q) };
+                (q, crate::calibrate::ladder_from_pivot(pivot, k.max(1)))
+            })
+            .collect();
+        LadderFamily::new(rungs).expect("synthetic rungs are valid by construction")
+    }
+
+    /// Thresholds for a quality target: the lowest rung whose level
+    /// covers the (clamped) target, else the top rung. Non-finite
+    /// targets route conservatively through the top (most capable) rung.
+    pub fn thresholds_for(&self, quality: f32) -> &[f32] {
+        let q = if quality.is_finite() { quality.clamp(0.0, 1.0) } else { 1.0 };
+        self.rungs
+            .iter()
+            .find(|(level, _)| *level >= q)
+            .or_else(|| self.rungs.last())
+            .map(|(_, t)| t.as_slice())
+            .unwrap()
+    }
+
+    /// Tier for one `(quality target, router score)` pair.
+    pub fn assign_one(&self, quality: f32, score: f32) -> usize {
+        ladder_tier(self.thresholds_for(quality), score)
+    }
 }
 
 /// Threshold achieving (approximately) a target cost advantage: route the
@@ -296,11 +396,15 @@ pub fn tradeoff_at(
     target: f64,
 ) -> TradeoffPoint {
     // exact target: route the top ceil(target*n) scores to small (ties
-    // broken by index) — avoids quantile-threshold granularity noise
+    // broken by index) — avoids quantile-threshold granularity noise.
+    // total_cmp, not partial_cmp: router scores can be NaN (an untrained
+    // or diverged router) and a sort comparator that panics takes the
+    // whole eval driver down with it. Under total order, +NaN sorts
+    // above +inf (routed small first) and -NaN below -inf.
     let n = scores.len();
     let k = ((target * n as f64).round() as usize).min(n);
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
     let mut assign = vec![false; n];
     for &i in idx.iter().take(k) {
         assign[i] = true;
@@ -613,6 +717,83 @@ mod tests {
         let p = ladder_tradeoff_at(&scores, &q, &costs, &[0.0, 0.0]);
         assert!((p.achieved_cost_advantage - 1.0).abs() < 1e-12);
         assert!((p.quality + 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tradeoff_at_survives_nan_scores() {
+        // regression: the score sort used partial_cmp().unwrap() and
+        // panicked on NaN router scores
+        let scores = vec![f32::NAN, 0.9, 0.1, f32::NAN];
+        let qs = vec![-2.0; 4];
+        let ql = vec![-1.0; 4];
+        for k in 0..=4 {
+            let p = tradeoff_at(&scores, &qs, &ql, k as f64 / 4.0);
+            assert!((p.achieved_cost_advantage - k as f64 / 4.0).abs() < 1e-9);
+        }
+        // finite scores still dominate the ordering among themselves:
+        // at target 0.25 exactly one query routes small, and +NaN sorts
+        // first under the total order, so the pick is deterministic
+        let p = tradeoff_at(&scores, &qs, &ql, 0.25);
+        assert!((p.achieved_cost_advantage - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ladder_family_rounds_up_and_clamps() {
+        let fam = LadderFamily::new(vec![
+            (0.0, vec![f32::NEG_INFINITY]),
+            (0.5, vec![0.5]),
+            (1.0, vec![f32::INFINITY]),
+        ])
+        .unwrap();
+        assert_eq!(fam.n_tiers(), 2);
+        // exact levels hit their rung
+        assert_eq!(fam.assign_one(0.0, 0.2), 0);
+        assert_eq!(fam.assign_one(0.5, 0.7), 0);
+        assert_eq!(fam.assign_one(0.5, 0.3), 1);
+        // between rungs rounds up to the more conservative ladder
+        assert_eq!(fam.assign_one(0.2, 0.7), 0);
+        assert_eq!(fam.assign_one(0.6, 0.99), 1);
+        // out-of-range and non-finite targets clamp / go conservative
+        assert_eq!(fam.assign_one(-3.0, 0.1), 0);
+        assert_eq!(fam.assign_one(7.0, 0.99), 1);
+        assert_eq!(fam.assign_one(f32::NAN, 0.99), 1);
+    }
+
+    #[test]
+    fn ladder_family_enforces_pointwise_monotonicity() {
+        // rung 0.8's threshold dips below rung 0.2's: the constructor
+        // must raise it so a higher target can never route cheaper
+        let fam = LadderFamily::new(vec![(0.8, vec![0.3, 0.1]), (0.2, vec![0.6, 0.2])]).unwrap();
+        assert_eq!(fam.thresholds_for(0.2), &[0.6, 0.2]);
+        assert_eq!(fam.thresholds_for(0.8), &[0.6, 0.2]);
+        let score = 0.4;
+        let mut last = 0;
+        for j in 0..=10 {
+            let t = fam.assign_one(j as f32 / 10.0, score);
+            assert!(t >= last, "quality knob routed cheaper: {t} < {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn ladder_family_rejects_malformed_rungs() {
+        assert!(LadderFamily::new(vec![]).is_err());
+        assert!(LadderFamily::new(vec![(f32::NAN, vec![0.5])]).is_err());
+        assert!(LadderFamily::new(vec![(1.5, vec![0.5])]).is_err());
+        assert!(LadderFamily::new(vec![(0.5, vec![f32::NAN])]).is_err());
+        assert!(LadderFamily::new(vec![(0.1, vec![0.5]), (0.9, vec![0.5, 0.4])]).is_err());
+    }
+
+    #[test]
+    fn synthetic_family_extremes_match_baselines() {
+        let fam = LadderFamily::synthetic(3, 8);
+        assert_eq!(fam.n_tiers(), 3);
+        for score in [0.0, 0.25, 0.5, 0.99] {
+            // quality 0: everything at the cheapest tier (zero pivot)
+            assert_eq!(fam.assign_one(0.0, score), 0);
+            // quality 1: everything at the most capable tier
+            assert_eq!(fam.assign_one(1.0, score), 2);
+        }
     }
 
     #[test]

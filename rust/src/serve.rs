@@ -13,16 +13,30 @@
 //! deployment more closely anyway — the device, edge, and cloud backends
 //! do not share an address space.
 //!
+//! The request boundary is a first-class API: [`Request`] (builder:
+//! prompt, per-request quality target, token budget, deadline, policy
+//! override) is submitted through a bounded admission window
+//! ([`Server::submit`] returns [`SubmitError::Busy`] when full,
+//! [`SubmitError::Closed`] when the server is gone) and yields a
+//! [`RequestHandle`]: a stream of [`Event`]s (`Routed`, per-token
+//! `Token`s, and exactly one terminal `Done`/`Failed`/`Cancelled`), a
+//! [`RequestHandle::cancel`] knob that frees the request's KV slot
+//! mid-decode, and a blocking [`RequestHandle::wait`] for callers that
+//! only want the [`Completion`].
+//!
 //! * router thread — drains the ingress queue with a batching window,
 //!   scores queries through the router encoder (single pass, §3), maps
-//!   scores to tiers via a [`TierPolicy`] (threshold ladder), and picks
-//!   a replica by round-robin or shortest-queue;
+//!   scores to tiers via a [`TierPolicy`] (threshold ladder) or, for
+//!   requests carrying a quality target, the quality-indexed
+//!   [`LadderFamily`], sheds deadline-expired requests, and picks a
+//!   replica by round-robin or shortest-queue;
 //! * decode workers — slot-based continuous batching ([`BatchMode`]),
-//!   persistent KV caches, iteration-level admission.
+//!   persistent KV caches, iteration-level admission, mid-decode
+//!   cancellation surgery, and per-token event streaming.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -34,10 +48,17 @@ use crate::batching::{BatchMode, KvCache, Slot, SlotTable};
 use crate::io::Tensor;
 use crate::lm::LmEngine;
 use crate::metrics::{LatencyRecorder, LatencySummary, RoutingCounters, RoutingSnapshot};
-use crate::policy::TierPolicy;
+use crate::policy::{LadderFamily, TierPolicy};
 use crate::router::RouterEngine;
 use crate::runtime::{Exec, Runtime};
 use crate::tokenizer as tok;
+
+/// Default bound on accepted-but-unfinished requests ([`ServeConfig::queue_cap`]).
+pub const DEFAULT_QUEUE_CAP: usize = 256;
+
+/// Rung count of the synthetic quality-ladder family used when
+/// [`ServeConfig::quality_ladders`] carries no calibrated family.
+const DEFAULT_QUALITY_LEVELS: usize = 8;
 
 /// One tier of the fleet: a named model backend with a relative cost
 /// weight and a replica count (worker threads serving this tier).
@@ -149,6 +170,17 @@ pub struct ServeConfig {
     pub mode: BatchMode,
     /// How long the router waits to fill a batch.
     pub batch_window: Duration,
+    /// Admission-control bound: maximum accepted-but-unfinished requests
+    /// (queued + decoding). [`Server::submit`] returns
+    /// [`SubmitError::Busy`] once the window is full — explicit
+    /// backpressure instead of unbounded queueing.
+    pub queue_cap: usize,
+    /// Quality-indexed threshold-ladder family resolving per-request
+    /// quality targets to tiers (built from calibration data via
+    /// [`crate::calibrate::calibrate_quality_ladders`] and loaded at
+    /// server start). `None` falls back to an uncalibrated
+    /// [`LadderFamily::synthetic`] family over the fleet's tier count.
+    pub quality_ladders: Option<LadderFamily>,
 }
 
 impl ServeConfig {
@@ -173,6 +205,8 @@ impl ServeConfig {
             temp: 0.0,
             mode: BatchMode::Continuous,
             batch_window: Duration::from_millis(5),
+            queue_cap: DEFAULT_QUEUE_CAP,
+            quality_ladders: None,
         }
     }
 }
@@ -192,20 +226,270 @@ pub struct Completion {
     pub routing: Duration,
 }
 
-struct Request {
+/// One serving request, built fluently and submitted with
+/// [`Server::submit`]:
+///
+/// ```ignore
+/// let handle = server.submit(
+///     Request::new(prompt)
+///         .quality(0.9)                      // per-request quality target
+///         .max_new_tokens(32)                // token budget
+///         .deadline(Duration::from_secs(2)), // shed if not decoding by then
+/// )?;
+/// let completion = handle.wait()?;
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct Request {
+    prompt: Vec<i32>,
+    quality: Option<f32>,
+    max_new_tokens: Option<usize>,
+    deadline: Option<Duration>,
+    policy: Option<TierPolicy>,
+}
+
+impl Request {
+    pub fn new(prompt: Vec<i32>) -> Request {
+        Request { prompt, ..Default::default() }
+    }
+
+    /// Quality target in `[0, 1]` (clamped; non-finite treated as `1`):
+    /// `0` routes for cost, `1` for quality. Resolved to a tier at
+    /// routing time through the server's quality-indexed
+    /// [`LadderFamily`], so two requests in the same batch window can
+    /// route under different targets. Without a target (and without a
+    /// [`Request::policy`] override) the server's default
+    /// [`ServeConfig::policy`] applies.
+    pub fn quality(mut self, q: f32) -> Request {
+        self.quality = Some(q);
+        self
+    }
+
+    /// Cap generated tokens at `n` (at least one token is generated
+    /// unless the model emits EOS at prefill; the artifact-wide answer
+    /// budget still applies).
+    pub fn max_new_tokens(mut self, n: usize) -> Request {
+        self.max_new_tokens = Some(n.max(1));
+        self
+    }
+
+    /// Relative deadline: if the request has not reached a decode slot
+    /// when it expires, it is shed ([`Event::Failed`]) instead of doing
+    /// work nobody is waiting for. Already-decoding requests finish.
+    pub fn deadline(mut self, d: Duration) -> Request {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Per-request routing-policy override (takes precedence over the
+    /// quality target and the server default).
+    pub fn policy(mut self, p: TierPolicy) -> Request {
+        self.policy = Some(p);
+        self
+    }
+}
+
+/// Lifecycle events streamed to a [`RequestHandle`]. Order is
+/// `Routed`, then zero or more `Token`s, then exactly one terminal
+/// `Done` / `Failed` / `Cancelled` (requests retired before routing
+/// skip straight to the terminal event).
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// Routing decision made; the request now sits in a worker queue.
+    Routed { tier: usize, score: f32 },
+    /// One decoded token, streamed as the decode wave samples it.
+    /// Concatenating a request's `Token`s reproduces
+    /// [`Completion::tokens`] exactly.
+    Token { token: i32, logprob: f32 },
+    /// Terminal: the request completed.
+    Done(Completion),
+    /// Terminal: the request was shed or errored before completing
+    /// (e.g. its deadline expired while queued).
+    Failed { reason: String },
+    /// Terminal: the request was cancelled ([`RequestHandle::cancel`] or
+    /// the handle was dropped). An in-flight request's KV slot is
+    /// released within one decode step.
+    Cancelled,
+}
+
+/// Errors surfaced by [`Server::submit`] — the request was **not**
+/// accepted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission window ([`ServeConfig::queue_cap`]) is full —
+    /// backpressure; retry after completions drain.
+    Busy,
+    /// The server's ingress is gone (router thread exited). The seed
+    /// silently dropped such requests and left callers blocked forever.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy => write!(f, "server busy: admission window full"),
+            SubmitError::Closed => write!(f, "server closed: ingress is gone"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Errors surfaced by the blocking [`RequestHandle::wait`] family.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// The request was cancelled before completing.
+    Cancelled,
+    /// The request failed; the payload is [`Event::Failed`]'s reason.
+    Failed(String),
+    /// The event channel closed without a terminal event (server died).
+    Disconnected,
+    /// `wait_timeout` expired before a terminal event arrived.
+    Timeout,
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Cancelled => write!(f, "request cancelled"),
+            RequestError::Failed(r) => write!(f, "request failed: {r}"),
+            RequestError::Disconnected => write!(f, "server dropped the request"),
+            RequestError::Timeout => write!(f, "timed out waiting for completion"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// Caller's side of an accepted request: the [`Event`] stream plus the
+/// cancellation knob. Dropping the handle cancels the request (nobody is
+/// listening, so the fleet stops paying for it).
+pub struct RequestHandle {
+    id: u64,
+    events: Receiver<Event>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl RequestHandle {
+    /// Server-assigned request id (matches [`Completion::id`]).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cancellation. Queued requests are retired at the next
+    /// routing/admission sweep; an in-flight request's KV slot is
+    /// released within one decode step without touching other slots.
+    /// The terminal [`Event::Cancelled`] confirms (unless the request
+    /// won the race by completing first).
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// The event stream, for callers consuming [`Event`]s directly
+    /// (streaming tokens as they decode).
+    pub fn events(&self) -> &Receiver<Event> {
+        &self.events
+    }
+
+    /// Block until the terminal event and reduce it to a [`Completion`]
+    /// — the mechanical migration from the seed's
+    /// `submit(prompt).recv()`.
+    pub fn wait(self) -> std::result::Result<Completion, RequestError> {
+        loop {
+            match self.events.recv() {
+                Ok(Event::Done(c)) => return Ok(c),
+                Ok(Event::Cancelled) => return Err(RequestError::Cancelled),
+                Ok(Event::Failed { reason }) => return Err(RequestError::Failed(reason)),
+                Ok(_) => continue,
+                Err(_) => return Err(RequestError::Disconnected),
+            }
+        }
+    }
+
+    /// [`RequestHandle::wait`] with an overall timeout.
+    pub fn wait_timeout(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<Completion, RequestError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return Err(RequestError::Timeout);
+            };
+            match self.events.recv_timeout(left) {
+                Ok(Event::Done(c)) => return Ok(c),
+                Ok(Event::Cancelled) => return Err(RequestError::Cancelled),
+                Ok(Event::Failed { reason }) => return Err(RequestError::Failed(reason)),
+                Ok(_) => continue,
+                Err(RecvTimeoutError::Timeout) => return Err(RequestError::Timeout),
+                Err(RecvTimeoutError::Disconnected) => return Err(RequestError::Disconnected),
+            }
+        }
+    }
+}
+
+impl Drop for RequestHandle {
+    fn drop(&mut self) {
+        // a request nobody can observe should stop consuming the fleet
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+}
+
+/// RAII admission-window slot: decrements the shared in-flight counter
+/// on drop. Tying the decrement to ownership (instead of explicit calls
+/// on every terminal path) means error paths that *drop* a request —
+/// a router/worker thread failing mid-batch, shutdown with work still
+/// pending — can never leak the window shut and wedge `Server::submit`
+/// on [`SubmitError::Busy`] forever.
+struct AdmissionGuard(Arc<AtomicU64>);
+
+impl Drop for AdmissionGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Server-side request state.
+struct InFlight {
     id: u64,
     prompt: Vec<i32>,
+    quality: Option<f32>,
+    policy: Option<TierPolicy>,
+    max_new: Option<usize>,
+    /// Absolute deadline (resolved from the relative builder value at
+    /// submit time).
+    deadline: Option<Instant>,
     t0: Instant,
-    tx: Sender<Completion>,
+    tx: Sender<Event>,
+    cancel: Arc<AtomicBool>,
+    /// Holds the admission-window slot for this request's lifetime.
+    _admission: AdmissionGuard,
+}
+
+impl InFlight {
+    fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Effective token budget under the artifact-wide answer cap
+    /// (`amax`); the default reproduces the seed's `len + 1 >= amax`
+    /// stop rule.
+    fn token_limit(&self, amax: usize) -> usize {
+        let cap = amax.saturating_sub(1).max(1);
+        self.max_new.map_or(cap, |m| m.clamp(1, cap))
+    }
 }
 
 enum RouterMsg {
-    Req(Request),
+    Req(InFlight),
     Shutdown,
 }
 
 struct Work {
-    req: Request,
+    req: InFlight,
     score: f32,
     routed: Instant,
 }
@@ -213,6 +497,12 @@ struct Work {
 enum WorkMsg {
     Work(Work),
     Shutdown,
+}
+
+/// Deliver the terminal event and retire the request: dropping `req`
+/// releases its [`AdmissionGuard`], freeing the admission-window slot.
+fn finish(req: InFlight, ev: Event) {
+    let _ = req.tx.send(ev);
 }
 
 /// Dispatch state for one tier, owned by the router thread.
@@ -226,6 +516,12 @@ struct TierDispatch {
 
 /// Shared (Send) metrics.
 pub struct ServerMetrics {
+    /// Accepted-but-unfinished requests — the admission window
+    /// [`Server::submit`] gates on ([`ServeConfig::queue_cap`]).
+    /// `Arc`'d separately so each request's [`AdmissionGuard`] can hold
+    /// the counter and release its slot on drop, whichever thread drops
+    /// it.
+    pub in_flight: Arc<AtomicU64>,
     pub router_latency: LatencyRecorder,
     pub e2e_latency: LatencyRecorder,
     /// Per-tier e2e latency, indexed like `ServeConfig::tiers`.
@@ -256,6 +552,8 @@ pub struct TierStats {
 /// Point-in-time server report.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
+    /// Accepted-but-unfinished requests at snapshot time.
+    pub in_flight: u64,
     pub router_latency: LatencySummary,
     pub e2e_latency: LatencySummary,
     /// Per-tier latency keyed by tier name, cheapest first (routing
@@ -306,10 +604,12 @@ pub struct Server {
     worker_handles: Vec<JoinHandle<Result<()>>>,
     metrics: Arc<ServerMetrics>,
     next_id: AtomicU64,
+    queue_cap: u64,
 }
 
 fn snapshot_stats(metrics: &ServerMetrics, tier_names: &[String]) -> ServerStats {
     ServerStats {
+        in_flight: metrics.in_flight.load(Ordering::Relaxed),
         router_latency: metrics.router_latency.snapshot(),
         e2e_latency: metrics.e2e_latency.snapshot(),
         tiers: tier_names
@@ -344,9 +644,19 @@ impl Server {
         if let TierPolicy::Fixed { tier } = &cfg.policy {
             anyhow::ensure!(*tier < cfg.tiers.len(), "fixed tier {tier} out of range");
         }
+        anyhow::ensure!(cfg.queue_cap >= 1, "queue_cap must admit at least one request");
+        if let Some(fam) = &cfg.quality_ladders {
+            anyhow::ensure!(
+                fam.n_tiers() == cfg.tiers.len(),
+                "quality-ladder family routes {} tiers but the fleet has {}",
+                fam.n_tiers(),
+                cfg.tiers.len()
+            );
+        }
         let tier_names: Vec<String> = cfg.tiers.iter().map(|t| t.name.clone()).collect();
         let costs: Vec<f64> = cfg.tiers.iter().map(|t| t.cost).collect();
         let metrics = Arc::new(ServerMetrics {
+            in_flight: Arc::new(AtomicU64::new(0)),
             router_latency: LatencyRecorder::new(),
             e2e_latency: LatencyRecorder::new(),
             tier_latency: cfg.tiers.iter().map(|_| LatencyRecorder::new()).collect(),
@@ -412,20 +722,58 @@ impl Server {
             worker_handles,
             metrics,
             next_id: AtomicU64::new(0),
+            queue_cap: cfg.queue_cap as u64,
         })
     }
 
-    /// Submit a query; returns the receiver for its completion.
-    pub fn submit(&self, prompt: Vec<i32>) -> Receiver<Completion> {
-        let (tx, rx) = mpsc::channel();
+    /// Submit a request through the bounded admission window; returns
+    /// the [`RequestHandle`] streaming its [`Event`]s.
+    ///
+    /// Errors are explicit instead of silent: a full window is
+    /// [`SubmitError::Busy`] (backpressure — retry after completions
+    /// drain) and a dead ingress is [`SubmitError::Closed`] (the seed
+    /// ignored the failed send and left the caller blocked on a
+    /// receiver forever).
+    pub fn submit(&self, req: Request) -> std::result::Result<RequestHandle, SubmitError> {
+        // reserve an admission slot (CAS loop: submit is called from
+        // many client threads)
+        let mut cur = self.metrics.in_flight.load(Ordering::Acquire);
+        loop {
+            if cur >= self.queue_cap {
+                return Err(SubmitError::Busy);
+            }
+            match self.metrics.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let _ = self.ingress.send(RouterMsg::Req(Request {
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let now = Instant::now();
+        let inflight = InFlight {
             id,
-            prompt,
-            t0: Instant::now(),
+            prompt: req.prompt,
+            quality: req.quality,
+            policy: req.policy,
+            max_new: req.max_new_tokens,
+            deadline: req.deadline.map(|d| now + d),
+            t0: now,
             tx,
-        }));
-        rx
+            cancel: cancel.clone(),
+            _admission: AdmissionGuard(self.metrics.in_flight.clone()),
+        };
+        // a failed send returns (and drops) the request, releasing its
+        // admission slot via the guard
+        if self.ingress.send(RouterMsg::Req(inflight)).is_err() {
+            return Err(SubmitError::Closed);
+        }
+        Ok(RequestHandle { id, events: rx, cancel })
     }
 
     pub fn stats(&self) -> ServerStats {
@@ -504,7 +852,13 @@ fn router_thread(
     let mut rng = crate::rng::Rng::new(0xA5);
     let max_batch = rt.manifest.globals.trainb;
     let last_tier = tiers.len() - 1;
-    let mut pending: Vec<Request> = Vec::new();
+    // per-request quality targets resolve through the calibrated family
+    // loaded at server start (or the uncalibrated synthetic fallback)
+    let family = cfg
+        .quality_ladders
+        .clone()
+        .unwrap_or_else(|| LadderFamily::synthetic(tiers.len(), DEFAULT_QUALITY_LEVELS));
+    let mut pending: Vec<InFlight> = Vec::new();
     let mut shutdown = false;
 
     while !shutdown {
@@ -539,7 +893,7 @@ fn router_thread(
         if pending.is_empty() {
             continue;
         }
-        let batch: Vec<Request> = pending.drain(..).collect();
+        let batch: Vec<InFlight> = pending.drain(..).collect();
         let t_score = Instant::now();
         let scores = match &router {
             Some(r) => {
@@ -550,10 +904,52 @@ fn router_thread(
         };
         let per_query = t_score.elapsed() / batch.len() as u32;
         let assigns = cfg.policy.assign(&scores);
-        for ((req, score), tier) in batch.into_iter().zip(scores).zip(assigns) {
+        for ((req, score), default_tier) in batch.into_iter().zip(scores).zip(assigns) {
             metrics.router_latency.record(per_query);
+            // per-request resolution: an explicit policy override wins,
+            // then the quality target through the ladder family, then
+            // the server-wide default — so one batch window can mix
+            // quality targets
+            let tier = match (&req.policy, req.quality) {
+                // a seeded Random policy replays the same stream on
+                // every assign() call, and overrides are evaluated one
+                // request at a time — fold the request id into the seed
+                // so a shared Random override keeps its weighted split
+                // instead of collapsing to one fixed tier
+                (Some(TierPolicy::Random { weights, seed }), _) => {
+                    TierPolicy::Random { weights: weights.clone(), seed: seed ^ req.id }
+                        .assign(std::slice::from_ref(&score))
+                        .first()
+                        .copied()
+                        .unwrap_or(default_tier)
+                }
+                (Some(p), _) => p
+                    .assign(std::slice::from_ref(&score))
+                    .first()
+                    .copied()
+                    .unwrap_or(default_tier),
+                (None, Some(q)) => family.assign_one(q, score),
+                (None, None) => default_tier,
+            }
+            .min(last_tier);
+            if req.cancelled() {
+                metrics.routing.cancel(tier);
+                finish(req, Event::Cancelled);
+                continue;
+            }
+            if req.expired() {
+                metrics.routing.shed(tier);
+                finish(req, Event::Failed { reason: "deadline expired before dispatch".into() });
+                continue;
+            }
             let routed = Instant::now();
-            let tier = tier.min(last_tier);
+            if req.tx.send(Event::Routed { tier, score }).is_err() {
+                // handle already dropped: implicit cancellation — skip
+                // the dispatch and drop the request (the admission guard
+                // frees its slot)
+                metrics.routing.cancel(tier);
+                continue;
+            }
             metrics.routing.route(tier);
             let d = &mut tiers[tier];
             let rep = match cfg.select {
@@ -670,6 +1066,15 @@ fn worker_thread(
             }
         }
 
+        // 1.5 retire cancelled / deadline-expired queued work before it
+        // costs a prefill, and release cancelled in-flight slots —
+        // the freed slot pads the next decode wave and is immediately
+        // reusable by admission; other slots' KV state is untouched
+        sweep_backlog(&mut backlog, &mut ctx, &metrics);
+        for (_, slot) in ctx.table.take_matching(|w| w.req.cancelled()) {
+            cancel_work(&mut ctx, slot.payload, &metrics);
+        }
+
         // 2. admission per batching mode
         let can_admit = match cfg.mode {
             BatchMode::Continuous => true,
@@ -759,6 +1164,12 @@ fn admit(
             complete(ctx, w, vec![], 0.0, metrics);
             continue;
         }
+        // stream the first token; a dropped handle cancels the request
+        // and the prefilled slot simply stays free
+        if w.req.tx.send(Event::Token { token: first[b], logprob: logp[b] }).is_err() {
+            cancel_work(ctx, w, metrics);
+            continue;
+        }
         let slot = Slot {
             answer: vec![first[b]],
             logprob_sum: logp[b],
@@ -835,30 +1246,69 @@ fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) -> Result<()> 
         if ctx.table.get(idx).is_none() {
             continue;
         }
-        let (finished, answer, lpsum, nlen);
+        let (finished, dead);
         {
             let slot = ctx.table.get_mut(idx).unwrap();
             slot.pos += 1;
             let nxt = next[idx];
-            let full = slot.answer.len() + 1 >= g.amax || slot.pos as usize >= g.sctx - 1;
+            let limit = slot.payload.req.token_limit(g.amax);
+            let full = slot.answer.len() >= limit || slot.pos as usize >= g.sctx - 1;
             if nxt == tok::EOS || full {
                 finished = true;
+                dead = false;
             } else {
                 slot.answer.push(nxt);
                 slot.logprob_sum += logp[idx];
                 slot.cur = nxt;
                 finished = false;
+                // stream the token; a dropped handle cancels the slot
+                dead = slot
+                    .payload
+                    .req
+                    .tx
+                    .send(Event::Token { token: nxt, logprob: logp[idx] })
+                    .is_err();
             }
-            answer = slot.answer.clone();
-            lpsum = slot.logprob_sum;
-            nlen = slot.answer.len().max(1);
         }
         if finished {
+            // the slot is owned now — move the answer out, no clone on
+            // the per-token hot path
             let slot = ctx.table.take(idx).unwrap();
-            complete(ctx, slot.payload, answer, lpsum / nlen as f32, metrics);
+            let mean = slot.logprob_sum / slot.answer.len().max(1) as f32;
+            complete(ctx, slot.payload, slot.answer, mean, metrics);
+        } else if dead {
+            let slot = ctx.table.take(idx).unwrap();
+            cancel_work(ctx, slot.payload, metrics);
         }
     }
     Ok(())
+}
+
+/// Retire cancelled / deadline-expired work still waiting in a worker's
+/// backlog (routed, not yet admitted to a slot).
+fn sweep_backlog(backlog: &mut Vec<Work>, ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) {
+    let mut i = 0;
+    while i < backlog.len() {
+        if backlog[i].req.cancelled() {
+            let w = backlog.remove(i);
+            cancel_work(ctx, w, metrics);
+        } else if backlog[i].req.expired() {
+            let w = backlog.remove(i);
+            metrics.routing.shed(ctx.tier);
+            ctx.depth.fetch_sub(1, Ordering::Relaxed);
+            finish(w.req, Event::Failed { reason: "deadline expired before decode".into() });
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Retire one cancelled request owned by this worker (backlog entry or
+/// released slot payload).
+fn cancel_work(ctx: &mut WorkerCtx, w: Work, metrics: &Arc<ServerMetrics>) {
+    metrics.routing.cancel(ctx.tier);
+    ctx.depth.fetch_sub(1, Ordering::Relaxed);
+    finish(w.req, Event::Cancelled);
 }
 
 fn complete(
@@ -868,20 +1318,22 @@ fn complete(
     mean_logprob: f32,
     metrics: &Arc<ServerMetrics>,
 ) {
-    let e2e = w.req.t0.elapsed();
+    let Work { req, score, routed } = w;
+    let e2e = req.t0.elapsed();
     metrics.e2e_latency.record(e2e);
     metrics.tier_latency[ctx.tier].record(e2e);
     metrics.routing.complete(0.0);
     ctx.depth.fetch_sub(1, Ordering::Relaxed);
-    let _ = w.req.tx.send(Completion {
-        id: w.req.id,
+    let done = Event::Done(Completion {
+        id: req.id,
         tokens,
         tier: ctx.tier,
-        router_score: w.score,
+        router_score: score,
         mean_logprob,
         e2e,
-        routing: w.routed - w.req.t0,
+        routing: routed - req.t0,
     });
+    finish(req, done);
 }
 
 #[cfg(test)]
@@ -941,5 +1393,114 @@ mod tests {
         assert_eq!(cfg.policy, TierPolicy::Ladder { thresholds: vec![0.5] });
         assert_eq!(cfg.policy.n_tiers(), Some(2));
         assert_eq!(cfg.tiers.len(), 2);
+        assert_eq!(cfg.queue_cap, DEFAULT_QUEUE_CAP);
+        assert!(cfg.quality_ladders.is_none());
+    }
+
+    #[test]
+    fn request_builder_and_token_limits() {
+        let r = Request::new(vec![1, 2, 3])
+            .quality(0.7)
+            .max_new_tokens(0) // clamped up: at least one token
+            .deadline(Duration::from_millis(5));
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.quality, Some(0.7));
+        assert_eq!(r.max_new_tokens, Some(1));
+        assert!(r.policy.is_none());
+
+        let f = |max_new: Option<usize>| InFlight {
+            id: 0,
+            prompt: vec![],
+            quality: None,
+            policy: None,
+            max_new,
+            deadline: None,
+            t0: Instant::now(),
+            tx: mpsc::channel().0,
+            cancel: Arc::new(AtomicBool::new(false)),
+            _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
+        };
+        // default reproduces the seed's `len + 1 >= amax` stop rule
+        assert_eq!(f(None).token_limit(32), 31);
+        assert_eq!(f(Some(8)).token_limit(32), 8);
+        // the artifact-wide cap still binds
+        assert_eq!(f(Some(99)).token_limit(32), 31);
+        assert_eq!(f(Some(3)).token_limit(1), 1);
+    }
+
+    #[test]
+    fn inflight_deadline_and_cancel_flags() {
+        let cancel = Arc::new(AtomicBool::new(false));
+        let req = InFlight {
+            id: 0,
+            prompt: vec![],
+            quality: None,
+            policy: None,
+            max_new: None,
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            t0: Instant::now(),
+            tx: mpsc::channel().0,
+            cancel: cancel.clone(),
+            _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
+        };
+        assert!(req.expired());
+        assert!(!req.cancelled());
+        cancel.store(true, Ordering::Relaxed);
+        assert!(req.cancelled());
+    }
+
+    #[test]
+    fn submit_and_request_errors_render() {
+        assert_eq!(SubmitError::Busy.to_string(), "server busy: admission window full");
+        assert!(SubmitError::Closed.to_string().contains("closed"));
+        assert!(RequestError::Failed("deadline".into()).to_string().contains("deadline"));
+        assert_ne!(RequestError::Cancelled, RequestError::Timeout);
+    }
+
+    #[test]
+    fn admission_guard_releases_on_any_drop_path() {
+        let counter = Arc::new(AtomicU64::new(1));
+        let req = InFlight {
+            id: 0,
+            prompt: vec![],
+            quality: None,
+            policy: None,
+            max_new: None,
+            deadline: None,
+            t0: Instant::now(),
+            tx: mpsc::channel().0,
+            cancel: Arc::new(AtomicBool::new(false)),
+            _admission: AdmissionGuard(counter.clone()),
+        };
+        // terminal path: finish() drops the request
+        finish(req, Event::Cancelled);
+        assert_eq!(counter.load(Ordering::Relaxed), 0);
+        // error path: a plain drop (router/worker failure, shutdown with
+        // pending work) must release the slot too
+        counter.store(1, Ordering::Relaxed);
+        let req = InFlight {
+            id: 1,
+            prompt: vec![],
+            quality: None,
+            policy: None,
+            max_new: None,
+            deadline: None,
+            t0: Instant::now(),
+            tx: mpsc::channel().0,
+            cancel: Arc::new(AtomicBool::new(false)),
+            _admission: AdmissionGuard(counter.clone()),
+        };
+        drop(req);
+        assert_eq!(counter.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn dropping_a_handle_sets_the_cancel_flag() {
+        let (_tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let h = RequestHandle { id: 7, events: rx, cancel: cancel.clone() };
+        assert_eq!(h.id(), 7);
+        drop(h);
+        assert!(cancel.load(Ordering::Relaxed));
     }
 }

@@ -125,6 +125,86 @@ fn ladder_k2_reproduces_threshold_policy_bitwise() {
 }
 
 #[test]
+fn quality_target_never_routes_cheaper() {
+    // the serving API's quality knob: for any calibrated family and any
+    // fixed router score, sweeping the per-request quality target upward
+    // must never move the assignment to a *cheaper* tier
+    check("quality knob monotone over calibrated families", 40, |rng| {
+        let k = rng.range(2, 5);
+        let n = rng.range(5, 80);
+        let scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let q_tiers: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..n).map(|_| -(rng.next_f64() * 5.0)).collect())
+            .collect();
+        let costs: Vec<f64> = (0..k).map(|i| i as f64 / (k - 1) as f64).collect();
+        let levels = rng.range(1, 9);
+        let fam =
+            hybrid_llm::calibrate::calibrate_quality_ladders(&scores, &q_tiers, &costs, levels)
+                .unwrap();
+        assert_eq!(fam.n_tiers(), k);
+        for _ in 0..4 {
+            let score = rng.next_f32();
+            let mut last = 0usize;
+            for j in 0..=20 {
+                let q = j as f32 / 20.0;
+                let t = fam.assign_one(q, score);
+                assert!(t < k);
+                assert!(
+                    t >= last,
+                    "raising quality {q} routed cheaper: tier {t} < {last} (score {score})"
+                );
+                last = t;
+            }
+        }
+    });
+}
+
+#[test]
+fn synthetic_family_is_monotone_too() {
+    check("synthetic quality family monotone", 40, |rng| {
+        let k = rng.range(1, 6);
+        let levels = rng.range(1, 12);
+        let fam = policy::LadderFamily::synthetic(k, levels);
+        let score = rng.next_f32();
+        let mut last = 0usize;
+        for j in 0..=24 {
+            let t = fam.assign_one(j as f32 / 24.0, score);
+            assert!(t >= last);
+            last = t;
+        }
+        // extremes anchor the family
+        assert_eq!(fam.assign_one(0.0, score), 0);
+        if k > 1 {
+            assert_eq!(fam.assign_one(1.0, score), k - 1);
+        }
+    });
+}
+
+#[test]
+fn nan_router_scores_never_panic_the_tradeoff_sort() {
+    // regression for the partial_cmp().unwrap() panic in tradeoff_at:
+    // any mix of NaN and finite scores must produce a valid point
+    check("tradeoff_at total under NaN scores", 40, |rng| {
+        let n = rng.range(1, 60);
+        let scores: Vec<f32> = (0..n)
+            .map(|_| {
+                if rng.next_f64() < 0.2 {
+                    f32::NAN
+                } else {
+                    rng.next_f32()
+                }
+            })
+            .collect();
+        let qs: Vec<f64> = (0..n).map(|_| -(rng.next_f64() * 5.0)).collect();
+        let ql: Vec<f64> = (0..n).map(|_| -(rng.next_f64() * 5.0)).collect();
+        let target = rng.next_f64();
+        let p = policy::tradeoff_at(&scores, &qs, &ql, target);
+        assert!(p.quality.is_finite());
+        assert!((0.0..=1.0).contains(&p.achieved_cost_advantage));
+    });
+}
+
+#[test]
 fn ladder_cost_advantage_monotone_in_pivot_sweep() {
     // as the proportional-ladder pivot rises, every query's tier index
     // can only move toward more capable tiers, so the cost-weighted

@@ -1,6 +1,8 @@
 //! Integration: the threaded serving system against real artifacts —
 //! request lifecycle, continuous batching, both scheduling modes, clean
-//! shutdown under load, and N-tier fleets with replicated workers.
+//! shutdown under load, N-tier fleets with replicated workers, and the
+//! first-class request API (per-request quality targets, streaming
+//! events, cancellation, backpressure).
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -8,9 +10,11 @@ use std::time::Duration;
 use hybrid_llm::batching::BatchMode;
 use hybrid_llm::corpus::{generate, Scale, Split};
 use hybrid_llm::lm::LmEngine;
-use hybrid_llm::policy::TierPolicy;
+use hybrid_llm::policy::{LadderFamily, TierPolicy};
 use hybrid_llm::runtime::Runtime;
-use hybrid_llm::serve::{ReplicaSelect, ServeConfig, Server, TierSpec};
+use hybrid_llm::serve::{
+    Event, ReplicaSelect, Request, RequestError, ServeConfig, Server, SubmitError, TierSpec,
+};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -54,11 +58,14 @@ fn serves_all_requests_continuous() {
         .filter(|q| q.split == Split::Test)
         .take(24)
         .collect();
-    let rxs: Vec<_> = reqs.iter().map(|q| server.submit(q.prompt.clone())).collect();
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|q| server.submit(Request::new(q.prompt.clone())).expect("submit"))
+        .collect();
     let mut ids = std::collections::HashSet::new();
     let mut small = 0;
-    for rx in rxs {
-        let c = rx.recv_timeout(Duration::from_secs(120)).expect("completion");
+    for h in handles {
+        let c = h.wait_timeout(Duration::from_secs(120)).expect("completion");
         assert!(ids.insert(c.id), "duplicate completion id");
         assert!(c.tokens.len() < hybrid_llm::corpus::A_MAX);
         assert!((0.0..=1.0).contains(&c.router_score));
@@ -120,16 +127,20 @@ fn shutdown_under_load_drains_every_request() {
     // dispatching and the workers still decoding: the drain protocol
     // (join router before signalling workers) must deliver every
     // completion instead of erroring with "worker channel closed"
-    let rxs: Vec<_> = corpus
+    let handles: Vec<_> = corpus
         .iter()
         .take(30)
-        .map(|q| server.submit(q.prompt.clone()))
+        .map(|q| server.submit(Request::new(q.prompt.clone())).expect("submit"))
         .collect();
     let stats = server.shutdown().expect("graceful shutdown under load");
     assert_eq!(stats.e2e_latency.n, 30, "all in-flight requests completed");
+    assert_eq!(stats.in_flight, 0, "admission window fully drained");
     let mut ids = std::collections::HashSet::new();
-    for rx in rxs {
-        let c = rx.try_recv().expect("completion delivered before shutdown returned");
+    for h in handles {
+        // terminal events were delivered before shutdown returned
+        let c = h
+            .wait_timeout(Duration::from_millis(200))
+            .expect("completion delivered before shutdown returned");
         assert!(ids.insert(c.id));
     }
     assert_eq!(ids.len(), 30);
@@ -176,13 +187,13 @@ fn serves_all_requests_run_to_completion() {
     let server =
         Server::start(base_cfg(artifacts, run_dir.clone(), BatchMode::RunToCompletion)).unwrap();
     let corpus = generate(5, Scale::Smoke);
-    let rxs: Vec<_> = corpus
+    let handles: Vec<_> = corpus
         .iter()
         .take(20)
-        .map(|q| server.submit(q.prompt.clone()))
+        .map(|q| server.submit(Request::new(q.prompt.clone())).expect("submit"))
         .collect();
-    for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(120)).expect("completion");
+    for h in handles {
+        h.wait_timeout(Duration::from_secs(120)).expect("completion");
     }
     let stats = server.shutdown().unwrap();
     assert_eq!(stats.e2e_latency.n, 20);
@@ -216,13 +227,13 @@ fn threshold_extremes_route_everything_one_way() {
     cfg.policy = TierPolicy::Ladder { thresholds: vec![0.0] };
     let server = Server::start(cfg).unwrap();
     let corpus = generate(7, Scale::Smoke);
-    let rxs: Vec<_> = corpus
+    let handles: Vec<_> = corpus
         .iter()
         .take(8)
-        .map(|q| server.submit(q.prompt.clone()))
+        .map(|q| server.submit(Request::new(q.prompt.clone())).expect("submit"))
         .collect();
-    for rx in rxs {
-        let c = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    for h in handles {
+        let c = h.wait_timeout(Duration::from_secs(120)).unwrap();
         assert_eq!(c.tier, 0, "everything must route to the small tier");
     }
     let stats = server.shutdown().unwrap();
@@ -250,14 +261,14 @@ fn three_tier_fleet_with_replicas_serves() {
     cfg.select = ReplicaSelect::ShortestQueue;
     let server = Server::start(cfg).unwrap();
     let corpus = generate(9, Scale::Smoke);
-    let rxs: Vec<_> = corpus
+    let handles: Vec<_> = corpus
         .iter()
         .take(18)
-        .map(|q| server.submit(q.prompt.clone()))
+        .map(|q| server.submit(Request::new(q.prompt.clone())).expect("submit"))
         .collect();
     let mut by_tier = [0usize; 3];
-    for rx in rxs {
-        let c = rx.recv_timeout(Duration::from_secs(180)).expect("completion");
+    for h in handles {
+        let c = h.wait_timeout(Duration::from_secs(180)).expect("completion");
         assert!(c.tier < 3);
         by_tier[c.tier] += 1;
     }
@@ -273,5 +284,273 @@ fn three_tier_fleet_with_replicas_serves() {
     // per-tier latencies partition e2e completions
     assert_eq!(stats.tiers.iter().map(|t| t.latency.n).sum::<usize>(), 18);
     assert_eq!(stats.e2e_latency.n, 18);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn quality_targets_route_differently_in_one_batch_window() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "quality");
+    let mut cfg = base_cfg(artifacts, run_dir.clone(), BatchMode::Continuous);
+    // ladder family whose 0.1-rung routes everything cheap and whose
+    // 0.9-rung routes everything capable: with random router scores the
+    // tier split is then decided purely by the per-request target
+    cfg.quality_ladders = Some(
+        LadderFamily::new(vec![
+            (0.1, vec![f32::NEG_INFINITY]),
+            (0.9, vec![f32::INFINITY]),
+        ])
+        .unwrap(),
+    );
+    let server = Server::start(cfg).unwrap();
+    let corpus = generate(21, Scale::Smoke);
+    // all submitted before the 2ms batch window closes: the router sees
+    // both targets inside the same scoring batch
+    let handles: Vec<_> = corpus
+        .iter()
+        .take(8)
+        .enumerate()
+        .map(|(i, q)| {
+            let quality = if i % 2 == 0 { 0.1 } else { 0.9 };
+            server
+                .submit(Request::new(q.prompt.clone()).quality(quality))
+                .expect("submit")
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        // the Routed event carries the decision; the completion pins it
+        let tier = match h.events().recv_timeout(Duration::from_secs(120)).unwrap() {
+            Event::Routed { tier, .. } => tier,
+            ev => panic!("expected Routed first, got {ev:?}"),
+        };
+        let c = h.wait_timeout(Duration::from_secs(120)).expect("completion");
+        assert_eq!(c.tier, tier, "completion disagrees with the Routed event");
+        if i % 2 == 0 {
+            assert_eq!(c.tier, 0, "quality 0.1 must route to the cheap tier");
+        } else {
+            assert_eq!(c.tier, 1, "quality 0.9 must route to the capable tier");
+        }
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.routing.to_small(), 4);
+    assert_eq!(stats.routing.to_large(), 4);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn streamed_tokens_equal_blocking_completion() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "stream");
+    let server =
+        Server::start(base_cfg(artifacts.clone(), run_dir.clone(), BatchMode::Continuous))
+            .unwrap();
+    let corpus = generate(25, Scale::Smoke);
+    let handles: Vec<_> = corpus
+        .iter()
+        .take(6)
+        .map(|q| server.submit(Request::new(q.prompt.clone())).expect("submit"))
+        .collect();
+    for h in handles {
+        let mut streamed: Vec<i32> = Vec::new();
+        let mut routed_seen = false;
+        let c = loop {
+            match h.events().recv_timeout(Duration::from_secs(120)).expect("event") {
+                Event::Routed { .. } => {
+                    assert!(streamed.is_empty(), "Routed must precede all tokens");
+                    routed_seen = true;
+                }
+                Event::Token { token, logprob } => {
+                    assert!(logprob.is_finite());
+                    streamed.push(token);
+                }
+                Event::Done(c) => break c,
+                ev => panic!("unexpected terminal: {ev:?}"),
+            }
+        };
+        assert!(routed_seen, "no routing event before completion");
+        assert_eq!(streamed, c.tokens, "concatenated Event::Tokens != Completion::tokens");
+    }
+    server.shutdown().unwrap();
+
+    // the engine-level streaming path agrees with the blocking path too
+    let rt = Runtime::load(&artifacts).unwrap();
+    let eng = LmEngine::init(rt.clone(), "nano", 3).unwrap();
+    let g = rt.manifest.globals;
+    let prompts: Vec<&[i32]> = corpus
+        .iter()
+        .take(g.genb + 1) // force a second wave to cover the offset math
+        .map(|q| q.prompt.as_slice())
+        .collect();
+    let seeds: Vec<u32> = (0..prompts.len() as u32).collect();
+    let mut streams: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+    let streamed_resp = eng
+        .generate_streaming(&prompts, &seeds, 0.8, &mut |i, t, _| streams[i].push(t))
+        .unwrap();
+    let blocking = eng.generate_with(&prompts, &seeds, 0.8, false).unwrap();
+    for ((s, r), b) in streams.iter().zip(&streamed_resp).zip(&blocking) {
+        assert_eq!(s, &r.tokens, "callback stream != returned response");
+        assert_eq!(&r.tokens, &b.tokens, "streaming changed the decode");
+    }
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn cancellation_frees_slot_without_touching_others() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "cancel");
+    let corpus = generate(31, Scale::Smoke);
+    let prompts: Vec<Vec<i32>> = corpus.iter().take(6).map(|q| q.prompt.clone()).collect();
+    // greedy decode (temp 0): tokens depend only on each slot's own
+    // prompt, so run B must reproduce run A's survivors exactly
+    let greedy_cfg = |tag: &str| {
+        let mut cfg = base_cfg(artifacts.clone(), seed_run_dir(&artifacts, tag), BatchMode::Continuous);
+        cfg.temp = 0.0;
+        cfg
+    };
+
+    // run A: no cancellation — the reference tokens
+    let server = Server::start(greedy_cfg("cancel")).unwrap();
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| server.submit(Request::new(p.clone())).expect("submit"))
+        .collect();
+    let reference: Vec<Vec<i32>> = handles
+        .into_iter()
+        .map(|h| h.wait_timeout(Duration::from_secs(120)).expect("completion").tokens)
+        .collect();
+    server.shutdown().unwrap();
+
+    // run B: same prompts, same order, but cancel the victim once it is
+    // in flight (after its first streamed token)
+    let server = Server::start(greedy_cfg("cancel")).unwrap();
+    let victim = 2usize;
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| server.submit(Request::new(p.clone())).expect("submit"))
+        .collect();
+    let mut cancelled = false;
+    let mut victim_done_early = false;
+    for (i, h) in handles.iter().enumerate() {
+        if i != victim {
+            continue;
+        }
+        // wait for evidence the victim occupies a KV slot, then cancel
+        loop {
+            match h.events().recv_timeout(Duration::from_secs(120)).expect("event") {
+                Event::Token { .. } => {
+                    h.cancel();
+                    break;
+                }
+                Event::Done(_) => {
+                    // answered before the cancel could land
+                    victim_done_early = true;
+                    break;
+                }
+                Event::Routed { .. } => {}
+                ev => panic!("unexpected event {ev:?}"),
+            }
+        }
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        if i == victim {
+            if victim_done_early {
+                continue; // terminal event already consumed above
+            }
+            match h.wait_timeout(Duration::from_secs(120)) {
+                Err(RequestError::Cancelled) => cancelled = true,
+                Ok(_) => {} // completed before the cancel landed
+                Err(e) => panic!("victim: {e}"),
+            }
+            continue;
+        }
+        let c = h.wait_timeout(Duration::from_secs(120)).expect("completion");
+        assert_eq!(
+            c.tokens, reference[i],
+            "request {i}: cancelling the victim changed another slot's tokens"
+        );
+    }
+    let stats = server.shutdown().unwrap();
+    if cancelled {
+        assert_eq!(stats.routing.cancelled_total(), 1, "cancellation must be counted");
+        assert_eq!(stats.e2e_latency.n, prompts.len() - 1);
+    }
+    assert_eq!(stats.in_flight, 0, "cancelled request retired from the window");
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn full_admission_window_returns_busy() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "busy");
+    let mut cfg = base_cfg(artifacts, run_dir.clone(), BatchMode::Continuous);
+    cfg.queue_cap = 2;
+    let server = Server::start(cfg).unwrap();
+    let corpus = generate(37, Scale::Smoke);
+    let prompts: Vec<Vec<i32>> = corpus.iter().take(6).map(|q| q.prompt.clone()).collect();
+    let mut accepted = Vec::new();
+    let mut busy = 0usize;
+    for p in &prompts {
+        match server.submit(Request::new(p.clone())) {
+            Ok(h) => accepted.push(h),
+            Err(SubmitError::Busy) => busy += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    // six instant submissions against a window of two: decode takes
+    // milliseconds, so at least one must have been pushed back
+    assert!(busy >= 1, "no backpressure despite a full window");
+    assert!(accepted.len() >= 2);
+    for h in accepted {
+        h.wait_timeout(Duration::from_secs(120)).expect("accepted requests complete");
+    }
+    // the window drains: new submissions are accepted again
+    let h = server
+        .submit(Request::new(prompts[0].clone()))
+        .expect("window must reopen after completions");
+    h.wait_timeout(Duration::from_secs(120)).expect("completion");
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.in_flight, 0);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+#[test]
+fn deadline_expired_requests_are_shed() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "shed");
+    let server =
+        Server::start(base_cfg(artifacts, run_dir.clone(), BatchMode::Continuous)).unwrap();
+    let corpus = generate(41, Scale::Smoke);
+    // a deadline that is already expired at submit time must be shed at
+    // dispatch with Event::Failed, never decoded
+    let h = server
+        .submit(
+            Request::new(corpus[0].prompt.clone()).deadline(Duration::from_nanos(1)),
+        )
+        .expect("submit");
+    match h.wait_timeout(Duration::from_secs(60)) {
+        Err(RequestError::Failed(reason)) => {
+            assert!(reason.contains("deadline"), "unexpected reason: {reason}");
+        }
+        other => panic!("expected a deadline failure, got {other:?}"),
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.routing.shed_total(), 1);
+    assert_eq!(stats.routing.total(), 0, "shed requests are not counted as routed");
+    assert_eq!(stats.in_flight, 0);
     let _ = std::fs::remove_dir_all(&run_dir);
 }
