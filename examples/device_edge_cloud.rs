@@ -110,6 +110,7 @@ fn main() -> Result<()> {
         batch_window: Duration::from_millis(5),
         queue_cap: DEFAULT_QUEUE_CAP,
         quality_ladders: Some(family),
+        force_host_admission: false,
     };
     let server = Server::start(cfg)?;
     let reqs: Vec<_> = corpus

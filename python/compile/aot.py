@@ -21,6 +21,22 @@ carries a residency class — ``state`` outputs (KV caches) stay
 device-resident across decode iterations in the rust runtime
 (``Exec::run_resident``), which is what removes the O(KV-size) host
 round-trip per generated token.
+
+Manifest v3 moves *admission* onto the device too:
+
+* **Bucketed prefill** — ``<model>.prefill@B`` for every power-of-two
+  bucket ``B`` up to ``GEN_B``, so admitting ``n`` requests runs prefill
+  at the smallest bucket ``>= n`` instead of always padding to the full
+  generation batch (``<model>.prefill`` / ``<model>.prefill1`` remain as
+  aliases of the ``@GEN_B`` / ``@1`` buckets — same HLO file, second
+  manifest entry).
+* **KV slot install** — ``<model>.kv_install@B``: a dynamic-update-slice
+  scatter (``model.kv_install``) that writes the bucketed prefill's KV
+  slots into the persistent ``[L, GEN_B, S_CTX, H, Dh]`` worker cache
+  entirely on device; the only host inputs are the O(B) slot indices and
+  the valid count. This ends the full-cache download/upload the rust
+  serving layer previously paid for host-side slot surgery on every
+  admission (host surgery remains the fallback for v1/v2 artifacts).
 """
 
 import argparse
@@ -45,7 +61,7 @@ from .common import (
     VOCAB,
 )
 
-MANIFEST_VERSION = 2
+MANIFEST_VERSION = 3
 
 F32 = jnp.float32
 S32 = jnp.int32
@@ -60,6 +76,22 @@ def _spec(shape, dtype):
 
 def _shape_str(shape):
     return "scalar" if len(shape) == 0 else "x".join(str(d) for d in shape)
+
+
+def prefill_buckets(genb):
+    """Admission bucket sizes: powers of two up to (and including) genb.
+
+    Mirrored by ``Manifest::prefill_buckets`` on the rust side, which
+    discovers the buckets from the artifact names rather than recomputing
+    this sequence.
+    """
+    out = []
+    b = 1
+    while b < genb:
+        out.append(b)
+        b *= 2
+    out.append(genb)
+    return out
 
 
 def _out_class(name):
@@ -116,7 +148,12 @@ class ManifestWriter:
 
 
 def lower_one(out_dir, mw, name, fn, ins, out_names):
-    """Lower ``fn`` over ``ins`` ([(name, spec, class)]) and register it."""
+    """Lower ``fn`` over ``ins`` ([(name, spec, class)]) and register it.
+
+    Returns ``(fname, ins, outs)`` so callers can register the same HLO
+    file under an alias name (e.g. ``prefill`` -> ``prefill@GEN_B``)
+    without lowering it twice.
+    """
     t0 = time.time()
     specs = [spec for _, spec, _ in ins]
     lowered = jax.jit(fn).lower(*specs)
@@ -128,8 +165,10 @@ def lower_one(out_dir, mw, name, fn, ins, out_names):
     fname = f"{name}.hlo.txt"
     with open(os.path.join(out_dir, fname), "w") as f:
         f.write(text)
-    mw.artifact(name, fname, ins, list(zip(out_names, out_specs)))
+    outs = list(zip(out_names, out_specs))
+    mw.artifact(name, fname, ins, outs)
     print(f"  {name:<22} {len(text):>9} chars  {time.time() - t0:5.1f}s", flush=True)
+    return fname, ins, outs
 
 
 def param_ins(cfg, head=False, cls="param", prefix="p."):
@@ -154,17 +193,20 @@ def lm_artifacts(out_dir, mw, cfg):
         [f"p.{nm}" for nm in pnames],
     )
 
-    # --- prefill / decode at generation and latency batch sizes ----------
-    for b, tag in ((GEN_B, ""), (1, "1")):
-        cache = _spec((L, b, S_CTX, H, Dh), F32)
+    # --- bucketed prefill (manifest v3) -----------------------------------
+    # one artifact per power-of-two admission bucket; `prefill` and
+    # `prefill1` are manifest aliases of the @GEN_B / @1 buckets (same
+    # HLO file) so pre-v3 call sites keep resolving
+    prefill_reg = {}
+    for b in prefill_buckets(GEN_B):
 
         def prefill_fn(*flat):
             params, rest = flat[:n], flat[n:]
             prompt, lens, seeds, temp = rest
             return M.prefill(cfg, list(params), prompt, lens, seeds, temp)
 
-        lower_one(
-            out_dir, mw, f"{cfg.name}.prefill{tag}", prefill_fn,
+        prefill_reg[b] = lower_one(
+            out_dir, mw, f"{cfg.name}.prefill@{b}", prefill_fn,
             param_ins(cfg)
             + [
                 ("prompt", _spec((b, S_PROMPT), S32), "data"),
@@ -174,6 +216,32 @@ def lm_artifacts(out_dir, mw, cfg):
             ],
             ["next", "logp", "kcache", "vcache"],
         )
+    mw.artifact(f"{cfg.name}.prefill", *prefill_reg[GEN_B])
+    mw.artifact(f"{cfg.name}.prefill1", *prefill_reg[1])
+
+    # --- kv_install: device-side admission scatter (manifest v3) ---------
+    full_cache = _spec((L, GEN_B, S_CTX, H, Dh), F32)
+    for b in prefill_buckets(GEN_B):
+
+        def install_fn(kcache, vcache, src_k, src_v, slots, count):
+            return M.kv_install(kcache, vcache, src_k, src_v, slots, count)
+
+        lower_one(
+            out_dir, mw, f"{cfg.name}.kv_install@{b}", install_fn,
+            [
+                ("kcache", full_cache, "state"),
+                ("vcache", full_cache, "state"),
+                ("src_k", _spec((L, b, S_CTX, H, Dh), F32), "state"),
+                ("src_v", _spec((L, b, S_CTX, H, Dh), F32), "state"),
+                ("slots", _spec((b,), S32), "data"),
+                ("count", _spec((), S32), "data"),
+            ],
+            ["kcache", "vcache"],
+        )
+
+    # --- decode at generation and latency batch sizes ---------------------
+    for b, tag in ((GEN_B, ""), (1, "1")):
+        cache = _spec((L, b, S_CTX, H, Dh), F32)
 
         def decode_fn(*flat):
             params, rest = flat[:n], flat[n:]

@@ -259,6 +259,45 @@ def decode_step(cfg, flat, kcache, vcache, tok, pos, step, seeds, temp, use_pall
     return tok2, lp, kcache, vcache
 
 
+def kv_install(kcache, vcache, src_k, src_v, slots, count):
+    """Device-side admission scatter (manifest v3, DESIGN.md §8).
+
+    Writes the first ``count`` batch slots of a bucketed-prefill KV cache
+    into a persistent full-batch cache at caller-chosen slot indices,
+    without the cache ever crossing the host boundary — the only host
+    inputs are ``slots``/``count`` (O(B) bytes). Entries ``b >= count``
+    are padding (the bucket is the smallest power of two >= the number
+    of admitted requests): their writes are masked out by re-installing
+    the destination slot's current contents, so a padding entry can
+    never clobber live state whatever index it carries.
+
+    Args:
+      kcache, vcache: [L, B_full, S, H, Dh] persistent worker cache.
+      src_k, src_v:   [L, B_bucket, S, H, Dh] bucketed prefill outputs.
+      slots: [B_bucket] int32 destination slot indices in the full cache.
+      count: scalar int32 number of valid entries (<= B_bucket).
+
+    Returns: (kcache', vcache').
+    """
+    bucket = src_k.shape[1]
+    # B_bucket is a compile-time constant (one artifact per bucket), so
+    # the scatter unrolls into `bucket` dynamic-update-slices.
+    for b in range(bucket):
+        idx = slots[b]
+        valid = jnp.int32(b) < count
+        new_k = src_k[:, b : b + 1]
+        new_v = src_v[:, b : b + 1]
+        cur_k = jax.lax.dynamic_slice_in_dim(kcache, idx, 1, axis=1)
+        cur_v = jax.lax.dynamic_slice_in_dim(vcache, idx, 1, axis=1)
+        kcache = jax.lax.dynamic_update_slice_in_dim(
+            kcache, jnp.where(valid, new_k, cur_k), idx, axis=1
+        )
+        vcache = jax.lax.dynamic_update_slice_in_dim(
+            vcache, jnp.where(valid, new_v, cur_v), idx, axis=1
+        )
+    return kcache, vcache
+
+
 def score(cfg, flat, tokens, resp_mask, use_pallas=True):
     """BART-score analogue: mean next-token log-prob over the response.
 

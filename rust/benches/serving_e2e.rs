@@ -8,7 +8,11 @@
 //! (latency is weight-independent), so it runs without a pipeline run;
 //! the router is random at threshold 0.5 giving a ~50% routing split.
 //! The largest-load point and the cancel probe are appended to
-//! `BENCH_serving.json` as the perf trajectory.
+//! `BENCH_serving.json` as the perf trajectory, including admission
+//! latency and host bytes per admitted request. On manifest-v3
+//! artifacts this bench is also the CI gate for device-side admission:
+//! it **fails** when admission bytes scale with the KV cache (i.e. with
+//! `sctx`) instead of the O(B·sprompt) prompt window.
 
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -17,7 +21,7 @@ use hybrid_llm::batching::BatchMode;
 use hybrid_llm::bench::merge_bench_json;
 use hybrid_llm::corpus::{generate, Scale};
 use hybrid_llm::lm::LmEngine;
-use hybrid_llm::runtime::Runtime;
+use hybrid_llm::runtime::{Manifest, Runtime};
 use hybrid_llm::serve::{Event, Request, RequestError, ServeConfig, Server};
 
 fn main() -> anyhow::Result<()> {
@@ -167,6 +171,27 @@ fn main() -> anyhow::Result<()> {
         if n == 96 {
             json.push(("serving.req_per_sec".to_string(), n as f64 / wall.as_secs_f64()));
             json.push(("serving.tokens_per_sec".to_string(), tok_s));
+            json.push(("serving.admit_latency_ms".to_string(), stats.admit_latency.p50_ms));
+            json.push(("serving.admit_bytes_per_req".to_string(), stats.admit_bytes_per_req()));
+            // CI gate: on v3 artifacts admission must move O(B·sprompt)
+            // host bytes per request — a number that scales with sctx
+            // means the KV cache is round-tripping through the host
+            let manifest = Manifest::load(&artifacts.join("manifest.txt"))?;
+            if manifest.version >= 3 {
+                let kv_pair_bytes =
+                    hybrid_llm::serve::min_kv_pair_bytes(&manifest, &["small", "medium"])?;
+                let per_req = stats.admit_bytes_per_req();
+                let o_b_sprompt = hybrid_llm::serve::admission_byte_bound(&manifest.globals);
+                anyhow::ensure!(
+                    per_req > 0.0 && per_req < o_b_sprompt.min(kv_pair_bytes / 4.0),
+                    "admission moved {per_req:.0} B/request — scaling with sctx \
+                     (O(B·sprompt) bound {o_b_sprompt:.0} B, KV pair {kv_pair_bytes:.0} B); \
+                     device-side kv_install is not engaging"
+                );
+                println!(
+                    "admission gate OK: {per_req:.0} B/request (O(B·sprompt) bound {o_b_sprompt:.0} B)"
+                );
+            }
             // streaming-mode rate over the first-token → last-token
             // arrival window — excludes the submit/routing head and
             // measures the event stream itself, so it can diverge from

@@ -12,8 +12,9 @@
 //! [`KvCache`] is an enum over two residency states:
 //!
 //! * **Host** — plain `[L, B, S, H, Dh]` tensors. Needed for slot
-//!   surgery at admission ([`KvCache::copy_slot_from`]) and the only
-//!   state reachable with pre-v2 (fused-tuple) artifacts.
+//!   surgery at admission ([`KvCache::copy_slot_from`]) on pre-v3
+//!   artifacts and the only state reachable with pre-v2 (fused-tuple)
+//!   artifacts.
 //! * **Device** — `Arc<xla::PjRtBuffer>` pairs that feed straight back
 //!   into the next `execute_b` call ([`KvCache::bind`]), the steady-state
 //!   of the decode loop: zero KV bytes cross the host boundary per
@@ -21,15 +22,20 @@
 //!
 //! [`KvCache::update`] follows whatever residency the runtime returns, so
 //! the same decode loop transparently runs device-resident against v2
-//! artifacts and host-round-trip against v1 artifacts.
+//! artifacts and host-round-trip against v1 artifacts. On manifest-v3
+//! artifacts admission stays device-side too:
+//! [`KvCache::install_slots_device`] drives the `kv_install@B` scatter,
+//! writing freshly-prefilled KV slots into the persistent cache without
+//! either cache crossing the host boundary ([`KvCache::copy_slot_from`]
+//! remains the host-surgery fallback, equivalence-tested against it).
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::io::Tensor;
-use crate::runtime::{OutValue, Runtime};
+use crate::runtime::{Exec, OutValue, Runtime};
 
 /// Scheduling discipline for a decode worker (the batching ablation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -153,22 +159,33 @@ impl<T> SlotTable<T> {
         out
     }
 
-    /// Batched decode inputs over the full (fixed) capacity: free slots
-    /// contribute PAD tokens at pos 0 (pure padding work). These Vecs are
-    /// handed to `Tensor::{i32,u32}` (which take ownership), so a scratch
-    /// variant would buy nothing.
-    pub fn decode_inputs(&self) -> (Vec<i32>, Vec<i32>, Vec<u32>) {
-        let mut cur = vec![crate::tokenizer::PAD; self.capacity()];
-        let mut pos = vec![0i32; self.capacity()];
-        let mut seeds = vec![0u32; self.capacity()];
+    /// Refill caller-owned decode-input buffers in place over the full
+    /// (fixed) capacity: free slots contribute PAD tokens at pos 0 (pure
+    /// padding work). Scratch reuse — the per-token decode loop
+    /// allocates nothing. Buffers must be capacity-sized. Returns the
+    /// maximum live position (0 when empty) — the decode artifact's
+    /// `step` scalar is `max_pos + 1`.
+    pub fn fill_decode_inputs(&self, cur: &mut [i32], pos: &mut [i32], seeds: &mut [u32]) -> i32 {
+        assert_eq!(cur.len(), self.capacity());
+        assert_eq!(pos.len(), self.capacity());
+        assert_eq!(seeds.len(), self.capacity());
+        let mut max_pos = 0;
         for (i, s) in self.slots.iter().enumerate() {
-            if let Some(s) = s {
-                cur[i] = s.cur;
-                pos[i] = s.pos;
-                seeds[i] = s.seed;
+            match s {
+                Some(s) => {
+                    cur[i] = s.cur;
+                    pos[i] = s.pos;
+                    seeds[i] = s.seed;
+                    max_pos = max_pos.max(s.pos);
+                }
+                None => {
+                    cur[i] = crate::tokenizer::PAD;
+                    pos[i] = 0;
+                    seeds[i] = 0;
+                }
             }
         }
-        (cur, pos, seeds)
+        max_pos
     }
 }
 
@@ -357,6 +374,78 @@ impl KvCache {
         Ok(())
     }
 
+    /// Device-side admission install (manifest v3): run a
+    /// `<model>.kv_install@B` scatter writing the first `slots.len()`
+    /// batch entries of the bucketed prefill outputs `src_k`/`src_v`
+    /// into this cache at the given slot indices. The KV state never
+    /// crosses the host boundary — the only host inputs are the O(B)
+    /// slot indices and the valid count; bucket entries beyond
+    /// `slots.len()` are masked out inside the artifact. Produces
+    /// byte-identical cache contents to the host-surgery path
+    /// ([`Self::copy_slot_from`] of each entry), pinned by the
+    /// integration suite.
+    ///
+    /// A host-resident cache is uploaded first (one-time cost at worker
+    /// start; a device-resident steady state makes it a no-op).
+    pub fn install_slots_device(
+        &mut self,
+        rt: &Runtime,
+        install: &Exec,
+        src_k: &Arc<xla::PjRtBuffer>,
+        src_v: &Arc<xla::PjRtBuffer>,
+        slots: &[usize],
+    ) -> Result<()> {
+        let spec = &install.spec;
+        let i_k = spec.input_index("kcache")?;
+        let i_v = spec.input_index("vcache")?;
+        let i_sk = spec.input_index("src_k")?;
+        let i_sv = spec.input_index("src_v")?;
+        let i_slots = spec.input_index("slots")?;
+        let i_count = spec.input_index("count")?;
+        let bucket = spec.ins[i_slots].dims.first().copied().unwrap_or(0);
+        ensure!(
+            !slots.is_empty() && slots.len() <= bucket,
+            "{}: {} slots exceed bucket {bucket}",
+            spec.name,
+            slots.len()
+        );
+        ensure!(
+            slots.iter().all(|&s| s < self.batch),
+            "{}: slot index out of range (batch {})",
+            spec.name,
+            self.batch
+        );
+        self.to_device(rt)?;
+        let (k, v) = match &self.store {
+            KvStore::Device { k, v } => (k.clone(), v.clone()),
+            KvStore::Host { .. } => unreachable!("to_device() above"),
+        };
+        let mut slot_v = vec![0i32; bucket];
+        for (dst, &s) in slot_v.iter_mut().zip(slots) {
+            *dst = s as i32;
+        }
+        let slots_t = Tensor::i32(vec![bucket], slot_v);
+        let count_t = Tensor::i32(vec![], vec![slots.len() as i32]);
+        let mut resident: HashMap<usize, Arc<xla::PjRtBuffer>> = HashMap::with_capacity(4);
+        resident.insert(i_k, k);
+        resident.insert(i_v, v);
+        resident.insert(i_sk, src_k.clone());
+        resident.insert(i_sv, src_v.clone());
+        let host: Vec<(usize, &Tensor)> = vec![(i_slots, &slots_t), (i_count, &count_t)];
+        let mut outs = install.run_resident(&resident, &host)?;
+        let vc = outs.pop().context("kv_install: vcache")?;
+        let kc = outs.pop().context("kv_install: kcache")?;
+        // a fused/tupled install artifact would silently demote the cache
+        // to host residency and wreck the admission byte accounting —
+        // refuse instead (v3 artifacts are untupled by construction)
+        ensure!(
+            kc.is_device() && vc.is_device(),
+            "{}: install returned host outputs (artifact not untupled?)",
+            spec.name
+        );
+        self.update(kc, vc)
+    }
+
     fn slot_stride(&self) -> usize {
         self.seq * self.heads * self.head_dim
     }
@@ -488,13 +577,31 @@ mod tests {
     }
 
     #[test]
-    fn decode_inputs_pad_free_slots() {
+    fn fill_decode_inputs_overwrites_stale_scratch() {
         let mut t: SlotTable<u32> = SlotTable::new(3);
         t.insert(1, slot(7)).unwrap();
-        let (cur, pos, seeds) = t.decode_inputs();
+        let mut s = slot(8);
+        s.pos = 9;
+        t.insert(2, s).unwrap();
+        // scratch carries garbage from a previous iteration
+        let mut cur = vec![99i32; 3];
+        let mut pos = vec![99i32; 3];
+        let mut seeds = vec![99u32; 3];
+        let max_pos = t.fill_decode_inputs(&mut cur, &mut pos, &mut seeds);
+        assert_eq!(max_pos, 9);
+        assert_eq!(cur, vec![crate::tokenizer::PAD, 7, 8]);
+        assert_eq!(pos, vec![0, 5, 9]);
+        assert_eq!(seeds, vec![0, 1, 1]);
+        // releasing a slot turns its lane back into padding
+        t.take(2).unwrap();
+        let max_pos = t.fill_decode_inputs(&mut cur, &mut pos, &mut seeds);
+        assert_eq!(max_pos, 5);
         assert_eq!(cur, vec![crate::tokenizer::PAD, 7, crate::tokenizer::PAD]);
         assert_eq!(pos, vec![0, 5, 0]);
-        assert_eq!(seeds, vec![0, 1, 0]);
+        // empty table: all padding, max pos 0
+        t.take(1).unwrap();
+        assert_eq!(t.fill_decode_inputs(&mut cur, &mut pos, &mut seeds), 0);
+        assert!(pos.iter().all(|&p| p == 0));
     }
 
     #[test]

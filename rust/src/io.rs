@@ -90,6 +90,29 @@ impl Tensor {
         }
     }
 
+    /// Mutable payload access (dims are fixed) — lets hot paths refill a
+    /// scratch tensor in place instead of allocating a new one per call.
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u32_mut(&mut self) -> Result<&mut [u32]> {
+        match self {
+            Tensor::U32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not u32"),
+        }
+    }
+
     pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len());
         Tensor::F32 { dims, data }
@@ -254,6 +277,21 @@ mod tests {
         let q = d.join("c.tz");
         u.save(&q).unwrap();
         assert_eq!(Tensor::load(&q).unwrap(), u);
+    }
+
+    #[test]
+    fn tensor_mutable_payload_access() {
+        let mut t = Tensor::i32(vec![3], vec![1, 2, 3]);
+        t.as_i32_mut().unwrap()[1] = 9;
+        assert_eq!(t.as_i32().unwrap(), &[1, 9, 3]);
+        assert!(t.as_f32_mut().is_err());
+        assert!(t.as_u32_mut().is_err());
+        let mut u = Tensor::u32(vec![2], vec![0, 0]);
+        u.as_u32_mut().unwrap()[0] = 7;
+        assert!(matches!(u, Tensor::U32 { ref data, .. } if data[0] == 7));
+        let mut f = Tensor::f32(vec![1], vec![0.0]);
+        f.as_f32_mut().unwrap()[0] = 1.5;
+        assert_eq!(f.as_f32().unwrap(), &[1.5]);
     }
 
     #[test]

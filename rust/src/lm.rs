@@ -6,6 +6,7 @@
 //! Training happens *from rust*: python only lowered the train-step graph;
 //! the data loop, LR schedule, and checkpointing live here.
 
+use std::cell::RefCell;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -15,7 +16,7 @@ use crate::batching::KvCache;
 use crate::corpus::{Query, A_MAX};
 use crate::io::Tensor;
 use crate::rng::Rng;
-use crate::runtime::{ModelMeta, ParamSet, Runtime};
+use crate::runtime::{bucket_for, Exec, ModelMeta, OutValue, ParamSet, Runtime};
 use crate::tokenizer as tok;
 
 /// A generated response: answer tokens (EOS stripped) + mean sampled
@@ -64,6 +65,13 @@ pub struct LmEngine {
     pub name: String,
     pub meta: ModelMeta,
     pub params: ParamSet,
+    /// Zeroed `[L, genb, sctx, H, Dh]` device cache pair (keyed by the
+    /// dims it was built with), uploaded once and shared by every
+    /// bucketed-prefill wave (`kv_install` never mutates its inputs, so
+    /// the zeros stay pristine). `None` until the first partial wave on
+    /// v3 artifacts needs it.
+    #[allow(clippy::type_complexity)]
+    zero_cache: RefCell<Option<(Vec<usize>, Arc<xla::PjRtBuffer>, Arc<xla::PjRtBuffer>)>>,
 }
 
 impl LmEngine {
@@ -74,7 +82,13 @@ impl LmEngine {
         let host = init.run(&[&Tensor::u32(vec![], vec![seed])])?;
         let names: Vec<String> = init.spec.outs.iter().map(|o| o.name.clone()).collect();
         let params = ParamSet::from_host(&rt, names, host)?;
-        Ok(LmEngine { rt, name: name.to_string(), meta, params })
+        Ok(LmEngine {
+            rt,
+            name: name.to_string(),
+            meta,
+            params,
+            zero_cache: RefCell::new(None),
+        })
     }
 
     /// Load previously-trained parameters from `<dir>` (saved by [`Self::save`]).
@@ -84,7 +98,13 @@ impl LmEngine {
         let names: Vec<String> = init.spec.outs.iter().map(|o| o.name.clone()).collect();
         let params = ParamSet::load(&rt, dir, names)
             .with_context(|| format!("load params for {name} from {dir:?}"))?;
-        Ok(LmEngine { rt, name: name.to_string(), meta, params })
+        Ok(LmEngine {
+            rt,
+            name: name.to_string(),
+            meta,
+            params,
+            zero_cache: RefCell::new(None),
+        })
     }
 
     pub fn save(&self, dir: &Path) -> Result<()> {
@@ -161,7 +181,9 @@ impl LmEngine {
     /// sequence; `temp = 0` is greedy. Prompts beyond `genb` are processed
     /// in successive waves (run-to-completion batching; the serving layer
     /// does continuous batching instead). KV caches stay device-resident
-    /// across decode iterations (v2 artifacts).
+    /// across decode iterations (v2 artifacts), and a partial final wave
+    /// prefills at the smallest v3 bucket that fits (`prefill@B` +
+    /// on-device `kv_install`) instead of padding to `genb`.
     pub fn generate(&self, prompts: &[&[i32]], seeds: &[u32], temp: f32) -> Result<Vec<Response>> {
         self.generate_with(prompts, seeds, temp, false)
     }
@@ -219,6 +241,48 @@ impl LmEngine {
         Ok(out)
     }
 
+    /// The admission bucket for a partial wave of `nb` prompts: the
+    /// smallest v3 `prefill@B` strictly under the full batch whose
+    /// matching `kv_install@B` exists. `None` runs the full-batch
+    /// prefill (pre-v3 manifests, or the wave already fills the batch).
+    fn wave_bucket(&self, nb: usize, full: usize) -> Result<Option<(usize, Arc<Exec>, Arc<Exec>)>> {
+        let buckets = self.rt.manifest.prefill_buckets(&self.name);
+        let Some(b) = bucket_for(&buckets, nb) else {
+            return Ok(None);
+        };
+        if b >= full || !self.rt.manifest.has_artifact(&format!("{}.kv_install@{b}", self.name)) {
+            return Ok(None);
+        }
+        Ok(Some((
+            b,
+            self.rt.exec(&format!("{}.prefill@{b}", self.name))?,
+            self.rt.exec(&format!("{}.kv_install@{b}", self.name))?,
+        )))
+    }
+
+    /// The shared zeroed device cache bucketed waves install into
+    /// (uploaded on first use, then reused — `kv_install` copies rather
+    /// than donates, so the zeros are never clobbered). The cache is
+    /// keyed by its dims: a caller asking for a different shape than the
+    /// one cached is a bug, surfaced here instead of as a shape mismatch
+    /// inside the install exec.
+    fn zero_gen_cache(
+        &self,
+        dims: &[usize],
+    ) -> Result<(Arc<xla::PjRtBuffer>, Arc<xla::PjRtBuffer>)> {
+        if let Some((cached_dims, k, v)) = self.zero_cache.borrow().as_ref() {
+            ensure!(
+                cached_dims == dims,
+                "zero cache built for dims {cached_dims:?}, requested {dims:?}"
+            );
+            return Ok((k.clone(), v.clone()));
+        }
+        let z = Tensor::f32(dims.to_vec(), vec![0.0; dims.iter().product()]);
+        let pair = (self.rt.upload(&z)?, self.rt.upload(&z)?);
+        *self.zero_cache.borrow_mut() = Some((dims.to_vec(), pair.0.clone(), pair.1.clone()));
+        Ok(pair)
+    }
+
     fn generate_wave(
         &self,
         prompts: &[&[i32]],
@@ -231,32 +295,43 @@ impl LmEngine {
         let g = self.rt.manifest.globals;
         let nb = prompts.len();
         ensure!(nb <= bsz && nb > 0);
-        let prefill = self.rt.exec(&format!("{}.prefill", self.name))?;
         let decode = self.rt.exec(&format!("{}.decode", self.name))?;
         let n = self.params.len();
         let mut resident = self.params.resident_map();
         let cache_dims =
             vec![self.meta.layers, bsz, g.sctx, self.meta.heads, self.meta.headdim];
 
-        // right-pad prompts into [bsz, sprompt]
-        let mut ptoks = vec![tok::PAD; bsz * g.sprompt];
+        // partial waves prefill at the smallest v3 bucket that fits and
+        // install into the shared zeroed device cache; `force_host_kv`
+        // keeps the seed's full-batch path so the A/B stays exact
+        let bucket = if force_host_kv { None } else { self.wave_bucket(nb, bsz)? };
+        let (pf_b, prefill) = match &bucket {
+            Some((b, pf, _)) => (*b, pf.clone()),
+            None => (bsz, self.rt.exec(&format!("{}.prefill", self.name))?),
+        };
+
+        // right-pad prompts into [pf_b, sprompt]
+        let mut ptoks = vec![tok::PAD; pf_b * g.sprompt];
         let mut lens = vec![1i32; bsz];
+        let mut pf_lens = vec![1i32; pf_b];
         for (b, p) in prompts.iter().enumerate() {
             ensure!(p.len() <= g.sprompt, "prompt too long");
             ptoks[b * g.sprompt..b * g.sprompt + p.len()].copy_from_slice(p);
             lens[b] = p.len() as i32;
+            pf_lens[b] = p.len() as i32;
         }
-        let ptoks = Tensor::i32(vec![bsz, g.sprompt], ptoks);
-        let lens_t = Tensor::i32(vec![bsz], lens.clone());
+        let ptoks = Tensor::i32(vec![pf_b, g.sprompt], ptoks);
+        let lens_t = Tensor::i32(vec![pf_b], pf_lens);
         let mut seedv = vec![0u32; bsz];
         seedv[..nb].copy_from_slice(seeds);
+        let pf_seeds = Tensor::u32(vec![pf_b], seedv[..pf_b].to_vec());
         let seeds_t = Tensor::u32(vec![bsz], seedv);
         let temp_t = Tensor::f32(vec![], vec![temp]);
 
         let host: Vec<(usize, &Tensor)> = vec![
             (n, &ptoks),
             (n + 1, &lens_t),
-            (n + 2, &seeds_t),
+            (n + 2, &pf_seeds),
             (n + 3, &temp_t),
         ];
         let mut outs = prefill.run_resident(&resident, &host)?;
@@ -266,7 +341,26 @@ impl LmEngine {
         let first = outs.pop().context("prefill: next")?.into_tensor()?;
         // the caches never leave the device between iterations unless the
         // caller forces the host round-trip
-        let mut kv = KvCache::from_outputs(kc, vc, &cache_dims)?;
+        let mut kv = match &bucket {
+            Some((_, _, install)) => {
+                let (Some(kb), Some(vb)) = (kc.device().cloned(), vc.device().cloned()) else {
+                    anyhow::bail!(
+                        "{}: bucketed prefill returned host outputs (untupled v3 expected)",
+                        self.name
+                    );
+                };
+                let (zk, zv) = self.zero_gen_cache(&cache_dims)?;
+                let mut kv = KvCache::from_outputs(
+                    OutValue::Device(zk),
+                    OutValue::Device(zv),
+                    &cache_dims,
+                )?;
+                let slots: Vec<usize> = (0..nb).collect();
+                kv.install_slots_device(&self.rt, install, &kb, &vb, &slots)?;
+                kv
+            }
+            None => KvCache::from_outputs(kc, vc, &cache_dims)?,
+        };
         if force_host_kv {
             kv.to_host(&self.rt)?;
         }
@@ -274,7 +368,12 @@ impl LmEngine {
         let mut answers: Vec<Vec<i32>> = vec![Vec::new(); nb];
         let mut lps: Vec<Vec<f32>> = vec![Vec::new(); nb];
         let mut done = vec![false; nb];
-        let mut cur = first.as_i32()?.to_vec();
+        // first/logp are [pf_b]; the decode loop always runs at the full
+        // batch, so pad `cur` back out (padding lanes decode PAD tokens,
+        // exactly like the serving layer's free slots)
+        let first = first.as_i32()?;
+        let mut cur = vec![tok::PAD; bsz];
+        cur[..first.len()].copy_from_slice(first);
         let logp0 = logp.as_f32()?;
         for b in 0..nb {
             if cur[b] == tok::EOS {

@@ -51,7 +51,7 @@ subcommands:
   table2       --run DIR [--queries N]                    live latency measurement (Table 2)
   serve-demo   --run DIR [--requests N] [--threshold T] [--mode cont|rtc]
                [--tiers m[:replicas[:cost]],...] [--thresholds T1,T2,...] [--select rr|sq]
-               [--quality Q] [--queue-cap N] [--deadline-ms MS]
+               [--quality Q] [--queue-cap N] [--deadline-ms MS] [--admit device|host]
   corpus-stats [--scale S]                                print corpus stats without a run";
 
 fn scale_of(args: &Args) -> Result<Scale> {
@@ -209,6 +209,13 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         "rtc" => BatchMode::RunToCompletion,
         _ => BatchMode::Continuous,
     };
+    // --admit host: force the host slot-surgery install (A/B baseline
+    // for the v3 device-side admission path)
+    let force_host_admission = match args.get("admit", "device") {
+        "host" => true,
+        "device" => false,
+        other => anyhow::bail!("bad --admit {other:?} (device|host)"),
+    };
     let pair_small = args.get("small", "medium").to_string();
     let pair_large = args.get("large", "large").to_string();
 
@@ -234,6 +241,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
 
     // corpus for prompts
     let rt = Runtime::load(&artifacts)?;
+    let manifest_version = rt.manifest.version;
     let scale = scale_of(args)?;
     let pl = Pipeline::new(rt, &run_dir, scale);
     let corpus = pl.ensure_corpus()?;
@@ -276,6 +284,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         batch_window: Duration::from_millis(5),
         queue_cap,
         quality_ladders,
+        force_host_admission,
     };
     println!(
         "[serve] starting fleet [{}], {mode:?}, queue cap {queue_cap}{}",
@@ -366,6 +375,22 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         stats.h2d_bytes_per_step() / 1024.0,
         stats.admit_d2h_bytes as f64 / 1024.0,
         stats.admit_h2d_bytes as f64 / 1024.0
+    );
+    // label by what actually runs, not just the flag: pre-v3 artifacts
+    // fall back to host surgery regardless of --admit
+    let admit_path = if force_host_admission {
+        "host surgery (--admit host)"
+    } else if manifest_version >= 3 {
+        "device install (v3 artifacts)"
+    } else {
+        "host surgery (pre-v3 artifacts)"
+    };
+    println!(
+        "admissions: {} waves / {} requests ({admit_path})   p50 {:.2} ms   {:.2} KiB per request",
+        stats.admissions,
+        stats.admitted,
+        stats.admit_latency.p50_ms,
+        stats.admit_bytes_per_req() / 1024.0
     );
     Ok(())
 }

@@ -9,6 +9,14 @@
 //! * **v2** — untupled outputs; `out` lines carry a residency class as a
 //!   fourth field (`state` outputs stay device-resident across decode
 //!   iterations, see `Exec::run_resident`).
+//! * **v3** — device-side admission: per-model **bucketed prefill**
+//!   artifacts (`<model>.prefill@B` for power-of-two buckets up to
+//!   `genb`; `prefill`/`prefill1` are aliases of the `@genb`/`@1`
+//!   buckets) and **`<model>.kv_install@B`** scatter artifacts that
+//!   write prefill-output KV slots into the persistent worker cache on
+//!   device. No new line grammar — v3 parses like v2; the version
+//!   advertises artifact availability ([`Manifest::prefill_buckets`],
+//!   [`Manifest::kv_install_buckets`]).
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -20,10 +28,10 @@ use crate::io::DType;
 
 /// Newest manifest version this runtime understands — what the current
 /// AOT writer (`python/compile/aot.py: MANIFEST_VERSION`) emits.
-pub const SUPPORTED_VERSION: u32 = 2;
+pub const SUPPORTED_VERSION: u32 = 3;
 /// All versions this runtime can execute (older versions run through the
-/// fused-tuple host-fallback path).
-pub const SUPPORTED_VERSIONS: [u32; 2] = [1, SUPPORTED_VERSION];
+/// fused-tuple / host-surgery fallback paths).
+pub const SUPPORTED_VERSIONS: [u32; 3] = [1, 2, SUPPORTED_VERSION];
 
 /// Global dims shared by all artifacts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -304,6 +312,44 @@ impl Manifest {
             .map(|o| o.name.strip_prefix("p.").unwrap_or(&o.name).to_string())
             .collect())
     }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    /// Batch sizes of a model's bucketed `<model>.<kind>@B` artifacts,
+    /// ascending. Empty on pre-v3 manifests (no bucketed artifacts).
+    fn bucket_sizes(&self, model: &str, kind: &str) -> Vec<usize> {
+        let prefix = format!("{model}.{kind}@");
+        let mut out: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix(&prefix)?.parse().ok())
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Bucketed-prefill batch sizes for `model` (manifest v3), ascending.
+    pub fn prefill_buckets(&self, model: &str) -> Vec<usize> {
+        self.bucket_sizes(model, "prefill")
+    }
+
+    /// `kv_install` scatter batch sizes for `model` (manifest v3),
+    /// ascending. Admission can go fully device-side for a group of `n`
+    /// requests iff [`bucket_for`] finds a bucket in *both* this list and
+    /// [`Self::prefill_buckets`].
+    pub fn kv_install_buckets(&self, model: &str) -> Vec<usize> {
+        self.bucket_sizes(model, "kv_install")
+    }
+}
+
+/// Smallest bucket `>= n` from an ascending bucket list (admission
+/// bucket selection: prefill runs at this batch size instead of the full
+/// generation batch). `None` when `n` exceeds every bucket or the list
+/// is empty (pre-v3 manifests).
+pub fn bucket_for(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n)
 }
 
 #[cfg(test)]
@@ -339,6 +385,46 @@ out next s32 16 data
 out logp f32 16 data
 out kcache f32 1x16x64x2x16 state
 out vcache f32 1x16x64x2x16 state
+end
+";
+
+    const SAMPLE_V3: &str = "\
+version 3
+global vocab 64 sctx 64 sprompt 40 amax 24 genb 4 trainb 32 scoreb 32
+model nano d 32 layers 1 heads 2 ff 64 headdim 16 nparams 2 head 0
+artifact nano.prefill@1 file nano.prefill@1.hlo.txt
+in prompt s32 1x40 data
+out next s32 1 data
+out logp f32 1 data
+out kcache f32 1x1x64x2x16 state
+out vcache f32 1x1x64x2x16 state
+artifact nano.prefill@2 file nano.prefill@2.hlo.txt
+in prompt s32 2x40 data
+out next s32 2 data
+out logp f32 2 data
+out kcache f32 1x2x64x2x16 state
+out vcache f32 1x2x64x2x16 state
+artifact nano.prefill@4 file nano.prefill@4.hlo.txt
+in prompt s32 4x40 data
+out next s32 4 data
+out logp f32 4 data
+out kcache f32 1x4x64x2x16 state
+out vcache f32 1x4x64x2x16 state
+artifact nano.prefill file nano.prefill@4.hlo.txt
+in prompt s32 4x40 data
+out next s32 4 data
+out logp f32 4 data
+out kcache f32 1x4x64x2x16 state
+out vcache f32 1x4x64x2x16 state
+artifact nano.kv_install@2 file nano.kv_install@2.hlo.txt
+in kcache f32 1x4x64x2x16 state
+in vcache f32 1x4x64x2x16 state
+in src_k f32 1x2x64x2x16 state
+in src_v f32 1x2x64x2x16 state
+in slots s32 2 data
+in count s32 scalar data
+out kcache f32 1x4x64x2x16 state
+out vcache f32 1x4x64x2x16 state
 end
 ";
 
@@ -390,12 +476,53 @@ end
     }
 
     #[test]
+    fn v3_bucketed_artifacts_discovered() {
+        let m = Manifest::parse(SAMPLE_V3).unwrap();
+        assert_eq!(m.version, 3);
+        assert_eq!(m.prefill_buckets("nano"), vec![1, 2, 4]);
+        assert_eq!(m.kv_install_buckets("nano"), vec![2]);
+        // the alias resolves to the same file as the @genb bucket
+        assert_eq!(
+            m.artifact("nano.prefill").unwrap().file,
+            m.artifact("nano.prefill@4").unwrap().file
+        );
+        assert!(m.has_artifact("nano.kv_install@2"));
+        assert!(!m.has_artifact("nano.kv_install@1"));
+        // install spec names resolve for index lookups
+        let inst = m.artifact("nano.kv_install@2").unwrap();
+        assert_eq!(inst.input_index("slots").unwrap(), 4);
+        assert_eq!(inst.input_index("count").unwrap(), 5);
+        assert_eq!(inst.ins[2].class, ArgClass::State);
+        // pre-v3 manifests advertise no buckets
+        let v2 = Manifest::parse(SAMPLE_V2).unwrap();
+        assert!(v2.prefill_buckets("nano").is_empty());
+        assert!(v2.kv_install_buckets("nano").is_empty());
+    }
+
+    #[test]
+    fn bucket_selection_picks_smallest_fit() {
+        let buckets = [1, 2, 4, 8, 16];
+        assert_eq!(bucket_for(&buckets, 1), Some(1));
+        assert_eq!(bucket_for(&buckets, 2), Some(2));
+        assert_eq!(bucket_for(&buckets, 3), Some(4));
+        assert_eq!(bucket_for(&buckets, 5), Some(8));
+        assert_eq!(bucket_for(&buckets, 8), Some(8));
+        assert_eq!(bucket_for(&buckets, 16), Some(16));
+        // over the largest bucket or with no buckets at all: no fit
+        assert_eq!(bucket_for(&buckets, 17), None);
+        assert_eq!(bucket_for(&[], 1), None);
+        // non-power-of-two lists (genb not a power of two) still work
+        assert_eq!(bucket_for(&[1, 2, 3], 3), Some(3));
+    }
+
+    #[test]
     fn rejects_bad_version() {
         let bad = SAMPLE.replace("version 1", "version 99");
         assert!(Manifest::parse(&bad).is_err());
-        // both shipped versions parse
+        // all shipped versions parse
         assert!(Manifest::parse(SAMPLE).is_ok());
         assert!(Manifest::parse(SAMPLE_V2).is_ok());
+        assert!(Manifest::parse(SAMPLE_V3).is_ok());
     }
 
     #[test]

@@ -20,6 +20,12 @@
 //!   fused tuple buffer that this API cannot split on-device; for those
 //!   every output falls back to a host download (`OutValue::Host`) and
 //!   callers transparently get the seed's host-round-trip behavior.
+//! * **Admission** (manifest v3): bucketed `prefill@B` artifacts plus a
+//!   `kv_install@B` scatter let the serving layer install freshly
+//!   prefilled KV slots into the persistent worker cache entirely on
+//!   device ([`crate::batching::KvCache::install_slots_device`]) — the
+//!   per-admission host traffic is O(B·sprompt) prompt bytes, not the
+//!   full-cache round-trip the host-surgery fallback pays.
 //!
 //! All host↔device traffic through this module is metered by
 //! [`TransferCounters`] (`Runtime::transfers`), which is how the benches
@@ -35,7 +41,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::io::{DType, Tensor};
-pub use manifest::{ArgClass, ArtifactSpec, Globals, IoSpec, Manifest, ModelMeta};
+pub use manifest::{bucket_for, ArgClass, ArtifactSpec, Globals, IoSpec, Manifest, ModelMeta};
 
 /// Every supported element type (f32/s32/u32) is 4 bytes wide.
 pub const ELEM_BYTES: usize = 4;

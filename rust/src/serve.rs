@@ -33,6 +33,15 @@
 //! * decode workers — slot-based continuous batching ([`BatchMode`]),
 //!   persistent KV caches, iteration-level admission, mid-decode
 //!   cancellation surgery, and per-token event streaming.
+//!
+//! Admission is device-side on manifest-v3 artifacts: prefill runs at
+//! the smallest power-of-two bucket that fits the admitted group
+//! (`prefill@B`) and the fresh KV slots are scattered into the
+//! persistent worker cache by the `kv_install@B` artifact
+//! ([`KvCache::install_slots_device`]) — per admission the host moves
+//! O(B·sprompt) prompt bytes, never the `[L, genb, sctx, H, Dh]` cache
+//! pair the host-surgery fallback (v1/v2 artifacts, or
+//! [`ServeConfig::force_host_admission`]) round-trips.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -50,7 +59,7 @@ use crate::lm::LmEngine;
 use crate::metrics::{LatencyRecorder, LatencySummary, RoutingCounters, RoutingSnapshot};
 use crate::policy::{LadderFamily, TierPolicy};
 use crate::router::RouterEngine;
-use crate::runtime::{Exec, Runtime};
+use crate::runtime::{Exec, Globals, Manifest, Runtime, ELEM_BYTES};
 use crate::tokenizer as tok;
 
 /// Default bound on accepted-but-unfinished requests ([`ServeConfig::queue_cap`]).
@@ -181,6 +190,13 @@ pub struct ServeConfig {
     /// server start). `None` falls back to an uncalibrated
     /// [`LadderFamily::synthetic`] family over the fleet's tier count.
     pub quality_ladders: Option<LadderFamily>,
+    /// Route admission through the host slot-surgery path even when the
+    /// artifacts (manifest v3) support the device-side `kv_install`
+    /// scatter. Bucketed prefill still applies, so this toggles *only*
+    /// the install mechanism — the A/B knob behind the
+    /// device-vs-host-admission equivalence tests and benches. No effect
+    /// on v1/v2 artifacts (host surgery is their only path).
+    pub force_host_admission: bool,
 }
 
 impl ServeConfig {
@@ -207,6 +223,7 @@ impl ServeConfig {
             batch_window: Duration::from_millis(5),
             queue_cap: DEFAULT_QUEUE_CAP,
             quality_ladders: None,
+            force_host_admission: false,
         }
     }
 }
@@ -245,6 +262,7 @@ pub struct Request {
     max_new_tokens: Option<usize>,
     deadline: Option<Duration>,
     policy: Option<TierPolicy>,
+    truncate: bool,
 }
 
 impl Request {
@@ -286,6 +304,17 @@ impl Request {
         self.policy = Some(p);
         self
     }
+
+    /// Accept oversized prompts by clipping them to the artifacts'
+    /// prompt window (`sprompt`) at submit time. Without this,
+    /// [`Server::submit`] rejects them with
+    /// [`SubmitError::PromptTooLong`] — the seed silently copied
+    /// `prompt.len()` tokens into the fixed window and panicked in the
+    /// decode worker instead.
+    pub fn truncate_prompt(mut self) -> Request {
+        self.truncate = true;
+        self
+    }
 }
 
 /// Lifecycle events streamed to a [`RequestHandle`]. Order is
@@ -321,6 +350,16 @@ pub enum SubmitError {
     /// The server's ingress is gone (router thread exited). The seed
     /// silently dropped such requests and left callers blocked forever.
     Closed,
+    /// The prompt exceeds the artifacts' `sprompt` window and the
+    /// request did not opt into [`Request::truncate_prompt`]. Rejected
+    /// at submit — the seed copied it into the fixed prefill window
+    /// unchecked and panicked mid-decode instead.
+    PromptTooLong {
+        /// Submitted prompt length in tokens.
+        len: usize,
+        /// The artifacts' prompt window (`sprompt`).
+        max: usize,
+    },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -328,6 +367,11 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::Busy => write!(f, "server busy: admission window full"),
             SubmitError::Closed => write!(f, "server closed: ingress is gone"),
+            SubmitError::PromptTooLong { len, max } => write!(
+                f,
+                "prompt too long: {len} tokens > {max}-token prompt window \
+                 (opt into Request::truncate_prompt to clip)"
+            ),
         }
     }
 }
@@ -471,7 +515,14 @@ impl InFlight {
     }
 
     fn expired(&self) -> bool {
-        self.deadline.is_some_and(|d| Instant::now() >= d)
+        self.expired_at(Instant::now())
+    }
+
+    /// Deadline check against a caller-supplied clock reading, so a sweep
+    /// over a whole backlog reads the clock once (and both passes of the
+    /// sweep agree on who is doomed).
+    fn expired_at(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 
     /// Effective token budget under the artifact-wide answer cap
@@ -535,11 +586,19 @@ pub struct ServerMetrics {
     pub decode_h2d_bytes: AtomicU64,
     /// Device→host bytes moved by decode iterations (all workers).
     pub decode_d2h_bytes: AtomicU64,
-    /// Host↔device bytes moved by admissions (prefill inputs + the KV
-    /// slot-surgery round-trip), kept separate so the decode counters
-    /// stay a pure per-iteration signal.
+    /// Host↔device bytes moved by admissions, kept separate so the
+    /// decode counters stay a pure per-iteration signal. Device-side
+    /// admission (manifest v3) keeps this at O(B·sprompt) prompt bytes
+    /// per admission; the host-surgery fallback adds the full KV-cache
+    /// round-trip.
     pub admit_h2d_bytes: AtomicU64,
     pub admit_d2h_bytes: AtomicU64,
+    /// Admission waves executed (one prefill + install each).
+    pub admissions: AtomicU64,
+    /// Requests admitted into decode slots (sum of wave sizes).
+    pub admitted: AtomicU64,
+    /// Wall-clock latency of each admission wave (prefill + install).
+    pub admit_latency: LatencyRecorder,
 }
 
 /// Point-in-time per-tier report.
@@ -568,9 +627,15 @@ pub struct ServerStats {
     pub decode_h2d_bytes: u64,
     pub decode_d2h_bytes: u64,
     /// Host↔device traffic attributable to admissions (prefill + KV
-    /// slot surgery).
+    /// slot install).
     pub admit_h2d_bytes: u64,
     pub admit_d2h_bytes: u64,
+    /// Admission waves executed.
+    pub admissions: u64,
+    /// Requests admitted into decode slots.
+    pub admitted: u64,
+    /// Admission-wave latency (prefill + install).
+    pub admit_latency: LatencySummary,
 }
 
 impl ServerStats {
@@ -593,6 +658,45 @@ impl ServerStats {
             self.decode_h2d_bytes as f64 / self.decode_steps as f64
         }
     }
+
+    /// Mean host↔device bytes per *admitted request* — the admission
+    /// headline number: O(sprompt·token) with device-side install
+    /// (manifest v3), O(L·genb·sctx·H·Dh) when slot surgery round-trips
+    /// the worker cache.
+    pub fn admit_bytes_per_req(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            (self.admit_h2d_bytes + self.admit_d2h_bytes) as f64 / self.admitted as f64
+        }
+    }
+}
+
+/// Upper bound on legitimate per-admission host bytes for device-side
+/// (manifest v3) admission: the full-bucket prompt upload plus O(B)
+/// control/sample lanes — 16 lanes of slack over `sprompt` covers
+/// lens/seeds/slots/count/temp and the sampled-token download. One
+/// definition shared by the `serving_e2e` CI gate and the integration
+/// suite so they enforce the same invariant.
+pub fn admission_byte_bound(g: &Globals) -> f64 {
+    (g.genb * (g.sprompt + 16) * ELEM_BYTES) as f64
+}
+
+/// Size in bytes of the smallest per-worker KV cache pair across
+/// `models` — the transfer that host-surgery admission round-trips per
+/// admission and device-side admission must never approach. Companion
+/// of [`admission_byte_bound`] for the same gates.
+pub fn min_kv_pair_bytes(manifest: &Manifest, models: &[&str]) -> Result<f64> {
+    anyhow::ensure!(!models.is_empty(), "no models given");
+    let g = manifest.globals;
+    let mut min = f64::MAX;
+    for m in models {
+        let meta = *manifest.model(m)?;
+        let pair =
+            (2 * meta.layers * g.genb * g.sctx * meta.heads * meta.headdim * ELEM_BYTES) as f64;
+        min = min.min(pair);
+    }
+    Ok(min)
 }
 
 /// Handle to a running server.
@@ -605,6 +709,8 @@ pub struct Server {
     metrics: Arc<ServerMetrics>,
     next_id: AtomicU64,
     queue_cap: u64,
+    /// The artifacts' prompt window, for submit-time length validation.
+    sprompt: usize,
 }
 
 fn snapshot_stats(metrics: &ServerMetrics, tier_names: &[String]) -> ServerStats {
@@ -624,6 +730,9 @@ fn snapshot_stats(metrics: &ServerMetrics, tier_names: &[String]) -> ServerStats
         decode_d2h_bytes: metrics.decode_d2h_bytes.load(Ordering::Relaxed),
         admit_h2d_bytes: metrics.admit_h2d_bytes.load(Ordering::Relaxed),
         admit_d2h_bytes: metrics.admit_d2h_bytes.load(Ordering::Relaxed),
+        admissions: metrics.admissions.load(Ordering::Relaxed),
+        admitted: metrics.admitted.load(Ordering::Relaxed),
+        admit_latency: metrics.admit_latency.snapshot(),
     }
 }
 
@@ -653,6 +762,12 @@ impl Server {
                 cfg.tiers.len()
             );
         }
+        // the manifest is the source of truth for the prompt window;
+        // loading it here (text parse, no PJRT) lets submit() reject
+        // oversized prompts before they reach a prefill
+        let sprompt = Manifest::load(&cfg.artifacts_dir.join("manifest.txt"))?
+            .globals
+            .sprompt;
         let tier_names: Vec<String> = cfg.tiers.iter().map(|t| t.name.clone()).collect();
         let costs: Vec<f64> = cfg.tiers.iter().map(|t| t.cost).collect();
         let metrics = Arc::new(ServerMetrics {
@@ -667,6 +782,9 @@ impl Server {
             decode_d2h_bytes: AtomicU64::new(0),
             admit_h2d_bytes: AtomicU64::new(0),
             admit_d2h_bytes: AtomicU64::new(0),
+            admissions: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            admit_latency: LatencyRecorder::new(),
         });
         let (ingress, router_rx) = mpsc::channel::<RouterMsg>();
         // readiness barrier: threads ack after compiling their executables
@@ -723,6 +841,7 @@ impl Server {
             metrics,
             next_id: AtomicU64::new(0),
             queue_cap: cfg.queue_cap as u64,
+            sprompt,
         })
     }
 
@@ -731,10 +850,23 @@ impl Server {
     ///
     /// Errors are explicit instead of silent: a full window is
     /// [`SubmitError::Busy`] (backpressure — retry after completions
-    /// drain) and a dead ingress is [`SubmitError::Closed`] (the seed
+    /// drain), a dead ingress is [`SubmitError::Closed`] (the seed
     /// ignored the failed send and left the caller blocked on a
-    /// receiver forever).
-    pub fn submit(&self, req: Request) -> std::result::Result<RequestHandle, SubmitError> {
+    /// receiver forever), and a prompt wider than the artifacts' window
+    /// is [`SubmitError::PromptTooLong`] unless the request opted into
+    /// [`Request::truncate_prompt`] (the seed copied it into the fixed
+    /// prefill buffer unchecked and panicked in the decode worker).
+    pub fn submit(&self, mut req: Request) -> std::result::Result<RequestHandle, SubmitError> {
+        if req.prompt.len() > self.sprompt {
+            if req.truncate {
+                req.prompt.truncate(self.sprompt);
+            } else {
+                return Err(SubmitError::PromptTooLong {
+                    len: req.prompt.len(),
+                    max: self.sprompt,
+                });
+            }
+        }
         // reserve an admission slot (CAS loop: submit is called from
         // many client threads)
         let mut cur = self.metrics.in_flight.load(Ordering::Acquire);
@@ -976,20 +1108,38 @@ fn router_thread(
     Ok(())
 }
 
+/// One admission bucket: a `prefill@size` artifact plus — when the
+/// device-side path is enabled — the matching `kv_install@size` scatter.
+/// `install: false` means bucketed prefill with host slot surgery
+/// ([`ServeConfig::force_host_admission`], or a manifest missing the
+/// install artifact for this bucket). Executables are compiled lazily on
+/// a bucket's first admission (`Runtime::exec` caches by name), so
+/// worker startup only pays for the full-batch bucket it warms
+/// explicitly, not every bucket a run may never admit at.
+#[derive(Clone, Copy)]
+struct AdmitBucket {
+    size: usize,
+    install: bool,
+}
+
 /// Per-worker state built **once** at thread start: compiled executables,
-/// the resident-params maps, the trace flag, and the persistent KV cache.
-/// The seed rebuilt the resident `HashMap` (and re-read `HYBRID_SERVE_TRACE`)
-/// on every admit/decode call — pure per-token overhead.
+/// the resident-params maps, the trace flag, the persistent KV cache, and
+/// the decode-input scratch tensors. The seed rebuilt the resident
+/// `HashMap` (and re-read `HYBRID_SERVE_TRACE`) on every admit/decode
+/// call and allocated fresh input tensors every decode step — pure
+/// per-token overhead.
 struct WorkerCtx {
     engine: LmEngine,
     table: SlotTable<Work>,
     kv: KvCache,
     tier: usize,
     depth: Arc<AtomicU64>,
-    /// Compiled prefill/decode artifacts (cached `Arc`s, no name lookups
-    /// on the hot path).
+    /// Full-batch prefill — the admission fallback when no bucket fits
+    /// (pre-v3 manifests; on v3 it is the `@genb` bucket's exec).
     prefill: Arc<Exec>,
     decode: Arc<Exec>,
+    /// Admission buckets, ascending by size; empty on pre-v3 manifests.
+    admit_buckets: Vec<AdmitBucket>,
     /// Params-only resident map for prefill (input layout: params + data;
     /// never mutated).
     prefill_resident: HashMap<usize, Arc<xla::PjRtBuffer>>,
@@ -1000,6 +1150,12 @@ struct WorkerCtx {
     /// Logical `[L, genb, sctx, H, Dh]` KV shape (for adopting prefill
     /// outputs).
     cache_dims: Vec<usize>,
+    /// Decode-input scratch tensors, refilled in place every iteration
+    /// ([`SlotTable::fill_decode_inputs`]) — no per-step allocation.
+    cur_t: Tensor,
+    pos_t: Tensor,
+    step_t: Tensor,
+    seeds_t: Tensor,
     /// Reusable scalar temperature tensor.
     temp_t: Tensor,
     /// `HYBRID_SERVE_TRACE` read once at startup.
@@ -1019,10 +1175,29 @@ fn worker_thread(
     let g = rt.manifest.globals;
     let meta = *rt.manifest.model(&model)?;
     let engine = LmEngine::load(rt.clone(), &model, &cfg.run_dir.join("params").join(&model))?;
-    // warm compiles before accepting work (PJRT compile is seconds)
-    let prefill = rt.exec(&format!("{model}.prefill"))?;
+    // warm compiles before accepting work (PJRT compile is seconds):
+    // decode, the full-batch prefill, and — on v3 — the full-batch
+    // install, the bucket every high-load admission hits. Smaller
+    // buckets compile lazily on first use through the `Runtime::exec`
+    // cache, so startup does not pay for buckets never admitted at.
     let decode = rt.exec(&format!("{model}.decode"))?;
-    let _ = ready.send(());
+    let install_buckets = rt.manifest.kv_install_buckets(&model);
+    let admit_buckets: Vec<AdmitBucket> = rt
+        .manifest
+        .prefill_buckets(&model)
+        .into_iter()
+        .filter(|&b| b <= g.genb) // larger than the slot table — unreachable
+        .map(|b| AdmitBucket {
+            size: b,
+            install: !cfg.force_host_admission && install_buckets.contains(&b),
+        })
+        .collect();
+    // on v3 the `prefill` name aliases the @genb bucket's HLO file, so
+    // this also warms the largest bucket
+    let prefill = rt.exec(&format!("{model}.prefill"))?;
+    if admit_buckets.iter().any(|b| b.size == g.genb && b.install) {
+        rt.exec(&format!("{model}.kv_install@{}", g.genb))?;
+    }
     let prefill_resident = engine.params.resident_map();
     let decode_resident = prefill_resident.clone();
     let mut ctx = WorkerCtx {
@@ -1032,13 +1207,25 @@ fn worker_thread(
         depth,
         prefill,
         decode,
+        admit_buckets,
         prefill_resident,
         decode_resident,
         cache_dims: vec![meta.layers, g.genb, g.sctx, meta.heads, meta.headdim],
+        cur_t: Tensor::i32(vec![g.genb], vec![tok::PAD; g.genb]),
+        pos_t: Tensor::i32(vec![g.genb], vec![0; g.genb]),
+        step_t: Tensor::i32(vec![], vec![1]),
+        seeds_t: Tensor::u32(vec![g.genb], vec![0; g.genb]),
         temp_t: Tensor::f32(vec![], vec![cfg.temp]),
         trace: std::env::var_os("HYBRID_SERVE_TRACE").is_some(),
         engine,
     };
+    if ctx.admit_buckets.iter().any(|b| b.install) {
+        // device-side admission never pulls the cache to the host: put
+        // the zeroed cache on device once, at startup, so the first
+        // admission's byte count is already O(B·sprompt)
+        ctx.kv.to_device(&rt)?;
+    }
+    let _ = ready.send(());
     let mut backlog: Vec<Work> = Vec::new();
     let mut shutdown = false;
 
@@ -1108,34 +1295,73 @@ fn worker_thread(
 
 /// Prefill newly-admitted requests and install them into slots.
 ///
-/// Slot surgery is a host-side operation, so admission is the one place
-/// the persistent cache round-trips the device boundary (`to_host`,
-/// surgery, `to_device`); the steady-state decode loop stays zero-copy.
-/// Admission already pays a full prefill, so the KV hop is amortized
-/// over every token the request will decode. All admission traffic is
-/// metered into `admit_*_bytes`, separate from the decode counters.
+/// Prefill runs at the smallest admission bucket that fits the group
+/// (`prefill@B`, manifest v3) instead of always padding to `genb`, and
+/// the fresh KV slots are scattered into the persistent worker cache on
+/// device ([`KvCache::install_slots_device`]) — per admission the host
+/// moves O(B·sprompt) prompt bytes and the O(B) sampled tokens, never
+/// the cache pair. On pre-v3 manifests (or with
+/// [`ServeConfig::force_host_admission`]) slot surgery falls back to the
+/// host round-trip (`to_host`, [`KvCache::copy_slot_from`],
+/// `to_device`); the steady-state decode loop stays zero-copy either
+/// way. All admission traffic is metered into `admit_*_bytes`, separate
+/// from the decode counters.
 fn admit(
     ctx: &mut WorkerCtx,
     slots: &[usize],
     work: Vec<Work>,
     metrics: &Arc<ServerMetrics>,
 ) -> Result<()> {
+    let t0 = Instant::now();
     let rt = ctx.engine.runtime().clone();
     let before = rt.transfers();
     let g = rt.manifest.globals;
-    let prompts: Vec<Vec<i32>> = work.iter().map(|w| w.req.prompt.clone()).collect();
-    let seeds: Vec<u32> = work.iter().map(|w| w.req.id as u32).collect();
     let n = ctx.engine.params.len();
+    let n_req = work.len();
+    debug_assert_eq!(n_req, slots.len());
 
-    // run prefill in waves of genb (slots are per worker, genb capacity)
-    let bsz = g.genb;
+    // bucket selection: smallest bucketed prefill >= the group size;
+    // the full generation batch when no bucket fits (pre-v3 manifests).
+    // Executables resolve through the `Runtime::exec` cache — compiled
+    // once on a bucket's first admission, a name lookup after that
+    // (admission is off the per-token path).
+    let bucket = ctx.admit_buckets.iter().find(|b| b.size >= n_req).copied();
+    let (bsz, prefill, install) = match bucket {
+        Some(b) => {
+            let model = &ctx.engine.name;
+            let prefill = if b.size == g.genb {
+                // `prefill` aliases the @genb bucket's HLO (warmed at
+                // worker start) — don't compile the same file twice
+                ctx.prefill.clone()
+            } else {
+                rt.exec(&format!("{model}.prefill@{}", b.size))?
+            };
+            let install = if b.install {
+                Some(rt.exec(&format!("{model}.kv_install@{}", b.size))?)
+            } else {
+                None
+            };
+            (b.size, prefill, install)
+        }
+        None => (g.genb, ctx.prefill.clone(), None),
+    };
+
     let mut ptoks = vec![tok::PAD; bsz * g.sprompt];
     let mut lens = vec![1i32; bsz];
     let mut seedv = vec![0u32; bsz];
-    for (b, p) in prompts.iter().enumerate() {
+    for (b, w) in work.iter().enumerate() {
+        let p = &w.req.prompt;
+        // Server::submit rejects or truncates oversized prompts; this
+        // guards library callers reaching the worker some other way
+        anyhow::ensure!(
+            p.len() <= g.sprompt,
+            "admitted prompt of {} tokens exceeds the {}-token window",
+            p.len(),
+            g.sprompt
+        );
         ptoks[b * g.sprompt..b * g.sprompt + p.len()].copy_from_slice(p);
         lens[b] = p.len() as i32;
-        seedv[b] = seeds[b];
+        seedv[b] = w.req.id as u32;
     }
     let ptoks = Tensor::i32(vec![bsz, g.sprompt], ptoks);
     let lens_t = Tensor::i32(vec![bsz], lens.clone());
@@ -1146,19 +1372,43 @@ fn admit(
         (n + 2, &seeds_t),
         (n + 3, &ctx.temp_t),
     ];
-    let mut outs = ctx.prefill.run_resident(&ctx.prefill_resident, &host)?;
+    let mut outs = prefill.run_resident(&ctx.prefill_resident, &host)?;
     let vc = outs.pop().context("vcache")?;
     let kc = outs.pop().context("kcache")?;
     let logp = outs.pop().context("logp")?.into_tensor()?;
     let first = outs.pop().context("next")?.into_tensor()?;
-    let mut fresh = KvCache::from_outputs(kc, vc, &ctx.cache_dims)?;
-    fresh.to_host(&rt)?;
-    ctx.kv.to_host(&rt)?;
+
+    let device_install = match (install, kc.device().cloned(), vc.device().cloned()) {
+        (Some(inst), Some(kb), Some(vb)) => {
+            // device path: scatter the fresh slots into the persistent
+            // cache without either cache crossing the host boundary
+            ctx.kv.install_slots_device(&rt, &inst, &kb, &vb, slots)?;
+            true
+        }
+        _ => {
+            // host-surgery fallback: v1/v2 artifacts, forced host
+            // admission, or (defensively) prefill outputs that came back
+            // host-resident
+            let mut dims = ctx.cache_dims.clone();
+            dims[1] = bsz;
+            let mut fresh = KvCache::from_outputs(kc, vc, &dims)?;
+            fresh.to_host(&rt)?;
+            ctx.kv.to_host(&rt)?;
+            for (b, &slot_idx) in slots.iter().enumerate() {
+                ctx.kv.copy_slot_from(&fresh, b, slot_idx)?;
+            }
+            // hand the merged cache back to the device so steady-state
+            // decode starts zero-copy immediately (a no-op gain on
+            // pre-v2 artifacts, whose decode outputs pull it back to
+            // the host anyway)
+            ctx.kv.to_device(&rt)?;
+            false
+        }
+    };
+
     let first = first.as_i32()?;
     let logp = logp.as_f32()?;
-
     for (b, (w, &slot_idx)) in work.into_iter().zip(slots).enumerate() {
-        ctx.kv.copy_slot_from(&fresh, b, slot_idx)?;
         let plen = lens[b];
         if first[b] == tok::EOS {
             complete(ctx, w, vec![], 0.0, metrics);
@@ -1180,17 +1430,25 @@ fn admit(
         };
         ctx.table.insert(slot_idx, slot)?;
     }
-    // hand the merged cache back to the device so steady-state decode
-    // starts zero-copy immediately (a no-op gain on pre-v2 artifacts,
-    // whose decode outputs pull it back to the host anyway)
-    ctx.kv.to_device(&rt)?;
     let moved = before.delta(rt.transfers());
+    // device-side admission must never move the cache pair: its host
+    // traffic is the bucketed prompt upload plus O(B) control/sample
+    // bytes, orders of magnitude under the cache size
+    debug_assert!(
+        !device_install || moved.h2d_bytes + moved.d2h_bytes < ctx.kv.byte_size() / 4,
+        "device admission moved {} B — the KV cache is round-tripping (cache pair = {} B)",
+        moved.h2d_bytes + moved.d2h_bytes,
+        ctx.kv.byte_size()
+    );
     metrics
         .admit_h2d_bytes
         .fetch_add(moved.h2d_bytes, Ordering::Relaxed);
     metrics
         .admit_d2h_bytes
         .fetch_add(moved.d2h_bytes, Ordering::Relaxed);
+    metrics.admissions.fetch_add(1, Ordering::Relaxed);
+    metrics.admitted.fetch_add(n_req as u64, Ordering::Relaxed);
+    metrics.admit_latency.record(t0.elapsed());
     Ok(())
 }
 
@@ -1206,17 +1464,20 @@ fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) -> Result<()> 
     let g = rt.manifest.globals;
     let n = ctx.engine.params.len();
 
-    let (cur, pos, seeds) = ctx.table.decode_inputs();
-    let bsz = ctx.table.capacity();
-    let cur_t = Tensor::i32(vec![bsz], cur);
-    let pos_t = Tensor::i32(vec![bsz], pos.clone());
-    let step_t = Tensor::i32(vec![], vec![(pos.iter().max().copied().unwrap_or(0)) + 1]);
-    let seeds_t = Tensor::u32(vec![bsz], seeds);
+    // refill the per-worker scratch tensors in place — the per-token
+    // loop allocates nothing for its inputs
+    {
+        let cur = ctx.cur_t.as_i32_mut()?;
+        let pos = ctx.pos_t.as_i32_mut()?;
+        let seeds = ctx.seeds_t.as_u32_mut()?;
+        let max_pos = ctx.table.fill_decode_inputs(cur, pos, seeds);
+        ctx.step_t.as_i32_mut()?[0] = max_pos + 1;
+    }
     let mut host: Vec<(usize, &Tensor)> = vec![
-        (n + 2, &cur_t),
-        (n + 3, &pos_t),
-        (n + 4, &step_t),
-        (n + 5, &seeds_t),
+        (n + 2, &ctx.cur_t),
+        (n + 3, &ctx.pos_t),
+        (n + 4, &ctx.step_t),
+        (n + 5, &ctx.seeds_t),
         (n + 6, &ctx.temp_t),
     ];
     ctx.kv.bind(n, n + 1, &mut ctx.decode_resident, &mut host);
@@ -1286,21 +1547,33 @@ fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) -> Result<()> 
 
 /// Retire cancelled / deadline-expired work still waiting in a worker's
 /// backlog (routed, not yet admitted to a slot).
+///
+/// Runs every worker iteration, so the common nothing-doomed case is a
+/// single allocation-free scan; only when something must be retired is
+/// the backlog rebuilt — one pass, not the O(n²) `Vec::remove` shuffle
+/// per retired entry. Both passes read the clock once and agree on who
+/// is expired.
 fn sweep_backlog(backlog: &mut Vec<Work>, ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) {
-    let mut i = 0;
-    while i < backlog.len() {
-        if backlog[i].req.cancelled() {
-            let w = backlog.remove(i);
+    let now = Instant::now();
+    if !backlog
+        .iter()
+        .any(|w| w.req.cancelled() || w.req.expired_at(now))
+    {
+        return;
+    }
+    let mut kept: Vec<Work> = Vec::with_capacity(backlog.len());
+    for w in backlog.drain(..) {
+        if w.req.cancelled() {
             cancel_work(ctx, w, metrics);
-        } else if backlog[i].req.expired() {
-            let w = backlog.remove(i);
+        } else if w.req.expired_at(now) {
             metrics.routing.shed(ctx.tier);
             ctx.depth.fetch_sub(1, Ordering::Relaxed);
             finish(w.req, Event::Failed { reason: "deadline expired before decode".into() });
         } else {
-            i += 1;
+            kept.push(w);
         }
     }
+    *backlog = kept;
 }
 
 /// Retire one cancelled request owned by this worker (backlog entry or
@@ -1453,8 +1726,46 @@ mod tests {
     fn submit_and_request_errors_render() {
         assert_eq!(SubmitError::Busy.to_string(), "server busy: admission window full");
         assert!(SubmitError::Closed.to_string().contains("closed"));
+        let e = SubmitError::PromptTooLong { len: 55, max: 40 };
+        assert!(e.to_string().contains("55"));
+        assert!(e.to_string().contains("40"));
+        assert_ne!(e, SubmitError::Busy);
         assert!(RequestError::Failed("deadline".into()).to_string().contains("deadline"));
         assert_ne!(RequestError::Cancelled, RequestError::Timeout);
+    }
+
+    #[test]
+    fn truncate_prompt_builder_flag() {
+        let r = Request::new(vec![1; 100]);
+        assert!(!r.truncate, "rejection is the default for oversized prompts");
+        let r = r.truncate_prompt();
+        assert!(r.truncate);
+        // the builder only records the opt-in; clipping happens at
+        // submit against the manifest's sprompt (integration-tested)
+        assert_eq!(r.prompt.len(), 100);
+    }
+
+    #[test]
+    fn expired_at_uses_the_callers_clock() {
+        let mk = |deadline| InFlight {
+            id: 0,
+            prompt: vec![],
+            quality: None,
+            policy: None,
+            max_new: None,
+            deadline: Some(deadline),
+            t0: Instant::now(),
+            tx: mpsc::channel().0,
+            cancel: Arc::new(AtomicBool::new(false)),
+            _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
+        };
+        let now = Instant::now();
+        let req = mk(now + Duration::from_secs(60));
+        assert!(!req.expired_at(now));
+        // the same request is expired when judged by a later clock —
+        // sweep passes sharing one reading always agree
+        assert!(req.expired_at(now + Duration::from_secs(61)));
+        assert!(mk(now).expired_at(now));
     }
 
     #[test]

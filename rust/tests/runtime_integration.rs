@@ -6,8 +6,9 @@
 
 use std::path::{Path, PathBuf};
 
+use hybrid_llm::batching::KvCache;
 use hybrid_llm::io::Tensor;
-use hybrid_llm::runtime::Runtime;
+use hybrid_llm::runtime::{bucket_for, Runtime};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -120,6 +121,91 @@ fn resident_params_execute_matches_literal_path() {
 
     assert_eq!(out_lit[0], out_res[0], "sampled token must match");
     assert_eq!(out_lit[2], out_res[2], "kcache must match");
+}
+
+/// Manifest v3: the `kv_install@B` scatter must (a) produce a cache
+/// byte-identical to host-side slot surgery over the same prefill
+/// outputs — including masking the bucket's padding entries — and
+/// (b) move only the O(B) slot/count bytes across the host boundary.
+#[test]
+fn kv_install_matches_host_surgery_and_moves_o_b_bytes() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    if rt.manifest.version < 3 {
+        eprintln!("pre-v3 artifacts: no device-side admission to test");
+        return;
+    }
+    let g = rt.manifest.globals;
+    let meta = *rt.manifest.model("nano").unwrap();
+    let init = rt.exec("nano.init").unwrap();
+    let params = init.run(&[&Tensor::u32(vec![], vec![3])]).unwrap();
+    let n = params.len();
+    let mut resident = std::collections::HashMap::new();
+    for (i, p) in params.iter().enumerate() {
+        resident.insert(i, rt.upload(p).unwrap());
+    }
+
+    // three requests -> bucket 4: entry 3 is padding whose install must
+    // be masked out whatever garbage its prefill row carries
+    let n_req = 3usize;
+    let buckets = rt.manifest.prefill_buckets("nano");
+    let b = bucket_for(&buckets, n_req).expect("v3 manifests carry prefill buckets");
+    assert!(b >= n_req && b < g.genb, "bucket {b} for {n_req} requests");
+    let prefill = rt.exec(&format!("nano.prefill@{b}")).unwrap();
+    let mut prompt = vec![0i32; b * g.sprompt];
+    for (i, r) in prompt.chunks_mut(g.sprompt).enumerate() {
+        r[0] = 1;
+        r[1] = 9 + i as i32;
+        r[2] = 4;
+    }
+    let prompt = Tensor::i32(vec![b, g.sprompt], prompt);
+    let lens = Tensor::i32(vec![b], vec![3; b]);
+    let seeds = Tensor::u32(vec![b], (0..b as u32).collect());
+    let temp = Tensor::f32(vec![], vec![0.0]);
+    let host: Vec<(usize, &Tensor)> = vec![
+        (n, &prompt),
+        (n + 1, &lens),
+        (n + 2, &seeds),
+        (n + 3, &temp),
+    ];
+    let mut outs = prefill.run_resident(&resident, &host).unwrap();
+    let vc = outs.pop().unwrap();
+    let kc = outs.pop().unwrap();
+    let (kb, vb) = (
+        kc.device().expect("v3 prefill kcache stays on device").clone(),
+        vc.device().expect("v3 prefill vcache stays on device").clone(),
+    );
+
+    // device path: scatter into a zeroed device-resident cache
+    let slots = [5usize, 0, 9];
+    let install = rt.exec(&format!("nano.kv_install@{b}")).unwrap();
+    let mut dev = KvCache::zeros(meta.layers, g.genb, g.sctx, meta.heads, meta.headdim);
+    dev.to_device(&rt).unwrap(); // startup upload, outside the metered window
+    let before = rt.transfers();
+    dev.install_slots_device(&rt, &install, &kb, &vb, &slots).unwrap();
+    let moved = before.delta(rt.transfers());
+    assert!(dev.is_device(), "install must keep the cache on device");
+    assert_eq!(moved.d2h_bytes, 0, "install downloaded {} B", moved.d2h_bytes);
+    assert!(
+        moved.h2d_bytes < 1024,
+        "install uploaded {} B — O(B) slot indices expected",
+        moved.h2d_bytes
+    );
+
+    // host-surgery reference over the same prefill outputs
+    let bucket_dims = vec![meta.layers, b, g.sctx, meta.heads, meta.headdim];
+    let mut fresh = KvCache::from_outputs(kc, vc, &bucket_dims).unwrap();
+    fresh.to_host(&rt).unwrap();
+    let mut reference = KvCache::zeros(meta.layers, g.genb, g.sctx, meta.heads, meta.headdim);
+    for (i, &s) in slots.iter().enumerate() {
+        reference.copy_slot_from(&fresh, i, s).unwrap();
+    }
+
+    dev.to_host(&rt).unwrap();
+    let (dk, dv) = dev.host_tensors().unwrap();
+    let (rk, rv) = reference.host_tensors().unwrap();
+    assert_eq!(dk, rk, "device-installed kcache != host surgery");
+    assert_eq!(dv, rv, "device-installed vcache != host surgery");
 }
 
 #[test]

@@ -13,7 +13,8 @@ use hybrid_llm::lm::LmEngine;
 use hybrid_llm::policy::{LadderFamily, TierPolicy};
 use hybrid_llm::runtime::Runtime;
 use hybrid_llm::serve::{
-    Event, ReplicaSelect, Request, RequestError, ServeConfig, Server, SubmitError, TierSpec,
+    admission_byte_bound, min_kv_pair_bytes, Event, ReplicaSelect, Request, RequestError,
+    ServeConfig, Server, SubmitError, TierSpec,
 };
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -88,14 +89,7 @@ fn serves_all_requests_continuous() {
     // logprobs — never the O(L·B·S·H·Dh) KV pair the seed round-tripped.
     let rt = Runtime::load(&artifacts).unwrap();
     if rt.manifest.version >= 2 {
-        let g = rt.manifest.globals;
-        let kv_pair_bytes = ["nano", "micro"]
-            .iter()
-            .map(|m| {
-                let meta = *rt.manifest.model(m).unwrap();
-                (2 * meta.layers * g.genb * g.sctx * meta.heads * meta.headdim * 4) as f64
-            })
-            .fold(f64::MAX, f64::min);
+        let kv_pair_bytes = min_kv_pair_bytes(&rt.manifest, &["nano", "micro"]).unwrap();
         assert!(
             stats.d2h_bytes_per_step() < kv_pair_bytes / 4.0,
             "decode downloads {:.0} B/step — KV caches are round-tripping \
@@ -175,6 +169,130 @@ fn device_and_host_kv_decode_identical_tokens() {
             "slot {b}: logprobs diverged"
         );
     }
+}
+
+/// Acceptance (manifest v3): a steady-load run admits without any
+/// `[L, genb, sctx, H, Dh]` host↔device transfer — per admission the
+/// host moves O(B·sprompt) prompt bytes, asserted through the
+/// `TransferCounters`-backed admission byte counters.
+#[test]
+fn admission_moves_o_b_sprompt_bytes_on_v3() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&artifacts).unwrap();
+    if rt.manifest.version < 3 {
+        eprintln!("pre-v3 artifacts: admission is host surgery by design");
+        return;
+    }
+    let run_dir = seed_run_dir(&artifacts, "admitbytes");
+    let server =
+        Server::start(base_cfg(artifacts.clone(), run_dir.clone(), BatchMode::Continuous)).unwrap();
+    let corpus = generate(43, Scale::Smoke);
+    let handles: Vec<_> = corpus
+        .iter()
+        .take(24)
+        .map(|q| server.submit(Request::new(q.prompt.clone())).expect("submit"))
+        .collect();
+    for h in handles {
+        h.wait_timeout(Duration::from_secs(120)).expect("completion");
+    }
+    let stats = server.shutdown().unwrap();
+    assert!(stats.admissions > 0, "no admission waves recorded");
+    assert_eq!(stats.admitted, 24, "every request admitted exactly once");
+    let per_admission =
+        (stats.admit_h2d_bytes + stats.admit_d2h_bytes) as f64 / stats.admissions as f64;
+    // O(B·sprompt) vs O(L·genb·sctx·H·Dh): the same bound definitions
+    // the serving_e2e CI gate enforces
+    let o_b_sprompt = admission_byte_bound(&rt.manifest.globals);
+    let kv_pair_bytes = min_kv_pair_bytes(&rt.manifest, &["nano", "micro"]).unwrap();
+    assert!(
+        per_admission < o_b_sprompt,
+        "admission moved {per_admission:.0} B/wave — over the O(B·sprompt) bound \
+         ({o_b_sprompt:.0} B); the KV cache is round-tripping (pair = {kv_pair_bytes:.0} B)"
+    );
+    assert!(per_admission < kv_pair_bytes / 4.0);
+    assert!(stats.admit_bytes_per_req() > 0.0);
+    assert_eq!(stats.admit_latency.n, stats.admissions as usize);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// Device-install vs host-surgery admission must decode byte-identical
+/// tokens. Requests are submitted one at a time (each waits for its
+/// completion) so both servers see identical admission groups — the
+/// only variable is the install mechanism.
+#[test]
+fn device_and_host_admission_identical_tokens() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let corpus = generate(47, Scale::Smoke);
+    let prompts: Vec<Vec<i32>> = corpus.iter().take(6).map(|q| q.prompt.clone()).collect();
+    let run = |tag: &str, force_host: bool| -> Vec<Vec<i32>> {
+        let run_dir = seed_run_dir(&artifacts, tag);
+        let mut cfg = base_cfg(artifacts.clone(), run_dir.clone(), BatchMode::Continuous);
+        cfg.temp = 0.0; // greedy: tokens depend only on the KV contents
+        cfg.force_host_admission = force_host;
+        let server = Server::start(cfg).unwrap();
+        let out = prompts
+            .iter()
+            .map(|p| {
+                server
+                    .submit(Request::new(p.clone()))
+                    .expect("submit")
+                    .wait_timeout(Duration::from_secs(120))
+                    .expect("completion")
+                    .tokens
+            })
+            .collect();
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.admitted, prompts.len() as u64);
+        let _ = std::fs::remove_dir_all(&run_dir);
+        out
+    };
+    let device = run("admitdev", false);
+    let host = run("admithost", true);
+    for (i, (d, h)) in device.iter().zip(&host).enumerate() {
+        assert_eq!(d, h, "request {i}: install mechanism changed the decode");
+    }
+}
+
+#[test]
+fn oversized_prompts_rejected_or_truncated() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let sprompt = Runtime::load(&artifacts).unwrap().manifest.globals.sprompt;
+    let run_dir = seed_run_dir(&artifacts, "toolong");
+    let server =
+        Server::start(base_cfg(artifacts, run_dir.clone(), BatchMode::Continuous)).unwrap();
+    let corpus = generate(53, Scale::Smoke);
+    // extend a real prompt past the window with letter tokens
+    let mut long = corpus[0].prompt.clone();
+    while long.len() <= sprompt + 4 {
+        long.push(4); // 'a'
+    }
+    // default: rejected at submit, before any admission-window slot or
+    // prefill is spent on it
+    match server.submit(Request::new(long.clone())) {
+        Err(SubmitError::PromptTooLong { len, max }) => {
+            assert_eq!(len, long.len());
+            assert_eq!(max, sprompt);
+        }
+        other => panic!("expected PromptTooLong, got {:?}", other.map(|h| h.id())),
+    }
+    // opt-in truncation: clipped to the window and served normally
+    let h = server
+        .submit(Request::new(long).truncate_prompt())
+        .expect("truncating submit");
+    h.wait_timeout(Duration::from_secs(120)).expect("truncated request completes");
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.routing.total(), 1, "the rejected prompt never reached routing");
+    assert_eq!(stats.in_flight, 0);
+    let _ = std::fs::remove_dir_all(&run_dir);
 }
 
 #[test]
