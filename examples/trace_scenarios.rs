@@ -1,0 +1,117 @@
+//! Trace scenarios — generate synthetic traffic traces, round-trip one
+//! through the on-disk `# hybrid-trace v1` text format, then (when the
+//! AOT artifacts are built) replay a burst trace against a live two-tier
+//! fleet and check the serving invariants.
+//!
+//! ```sh
+//! cargo run --release --example trace_scenarios            # traces only
+//! make artifacts && cargo run --release --example trace_scenarios
+//! ```
+//!
+//! The full seven-scenario sweep (overload, cancel storms, ...) is the
+//! CLI's job: `cargo run --release -- kick-tires [--smoke]`.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::Result;
+use hybrid_llm::batching::BatchMode;
+use hybrid_llm::lm::LmEngine;
+use hybrid_llm::runtime::{Manifest, Runtime};
+use hybrid_llm::scenario::{
+    self, check_invariants, GenShape, ReplayOpts, Trace, TransferBounds,
+};
+use hybrid_llm::serve::{ServeConfig, Server};
+
+fn main() -> Result<()> {
+    println!("== trace scenarios ==\n");
+
+    // 1. generate: every built-in scenario is a seeded pure function of
+    // (seed, n, shape) — same inputs, same trace, any machine
+    let shape = GenShape { sprompt: 40, amax: 24 };
+    for sc in scenario::builtin_suite() {
+        let trace = (sc.make)(7, 32, shape);
+        println!(
+            "{:<14} {:>3} events over {:>7.1?}  ({})",
+            trace.name,
+            trace.events.len(),
+            trace.span(),
+            sc.about
+        );
+    }
+
+    // 2. round-trip: traces persist as plain text so recorded production
+    // traffic can be replayed later (lengths and timing only — replays
+    // fabricate token payloads, so no user data lands on disk)
+    let trace = scenario::gen_poisson_burst(7, 32, shape);
+    let path = std::env::temp_dir().join("hybrid_trace_example.txt");
+    trace.save(&path)?;
+    let loaded = Trace::load(&path)?;
+    assert_eq!(trace, loaded, "trace text round-trip must be lossless");
+    println!("\nsaved + reloaded {:?} ({} bytes)", path, std::fs::metadata(&path)?.len());
+    let _ = std::fs::remove_file(&path);
+
+    // 3. replay against a live fleet (needs artifacts)
+    let artifacts = Runtime::default_dir();
+    if !artifacts.join("manifest.txt").exists() {
+        println!("\nartifacts not built — skipping the live replay (run `make artifacts`)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&artifacts.join("manifest.txt"))?;
+    let g = &manifest.globals;
+    let shape = GenShape { sprompt: g.sprompt, amax: g.amax };
+
+    // seed a temp run dir with init weights (replay latency and the
+    // invariants are weight-independent)
+    let run_dir = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "runs/trace_scenarios".into()),
+    );
+    {
+        let rt = Runtime::load(&artifacts)?;
+        for model in ["small", "medium"] {
+            let dir = run_dir.join("params").join(model);
+            if !dir.join("p.emb.tz").exists() {
+                LmEngine::init(rt.clone(), model, 3)?.save(&dir)?;
+            }
+        }
+    }
+    let mut cfg = ServeConfig::two_tier(
+        artifacts.clone(),
+        run_dir.clone(),
+        "small",
+        "medium",
+        String::new(), // random router — no trained run required
+        0.5,
+    );
+    cfg.temp = 0.8;
+    cfg.mode = BatchMode::Continuous;
+    cfg.batch_window = Duration::from_millis(2);
+    let server = Server::start(cfg)?;
+
+    let trace = scenario::gen_poisson_burst(7, 32, shape);
+    println!("\nreplaying {:?}: {} requests...", trace.name, trace.events.len());
+    let out = scenario::replay(&server, &trace, &ReplayOpts::default())?;
+    let queue_cap = server.queue_cap();
+    let stats = server.shutdown()?;
+
+    println!(
+        "accepted {}  done {}  failed {}  cancelled {}  p50 {:.0} ms  p95 {:.0} ms",
+        out.accepted,
+        out.done,
+        out.failed,
+        out.cancelled,
+        out.e2e_p50_ms(),
+        out.e2e_p95_ms(),
+    );
+    let bounds: TransferBounds = scenario::transfer_bounds(&manifest, &["small", "medium"])?;
+    let violations = check_invariants(&out, &stats, queue_cap, &bounds);
+    if violations.is_empty() {
+        println!("invariants OK: exactly-one-terminal, balanced counters, bounded transfers");
+    } else {
+        for v in &violations {
+            println!("VIOLATION: {v}");
+        }
+        anyhow::bail!("{} invariant violation(s)", violations.len());
+    }
+    Ok(())
+}

@@ -13,6 +13,11 @@
 //! artifacts this bench is also the CI gate for device-side admission:
 //! it **fails** when admission bytes scale with the KV cache (i.e. with
 //! `sctx`) instead of the O(B·sprompt) prompt window.
+//!
+//! After the load points it runs the smoke scenario sweep
+//! (`scenario::kick_tires`): trace-replayed bursts, diurnal swings,
+//! long tails, mixed quality targets, overload, and cancel storms, each
+//! gated on the serving invariants — and fails on any violation.
 
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -214,6 +219,26 @@ fn main() -> anyhow::Result<()> {
     let json_path = Path::new("BENCH_serving.json");
     merge_bench_json(json_path, &json)?;
     println!("\nwrote {} metrics to {}", json.len(), json_path.display());
+
+    // scenario sweep (smoke): replay the built-in traffic scenarios —
+    // Poisson bursts, diurnal swings, long tails, mixed quality,
+    // overload, cancel storms — against the same fleet and gate each on
+    // the serving invariants (exactly-one-terminal, counter balance,
+    // bounded queue, O(B) transfer bounds). Per-scenario latency/shed/
+    // cancel/cost-advantage metrics join the trajectory file.
+    println!("\n== serving_e2e: scenario sweep (smoke) ==");
+    let mut opts = hybrid_llm::scenario::KickTiresOpts::new(artifacts.clone(), run_dir.clone());
+    opts.smoke = true;
+    opts.bench_json = Some(json_path.to_path_buf());
+    let report = hybrid_llm::scenario::kick_tires(&opts)?;
+    print!("{}", report.render());
+    anyhow::ensure!(
+        report.total_violations() == 0,
+        "{} serving-invariant violation(s) in the scenario sweep",
+        report.total_violations()
+    );
+    println!("scenario gate OK: all scenarios passed their invariants");
+
     let _ = std::fs::remove_dir_all(&run_dir);
     Ok(())
 }

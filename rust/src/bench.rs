@@ -113,7 +113,7 @@ impl Bencher {
             samples_ns.push(s.elapsed().as_nanos() as f64);
         }
         let mut sorted = samples_ns.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let d = |ns: f64| Duration::from_nanos(ns.max(0.0) as u64);
         BenchResult {
             name: name.to_string(),
@@ -122,8 +122,8 @@ impl Bencher {
             std_err: d(stats::std_err(&samples_ns)),
             p50: d(stats::percentile_sorted(&sorted, 50.0)),
             p95: d(stats::percentile_sorted(&sorted, 95.0)),
-            min: d(sorted[0]),
-            max: d(*sorted.last().unwrap()),
+            min: d(sorted.first().copied().unwrap_or(0.0)),
+            max: d(sorted.last().copied().unwrap_or(0.0)),
             items_per_iter,
         }
     }

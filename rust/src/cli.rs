@@ -113,6 +113,16 @@ impl Args {
         self.switches.iter().any(|s| s == key)
     }
 
+    /// Optional millisecond-duration flag (`--deadline-ms 250` style):
+    /// `None` when absent, a `Duration` otherwise. Shared by the
+    /// serving/scenario commands so every duration flag parses the same
+    /// way.
+    pub fn get_ms(&self, key: &str) -> Result<Option<std::time::Duration>> {
+        Ok(self
+            .get_parse_opt::<u64>(key)?
+            .map(std::time::Duration::from_millis))
+    }
+
     /// All unknown-flag detection for strict commands.
     pub fn check_known(&self, known_flags: &[&str], known_switches: &[&str]) -> Result<()> {
         for k in self.flags.keys() {
@@ -183,6 +193,18 @@ mod tests {
         assert!(a.get_csv::<f32>("missing").is_none());
         let b = parse("x --thresholds 0.7,abc");
         assert!(b.get_csv::<f32>("thresholds").unwrap().is_err());
+    }
+
+    #[test]
+    fn ms_duration_flag() {
+        let a = parse("kick-tires --drain-timeout-ms 2500");
+        assert_eq!(
+            a.get_ms("drain-timeout-ms").unwrap(),
+            Some(std::time::Duration::from_millis(2500))
+        );
+        assert_eq!(a.get_ms("missing").unwrap(), None);
+        let b = parse("kick-tires --drain-timeout-ms soon");
+        assert!(b.get_ms("drain-timeout-ms").is_err());
     }
 
     #[test]

@@ -50,6 +50,11 @@
 //! blocking convenience for callers that only want the final
 //! [`serve::Completion`].
 //!
+//! The [`scenario`] module stress-tests this API with trace-driven
+//! replays (Poisson bursts, diurnal swings, long-tail lengths, mixed
+//! quality targets, overload, cancel storms) gated on serving
+//! invariants — `repro kick-tires` runs the whole suite in one command.
+//!
 //! See `DESIGN.md` for the full system inventory, the tier-fleet serving
 //! architecture (§3), the quality→ladder calibration table (§5), and the
 //! per-experiment index (§6); measured results are rendered into
@@ -70,6 +75,7 @@ pub mod policy;
 pub mod rng;
 pub mod router;
 pub mod runtime;
+pub mod scenario;
 pub mod scorer;
 pub mod serve;
 pub mod stats;

@@ -5,6 +5,7 @@
 //! repro eval <id>... --run runs/default      # fig1 fig3 ... table5, or `all`
 //! repro table2 --run runs/default [--queries 200]
 //! repro serve-demo --run runs/default [--requests 64] [--threshold 0.5]
+//! repro kick-tires --run runs/default [--smoke]       # scenario sweep + invariant gate
 //! repro corpus-stats [--scale default]
 //! ```
 
@@ -35,6 +36,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "eval" => cmd_eval(&args),
         "table2" => cmd_table2(&args),
         "serve-demo" => cmd_serve_demo(&args),
+        "kick-tires" => cmd_kick_tires(&args),
         "corpus-stats" => cmd_corpus_stats(&args),
         "" | "help" => {
             println!("{}", HELP);
@@ -52,6 +54,10 @@ subcommands:
   serve-demo   --run DIR [--requests N] [--threshold T] [--mode cont|rtc]
                [--tiers m[:replicas[:cost]],...] [--thresholds T1,T2,...] [--select rr|sq]
                [--quality Q] [--queue-cap N] [--deadline-ms MS] [--admit device|host]
+  kick-tires   --run DIR [--smoke] [--small M] [--large M] [--seed N]
+               [--scenarios a,b,...] [--json PATH] [--drain-timeout-ms MS]
+               run the whole trace-replay scenario suite, gate on serving
+               invariants, and merge metrics into the perf trajectory
   corpus-stats [--scale S]                                print corpus stats without a run";
 
 fn scale_of(args: &Args) -> Result<Scale> {
@@ -392,6 +398,66 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         stats.admit_latency.p50_ms,
         stats.admit_bytes_per_req() / 1024.0
     );
+    Ok(())
+}
+
+/// One-command scenario sweep: replay every built-in traffic scenario
+/// (bursts, diurnal swings, long tails, mixed quality, overload, cancel
+/// storms) against a fresh two-tier fleet, gate each on the serving
+/// invariants, regenerate `results/scenarios.md`, and merge per-scenario
+/// metrics into the perf trajectory. Exits non-zero on any invariant
+/// violation — this is the CI smoke gate (`kick-tires --smoke`).
+fn cmd_kick_tires(args: &Args) -> Result<()> {
+    let run_dir = PathBuf::from(args.get("run", "runs/default"));
+    let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
+    if !artifacts.join("manifest.txt").exists() {
+        println!(
+            "kick-tires: skipping — artifacts not built at {artifacts:?} (run `make artifacts`)"
+        );
+        return Ok(());
+    }
+    let mut opts = hybrid_llm::scenario::KickTiresOpts::new(artifacts.clone(), run_dir.clone());
+    opts.small = args.get("small", "small").to_string();
+    opts.large = args.get("large", "medium").to_string();
+    opts.smoke = args.switch("smoke");
+    opts.seed = args.get_parse("seed", opts.seed)?;
+    opts.only = args.get_csv::<String>("scenarios").transpose()?;
+    opts.bench_json = Some(PathBuf::from(args.get("json", "BENCH_serving.json")));
+    opts.drain_timeout = args.get_ms("drain-timeout-ms")?;
+
+    // seed init weights for any tier model the run dir doesn't have yet
+    // (replay latency is weight-independent, so a pipeline run is not
+    // required to kick the serving loop's tires)
+    {
+        let rt = Runtime::load(&artifacts)?;
+        for model in [opts.small.as_str(), opts.large.as_str()] {
+            let dir = run_dir.join("params").join(model);
+            if !dir.exists() {
+                println!("kick-tires: seeding init weights for {model} in {dir:?}");
+                hybrid_llm::lm::LmEngine::init(rt.clone(), model, 3)?.save(&dir)?;
+            }
+        }
+    }
+
+    let mode = if opts.smoke { "smoke" } else { "full" };
+    println!(
+        "kick-tires: {mode} sweep, fleet {}/{}, seed {:#x}",
+        opts.small, opts.large, opts.seed
+    );
+    let report = hybrid_llm::scenario::kick_tires(&opts)?;
+    print!("{}", report.render());
+    println!(
+        "\nwrote {:?} and merged {} metrics into {:?}",
+        run_dir.join("results").join("scenarios.md"),
+        report.bench_entries().len(),
+        opts.bench_json.as_ref().unwrap()
+    );
+    let violations = report.total_violations();
+    anyhow::ensure!(
+        violations == 0,
+        "{violations} invariant violation(s) — see the report above"
+    );
+    println!("all scenarios passed their invariants");
     Ok(())
 }
 

@@ -53,7 +53,7 @@ impl LatencySummary {
         }
         let ms: Vec<f64> = samples.iter().map(|&x| x as f64 / 1000.0).collect();
         let mut sorted = ms.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         LatencySummary {
             n: ms.len(),
             mean_ms: stats::mean(&ms),

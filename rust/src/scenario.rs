@@ -1,0 +1,1171 @@
+//! Trace-driven scenario harness: replay recorded (or synthesized)
+//! request traces against a running [`Server`] and gate the outcome on
+//! serving invariants.
+//!
+//! The paper's headline claim — up to 40% fewer large-model calls with
+//! no quality drop — is only credible under realistic traffic, and the
+//! steady offered load the benches measure is the *easiest* regime for
+//! a serving loop. This module supplies the hard ones: Poisson bursts,
+//! diurnal rate swings, long-tail prompt/answer lengths, mixed
+//! per-request quality targets, overload against a small admission
+//! window, and mass mid-decode cancellation. Each scenario drives the
+//! first-class request API ([`Request`]/[`RequestHandle`]) exactly the
+//! way an external client would — live event draining, per-token
+//! stream accounting, client-side cancels — and every replay is
+//! checked against the invariants the API documents:
+//!
+//! * **exactly one terminal event** (`Done`/`Failed`/`Cancelled`) per
+//!   accepted request, stream never silently dropped;
+//! * **stream/completion agreement**: the concatenated `Token` events
+//!   equal `Completion::tokens`;
+//! * **counter balance at drain**: `completed + cancelled + shed`
+//!   equals accepted submits, and `in_flight` returns to zero;
+//! * **bounded queue honored**: the sampled in-flight count never
+//!   exceeds [`ServeConfig::queue_cap`];
+//! * **O(B) transfer bounds preserved** (manifest-v3 artifacts):
+//!   admission moves O(B·sprompt) host bytes per request and decode
+//!   steps never approach the KV-pair round-trip.
+//!
+//! [`kick_tires`] is the one-command entry point (CLI subcommand
+//! `repro kick-tires`, also run by the `serving_e2e` bench): it runs
+//! every built-in scenario, renders a serving report, and merges
+//! per-scenario metrics into the `BENCH_serving.json` perf trajectory.
+//!
+//! Traces are plain text (`# hybrid-trace v1` header, one
+//! `key=value`-pair line per request) so real workloads can be
+//! recorded, committed, and replayed deterministically; the synthetic
+//! generators are seeded and reproduce bit-identically from a seed.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::TryRecvError;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::batching::BatchMode;
+use crate::rng::Rng;
+use crate::runtime::Manifest;
+use crate::serve::{
+    self, Event, Request, RequestHandle, ServeConfig, Server, ServerStats, SubmitError,
+};
+use crate::stats;
+use crate::tokenizer as tok;
+
+/// One request in a trace: when it arrives and what it asks for.
+/// Prompts are described by length only — the replay engine fabricates
+/// deterministic token content, so traces stay small and carry no
+/// payload data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival offset from trace start.
+    pub at: Duration,
+    /// Prompt length in tokens (clamped to the artifacts' window at
+    /// replay).
+    pub prompt_len: usize,
+    /// Per-request quality target ([`Request::quality`]).
+    pub quality: Option<f32>,
+    /// Token budget ([`Request::max_new_tokens`]).
+    pub max_new: Option<usize>,
+    /// Relative deadline ([`Request::deadline`]).
+    pub deadline: Option<Duration>,
+    /// Client-side cancel this long after the request is accepted.
+    pub cancel_after: Option<Duration>,
+}
+
+impl TraceEvent {
+    pub fn new(at: Duration, prompt_len: usize) -> TraceEvent {
+        TraceEvent {
+            at,
+            prompt_len,
+            quality: None,
+            max_new: None,
+            deadline: None,
+            cancel_after: None,
+        }
+    }
+}
+
+/// A named request trace, sorted by arrival time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Total time span from first to last arrival.
+    pub fn span(&self) -> Duration {
+        self.events.last().map(|e| e.at).unwrap_or(Duration::ZERO)
+    }
+
+    /// Serialize to the `hybrid-trace v1` text format: a header line,
+    /// then one `key=value` pair line per request (times in µs).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut s = format!("# hybrid-trace v1 {}\n", self.name);
+        for e in &self.events {
+            s.push_str(&format!("at_us={} plen={}", e.at.as_micros(), e.prompt_len));
+            if let Some(q) = e.quality {
+                s.push_str(&format!(" q={q}"));
+            }
+            if let Some(m) = e.max_new {
+                s.push_str(&format!(" max={m}"));
+            }
+            if let Some(d) = e.deadline {
+                s.push_str(&format!(" dl_us={}", d.as_micros()));
+            }
+            if let Some(c) = e.cancel_after {
+                s.push_str(&format!(" cancel_us={}", c.as_micros()));
+            }
+            s.push('\n');
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, s).with_context(|| format!("writing trace {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading trace {path:?}"))?;
+        Trace::parse(&text)
+    }
+
+    /// Parse the text format; rejects unknown versions and malformed
+    /// pairs instead of guessing.
+    pub fn parse(text: &str) -> Result<Trace> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty trace file")?;
+        let name = header
+            .strip_prefix("# hybrid-trace v1")
+            .with_context(|| format!("bad trace header {header:?}"))?
+            .trim()
+            .to_string();
+        let mut events = Vec::new();
+        for (ln, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut at = None;
+            let mut ev = TraceEvent::new(Duration::ZERO, 0);
+            for pair in line.split_whitespace() {
+                let (k, v) = pair
+                    .split_once('=')
+                    .with_context(|| format!("trace line {}: bad pair {pair:?}", ln + 2))?;
+                let parse_u64 = || {
+                    v.parse::<u64>()
+                        .with_context(|| format!("trace line {}: bad {k}={v}", ln + 2))
+                };
+                match k {
+                    "at_us" => at = Some(Duration::from_micros(parse_u64()?)),
+                    "plen" => ev.prompt_len = parse_u64()? as usize,
+                    "q" => {
+                        ev.quality = Some(v.parse::<f32>().with_context(|| {
+                            format!("trace line {}: bad q={v}", ln + 2)
+                        })?)
+                    }
+                    "max" => ev.max_new = Some(parse_u64()? as usize),
+                    "dl_us" => ev.deadline = Some(Duration::from_micros(parse_u64()?)),
+                    "cancel_us" => ev.cancel_after = Some(Duration::from_micros(parse_u64()?)),
+                    other => anyhow::bail!("trace line {}: unknown key {other:?}", ln + 2),
+                }
+            }
+            ev.at = at.with_context(|| format!("trace line {}: missing at_us", ln + 2))?;
+            anyhow::ensure!(ev.prompt_len > 0, "trace line {}: missing/zero plen", ln + 2);
+            events.push(ev);
+        }
+        events.sort_by_key(|e| e.at);
+        Ok(Trace { name, events })
+    }
+}
+
+/// Artifact shape the generators target (from [`Manifest`] globals).
+#[derive(Debug, Clone, Copy)]
+pub struct GenShape {
+    /// Prompt window (`sprompt`).
+    pub sprompt: usize,
+    /// Answer budget (`amax`).
+    pub amax: usize,
+}
+
+fn exp_us(rng: &mut Rng, mean_us: f64) -> u64 {
+    // inverse-CDF exponential draw; 1 - f64 in [0,1) keeps ln finite
+    (-(1.0 - rng.next_f64()).ln() * mean_us).round() as u64
+}
+
+fn plen_uniform(rng: &mut Rng, shape: GenShape) -> usize {
+    rng.range((shape.sprompt / 4).max(1), shape.sprompt.max(2))
+}
+
+/// Steady offered load: fixed inter-arrival gap, uniform mid-size
+/// prompts — the regime the benches already measure, kept as the
+/// control scenario.
+pub fn gen_steady(seed: u64, n: usize, shape: GenShape) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x57EAD7);
+    let mut events = Vec::with_capacity(n);
+    for i in 0..n {
+        events.push(TraceEvent::new(
+            Duration::from_micros(i as u64 * 3_000),
+            plen_uniform(&mut rng, shape),
+        ));
+    }
+    Trace { name: "steady".into(), events }
+}
+
+/// Poisson arrivals with burst episodes: exponential inter-arrival gaps
+/// at a base rate, with every third batch of arrivals compressed ~10×
+/// — the bursty traffic ConsRoute-style cloud–edge deployments see.
+pub fn gen_poisson_burst(seed: u64, n: usize, shape: GenShape) -> Trace {
+    let mut rng = Rng::new(seed ^ 0xB0257);
+    let mut events = Vec::with_capacity(n);
+    let mut t_us = 0u64;
+    for i in 0..n {
+        let mean = if (i / 8) % 3 == 2 { 400.0 } else { 4_000.0 };
+        t_us += exp_us(&mut rng, mean);
+        events.push(TraceEvent::new(
+            Duration::from_micros(t_us),
+            plen_uniform(&mut rng, shape),
+        ));
+    }
+    Trace { name: "poisson-burst".into(), events }
+}
+
+/// Diurnal arrivals: the instantaneous rate swings sinusoidally
+/// (peak ≈ 9× trough) over the trace, compressing a day's load curve
+/// into one replay.
+pub fn gen_diurnal(seed: u64, n: usize, shape: GenShape) -> Trace {
+    let mut rng = Rng::new(seed ^ 0xD1024A1);
+    let mut events = Vec::with_capacity(n);
+    let mut t_us = 0u64;
+    let period_us = 120_000.0; // one "day"
+    for _ in 0..n {
+        let phase = (t_us as f64 / period_us) * std::f64::consts::TAU;
+        let rate_scale = 1.0 + 0.8 * phase.sin(); // in [0.2, 1.8]
+        t_us += exp_us(&mut rng, 3_000.0 / rate_scale);
+        events.push(TraceEvent::new(
+            Duration::from_micros(t_us),
+            plen_uniform(&mut rng, shape),
+        ));
+    }
+    Trace { name: "diurnal".into(), events }
+}
+
+/// Long-tail prompt and answer lengths: exponential draws clamped to
+/// the artifact windows, so most requests are short and a few pin the
+/// full prompt window or answer budget — the length skew that stresses
+/// slot occupancy.
+pub fn gen_long_tail(seed: u64, n: usize, shape: GenShape) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x107A11);
+    let mut events = Vec::with_capacity(n);
+    let mut t_us = 0u64;
+    for _ in 0..n {
+        t_us += exp_us(&mut rng, 3_000.0);
+        let plen =
+            (1 + exp_us(&mut rng, shape.sprompt as f64 / 4.0) as usize).min(shape.sprompt);
+        let max_new =
+            (1 + exp_us(&mut rng, shape.amax as f64 / 4.0) as usize).min(shape.amax);
+        let mut ev = TraceEvent::new(Duration::from_micros(t_us), plen);
+        ev.max_new = Some(max_new);
+        events.push(ev);
+    }
+    Trace { name: "long-tail".into(), events }
+}
+
+/// Mixed per-request quality targets: each request carries its own
+/// cost/quality knob, exercising the quality-indexed ladder family with
+/// heterogeneous batches (the paper's knob as a *request* parameter).
+pub fn gen_mixed_quality(seed: u64, n: usize, shape: GenShape) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x3B1A7);
+    const LEVELS: [f32; 5] = [0.05, 0.25, 0.5, 0.75, 0.95];
+    let mut events = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut ev = TraceEvent::new(
+            Duration::from_micros(i as u64 * 2_500),
+            plen_uniform(&mut rng, shape),
+        );
+        ev.quality = Some(LEVELS[rng.below(LEVELS.len())]);
+        events.push(ev);
+    }
+    Trace { name: "mixed-quality".into(), events }
+}
+
+/// Overload against a small admission window: arrivals far faster than
+/// service with short deadlines. Run with a reduced `queue_cap` and no
+/// Busy retries — the point is that backpressure (`Busy`) and deadline
+/// shedding engage and the counters still balance.
+pub fn gen_overload(seed: u64, n: usize, shape: GenShape) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x0E7105D);
+    let mut events = Vec::with_capacity(n);
+    let mut t_us = 0u64;
+    for _ in 0..n {
+        t_us += exp_us(&mut rng, 250.0);
+        let mut ev = TraceEvent::new(Duration::from_micros(t_us), plen_uniform(&mut rng, shape));
+        ev.deadline = Some(Duration::from_millis(rng.range(10, 60) as u64));
+        events.push(ev);
+    }
+    Trace { name: "overload-shed".into(), events }
+}
+
+/// Mass mid-decode cancellation: every request asks for the full answer
+/// budget and the client cancels most of them a few milliseconds after
+/// acceptance, landing cancels on queued *and* decoding requests.
+pub fn gen_cancel_storm(seed: u64, n: usize, shape: GenShape) -> Trace {
+    let mut rng = Rng::new(seed ^ 0xCA4CE1);
+    let mut events = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut ev = TraceEvent::new(
+            Duration::from_micros(i as u64 * 1_500),
+            plen_uniform(&mut rng, shape),
+        );
+        ev.max_new = Some(shape.amax);
+        if i % 4 != 3 {
+            // 75% of requests cancel between ~1 ms and ~50 ms after
+            // acceptance — spread across queued and mid-decode states
+            ev.cancel_after = Some(Duration::from_micros(rng.range(1_000, 50_000) as u64));
+        }
+        events.push(ev);
+    }
+    Trace { name: "cancel-storm".into(), events }
+}
+
+/// Replay knobs.
+#[derive(Debug, Clone)]
+pub struct ReplayOpts {
+    /// Retry `SubmitError::Busy` (with event draining between attempts)
+    /// until `busy_retry_for` elapses; `false` counts the rejection and
+    /// moves on — the right mode for overload scenarios where Busy *is*
+    /// the expected behavior.
+    pub retry_busy: bool,
+    pub busy_retry_for: Duration,
+    /// Hard cap on waiting for terminal events after the last submit.
+    pub drain_timeout: Duration,
+}
+
+impl Default for ReplayOpts {
+    fn default() -> Self {
+        ReplayOpts {
+            retry_busy: true,
+            busy_retry_for: Duration::from_secs(10),
+            drain_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Client-side outcome of one trace replay: the request ledger reduced
+/// to counts, plus client-observed end-to-end latencies. Invariant
+/// violations are *detected* from this plus the server's
+/// [`ServerStats`] by [`check_invariants`].
+#[derive(Debug, Clone, Default)]
+pub struct ReplayOutcome {
+    pub name: String,
+    pub wall: Duration,
+    /// Requests accepted by `submit` (the invariant baseline).
+    pub accepted: usize,
+    /// `SubmitError::Busy` rejections (after retries, if enabled).
+    pub busy_rejected: usize,
+    /// Terminal `Done` events observed.
+    pub done: usize,
+    /// Terminal `Failed` events observed (deadline sheds).
+    pub failed: usize,
+    /// Terminal `Cancelled` events observed.
+    pub cancelled: usize,
+    /// Accepted requests whose stream closed with *no* terminal event.
+    pub no_terminal: usize,
+    /// Accepted requests that received *more than one* terminal event.
+    pub multi_terminal: usize,
+    /// `Done` completions whose streamed `Token` count diverged from
+    /// `Completion::tokens`.
+    pub stream_mismatch: usize,
+    /// Total `Token` events observed.
+    pub tokens_streamed: usize,
+    /// Max of `Server::in_flight()` sampled after each accepted submit.
+    pub max_in_flight: u64,
+    /// Client-observed submit → terminal latencies, ms.
+    pub e2e_ms: Vec<f64>,
+}
+
+impl ReplayOutcome {
+    pub fn e2e_p50_ms(&self) -> f64 {
+        stats::percentile(&self.e2e_ms, 50.0)
+    }
+    pub fn e2e_p95_ms(&self) -> f64 {
+        stats::percentile(&self.e2e_ms, 95.0)
+    }
+    pub fn e2e_p99_ms(&self) -> f64 {
+        stats::percentile(&self.e2e_ms, 99.0)
+    }
+}
+
+/// Ledger entry for one accepted request during replay.
+struct Tracked {
+    handle: RequestHandle,
+    submitted: Instant,
+    cancel_at: Option<Instant>,
+    cancel_sent: bool,
+    streamed: usize,
+    terminals: usize,
+    done_tokens: Option<usize>,
+    open: bool,
+}
+
+/// Fabricate a deterministic prompt of `len` letter tokens (valid vocab,
+/// no specials) — trace replays carry lengths, not payloads.
+pub fn synthetic_prompt(len: usize, salt: usize) -> Vec<i32> {
+    (0..len.max(1))
+        .map(|i| tok::LETTER0 + ((i + salt) % tok::N_LETTERS as usize) as i32)
+        .collect()
+}
+
+/// Drain every open handle's event stream without blocking; send due
+/// client cancels. Returns `true` when all ledger entries are closed.
+fn drain(tracked: &mut [Tracked], out: &mut ReplayOutcome, now: Instant) -> bool {
+    let mut all_closed = true;
+    for t in tracked.iter_mut() {
+        if let Some(at) = t.cancel_at {
+            if !t.cancel_sent && now >= at {
+                t.handle.cancel();
+                t.cancel_sent = true;
+            }
+        }
+        if !t.open {
+            continue;
+        }
+        loop {
+            match t.handle.events().try_recv() {
+                Ok(Event::Routed { .. }) => {}
+                Ok(Event::Token { .. }) => {
+                    t.streamed += 1;
+                    out.tokens_streamed += 1;
+                }
+                Ok(ev @ (Event::Done(_) | Event::Failed { .. } | Event::Cancelled)) => {
+                    t.terminals += 1;
+                    if t.terminals == 1 {
+                        out.e2e_ms
+                            .push(t.submitted.elapsed().as_secs_f64() * 1e3);
+                    }
+                    match ev {
+                        Event::Done(c) => {
+                            out.done += 1;
+                            t.done_tokens = Some(c.tokens.len());
+                        }
+                        Event::Failed { .. } => out.failed += 1,
+                        Event::Cancelled => out.cancelled += 1,
+                        _ => unreachable!(),
+                    }
+                }
+                Err(TryRecvError::Empty) => {
+                    all_closed = false;
+                    break;
+                }
+                Err(TryRecvError::Disconnected) => {
+                    t.open = false;
+                    break;
+                }
+            }
+        }
+    }
+    all_closed
+}
+
+/// Replay `trace` against a running server, following arrival times in
+/// real time, draining event streams live, and sending client cancels
+/// on schedule. Returns the client-side ledger reduced to a
+/// [`ReplayOutcome`]; pair it with the server's post-shutdown
+/// [`ServerStats`] and [`check_invariants`] to gate the scenario.
+pub fn replay(server: &Server, trace: &Trace, opts: &ReplayOpts) -> Result<ReplayOutcome> {
+    let mut out = ReplayOutcome { name: trace.name.clone(), ..Default::default() };
+    let mut tracked: Vec<Tracked> = Vec::with_capacity(trace.events.len());
+    let t0 = Instant::now();
+    for (i, ev) in trace.events.iter().enumerate() {
+        // wait out the arrival gap, draining streams while we wait
+        loop {
+            let now = Instant::now();
+            if now.duration_since(t0) >= ev.at {
+                break;
+            }
+            drain(&mut tracked, &mut out, now);
+            let left = ev.at - now.duration_since(t0);
+            std::thread::sleep(left.min(Duration::from_micros(200)));
+        }
+        let mut req = Request::new(synthetic_prompt(ev.prompt_len, i)).truncate_prompt();
+        if let Some(q) = ev.quality {
+            req = req.quality(q);
+        }
+        if let Some(m) = ev.max_new {
+            req = req.max_new_tokens(m);
+        }
+        if let Some(d) = ev.deadline {
+            req = req.deadline(d);
+        }
+        let retry_until = Instant::now() + opts.busy_retry_for;
+        let handle = loop {
+            match server.submit(req.clone()) {
+                Ok(h) => break Some(h),
+                Err(SubmitError::Busy) => {
+                    if !opts.retry_busy || Instant::now() >= retry_until {
+                        out.busy_rejected += 1;
+                        break None;
+                    }
+                    drain(&mut tracked, &mut out, Instant::now());
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                Err(e) => return Err(anyhow::anyhow!(e)).context("trace replay submit"),
+            }
+        };
+        if let Some(handle) = handle {
+            let now = Instant::now();
+            out.accepted += 1;
+            out.max_in_flight = out.max_in_flight.max(server.in_flight());
+            tracked.push(Tracked {
+                handle,
+                submitted: now,
+                cancel_at: ev.cancel_after.map(|d| now + d),
+                cancel_sent: false,
+                streamed: 0,
+                terminals: 0,
+                done_tokens: None,
+                open: true,
+            });
+        }
+    }
+    // drain until every accepted request's stream closes
+    let deadline = Instant::now() + opts.drain_timeout;
+    loop {
+        let now = Instant::now();
+        if drain(&mut tracked, &mut out, now) {
+            break;
+        }
+        if now >= deadline {
+            break; // missing terminals are counted below as violations
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    for t in &tracked {
+        match t.terminals {
+            0 => out.no_terminal += 1,
+            1 => {}
+            _ => out.multi_terminal += 1,
+        }
+        if let Some(n) = t.done_tokens {
+            if n != t.streamed {
+                out.stream_mismatch += 1;
+            }
+        }
+    }
+    out.wall = t0.elapsed();
+    Ok(out)
+}
+
+/// Server-side bounds a scenario is gated on, derived once per run from
+/// the manifest (see [`transfer_bounds`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransferBounds {
+    /// O(B·sprompt) admission bound ([`serve::admission_byte_bound`]);
+    /// `None` on pre-v3 artifacts (host surgery is their only path).
+    pub admit_bytes_per_req: Option<f64>,
+    /// Decode steps must stay far under the per-step KV-pair
+    /// round-trip: `min_kv_pair_bytes / 4`.
+    pub decode_bytes_per_step: Option<f64>,
+}
+
+/// Compute the transfer bounds for a model pair from the manifest;
+/// empty bounds when the artifacts predate device-side admission.
+pub fn transfer_bounds(manifest: &Manifest, models: &[&str]) -> Result<TransferBounds> {
+    if manifest.version < 3 {
+        return Ok(TransferBounds::default());
+    }
+    let kv_pair = serve::min_kv_pair_bytes(manifest, models)?;
+    Ok(TransferBounds {
+        admit_bytes_per_req: Some(serve::admission_byte_bound(&manifest.globals)),
+        decode_bytes_per_step: Some(kv_pair / 4.0),
+    })
+}
+
+/// Gate one replay against the declared invariants; returns the list of
+/// violations (empty = scenario passed). `queue_cap` is the admission
+/// bound the server ran with.
+pub fn check_invariants(
+    out: &ReplayOutcome,
+    stats: &ServerStats,
+    queue_cap: u64,
+    bounds: &TransferBounds,
+) -> Vec<String> {
+    let mut v = Vec::new();
+    if out.no_terminal > 0 {
+        v.push(format!(
+            "{} accepted request(s) never received a terminal event",
+            out.no_terminal
+        ));
+    }
+    if out.multi_terminal > 0 {
+        v.push(format!(
+            "{} request(s) received more than one terminal event",
+            out.multi_terminal
+        ));
+    }
+    if out.stream_mismatch > 0 {
+        v.push(format!(
+            "{} completion(s) diverged from their streamed tokens",
+            out.stream_mismatch
+        ));
+    }
+    let client_terminals = out.done + out.failed + out.cancelled;
+    if client_terminals != out.accepted {
+        v.push(format!(
+            "client ledger unbalanced: {} accepted but {} terminal events \
+             ({} done + {} failed + {} cancelled)",
+            out.accepted, client_terminals, out.done, out.failed, out.cancelled
+        ));
+    }
+    let server_terminals = stats.routing.completed
+        + stats.routing.cancelled_total()
+        + stats.routing.shed_total();
+    if server_terminals != out.accepted as u64 {
+        v.push(format!(
+            "server counters unbalanced: {} accepted but completed {} + \
+             cancelled {} + shed {} = {}",
+            out.accepted,
+            stats.routing.completed,
+            stats.routing.cancelled_total(),
+            stats.routing.shed_total(),
+            server_terminals
+        ));
+    }
+    if stats.in_flight != 0 {
+        v.push(format!("{} request(s) still in flight after drain", stats.in_flight));
+    }
+    if out.max_in_flight > queue_cap {
+        v.push(format!(
+            "bounded queue violated: saw {} in flight with queue_cap {}",
+            out.max_in_flight, queue_cap
+        ));
+    }
+    if let Some(bound) = bounds.admit_bytes_per_req {
+        if stats.admitted > 0 {
+            let per_req = stats.admit_bytes_per_req();
+            if !(per_req > 0.0 && per_req < bound) {
+                v.push(format!(
+                    "admission moved {per_req:.0} B/request (O(B·sprompt) bound {bound:.0} B)"
+                ));
+            }
+        }
+    }
+    if let Some(bound) = bounds.decode_bytes_per_step {
+        if stats.decode_steps > 0 {
+            let per_step = stats.d2h_bytes_per_step() + stats.h2d_bytes_per_step();
+            if per_step >= bound {
+                v.push(format!(
+                    "decode moved {per_step:.0} B/step (KV round-trip bound {bound:.0} B)"
+                ));
+            }
+        }
+    }
+    v
+}
+
+/// One built-in scenario: a seeded generator plus the server/replay
+/// configuration that makes it meaningful.
+pub struct Scenario {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// Trace generator (seed, request count, artifact shape).
+    pub make: fn(u64, usize, GenShape) -> Trace,
+    /// Admission window for this scenario (`None` = server default).
+    pub queue_cap: Option<usize>,
+    /// Whether the replay retries `Busy` (off for overload, where Busy
+    /// is the expected behavior under test).
+    pub retry_busy: bool,
+}
+
+/// The built-in scenario suite, in run order.
+pub fn builtin_suite() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "steady",
+            about: "fixed-gap arrivals (control)",
+            make: gen_steady,
+            queue_cap: None,
+            retry_busy: true,
+        },
+        Scenario {
+            name: "poisson-burst",
+            about: "Poisson arrivals with 10x burst episodes",
+            make: gen_poisson_burst,
+            queue_cap: None,
+            retry_busy: true,
+        },
+        Scenario {
+            name: "diurnal",
+            about: "sinusoidal rate swing (compressed day)",
+            make: gen_diurnal,
+            queue_cap: None,
+            retry_busy: true,
+        },
+        Scenario {
+            name: "long-tail",
+            about: "exponential prompt/answer lengths",
+            make: gen_long_tail,
+            queue_cap: None,
+            retry_busy: true,
+        },
+        Scenario {
+            name: "mixed-quality",
+            about: "per-request quality targets across the ladder",
+            make: gen_mixed_quality,
+            queue_cap: None,
+            retry_busy: true,
+        },
+        Scenario {
+            name: "overload-shed",
+            about: "arrivals >> service, small window, short deadlines",
+            make: gen_overload,
+            queue_cap: Some(8),
+            retry_busy: false,
+        },
+        Scenario {
+            name: "cancel-storm",
+            about: "mass client cancels on queued and decoding requests",
+            make: gen_cancel_storm,
+            queue_cap: None,
+            retry_busy: true,
+        },
+    ]
+}
+
+/// `kick-tires` options: where the fleet lives and how hard to push.
+#[derive(Debug, Clone)]
+pub struct KickTiresOpts {
+    pub artifacts_dir: PathBuf,
+    pub run_dir: PathBuf,
+    /// Cheap-tier model (cost 0).
+    pub small: String,
+    /// Expensive-tier model (cost 1).
+    pub large: String,
+    /// Downscaled sweep (fewer requests per scenario) for CI.
+    pub smoke: bool,
+    pub seed: u64,
+    /// Run only scenarios whose name is in this list (all when `None`).
+    pub only: Option<Vec<String>>,
+    /// Merge per-scenario metrics into this flat-JSON trajectory file.
+    pub bench_json: Option<PathBuf>,
+    /// Override the post-submit drain cap ([`ReplayOpts::drain_timeout`]).
+    pub drain_timeout: Option<Duration>,
+}
+
+impl KickTiresOpts {
+    pub fn new(artifacts_dir: PathBuf, run_dir: PathBuf) -> KickTiresOpts {
+        KickTiresOpts {
+            artifacts_dir,
+            run_dir,
+            small: "small".into(),
+            large: "medium".into(),
+            smoke: false,
+            seed: 0x7EA5E7,
+            only: None,
+            bench_json: None,
+            drain_timeout: None,
+        }
+    }
+}
+
+/// One scenario's full result: client ledger, server stats, violations.
+pub struct ScenarioReport {
+    pub scenario: &'static str,
+    pub about: &'static str,
+    pub outcome: ReplayOutcome,
+    pub stats: ServerStats,
+    pub violations: Vec<String>,
+}
+
+/// The whole sweep.
+pub struct KickTiresReport {
+    pub scenarios: Vec<ScenarioReport>,
+}
+
+impl KickTiresReport {
+    pub fn total_violations(&self) -> usize {
+        self.scenarios.iter().map(|s| s.violations.len()).sum()
+    }
+
+    /// Flat-JSON entries for the `BENCH_serving.json` trajectory:
+    /// `scenario.<name>.<metric>` keys (no `"`/`,`/`:`, per the format).
+    pub fn bench_entries(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for s in &self.scenarios {
+            let k = |m: &str| format!("scenario.{}.{m}", s.scenario);
+            out.push((k("accepted"), s.outcome.accepted as f64));
+            out.push((k("e2e_p50_ms"), s.outcome.e2e_p50_ms()));
+            out.push((k("e2e_p95_ms"), s.outcome.e2e_p95_ms()));
+            out.push((k("e2e_p99_ms"), s.outcome.e2e_p99_ms()));
+            out.push((k("done"), s.outcome.done as f64));
+            out.push((k("failed"), s.outcome.failed as f64));
+            out.push((k("cancelled"), s.outcome.cancelled as f64));
+            out.push((k("busy"), s.outcome.busy_rejected as f64));
+            out.push((k("shed"), s.stats.routing.shed_total() as f64));
+            out.push((k("cost_advantage"), s.stats.routing.cost_advantage));
+            out.push((k("admit_bytes_per_req"), s.stats.admit_bytes_per_req()));
+            out.push((k("violations"), s.violations.len() as f64));
+        }
+        out
+    }
+
+    /// Serving report (markdown): one row per scenario plus violations.
+    pub fn render(&self) -> String {
+        let mut s = String::from("# Scenario sweep — serving report\n\n");
+        s.push_str(
+            "| scenario | accepted | done | failed | cancelled | busy | shed \
+             | p50 ms | p95 ms | cost adv | violations |\n",
+        );
+        s.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
+        for r in &self.scenarios {
+            let o = &r.outcome;
+            s.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {:.0} | {:.0} | {:.1}% | {} |\n",
+                r.scenario,
+                o.accepted,
+                o.done,
+                o.failed,
+                o.cancelled,
+                o.busy_rejected,
+                r.stats.routing.shed_total(),
+                o.e2e_p50_ms(),
+                o.e2e_p95_ms(),
+                r.stats.routing.cost_advantage * 100.0,
+                r.violations.len(),
+            ));
+        }
+        for r in &self.scenarios {
+            if !r.violations.is_empty() {
+                s.push_str(&format!("\n## {} — INVARIANT VIOLATIONS\n", r.scenario));
+                for v in &r.violations {
+                    s.push_str(&format!("- {v}\n"));
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Run every built-in scenario against a fresh two-tier server each
+/// (fresh server ⇒ the final drained stats *are* the scenario's delta),
+/// gate each on its invariants, write the serving report to
+/// `<run_dir>/results/scenarios.md`, and merge per-scenario metrics
+/// into the trajectory file. Violations are *reported*, not raised —
+/// callers decide whether to fail (the CLI and the bench both do).
+pub fn kick_tires(opts: &KickTiresOpts) -> Result<KickTiresReport> {
+    let manifest = Manifest::load(&opts.artifacts_dir.join("manifest.txt"))?;
+    let g = manifest.globals;
+    let shape = GenShape { sprompt: g.sprompt, amax: g.amax };
+    let bounds = transfer_bounds(&manifest, &[&opts.small, &opts.large])?;
+    let n = if opts.smoke { 24 } else { 96 };
+    let mut scenarios = Vec::new();
+    for sc in builtin_suite() {
+        if let Some(only) = &opts.only {
+            if !only.iter().any(|o| o == sc.name) {
+                continue;
+            }
+        }
+        let mut cfg = ServeConfig::two_tier(
+            opts.artifacts_dir.clone(),
+            opts.run_dir.clone(),
+            &opts.small,
+            &opts.large,
+            String::new(), // random routing: no trained router required
+            0.5,
+        );
+        cfg.temp = 0.8;
+        cfg.batch_window = Duration::from_millis(2);
+        cfg.mode = BatchMode::Continuous;
+        if let Some(cap) = sc.queue_cap {
+            cfg.queue_cap = cap;
+        }
+        let queue_cap = cfg.queue_cap as u64;
+        let trace = (sc.make)(opts.seed, n, shape);
+        let server = Server::start(cfg).with_context(|| format!("scenario {}", sc.name))?;
+        let mut replay_opts = ReplayOpts { retry_busy: sc.retry_busy, ..Default::default() };
+        if let Some(d) = opts.drain_timeout {
+            replay_opts.drain_timeout = d;
+        }
+        let outcome = replay(&server, &trace, &replay_opts)
+            .with_context(|| format!("scenario {}", sc.name))?;
+        let stats = server.shutdown().with_context(|| format!("scenario {}", sc.name))?;
+        let violations = check_invariants(&outcome, &stats, queue_cap, &bounds);
+        scenarios.push(ScenarioReport {
+            scenario: sc.name,
+            about: sc.about,
+            outcome,
+            stats,
+            violations,
+        });
+    }
+    anyhow::ensure!(!scenarios.is_empty(), "no scenarios matched the filter");
+    let report = KickTiresReport { scenarios };
+    let results = opts.run_dir.join("results");
+    std::fs::create_dir_all(&results)?;
+    std::fs::write(results.join("scenarios.md"), report.render())?;
+    if let Some(path) = &opts.bench_json {
+        crate::bench::merge_bench_json(path, &report.bench_entries())?;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SHAPE: GenShape = GenShape { sprompt: 40, amax: 24 };
+
+    #[test]
+    fn generators_are_deterministic_and_sorted() {
+        for (name, gen) in [
+            ("steady", gen_steady as fn(u64, usize, GenShape) -> Trace),
+            ("poisson-burst", gen_poisson_burst),
+            ("diurnal", gen_diurnal),
+            ("long-tail", gen_long_tail),
+            ("mixed-quality", gen_mixed_quality),
+            ("overload-shed", gen_overload),
+            ("cancel-storm", gen_cancel_storm),
+        ] {
+            let a = gen(7, 50, SHAPE);
+            let b = gen(7, 50, SHAPE);
+            assert_eq!(a, b, "{name} not deterministic");
+            assert_eq!(a.name, name);
+            assert_eq!(a.events.len(), 50);
+            assert!(
+                a.events.windows(2).all(|w| w[0].at <= w[1].at),
+                "{name} arrivals not sorted"
+            );
+            for e in &a.events {
+                assert!(
+                    e.prompt_len >= 1 && e.prompt_len <= SHAPE.sprompt,
+                    "{name} prompt_len {} outside [1, {}]",
+                    e.prompt_len,
+                    SHAPE.sprompt
+                );
+                if let Some(m) = e.max_new {
+                    assert!(m >= 1, "{name} generated a zero token budget");
+                }
+            }
+            // a different seed actually changes the trace
+            assert_ne!(gen(8, 50, SHAPE), a, "{name} ignores its seed");
+        }
+    }
+
+    #[test]
+    fn cancel_storm_carries_cancels_and_overload_deadlines() {
+        let storm = gen_cancel_storm(3, 40, SHAPE);
+        let with_cancel = storm.events.iter().filter(|e| e.cancel_after.is_some()).count();
+        assert!(with_cancel >= 40 / 2, "storm should cancel most requests");
+        assert!(storm.events.iter().all(|e| e.max_new == Some(SHAPE.amax)));
+        let over = gen_overload(3, 40, SHAPE);
+        assert!(over.events.iter().all(|e| e.deadline.is_some()));
+    }
+
+    #[test]
+    fn trace_text_roundtrip() {
+        let trace = gen_cancel_storm(11, 12, SHAPE);
+        let dir = std::env::temp_dir().join(format!("hybrid_trace_{}", std::process::id()));
+        let path = dir.join("storm.trace");
+        trace.save(&path).unwrap();
+        let loaded = Trace::load(&path).unwrap();
+        assert_eq!(trace, loaded);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_parse_rejects_garbage() {
+        assert!(Trace::parse("").is_err());
+        assert!(Trace::parse("# wrong-header\n").is_err());
+        assert!(Trace::parse("# hybrid-trace v1 x\nat_us=5").is_err()); // no plen
+        assert!(Trace::parse("# hybrid-trace v1 x\nplen=4").is_err()); // no at_us
+        assert!(Trace::parse("# hybrid-trace v1 x\nat_us=5 plen=4 bogus=1").is_err());
+        assert!(Trace::parse("# hybrid-trace v1 x\nat_us=zzz plen=4").is_err());
+        // valid lines parse; comments and blanks are skipped, rows sort
+        let t = Trace::parse(
+            "# hybrid-trace v1 demo\n\n# a comment\nat_us=90 plen=4\nat_us=5 plen=2 q=0.5 max=3 dl_us=100 cancel_us=7\n",
+        )
+        .unwrap();
+        assert_eq!(t.name, "demo");
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.events[0].at, Duration::from_micros(5));
+        assert_eq!(t.events[0].quality, Some(0.5));
+        assert_eq!(t.events[0].max_new, Some(3));
+        assert_eq!(t.events[0].cancel_after, Some(Duration::from_micros(7)));
+        assert_eq!(t.events[1].prompt_len, 4);
+    }
+
+    #[test]
+    fn synthetic_prompts_stay_in_vocab() {
+        for len in [0, 1, 5, 40] {
+            let p = synthetic_prompt(len, 13);
+            assert_eq!(p.len(), len.max(1));
+            assert!(p
+                .iter()
+                .all(|&t| t >= tok::LETTER0 && t < tok::LETTER0 + tok::N_LETTERS));
+        }
+    }
+
+    fn outcome(accepted: usize, done: usize, failed: usize, cancelled: usize) -> ReplayOutcome {
+        ReplayOutcome {
+            name: "x".into(),
+            accepted,
+            done,
+            failed,
+            cancelled,
+            ..Default::default()
+        }
+    }
+
+    fn stats_with(completed: u64, cancelled: u64, shed: u64) -> ServerStats {
+        use crate::metrics::RoutingCounters;
+        let c = RoutingCounters::two_tier();
+        for _ in 0..completed {
+            c.route(0);
+            c.complete(0.0);
+        }
+        for _ in 0..cancelled {
+            c.cancel(0);
+        }
+        for _ in 0..shed {
+            c.shed(1);
+        }
+        ServerStats {
+            in_flight: 0,
+            router_latency: Default::default(),
+            e2e_latency: Default::default(),
+            tiers: Vec::new(),
+            routing: c.snapshot(),
+            decode_steps: 0,
+            decode_slot_steps: 0,
+            decode_h2d_bytes: 0,
+            decode_d2h_bytes: 0,
+            admit_h2d_bytes: 0,
+            admit_d2h_bytes: 0,
+            admissions: 0,
+            admitted: 0,
+            admit_latency: Default::default(),
+        }
+    }
+
+    #[test]
+    fn invariants_pass_on_balanced_ledger() {
+        let out = outcome(10, 6, 1, 3);
+        let st = stats_with(6, 3, 1);
+        assert!(check_invariants(&out, &st, 256, &TransferBounds::default()).is_empty());
+    }
+
+    #[test]
+    fn invariants_catch_missing_and_double_terminals() {
+        let mut out = outcome(10, 6, 1, 3);
+        out.no_terminal = 1;
+        out.multi_terminal = 2;
+        let st = stats_with(6, 3, 1);
+        let v = check_invariants(&out, &st, 256, &TransferBounds::default());
+        assert!(v.iter().any(|m| m.contains("never received a terminal")));
+        assert!(v.iter().any(|m| m.contains("more than one terminal")));
+    }
+
+    #[test]
+    fn invariants_catch_unbalanced_counters() {
+        // client saw 10 terminals but the server only accounted for 9
+        let out = outcome(10, 6, 1, 3);
+        let st = stats_with(6, 2, 1);
+        let v = check_invariants(&out, &st, 256, &TransferBounds::default());
+        assert!(v.iter().any(|m| m.contains("server counters unbalanced")), "{v:?}");
+        // and a client ledger that doesn't sum to accepted
+        let out = outcome(10, 6, 1, 2);
+        let st = stats_with(6, 2, 1);
+        let v = check_invariants(&out, &st, 256, &TransferBounds::default());
+        assert!(v.iter().any(|m| m.contains("client ledger unbalanced")), "{v:?}");
+    }
+
+    #[test]
+    fn invariants_catch_queue_and_transfer_breaches() {
+        let mut out = outcome(4, 4, 0, 0);
+        out.max_in_flight = 300;
+        let st = stats_with(4, 0, 0);
+        let v = check_invariants(&out, &st, 256, &TransferBounds::default());
+        assert!(v.iter().any(|m| m.contains("bounded queue violated")), "{v:?}");
+
+        let out = outcome(4, 4, 0, 0);
+        let mut st = stats_with(4, 0, 0);
+        st.admitted = 4;
+        st.admit_h2d_bytes = 1_000_000;
+        st.decode_steps = 10;
+        st.decode_h2d_bytes = 1_000_000;
+        let bounds = TransferBounds {
+            admit_bytes_per_req: Some(10_000.0),
+            decode_bytes_per_step: Some(50_000.0),
+        };
+        let v = check_invariants(&out, &st, 256, &bounds);
+        assert!(v.iter().any(|m| m.contains("admission moved")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("decode moved")), "{v:?}");
+        // within bounds: no violations
+        st.admit_h2d_bytes = 4_000;
+        st.decode_h2d_bytes = 1_000;
+        assert!(check_invariants(&out, &st, 256, &bounds).is_empty());
+    }
+
+    #[test]
+    fn invariants_catch_leftover_in_flight() {
+        let out = outcome(4, 4, 0, 0);
+        let mut st = stats_with(4, 0, 0);
+        st.in_flight = 2;
+        let v = check_invariants(&out, &st, 256, &TransferBounds::default());
+        assert!(v.iter().any(|m| m.contains("still in flight")), "{v:?}");
+    }
+
+    #[test]
+    fn bench_entries_use_legal_flat_json_keys() {
+        let report = KickTiresReport {
+            scenarios: vec![ScenarioReport {
+                scenario: "cancel-storm",
+                about: "",
+                outcome: outcome(10, 6, 1, 3),
+                stats: stats_with(6, 3, 1),
+                violations: vec!["boom".into()],
+            }],
+        };
+        let entries = report.bench_entries();
+        assert!(!entries.is_empty());
+        for (k, v) in &entries {
+            assert!(!k.contains(['"', ',', ':']), "illegal bench key {k}");
+            assert!(v.is_finite() || *v == 0.0);
+        }
+        assert!(entries.iter().any(|(k, v)| k.ends_with(".violations") && *v == 1.0));
+        let text = report.render();
+        assert!(text.contains("cancel-storm"));
+        assert!(text.contains("INVARIANT VIOLATIONS"));
+    }
+
+    #[test]
+    fn builtin_suite_names_are_unique_and_complete() {
+        let suite = builtin_suite();
+        let names: std::collections::BTreeSet<_> = suite.iter().map(|s| s.name).collect();
+        assert_eq!(names.len(), suite.len());
+        for want in [
+            "steady",
+            "poisson-burst",
+            "diurnal",
+            "long-tail",
+            "mixed-quality",
+            "overload-shed",
+            "cancel-storm",
+        ] {
+            assert!(names.contains(want), "missing scenario {want}");
+        }
+        // the overload scenario actually runs with a small window and
+        // treats Busy as an outcome, not a retry
+        let over = suite.iter().find(|s| s.name == "overload-shed").unwrap();
+        assert_eq!(over.queue_cap, Some(8));
+        assert!(!over.retry_busy);
+    }
+
+    #[test]
+    fn replay_outcome_percentiles_are_nan_free_when_empty() {
+        let out = ReplayOutcome::default();
+        assert_eq!(out.e2e_p50_ms(), 0.0);
+        assert_eq!(out.e2e_p95_ms(), 0.0);
+        assert_eq!(out.e2e_p99_ms(), 0.0);
+    }
+}

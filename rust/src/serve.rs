@@ -282,11 +282,14 @@ impl Request {
         self
     }
 
-    /// Cap generated tokens at `n` (at least one token is generated
-    /// unless the model emits EOS at prefill; the artifact-wide answer
-    /// budget still applies).
+    /// Cap generated tokens at `n` (the artifact-wide answer budget
+    /// still applies). `n = 0` is unsatisfiable — the decode wave
+    /// samples a token at prefill before any budget check can run — so
+    /// [`Server::submit`] rejects it with
+    /// [`SubmitError::ZeroTokenBudget`] instead of silently promoting
+    /// it to 1 as earlier revisions did.
     pub fn max_new_tokens(mut self, n: usize) -> Request {
-        self.max_new_tokens = Some(n.max(1));
+        self.max_new_tokens = Some(n);
         self
     }
 
@@ -360,6 +363,11 @@ pub enum SubmitError {
         /// The artifacts' prompt window (`sprompt`).
         max: usize,
     },
+    /// The request asked for `max_new_tokens(0)`: the decode wave always
+    /// samples at least one token at prefill, so a zero budget cannot be
+    /// honored. Earlier revisions silently promoted it to 1; rejecting
+    /// at submit makes the contract explicit.
+    ZeroTokenBudget,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -371,6 +379,11 @@ impl std::fmt::Display for SubmitError {
                 f,
                 "prompt too long: {len} tokens > {max}-token prompt window \
                  (opt into Request::truncate_prompt to clip)"
+            ),
+            SubmitError::ZeroTokenBudget => write!(
+                f,
+                "max_new_tokens(0) is unsatisfiable: decode samples at \
+                 least one token at prefill"
             ),
         }
     }
@@ -527,7 +540,9 @@ impl InFlight {
 
     /// Effective token budget under the artifact-wide answer cap
     /// (`amax`); the default reproduces the seed's `len + 1 >= amax`
-    /// stop rule.
+    /// stop rule. The lower clamp to 1 is defense in depth only:
+    /// `max_new_tokens(0)` is rejected at [`Server::submit`]
+    /// ([`SubmitError::ZeroTokenBudget`]) and never reaches a worker.
     fn token_limit(&self, amax: usize) -> usize {
         let cap = amax.saturating_sub(1).max(1);
         self.max_new.map_or(cap, |m| m.clamp(1, cap))
@@ -554,6 +569,17 @@ enum WorkMsg {
 /// releases its [`AdmissionGuard`], freeing the admission-window slot.
 fn finish(req: InFlight, ev: Event) {
     let _ = req.tx.send(ev);
+}
+
+/// Context-window stop rule, shared in spirit with `lm.rs`'s generate
+/// loops (equivalence-pinned): a slot whose next write position is
+/// `sctx - 1` or beyond must stop, because the training layout
+/// `[prompt, answer, EOS, pad]` reserves the final position for EOS —
+/// `sctx = sprompt + amax` leaves exactly `amax - 1` sampled tokens for
+/// a full-width prompt. `pos` here is the position *after* the decode
+/// step's increment, i.e. where the next token would land.
+fn context_full(next_pos: usize, sctx: usize) -> bool {
+    next_pos >= sctx.saturating_sub(1)
 }
 
 /// Dispatch state for one tier, owned by the router thread.
@@ -857,6 +883,9 @@ impl Server {
     /// [`Request::truncate_prompt`] (the seed copied it into the fixed
     /// prefill buffer unchecked and panicked in the decode worker).
     pub fn submit(&self, mut req: Request) -> std::result::Result<RequestHandle, SubmitError> {
+        if req.max_new_tokens == Some(0) {
+            return Err(SubmitError::ZeroTokenBudget);
+        }
         if req.prompt.len() > self.sprompt {
             if req.truncate {
                 req.prompt.truncate(self.sprompt);
@@ -910,6 +939,20 @@ impl Server {
 
     pub fn stats(&self) -> ServerStats {
         snapshot_stats(&self.metrics, &self.tier_names)
+    }
+
+    /// Accepted-but-unfinished requests right now — the counter the
+    /// admission window gates on. Cheap (one atomic load), so replay
+    /// harnesses can sample it per-submit to check the bounded-queue
+    /// invariant without paying for a full [`Server::stats`] snapshot.
+    pub fn in_flight(&self) -> u64 {
+        self.metrics.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// The admission-window bound this server enforces
+    /// ([`ServeConfig::queue_cap`]).
+    pub fn queue_cap(&self) -> u64 {
+        self.queue_cap
     }
 
     /// Graceful shutdown: drains in-flight work, joins all threads.
@@ -1513,7 +1556,7 @@ fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) -> Result<()> 
             slot.pos += 1;
             let nxt = next[idx];
             let limit = slot.payload.req.token_limit(g.amax);
-            let full = slot.answer.len() >= limit || slot.pos as usize >= g.sctx - 1;
+            let full = slot.answer.len() >= limit || context_full(slot.pos as usize, g.sctx);
             if nxt == tok::EOS || full {
                 finished = true;
                 dead = false;
@@ -1674,11 +1717,11 @@ mod tests {
     fn request_builder_and_token_limits() {
         let r = Request::new(vec![1, 2, 3])
             .quality(0.7)
-            .max_new_tokens(0) // clamped up: at least one token
+            .max_new_tokens(0) // recorded as-is; submit() rejects it
             .deadline(Duration::from_millis(5));
         assert_eq!(r.prompt, vec![1, 2, 3]);
         assert_eq!(r.quality, Some(0.7));
-        assert_eq!(r.max_new_tokens, Some(1));
+        assert_eq!(r.max_new_tokens, Some(0), "builder must not silently promote 0 to 1");
         assert!(r.policy.is_none());
 
         let f = |max_new: Option<usize>| InFlight {
@@ -1699,6 +1742,34 @@ mod tests {
         // the artifact-wide cap still binds
         assert_eq!(f(Some(99)).token_limit(32), 31);
         assert_eq!(f(Some(3)).token_limit(1), 1);
+    }
+
+    #[test]
+    fn context_full_reserves_the_eos_slot() {
+        // sctx = 64: positions 0..=62 may hold sampled tokens; 63 is the
+        // training layout's reserved EOS slot, so a slot whose *next*
+        // write position is 63 must stop.
+        assert!(!context_full(61, 64));
+        assert!(!context_full(62, 64));
+        assert!(context_full(63, 64));
+        assert!(context_full(64, 64));
+        // degenerate windows never underflow
+        assert!(context_full(0, 1));
+        assert!(context_full(0, 0));
+        // a full-width prompt (pos starts at sprompt = sctx - amax) with
+        // amax = 24 gets at most amax - 1 = 23 sampled tokens before the
+        // stop fires: positions 40..=62 inclusive.
+        let (sprompt, sctx) = (40usize, 64usize);
+        let mut pos = sprompt;
+        let mut sampled = 0;
+        loop {
+            pos += 1; // decode_step increments before the check
+            if context_full(pos, sctx) {
+                break;
+            }
+            sampled += 1;
+        }
+        assert_eq!(sampled, sctx - sprompt - 2); // == amax - 2 streamed after prefill's first
     }
 
     #[test]
@@ -1730,6 +1801,7 @@ mod tests {
         assert!(e.to_string().contains("55"));
         assert!(e.to_string().contains("40"));
         assert_ne!(e, SubmitError::Busy);
+        assert!(SubmitError::ZeroTokenBudget.to_string().contains("max_new_tokens(0)"));
         assert!(RequestError::Failed("deadline".into()).to_string().contains("deadline"));
         assert_ne!(RequestError::Cancelled, RequestError::Timeout);
     }

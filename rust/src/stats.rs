@@ -28,16 +28,27 @@ pub fn std_err(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile, `p` in [0, 100]. Input need not be sorted.
+///
+/// Returns the 0.0 sentinel for empty input: latency windows with no
+/// completions yet (snapshot before the first request finishes, all-shed
+/// windows) are a normal serving condition, not a caller bug. NaN samples
+/// sort last (`total_cmp`), so a stray NaN skews the top percentiles but
+/// never aborts the snapshot.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty());
+    if xs.is_empty() {
+        return 0.0;
+    }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
-/// Percentile over already-sorted data.
+/// Percentile over already-sorted data (0.0 for empty input, see
+/// [`percentile`]).
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    if sorted.is_empty() {
+        return 0.0;
+    }
     let p = p.clamp(0.0, 100.0);
     let rank = p / 100.0 * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
@@ -80,7 +91,7 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
 pub fn ranks(xs: &[f64]) -> Vec<f64> {
     let n = xs.len();
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut out = vec![0.0; n];
     let mut i = 0;
     while i < n {
@@ -210,6 +221,31 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_window_is_zero() {
+        // Snapshot before the first completion: no samples, no panic.
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile_sorted(&[], 99.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // NaN sorts last under total_cmp: low/mid percentiles stay finite.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn ranks_survive_nan_samples() {
+        // NaN ranks last; the finite entries keep their usual ordering.
+        let r = ranks(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(r[2], 1.0);
+        assert_eq!(r[0], 2.0);
+        assert_eq!(r[1], 3.0);
     }
 
     #[test]

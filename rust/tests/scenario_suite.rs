@@ -1,0 +1,305 @@
+//! Integration: the trace-replay scenario harness against real
+//! artifacts — burst/cancel-storm/overload replays gated on the serving
+//! invariants (exactly one terminal event per accepted request, counter
+//! balance at drain, bounded queue, transfer bounds), plus the
+//! stress-surfaced edge cases this PR fixed: stats snapshots before any
+//! completion, zero token budgets, and prompts that fill the context
+//! window. Pure generator properties run without artifacts.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use hybrid_llm::batching::BatchMode;
+use hybrid_llm::lm::LmEngine;
+use hybrid_llm::runtime::{Manifest, Runtime};
+use hybrid_llm::scenario::{
+    self, check_invariants, gen_cancel_storm, gen_overload, gen_poisson_burst, replay, GenShape,
+    ReplayOpts, TransferBounds,
+};
+use hybrid_llm::serve::{Request, ServeConfig, Server, SubmitError};
+use hybrid_llm::testing::check;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.txt").exists().then_some(p)
+}
+
+fn seed_run_dir(artifacts: &Path, tag: &str) -> PathBuf {
+    let run = std::env::temp_dir().join(format!("hybrid_scenario_{}_{tag}", std::process::id()));
+    let rt = Runtime::load(artifacts).unwrap();
+    for model in ["nano", "micro"] {
+        let dir = run.join("params").join(model);
+        if !dir.join("p.emb.tz").exists() {
+            let eng = LmEngine::init(rt.clone(), model, 3).unwrap();
+            eng.save(&dir).unwrap();
+        }
+    }
+    run
+}
+
+fn base_cfg(artifacts: PathBuf, run_dir: PathBuf) -> ServeConfig {
+    // random routing (no trained router needed) over the tiny pair
+    let mut cfg = ServeConfig::two_tier(artifacts, run_dir, "nano", "micro", String::new(), 0.5);
+    cfg.temp = 0.8;
+    cfg.mode = BatchMode::Continuous;
+    cfg.batch_window = Duration::from_millis(2);
+    cfg
+}
+
+fn shape_of(artifacts: &Path) -> (GenShape, Manifest) {
+    let manifest = Manifest::load(&artifacts.join("manifest.txt")).unwrap();
+    let g = manifest.globals;
+    (GenShape { sprompt: g.sprompt, amax: g.amax }, manifest)
+}
+
+/// Property (no artifacts): every generator yields a valid trace for
+/// arbitrary seeds, counts, and artifact shapes — sorted arrivals,
+/// prompt lengths within the window, no zero token budgets (which
+/// `submit` would reject).
+#[test]
+fn generators_always_yield_valid_traces() {
+    check("scenario generators yield valid traces", 64, |rng| {
+        let shape = GenShape {
+            sprompt: rng.range(2, 64),
+            amax: rng.range(2, 32),
+        };
+        let seed = rng.next_u64();
+        let n = rng.range(1, 40);
+        for gen in [
+            scenario::gen_steady as fn(u64, usize, GenShape) -> scenario::Trace,
+            gen_poisson_burst,
+            scenario::gen_diurnal,
+            scenario::gen_long_tail,
+            scenario::gen_mixed_quality,
+            gen_overload,
+            gen_cancel_storm,
+        ] {
+            let t = gen(seed, n, shape);
+            assert_eq!(t.events.len(), n);
+            assert!(t.events.windows(2).all(|w| w[0].at <= w[1].at));
+            for e in &t.events {
+                assert!(e.prompt_len >= 1 && e.prompt_len <= shape.sprompt.max(2));
+                if let Some(m) = e.max_new {
+                    assert!(m >= 1, "generated a zero token budget");
+                }
+                if let Some(q) = e.quality {
+                    assert!((0.0..=1.0).contains(&q));
+                }
+            }
+        }
+    });
+}
+
+/// Property (no artifacts): trace text round-trips exactly for every
+/// generator output.
+#[test]
+fn traces_roundtrip_through_text() {
+    let dir = std::env::temp_dir().join(format!("hybrid_trace_rt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    check("trace text round-trip", 16, |rng| {
+        let shape = GenShape { sprompt: 40, amax: 24 };
+        let t = gen_cancel_storm(rng.next_u64(), rng.range(1, 30), shape);
+        let path = dir.join("prop.trace");
+        t.save(&path).unwrap();
+        assert_eq!(scenario::Trace::load(&path).unwrap(), t);
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A `Server::stats()` snapshot taken before any request completes (or
+/// even arrives) must not panic and must report zeroed, NaN-free
+/// latency summaries — the empty-window stats bug this PR fixed.
+#[test]
+fn stats_snapshot_before_first_completion() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "snap");
+    let server = Server::start(base_cfg(artifacts, run_dir.clone())).unwrap();
+    let stats = server.stats(); // no requests yet: all windows empty
+    assert_eq!(stats.e2e_latency.n, 0);
+    assert_eq!(stats.e2e_latency.p50_ms, 0.0);
+    assert_eq!(stats.e2e_latency.p95_ms, 0.0);
+    assert_eq!(stats.routing.total(), 0);
+    assert_eq!(stats.in_flight, 0);
+    server.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// `max_new_tokens(0)` is rejected at submit — not silently promoted to
+/// one generated token as earlier revisions did.
+#[test]
+fn zero_token_budget_rejected_at_submit() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "zero");
+    let server = Server::start(base_cfg(artifacts, run_dir.clone())).unwrap();
+    let err = server
+        .submit(Request::new(vec![4, 5, 6]).max_new_tokens(0))
+        .expect_err("zero budget must be rejected");
+    assert_eq!(err, SubmitError::ZeroTokenBudget);
+    // a rejected request must not leak an admission slot
+    assert_eq!(server.in_flight(), 0);
+    // budget 1 is the smallest satisfiable request
+    let h = server.submit(Request::new(vec![4, 5, 6]).max_new_tokens(1)).unwrap();
+    let c = h.wait_timeout(Duration::from_secs(120)).expect("completion");
+    assert!(c.tokens.len() <= 1);
+    server.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// A prompt that fills the whole prompt window with an unbounded token
+/// budget must complete cleanly at the context boundary: the training
+/// layout reserves the final position for EOS, so at most `amax - 1`
+/// tokens come back and nothing panics at `sctx`.
+#[test]
+fn prompt_fills_context_stops_at_the_boundary() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (shape, _) = shape_of(&artifacts);
+    let run_dir = seed_run_dir(&artifacts, "full");
+    let server = Server::start(base_cfg(artifacts, run_dir.clone())).unwrap();
+    // temp 0.8 sampling rarely emits EOS early on random weights, so
+    // these decodes actually reach the boundary stop
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            server
+                .submit(
+                    Request::new(scenario::synthetic_prompt(shape.sprompt, i))
+                        .max_new_tokens(usize::MAX),
+                )
+                .expect("submit full-window prompt")
+        })
+        .collect();
+    for h in handles {
+        let c = h.wait_timeout(Duration::from_secs(120)).expect("completion");
+        assert!(
+            c.tokens.len() <= shape.amax - 1,
+            "{} tokens breaches the reserved-EOS budget {}",
+            c.tokens.len(),
+            shape.amax - 1
+        );
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.routing.completed, 4);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// The cancel-storm scenario: every accepted request gets exactly one
+/// terminal event and the server counters balance at drain, with most
+/// requests cancelled mid-flight.
+#[test]
+fn cancel_storm_invariants_hold() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (shape, manifest) = shape_of(&artifacts);
+    let run_dir = seed_run_dir(&artifacts, "storm");
+    let cfg = base_cfg(artifacts, run_dir.clone());
+    let queue_cap = cfg.queue_cap as u64;
+    let server = Server::start(cfg).unwrap();
+    let trace = gen_cancel_storm(0xBAD5EED, 24, shape);
+    let out = replay(&server, &trace, &ReplayOpts::default()).unwrap();
+    let stats = server.shutdown().unwrap();
+    let bounds = scenario::transfer_bounds(&manifest, &["nano", "micro"]).unwrap();
+    let violations = check_invariants(&out, &stats, queue_cap, &bounds);
+    assert!(violations.is_empty(), "cancel-storm violations: {violations:?}");
+    assert_eq!(out.accepted, 24);
+    assert_eq!(out.done + out.failed + out.cancelled, out.accepted);
+    assert!(out.cancelled > 0, "a cancel storm should cancel something");
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// The overload scenario against a tiny admission window: Busy
+/// backpressure engages, nothing exceeds the bound, and whatever was
+/// accepted still resolves to exactly one terminal event with balanced
+/// counters.
+#[test]
+fn overload_invariants_hold_with_small_window() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (shape, manifest) = shape_of(&artifacts);
+    let run_dir = seed_run_dir(&artifacts, "over");
+    let mut cfg = base_cfg(artifacts, run_dir.clone());
+    cfg.queue_cap = 4;
+    let server = Server::start(cfg).unwrap();
+    let n = 32;
+    let trace = gen_overload(0x0E7105D, n, shape);
+    let opts = ReplayOpts { retry_busy: false, ..Default::default() };
+    let out = replay(&server, &trace, &opts).unwrap();
+    let stats = server.shutdown().unwrap();
+    let bounds = scenario::transfer_bounds(&manifest, &["nano", "micro"]).unwrap();
+    let violations = check_invariants(&out, &stats, 4, &bounds);
+    assert!(violations.is_empty(), "overload violations: {violations:?}");
+    assert_eq!(out.accepted + out.busy_rejected, n);
+    assert!(out.max_in_flight <= 4);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// Poisson-burst replay under default settings: the bread-and-butter
+/// bursty case completes everything it accepts and the ledger, server
+/// counters, and stream accounting all agree.
+#[test]
+fn poisson_burst_invariants_hold() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (shape, manifest) = shape_of(&artifacts);
+    let run_dir = seed_run_dir(&artifacts, "burst");
+    let cfg = base_cfg(artifacts, run_dir.clone());
+    let queue_cap = cfg.queue_cap as u64;
+    let server = Server::start(cfg).unwrap();
+    let trace = gen_poisson_burst(0xB0257, 24, shape);
+    let out = replay(&server, &trace, &ReplayOpts::default()).unwrap();
+    let stats = server.shutdown().unwrap();
+    let bounds = scenario::transfer_bounds(&manifest, &["nano", "micro"]).unwrap();
+    let violations = check_invariants(&out, &stats, queue_cap, &bounds);
+    assert!(violations.is_empty(), "poisson-burst violations: {violations:?}");
+    assert_eq!(out.done, 24, "no deadlines or cancels: everything completes");
+    assert_eq!(out.stream_mismatch, 0);
+    assert!(out.tokens_streamed > 0);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// Invariant checking itself never panics on degenerate inputs — the
+/// empty replay (nothing accepted) is a legal outcome.
+#[test]
+fn empty_replay_is_invariant_clean() {
+    let out = scenario::ReplayOutcome::default();
+    let v = check_invariants(
+        &out,
+        &empty_stats(),
+        1,
+        &TransferBounds::default(),
+    );
+    assert!(v.is_empty(), "{v:?}");
+}
+
+fn empty_stats() -> hybrid_llm::serve::ServerStats {
+    use hybrid_llm::metrics::RoutingCounters;
+    hybrid_llm::serve::ServerStats {
+        in_flight: 0,
+        router_latency: Default::default(),
+        e2e_latency: Default::default(),
+        tiers: Vec::new(),
+        routing: RoutingCounters::two_tier().snapshot(),
+        decode_steps: 0,
+        decode_slot_steps: 0,
+        decode_h2d_bytes: 0,
+        decode_d2h_bytes: 0,
+        admit_h2d_bytes: 0,
+        admit_d2h_bytes: 0,
+        admissions: 0,
+        admitted: 0,
+        admit_latency: Default::default(),
+    }
+}
