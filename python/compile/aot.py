@@ -37,6 +37,24 @@ Manifest v3 moves *admission* onto the device too:
   the valid count. This ends the full-cache download/upload the rust
   serving layer previously paid for host-side slot surgery on every
   admission (host surgery remains the fallback for v1/v2 artifacts).
+
+Manifest v4 pages the KV cache (block pool + per-request block tables,
+geometry on the ``global`` line as ``kvblock``/``kvpool``):
+
+* **Paged decode** — ``<model>.decode_paged``: ``model.paged_decode_step``
+  over ``[L, KV_POOL, KV_BLOCK, H, Dh]`` pools, with a ``[GEN_B,
+  KV_MAXBLK]`` block table as the only extra host input per step. Block 0
+  is the reserved null block (free lanes / unallocated entries).
+* **Paged install** — ``<model>.kv_install_paged@B``: splits a bucketed
+  dense prefill cache into blocks and scatters them at table-chosen pool
+  ids; 0-entries are skipped, which is how prefix-cache hits avoid
+  re-installing blocks that are already resident and shared.
+* **Block copy** — ``<model>.kv_block_copy``: pool-internal block moves
+  for copy-on-extend of shared prefix tails.
+
+The dense v3 artifacts are still lowered and registered, so the rust
+side can A/B the two paths (``ServeConfig::force_dense_kv``) and fall
+back when paged artifacts are absent.
 """
 
 import argparse
@@ -53,6 +71,9 @@ from .common import (
     A_MAX,
     CFGS,
     GEN_B,
+    KV_BLOCK,
+    KV_MAXBLK,
+    KV_POOL,
     LM_SIZES,
     SCORE_B,
     S_CTX,
@@ -61,7 +82,7 @@ from .common import (
     VOCAB,
 )
 
-MANIFEST_VERSION = 3
+MANIFEST_VERSION = 4
 
 F32 = jnp.float32
 S32 = jnp.int32
@@ -123,7 +144,8 @@ class ManifestWriter:
         self.lines = [
             f"version {MANIFEST_VERSION}",
             f"global vocab {VOCAB} sctx {S_CTX} sprompt {S_PROMPT} amax {A_MAX} "
-            f"genb {GEN_B} trainb {TRAIN_B} scoreb {SCORE_B}",
+            f"genb {GEN_B} trainb {TRAIN_B} scoreb {SCORE_B} "
+            f"kvblock {KV_BLOCK} kvpool {KV_POOL}",
         ]
 
     def model(self, cfg, head=False):
@@ -262,6 +284,67 @@ def lm_artifacts(out_dir, mw, cfg):
             ],
             ["next", "logp", "kcache", "vcache"],
         )
+
+    # --- block-paged KV cache (manifest v4) -------------------------------
+    # pool + table decode, paged admission install per bucket, and the
+    # copy-on-extend block mover; the dense artifacts above stay
+    # registered for A/B and fallback
+    pool = _spec((L, KV_POOL, KV_BLOCK, H, Dh), F32)
+
+    def decode_paged_fn(*flat):
+        params, rest = flat[:n], flat[n:]
+        kp, vp, tables, tok, pos, step, seeds, temp = rest
+        return M.paged_decode_step(
+            cfg, list(params), kp, vp, tables, tok, pos, step, seeds, temp
+        )
+
+    lower_one(
+        out_dir, mw, f"{cfg.name}.decode_paged", decode_paged_fn,
+        param_ins(cfg)
+        + [
+            ("kcache", pool, "state"),
+            ("vcache", pool, "state"),
+            ("tables", _spec((GEN_B, KV_MAXBLK), S32), "data"),
+            ("tok", _spec((GEN_B,), S32), "data"),
+            ("pos", _spec((GEN_B,), S32), "data"),
+            ("step", _spec((), S32), "data"),
+            ("seeds", _spec((GEN_B,), U32), "data"),
+            ("temp", _spec((), F32), "data"),
+        ],
+        ["next", "logp", "kcache", "vcache"],
+    )
+
+    for b in prefill_buckets(GEN_B):
+
+        def install_paged_fn(kpool, vpool, src_k, src_v, dst_tables):
+            return M.kv_install_paged(kpool, vpool, src_k, src_v, dst_tables)
+
+        lower_one(
+            out_dir, mw, f"{cfg.name}.kv_install_paged@{b}", install_paged_fn,
+            [
+                ("kcache", pool, "state"),
+                ("vcache", pool, "state"),
+                ("src_k", _spec((L, b, S_CTX, H, Dh), F32), "state"),
+                ("src_v", _spec((L, b, S_CTX, H, Dh), F32), "state"),
+                ("dst_tables", _spec((b, KV_MAXBLK), S32), "data"),
+            ],
+            ["kcache", "vcache"],
+        )
+
+    def block_copy_fn(kpool, vpool, src, dst, count):
+        return M.kv_block_copy(kpool, vpool, src, dst, count)
+
+    lower_one(
+        out_dir, mw, f"{cfg.name}.kv_block_copy", block_copy_fn,
+        [
+            ("kcache", pool, "state"),
+            ("vcache", pool, "state"),
+            ("src", _spec((GEN_B,), S32), "data"),
+            ("dst", _spec((GEN_B,), S32), "data"),
+            ("count", _spec((), S32), "data"),
+        ],
+        ["kcache", "vcache"],
+    )
 
     # --- train ------------------------------------------------------------
     def train_fn(*flat):

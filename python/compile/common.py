@@ -28,6 +28,16 @@ GEN_B = 16  # batch for generation (prefill/decode) artifacts
 TRAIN_B = 32  # batch for LM / router train-step artifacts
 SCORE_B = 32  # batch for scorer artifacts
 
+# Block-paged KV cache geometry (manifest v4). The pool holds KV_POOL
+# blocks of KV_BLOCK tokens each per layer; block 0 is the reserved null
+# block (free decode lanes and not-yet-allocated table entries point at
+# it, so their writes land harmlessly and their garbage keys are masked
+# out before softmax). KV_POOL = 1 null + GEN_B * (S_CTX // KV_BLOCK)
+# for live slots + 2 * (S_CTX // KV_BLOCK) spare for cached prefixes.
+KV_BLOCK = 8  # tokens per KV block
+KV_MAXBLK = S_CTX // KV_BLOCK  # blocks per request table
+KV_POOL = 1 + GEN_B * KV_MAXBLK + 2 * KV_MAXBLK  # pool blocks per layer
+
 ADAM_B1 = 0.9
 ADAM_B2 = 0.999
 ADAM_EPS = 1e-8

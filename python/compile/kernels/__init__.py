@@ -2,11 +2,14 @@
 
 from .attention import flash_attention
 from .decode_attention import decode_attention
-from .ref import ref_attention, ref_decode_attention
+from .paged_decode_attention import paged_decode_attention
+from .ref import ref_attention, ref_decode_attention, ref_paged_decode_attention
 
 __all__ = [
     "flash_attention",
     "decode_attention",
+    "paged_decode_attention",
     "ref_attention",
     "ref_decode_attention",
+    "ref_paged_decode_attention",
 ]

@@ -1,0 +1,91 @@
+"""Pallas single-step decode attention over a block-paged KV cache.
+
+The paged sibling of ``decode_attention.py``: instead of a dense
+``[B, S, H, Dh]`` cache per request, K/V live in a per-layer block pool
+``[NBLK, BLOCK, H, Dh]`` and each request owns a small table of pool
+block indices. The kernel gathers a request's blocks by table index,
+reassembles the ``[B, S, Dh]`` view in VMEM, and from there the math is
+*identical* to the dense kernel — same einsums, same mask, same softmax
+normalization — which is what makes paged decode byte-for-byte equal to
+the dense path under greedy sampling (the rust equivalence test pins
+this).
+
+Grid = (heads,), batch kept inside the block, exactly like the dense
+kernel (see its header for the measured rationale). The gather adds
+``B·MAXBLK`` index loads per instance; VMEM grows by the pool slice
+``NBLK·BLOCK·Dh·4`` per K and V, which at NBLK=145, BLOCK=8, Dh≤32
+is ≈ 150 KB — still inside budget.
+
+Block 0 is the reserved *null block*: table entries that are 0 are
+unallocated (or padding lanes). Whatever garbage the null block holds is
+finite and sits at positions ``> pos[b]``, so the causal mask replaces
+its scores with NEG_INF before softmax — zero contribution, bitwise.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(pos_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref, *, block: int, maxblk: int, dh: int):
+    """Block shapes: ``q_ref/o_ref: [B, 1, Dh]``, ``k_ref/v_ref:
+    [NBLK, BLOCK, 1, Dh]`` (one head's pool slice), ``tbl_ref: [B, MAXBLK]``,
+    ``pos_ref: [B]`` (full batch per (head,) program instance)."""
+    q = q_ref[:, 0, :].astype(jnp.float32)  # [B, Dh]
+    kpool = k_ref[:, :, 0, :].astype(jnp.float32)  # [NBLK, BLOCK, Dh]
+    vpool = v_ref[:, :, 0, :].astype(jnp.float32)  # [NBLK, BLOCK, Dh]
+    tbl = tbl_ref[...]  # [B, MAXBLK]
+    pos = pos_ref[...]  # [B]
+    s = maxblk * block
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    # gather each lane's blocks back into position order: [B, MAXBLK,
+    # BLOCK, Dh] -> [B, S, Dh]. Unallocated entries gather null block 0;
+    # those positions are > pos[b] and get masked below.
+    k = kpool[tbl].reshape(tbl.shape[0], s, dh)
+    v = vpool[tbl].reshape(tbl.shape[0], s, dh)
+
+    sc = jnp.einsum("bd,bsd->bs", q, k) * scale  # [B, S]
+    jj = jax.lax.iota(jnp.int32, s)[None, :]
+    sc = jnp.where(jj <= pos[:, None], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o_ref[:, 0, :] = jnp.einsum("bs,bsd->bd", p, v).astype(o_ref.dtype)
+
+
+@jax.jit
+def paged_decode_attention(q, kpool, vpool, tables, pos):
+    """Single-query cached attention over a paged pool; drop-in for
+    ``ref.ref_paged_decode_attention``.
+
+    Args:
+      q: ``[B, H, Dh]`` query at position ``pos[b]``.
+      kpool, vpool: ``[NBLK, BLOCK, H, Dh]`` block pool for one layer.
+      tables: ``[B, MAXBLK]`` int32 pool block ids; entry ``j`` holds
+        positions ``[j*BLOCK, (j+1)*BLOCK)``; 0 = unallocated (null).
+      pos: ``[B]`` int32; attends to ``j <= pos[b]``.
+    """
+    NBLK, BLOCK, H, Dh = kpool.shape
+    B, MAXBLK = tables.shape
+    kernel = functools.partial(_paged_decode_kernel, block=BLOCK, maxblk=MAXBLK, dh=Dh)
+    pool_spec = pl.BlockSpec((NBLK, BLOCK, 1, Dh), lambda h: (0, 0, h, 0))
+    q_spec = pl.BlockSpec((B, 1, Dh), lambda h: (0, h, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((B,), lambda h: (0,)),  # pos
+            pl.BlockSpec((B, MAXBLK), lambda h: (0, 0)),  # tables
+            q_spec,
+            pool_spec,
+            pool_spec,
+        ],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+        interpret=True,
+    )(pos, tables, q, kpool, vpool)

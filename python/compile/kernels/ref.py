@@ -41,6 +41,28 @@ def ref_attention(q, k, v, lens, causal=True):
     return out.astype(q.dtype)
 
 
+def ref_paged_decode_attention(q, kpool, vpool, tables, pos):
+    """Single-step attention over a block-paged KV pool.
+
+    Args:
+      q: ``[B, H, Dh]`` — query for the token at position ``pos[b]``.
+      kpool, vpool: ``[NBLK, BLOCK, H, Dh]`` — per-layer block pool;
+        block 0 is the reserved null block.
+      tables: ``[B, MAXBLK]`` int32 — pool block ids in position order;
+        0 means unallocated (those positions are ``> pos[b]``).
+      pos: ``[B]`` int32 — attends to ``j <= pos[b]``.
+
+    Returns:
+      ``[B, H, Dh]``.
+    """
+    NBLK, BLOCK, H, Dh = kpool.shape
+    B, MAXBLK = tables.shape
+    # gather to the dense [B, S, H, Dh] view, then defer to the dense oracle
+    kcache = kpool[tables].reshape(B, MAXBLK * BLOCK, H, Dh)
+    vcache = vpool[tables].reshape(B, MAXBLK * BLOCK, H, Dh)
+    return ref_decode_attention(q, kcache, vcache, pos)
+
+
 def ref_decode_attention(q, kcache, vcache, pos):
     """Single-step attention of one new query against a KV cache.
 

@@ -34,7 +34,7 @@ from .common import (
     WEIGHT_DECAY,
     ModelCfg,
 )
-from .kernels import decode_attention, flash_attention, ref_attention
+from .kernels import decode_attention, flash_attention, paged_decode_attention, ref_attention
 
 # ---------------------------------------------------------------------------
 # Parameters
@@ -296,6 +296,133 @@ def kv_install(kcache, vcache, src_k, src_v, slots, count):
             vcache, jnp.where(valid, new_v, cur_v), idx, axis=1
         )
     return kcache, vcache
+
+
+def paged_decode_step(cfg, flat, kpool, vpool, tables, tok, pos, step, seeds, temp, use_pallas=True):
+    """One autoregressive step against the block-paged KV pool (manifest v4).
+
+    The paged sibling of ``decode_step``: K/V for this step are written
+    through the block table — lane ``b``'s position ``pos[b]`` lives at
+    offset ``pos[b] % BLOCK`` of pool block ``tables[b, pos[b]//BLOCK]``
+    — and attention gathers the lane's blocks back into position order.
+    Free/padding lanes carry an all-zero table row, so their writes land
+    in the reserved null block 0 and never touch live state.
+
+    Args:
+      kpool, vpool: [L, NBLK, BLOCK, H, Dh] per-layer block pools.
+      tables: [B, MAXBLK] i32 pool block ids (0 = unallocated/null).
+      tok, pos, step, seeds, temp: as in ``decode_step``.
+
+    Returns: (next_tok [B], logprob [B], kpool', vpool').
+    """
+    p = as_dict(cfg, flat)
+    B = tok.shape[0]
+    H, Dh, L = cfg.heads, cfg.head_dim, cfg.layers
+    BLOCK = kpool.shape[2]
+    x = p["emb"][tok] + p["pos"][pos]  # [B, d]
+    for l in range(L):
+        pre = f"l{l:02d}."
+        h = _ln(x, p[pre + "ln1g"], p[pre + "ln1b"])
+        q = (h @ p[pre + "wq"]).reshape(B, H, Dh)
+        k = (h @ p[pre + "wk"]).reshape(B, H, Dh)
+        v = (h @ p[pre + "wv"]).reshape(B, H, Dh)
+        kp_l, vp_l = kpool[l], vpool[l]  # [NBLK, BLOCK, H, Dh]
+        # B is a compile-time constant, so the table-indirected write
+        # unrolls into B dynamic-update-slices per pool (same idiom as
+        # the dense decode write, one indirection deeper).
+        for b in range(B):
+            tid = tables[b, pos[b] // BLOCK]
+            off = pos[b] % BLOCK
+            kp_l = jax.lax.dynamic_update_slice(kp_l, k[b][None, None], (tid, off, 0, 0))
+            vp_l = jax.lax.dynamic_update_slice(vp_l, v[b][None, None], (tid, off, 0, 0))
+        kpool = kpool.at[l].set(kp_l)
+        vpool = vpool.at[l].set(vp_l)
+        if use_pallas:
+            attn = paged_decode_attention(q, kp_l, vp_l, tables, pos)
+        else:
+            from .kernels import ref_paged_decode_attention
+
+            attn = ref_paged_decode_attention(q, kp_l, vp_l, tables, pos)
+        x = x + attn.reshape(B, cfg.d) @ p[pre + "wo"]
+        x = _mlp(cfg, p, l, x[:, None, :])[:, 0, :]
+    x = _ln(x, p["lnfg"], p["lnfb"])
+    logits = x @ p["emb"].T
+    tok2, lp = _sample(logits, seeds, step, temp)
+    return tok2, lp, kpool, vpool
+
+
+def kv_install_paged(kpool, vpool, src_k, src_v, dst_tables):
+    """Device-side paged admission scatter (manifest v4).
+
+    Splits each lane of a bucketed dense prefill cache into BLOCK-token
+    chunks and writes chunk ``j`` of lane ``b`` into pool block
+    ``dst_tables[b, j]``. Entry 0 means *skip*: it covers both bucket
+    padding lanes (all-zero rows) and prefix-cache hits, where the
+    leading blocks are already resident and shared — the skipped writes
+    re-install the null block's own contents, so nothing live is
+    touched. The only host input is the O(B·MAXBLK) table.
+
+    Args:
+      kpool, vpool: [L, NBLK, BLOCK, H, Dh] persistent block pools.
+      src_k, src_v: [L, B_bucket, S_CTX, H, Dh] bucketed prefill outputs.
+      dst_tables: [B_bucket, MAXBLK] int32 destination pool block ids.
+
+    Returns: (kpool', vpool').
+    """
+    bucket = src_k.shape[1]
+    BLOCK = kpool.shape[2]
+    maxblk = dst_tables.shape[1]
+    # bucket and MAXBLK are compile-time constants (one artifact per
+    # bucket), so the scatter unrolls into bucket*MAXBLK masked
+    # dynamic-update-slices — same no-clobber masking as ``kv_install``.
+    for b in range(bucket):
+        for j in range(maxblk):
+            idx = dst_tables[b, j]
+            valid = idx != 0
+            new_k = src_k[:, b : b + 1, j * BLOCK : (j + 1) * BLOCK]  # [L,1,BLOCK,H,Dh]
+            new_v = src_v[:, b : b + 1, j * BLOCK : (j + 1) * BLOCK]
+            cur_k = jax.lax.dynamic_slice_in_dim(kpool, idx, 1, axis=1)
+            cur_v = jax.lax.dynamic_slice_in_dim(vpool, idx, 1, axis=1)
+            kpool = jax.lax.dynamic_update_slice_in_dim(
+                kpool, jnp.where(valid, new_k, cur_k), idx, axis=1
+            )
+            vpool = jax.lax.dynamic_update_slice_in_dim(
+                vpool, jnp.where(valid, new_v, cur_v), idx, axis=1
+            )
+    return kpool, vpool
+
+
+def kv_block_copy(kpool, vpool, src, dst, count):
+    """Pool-internal block copies (copy-on-extend, manifest v4).
+
+    Copies pool block ``src[i]`` over pool block ``dst[i]`` for the first
+    ``count`` entries; entries with ``dst[i] == 0`` are also skipped (0
+    is the null block — never a copy target). Used at admission when a
+    request extends a shared prefix whose tail block is partially full:
+    the shared tail is copied into a private block before the request's
+    own tokens land in it. O(B) host bytes (the two index vectors).
+
+    Args:
+      kpool, vpool: [L, NBLK, BLOCK, H, Dh] persistent block pools.
+      src, dst: [C] int32 pool block ids (C fixed at lowering time).
+      count: scalar int32 number of valid pairs (<= C).
+
+    Returns: (kpool', vpool').
+    """
+    C = src.shape[0]
+    for i in range(C):
+        valid = jnp.logical_and(jnp.int32(i) < count, dst[i] != 0)
+        new_k = jax.lax.dynamic_slice_in_dim(kpool, src[i], 1, axis=1)
+        new_v = jax.lax.dynamic_slice_in_dim(vpool, src[i], 1, axis=1)
+        cur_k = jax.lax.dynamic_slice_in_dim(kpool, dst[i], 1, axis=1)
+        cur_v = jax.lax.dynamic_slice_in_dim(vpool, dst[i], 1, axis=1)
+        kpool = jax.lax.dynamic_update_slice_in_dim(
+            kpool, jnp.where(valid, new_k, cur_k), dst[i], axis=1
+        )
+        vpool = jax.lax.dynamic_update_slice_in_dim(
+            vpool, jnp.where(valid, new_v, cur_v), dst[i], axis=1
+        )
+    return kpool, vpool
 
 
 def score(cfg, flat, tokens, resp_mask, use_pallas=True):

@@ -18,6 +18,13 @@
 //! (`scenario::kick_tires`): trace-replayed bursts, diurnal swings,
 //! long tails, mixed quality targets, overload, and cancel storms, each
 //! gated on the serving invariants — and fails on any violation.
+//!
+//! On manifest-v4 artifacts it then replays the prefix-heavy `sessions`
+//! trace twice — prefix cache on vs off — and **fails** unless sharing
+//! engages (hit rate > 0) and actually removes prefill work
+//! (`prefill_tokens` drops). The paged-KV utilization and hit rate join
+//! `BENCH_serving.json` as `serving.kv_blocks_utilization` /
+//! `serving.prefix_hit_rate`.
 
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -238,6 +245,80 @@ fn main() -> anyhow::Result<()> {
         report.total_violations()
     );
     println!("scenario gate OK: all scenarios passed their invariants");
+
+    // prefix-cache A/B gate (manifest v4): replay the sessions trace —
+    // multi-turn conversations re-sending a shared system prompt — with
+    // cross-request sharing on and off. With the trie engaged, shared
+    // blocks skip prefill install, so the prefill token count must drop.
+    let manifest = Manifest::load(&artifacts.join("manifest.txt"))?;
+    if manifest.version >= 4 {
+        use hybrid_llm::scenario::{gen_sessions, replay, GenShape, ReplayOpts};
+        println!("\n== serving_e2e: prefix-cache A/B (sessions trace) ==");
+        let shape = GenShape {
+            sprompt: manifest.globals.sprompt,
+            amax: manifest.globals.amax,
+        };
+        let trace = gen_sessions(23, 48, shape);
+        let run_sessions = |disable: bool| -> anyhow::Result<hybrid_llm::serve::ServerStats> {
+            let mut cfg = ServeConfig::two_tier(
+                artifacts.clone(),
+                run_dir.clone(),
+                "small",
+                "medium",
+                String::new(),
+                0.5,
+            );
+            // greedy: exact full-prompt re-sends can replay their cached
+            // first token and skip prefill entirely
+            cfg.temp = 0.0;
+            cfg.mode = BatchMode::Continuous;
+            cfg.batch_window = Duration::from_millis(2);
+            cfg.disable_prefix_cache = disable;
+            let server = Server::start(cfg)?;
+            replay(&server, &trace, &ReplayOpts::default())?;
+            server.shutdown()
+        };
+        let off = run_sessions(true)?;
+        let on = run_sessions(false)?;
+        println!(
+            "prefill tokens: {} (cache off) -> {} (cache on)   hit rate {:.0}%   \
+             block utilization {:.0}%",
+            off.prefill_tokens,
+            on.prefill_tokens,
+            on.prefix_hit_rate * 100.0,
+            on.kv_blocks_utilization * 100.0
+        );
+        anyhow::ensure!(
+            on.prefix_hit_rate > 0.0,
+            "prefix cache never hit on the sessions trace (lookups found no shared blocks)"
+        );
+        anyhow::ensure!(
+            on.prefill_tokens < off.prefill_tokens,
+            "prefix cache did not reduce prefill work on the sessions trace \
+             ({} tokens with sharing vs {} without)",
+            on.prefill_tokens,
+            off.prefill_tokens
+        );
+        println!("prefix gate OK: prefill work dropped with sharing enabled");
+        merge_bench_json(
+            json_path,
+            &[
+                ("serving.prefix_hit_rate".to_string(), on.prefix_hit_rate),
+                (
+                    "serving.kv_blocks_utilization".to_string(),
+                    on.kv_blocks_utilization,
+                ),
+                (
+                    "serving.sessions_prefill_tokens".to_string(),
+                    on.prefill_tokens as f64,
+                ),
+                (
+                    "serving.sessions_prefill_tokens_nocache".to_string(),
+                    off.prefill_tokens as f64,
+                ),
+            ],
+        )?;
+    }
 
     let _ = std::fs::remove_dir_all(&run_dir);
     Ok(())

@@ -63,17 +63,31 @@ pub struct Slot<T> {
     pub seed: u32,
 }
 
-/// Fixed-capacity slot table with an O(1) occupancy count; index
-/// enumeration is allocation-free (iterators) so the per-token decode
-/// loop never heap-allocates for bookkeeping.
+/// Fixed-capacity slot table with an O(1) occupancy count and an O(1)
+/// free-list, so admission finds open slots without a linear scan over
+/// capacity; index enumeration is allocation-free (iterators) so the
+/// per-token decode loop never heap-allocates for bookkeeping.
 pub struct SlotTable<T> {
     slots: Vec<Option<Slot<T>>>,
     occupied: usize,
+    /// Stack of free slot indices (top = next slot handed to admission).
+    free: Vec<usize>,
+    /// `free_at[i]` = position of slot `i` in `free`, or `usize::MAX`
+    /// when occupied — makes `insert` at an arbitrary free index O(1)
+    /// (swap-remove from the stack).
+    free_at: Vec<usize>,
 }
 
 impl<T> SlotTable<T> {
     pub fn new(capacity: usize) -> Self {
-        SlotTable { slots: (0..capacity).map(|_| None).collect(), occupied: 0 }
+        SlotTable {
+            slots: (0..capacity).map(|_| None).collect(),
+            occupied: 0,
+            // reversed so the stack top starts at slot 0 and fresh
+            // tables hand out ascending indices
+            free: (0..capacity).rev().collect(),
+            free_at: (0..capacity).map(|i| capacity - 1 - i).collect(),
+        }
     }
 
     pub fn capacity(&self) -> usize {
@@ -92,10 +106,24 @@ impl<T> SlotTable<T> {
 
     /// O(1): whether at least one slot is free.
     pub fn has_free(&self) -> bool {
-        self.occupied < self.slots.len()
+        !self.free.is_empty()
     }
 
-    /// Indices of free slots, ascending (allocation-free).
+    /// Any one free slot index — O(1) (top of the free stack). `None`
+    /// when full.
+    pub fn first_free(&self) -> Option<usize> {
+        self.free.last().copied()
+    }
+
+    /// Up to `n` distinct free slot indices from the free stack — O(n)
+    /// in the number returned, independent of capacity. Does not
+    /// reserve: pair with [`Self::insert`], which pops the stack.
+    pub fn free_slots(&self, n: usize) -> Vec<usize> {
+        self.free.iter().rev().take(n).copied().collect()
+    }
+
+    /// Indices of free slots, ascending (allocation-free scan; use
+    /// [`Self::free_slots`] on the admission hot path).
     pub fn free_indices(&self) -> impl Iterator<Item = usize> + '_ {
         self.slots
             .iter()
@@ -113,10 +141,18 @@ impl<T> SlotTable<T> {
             .map(|(i, _)| i)
     }
 
-    /// Insert into a specific free slot.
+    /// Insert into a specific free slot — O(1) (swap-removes the index
+    /// from the free stack via `free_at`).
     pub fn insert(&mut self, idx: usize, slot: Slot<T>) -> Result<()> {
         ensure!(idx < self.slots.len(), "slot index out of range");
         ensure!(self.slots[idx].is_none(), "slot {idx} already occupied");
+        let at = self.free_at[idx];
+        debug_assert_eq!(self.free[at], idx, "free-list desync");
+        self.free.swap_remove(at);
+        if let Some(&moved) = self.free.get(at) {
+            self.free_at[moved] = at;
+        }
+        self.free_at[idx] = usize::MAX;
         self.slots[idx] = Some(slot);
         self.occupied += 1;
         Ok(())
@@ -130,11 +166,14 @@ impl<T> SlotTable<T> {
         self.slots.get_mut(idx).and_then(|s| s.as_mut())
     }
 
-    /// Remove and return the slot contents.
+    /// Remove and return the slot contents — O(1) (pushes the index back
+    /// onto the free stack, so it is the next slot admission reuses).
     pub fn take(&mut self, idx: usize) -> Option<Slot<T>> {
         let s = self.slots.get_mut(idx).and_then(|s| s.take());
         if s.is_some() {
             self.occupied -= 1;
+            self.free_at[idx] = self.free.len();
+            self.free.push(idx);
         }
         s
     }
@@ -673,6 +712,32 @@ mod tests {
     }
 
     #[test]
+    fn slot_table_free_list_hands_out_fresh_indices_in_order() {
+        let mut t: SlotTable<u32> = SlotTable::new(4);
+        // fresh table: the free stack matches the ascending scan
+        assert_eq!(t.first_free(), Some(0));
+        assert_eq!(t.free_slots(2), vec![0, 1]);
+        assert_eq!(t.free_slots(9), vec![0, 1, 2, 3]);
+        t.insert(0, slot(1)).unwrap();
+        t.insert(1, slot(2)).unwrap();
+        assert_eq!(t.first_free(), Some(2));
+        // a released slot is the next one handed out (LIFO reuse keeps
+        // the working set of KV slots small)
+        t.take(0).unwrap();
+        assert_eq!(t.first_free(), Some(0));
+        assert_eq!(t.free_slots(3), vec![0, 2, 3]);
+        // inserting at an index deeper in the stack still works (O(1)
+        // swap-remove), and the stack stays consistent
+        t.insert(3, slot(3)).unwrap();
+        assert_eq!(t.free_slots(9).len(), 2);
+        t.insert(0, slot(4)).unwrap();
+        t.insert(2, slot(5)).unwrap();
+        assert_eq!(t.first_free(), None);
+        assert!(t.free_slots(1).is_empty());
+        assert!(!t.has_free());
+    }
+
+    #[test]
     fn slot_table_property_no_lost_or_duplicated() {
         crate::testing::check("slot table conservation", 100, |rng| {
             let cap = rng.range(1, 8);
@@ -681,7 +746,15 @@ mod tests {
             let mut next_id = 0u64;
             for _ in 0..50 {
                 if rng.next_f64() < 0.5 {
-                    if let Some(i) = t.free_indices().next() {
+                    // alternate allocation paths: the O(1) free stack
+                    // (admission hot path) and the ascending scan must
+                    // stay interchangeable
+                    let pick = if rng.next_f64() < 0.5 {
+                        t.first_free()
+                    } else {
+                        t.free_indices().next()
+                    };
+                    if let Some(i) = pick {
                         let s = Slot {
                             payload: next_id,
                             answer: vec![],
@@ -705,6 +778,14 @@ mod tests {
                 assert_eq!(t.occupied(), live.len());
                 assert_eq!(t.occupied() + t.free_indices().count(), cap);
                 assert_eq!(t.has_free(), t.occupied() < cap);
+                // the free stack and the slot scan agree as sets, and
+                // free_slots never repeats or returns occupied indices
+                let mut from_stack = t.free_slots(cap);
+                let from_scan: Vec<usize> = t.free_indices().collect();
+                assert_eq!(from_stack.len(), from_scan.len());
+                from_stack.sort_unstable();
+                assert_eq!(from_stack, from_scan);
+                assert_eq!(t.first_free().is_none(), !t.has_free());
             }
         });
     }

@@ -70,6 +70,7 @@ pub mod io;
 pub mod labels;
 pub mod lm;
 pub mod metrics;
+pub mod paged;
 pub mod pipeline;
 pub mod policy;
 pub mod rng;

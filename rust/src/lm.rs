@@ -59,6 +59,38 @@ pub fn lr_schedule(base: f32, step: usize, total: usize, warmup: usize) -> f32 {
     base * (min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + (std::f32::consts::PI * t).cos()))
 }
 
+/// Exec handles + pool geometry for the manifest-v4 block-paged KV path
+/// (DESIGN.md §10). Built once per worker by
+/// [`LmEngine::paged_artifacts`]; `None` on pre-v4 manifests, which keep
+/// the dense path.
+pub struct PagedArtifacts {
+    /// `<name>.decode_paged` — one decode step gathering KV blocks
+    /// through per-lane block tables.
+    pub decode: Arc<Exec>,
+    /// `(bucket, <name>.kv_install_paged@B)` pairs, ascending by bucket.
+    pub installs: Vec<(usize, Arc<Exec>)>,
+    /// `<name>.kv_block_copy` — batched block-granular pool copy
+    /// (copy-on-extend for shared prefix tails).
+    pub block_copy: Arc<Exec>,
+    /// Tokens per block (`kvblock`).
+    pub block: usize,
+    /// Pool blocks per layer including the null block (`kvpool`).
+    pub nblk: usize,
+    /// Block-table entries per request (`sctx / kvblock`).
+    pub maxblk: usize,
+}
+
+impl PagedArtifacts {
+    /// The smallest install bucket that fits `nb` freshly admitted
+    /// requests, mirroring [`bucket_for`] on the dense admission path.
+    pub fn install_for(&self, nb: usize) -> Option<(usize, Arc<Exec>)> {
+        self.installs
+            .iter()
+            .find(|(b, _)| *b >= nb)
+            .map(|(b, e)| (*b, e.clone()))
+    }
+}
+
 /// One roster LM bound to the runtime.
 pub struct LmEngine {
     rt: Arc<Runtime>,
@@ -442,6 +474,31 @@ impl LmEngine {
                 },
             })
             .collect())
+    }
+
+    /// The block-paged KV artifact set, or `None` when the manifest
+    /// predates v4 (callers fall back to the dense `[L, genb, sctx, H,
+    /// Dh]` slab). Buckets come back ascending so
+    /// [`PagedArtifacts::install_for`] can first-fit.
+    pub fn paged_artifacts(&self) -> Result<Option<PagedArtifacts>> {
+        if !self.rt.manifest.has_paged_kv(&self.name) {
+            return Ok(None);
+        }
+        let g = self.rt.manifest.globals;
+        let decode = self.rt.exec(&format!("{}.decode_paged", self.name))?;
+        let mut installs = Vec::new();
+        for b in self.rt.manifest.kv_install_paged_buckets(&self.name) {
+            installs.push((b, self.rt.exec(&format!("{}.kv_install_paged@{b}", self.name))?));
+        }
+        let block_copy = self.rt.exec(&format!("{}.kv_block_copy", self.name))?;
+        Ok(Some(PagedArtifacts {
+            decode,
+            installs,
+            block_copy,
+            block: g.kvblock,
+            nblk: g.kvpool,
+            maxblk: g.kv_maxblk(),
+        }))
     }
 
     /// Single-request latency path (B=1 artifacts) — used by the Table 2

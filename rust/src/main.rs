@@ -222,6 +222,18 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         "device" => false,
         other => anyhow::bail!("bad --admit {other:?} (device|host)"),
     };
+    // --kv dense: keep the dense slab on v4 artifacts (A/B baseline for
+    // the block-paged pool); --prefix-cache off: paged without sharing
+    let force_dense_kv = match args.get("kv", "paged") {
+        "dense" => true,
+        "paged" => false,
+        other => anyhow::bail!("bad --kv {other:?} (paged|dense)"),
+    };
+    let disable_prefix_cache = match args.get("prefix-cache", "on") {
+        "off" => true,
+        "on" => false,
+        other => anyhow::bail!("bad --prefix-cache {other:?} (on|off)"),
+    };
     let pair_small = args.get("small", "medium").to_string();
     let pair_large = args.get("large", "large").to_string();
 
@@ -291,6 +303,8 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         queue_cap,
         quality_ladders,
         force_host_admission,
+        force_dense_kv,
+        disable_prefix_cache,
     };
     println!(
         "[serve] starting fleet [{}], {mode:?}, queue cap {queue_cap}{}",
@@ -397,6 +411,21 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         stats.admitted,
         stats.admit_latency.p50_ms,
         stats.admit_bytes_per_req() / 1024.0
+    );
+    let kv_path = if force_dense_kv {
+        "dense slab (--kv dense)"
+    } else if manifest_version >= 4 {
+        "block-paged pool (v4 artifacts)"
+    } else {
+        "dense slab (pre-v4 artifacts)"
+    };
+    println!(
+        "kv cache: {kv_path}   block utilization {:.0}%   prefix hit rate {:.0}% \
+         ({} shared tokens, {} prefilled)",
+        stats.kv_blocks_utilization * 100.0,
+        stats.prefix_hit_rate * 100.0,
+        stats.prefix_shared_tokens,
+        stats.prefill_tokens
     );
     Ok(())
 }

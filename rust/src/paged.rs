@@ -1,0 +1,857 @@
+//! Block-paged KV storage + cross-request shared-prefix reuse
+//! (manifest v4; DESIGN.md §10).
+//!
+//! Three pieces, composed by the serving worker:
+//!
+//! * [`BlockAllocator`] — refcounted free-list over a per-layer device
+//!   block pool of `kvpool` blocks × `kvblock` tokens. Block 0 is the
+//!   reserved *null block*: free decode lanes and unallocated table
+//!   entries point at it, so their writes land harmlessly and their
+//!   garbage keys sit behind the causal mask. It is never allocated and
+//!   never freed.
+//! * [`PagedKvCache`] — the device-resident pool buffer pair
+//!   (`[L, kvpool, kvblock, H, Dh]` per K and V). Strictly
+//!   device-resident: unlike the dense [`crate::batching::KvCache`]
+//!   there is no host fallback — pre-v4 manifests keep the dense path
+//!   instead (the fallback matrix in DESIGN.md §10).
+//! * [`PrefixCache`] — a trie over `kvblock`-sized prompt-token chunks.
+//!   Each edge holds a pool block whose KV is fully determined by the
+//!   token prefix on the path (KV depends only on model weights and
+//!   prefix tokens, never on seeds/temperature), so any request whose
+//!   prompt shares the path reuses those blocks read-only. The trie
+//!   holds one refcount per adopted block; requests hold one per table
+//!   entry; a block returns to the free list when both drop it.
+//!
+//! **Sharing discipline** (the copy-on-extend rule): only *full* blocks
+//! — entirely covered by the prompt — are ever shared. A request's tail
+//! block (the one its decode writes land in) is private; the trie may
+//! record a tail block for the exact-full-prompt greedy fast path, but a
+//! hit *copies* it into a fresh private block (`kv_block_copy`) rather
+//! than referencing it writable. Stale answer-KV copied along sits at
+//! positions `> pos` — masked until progressively overwritten by the new
+//! owner's own writes, the same invariant the dense path relies on.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::io::Tensor;
+use crate::runtime::{OutValue, Runtime};
+
+/// Pool blocks a prompt of `prompt_len` tokens needs: its full and
+/// partial prompt blocks *plus* the block holding position `prompt_len`
+/// (the first decode write, which happens before any growth check).
+pub fn blocks_needed(prompt_len: usize, block_tokens: usize) -> usize {
+    prompt_len / block_tokens + 1
+}
+
+/// Refcounted block allocator over a pool of `nblk` blocks; block 0 is
+/// reserved (null) and never handed out. All failure modes are `Err`s,
+/// not panics — pool exhaustion surfaces as `Ok(None)` from [`alloc`]
+/// so the serving layer can evict or shed (`SubmitError::Busy`) instead
+/// of crashing (pinned by property tests).
+///
+/// [`alloc`]: BlockAllocator::alloc
+pub struct BlockAllocator {
+    free: Vec<u32>,
+    refcnt: Vec<u32>,
+}
+
+impl BlockAllocator {
+    pub fn new(nblk: usize) -> Self {
+        assert!(nblk >= 2, "pool needs the null block plus at least one");
+        let mut refcnt = vec![0u32; nblk];
+        refcnt[0] = 1; // null block: permanently referenced
+        BlockAllocator {
+            // reversed so the first allocations are 1, 2, 3, ...
+            free: (1..nblk as u32).rev().collect(),
+            refcnt,
+        }
+    }
+
+    /// Total pool size including the null block.
+    pub fn capacity(&self) -> usize {
+        self.refcnt.len()
+    }
+
+    /// Blocks available for allocation — O(1).
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Allocated fraction of the allocatable pool (excludes the null
+    /// block): the `serving.kv_blocks_utilization` gauge.
+    pub fn utilization(&self) -> f64 {
+        let usable = self.capacity() - 1;
+        if usable == 0 {
+            return 0.0;
+        }
+        (usable - self.free_count()) as f64 / usable as f64
+    }
+
+    /// Allocate a block with refcount 1, or `None` when the pool is
+    /// exhausted (caller evicts/sheds — never a panic).
+    pub fn alloc(&mut self) -> Option<u32> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refcnt[id as usize], 0);
+        self.refcnt[id as usize] = 1;
+        Some(id)
+    }
+
+    /// Add a reference to a live block (sharing it).
+    pub fn incref(&mut self, id: u32) -> Result<()> {
+        ensure!(id != 0, "incref on the null block");
+        let rc = self
+            .refcnt
+            .get_mut(id as usize)
+            .with_context(|| format!("incref: block {id} out of range"))?;
+        ensure!(*rc > 0, "incref on free block {id}");
+        *rc += 1;
+        Ok(())
+    }
+
+    /// Drop a reference; returns `true` when this was the last one and
+    /// the block went back on the free list. Double-frees are `Err`s.
+    pub fn decref(&mut self, id: u32) -> Result<bool> {
+        ensure!(id != 0, "decref on the null block");
+        let rc = self
+            .refcnt
+            .get_mut(id as usize)
+            .with_context(|| format!("decref: block {id} out of range"))?;
+        ensure!(*rc > 0, "double free of block {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(id);
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    /// Current refcount (test/diagnostic).
+    pub fn refcount(&self, id: u32) -> u32 {
+        self.refcnt.get(id as usize).copied().unwrap_or(0)
+    }
+}
+
+/// Drop one reference for every nonzero entry of a request's block
+/// table and zero it (completion/cancel release).
+pub fn release_table(table: &mut [u32], alloc: &mut BlockAllocator) -> Result<()> {
+    for b in table.iter_mut() {
+        if *b != 0 {
+            alloc.decref(*b)?;
+            *b = 0;
+        }
+    }
+    Ok(())
+}
+
+/// Device-resident paged KV pool pair, shape `[L, kvpool, kvblock, H,
+/// Dh]` per K and V. Created as zeros and uploaded once at worker start;
+/// after that it only moves through `Exec::run_resident` state outputs
+/// (`decode_paged`, `kv_install_paged@B`, `kv_block_copy`) and never
+/// crosses the host boundary again — the paged extension of the §8
+/// residency ladder.
+pub struct PagedKvCache {
+    k: Arc<xla::PjRtBuffer>,
+    v: Arc<xla::PjRtBuffer>,
+    pub layers: usize,
+    pub nblk: usize,
+    pub block: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+}
+
+impl PagedKvCache {
+    /// Allocate zeroed pools on the device (one-time metered upload).
+    pub fn zeros_on_device(
+        rt: &Runtime,
+        layers: usize,
+        nblk: usize,
+        block: usize,
+        heads: usize,
+        head_dim: usize,
+    ) -> Result<Self> {
+        let dims = vec![layers, nblk, block, heads, head_dim];
+        let n: usize = dims.iter().product();
+        let zeros = Tensor::f32(dims, vec![0.0; n]);
+        let k = rt.upload(&zeros)?;
+        let v = rt.upload(&zeros)?;
+        Ok(PagedKvCache { k, v, layers, nblk, block, heads, head_dim })
+    }
+
+    pub fn dims(&self) -> [usize; 5] {
+        [self.layers, self.nblk, self.block, self.heads, self.head_dim]
+    }
+
+    /// Total size of both pools in bytes.
+    pub fn byte_size(&self) -> u64 {
+        2 * self.dims().iter().product::<usize>() as u64 * crate::runtime::ELEM_BYTES as u64
+    }
+
+    pub fn buffers(&self) -> (Arc<xla::PjRtBuffer>, Arc<xla::PjRtBuffer>) {
+        (self.k.clone(), self.v.clone())
+    }
+
+    /// Bind the pools as resident artifact inputs `k_idx`/`v_idx`.
+    pub fn bind(
+        &self,
+        k_idx: usize,
+        v_idx: usize,
+        resident: &mut HashMap<usize, Arc<xla::PjRtBuffer>>,
+    ) {
+        resident.insert(k_idx, self.k.clone());
+        resident.insert(v_idx, self.v.clone());
+    }
+
+    /// Adopt the pools returned by a paged artifact. The paged path has
+    /// no host fallback: a host output means the artifact was not
+    /// untupled and would silently wreck the residency contract —
+    /// refuse instead.
+    pub fn update(&mut self, k: OutValue, v: OutValue) -> Result<()> {
+        match (k, v) {
+            (OutValue::Device(k), OutValue::Device(v)) => {
+                self.k = k;
+                self.v = v;
+                Ok(())
+            }
+            _ => bail!("paged kv pool came back host-resident (artifact not untupled?)"),
+        }
+    }
+}
+
+/// Exact-full-prompt hit: everything admission needs to skip prefill.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FullHit {
+    /// The cached tail block to copy-on-extend into a private block
+    /// (`None` when the prompt length is block-aligned — the private
+    /// first-write block starts empty).
+    pub tail_block: Option<u32>,
+    /// Greedy first token sampled when the entry was recorded.
+    pub first_tok: i32,
+    /// Its logprob.
+    pub logp: f32,
+}
+
+/// Result of a prefix lookup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixHit {
+    /// Pool blocks for the longest matched run of *full* prompt chunks,
+    /// in position order (`shared[j]` covers tokens `[j*kvblock,
+    /// (j+1)*kvblock)`). Not yet referenced — the caller increfs the
+    /// ones it adopts.
+    pub shared: Vec<u32>,
+    /// Exact whole-prompt match (only usable for greedy sampling: the
+    /// recorded first token is seed-independent only at temp 0).
+    pub full: Option<FullHit>,
+}
+
+impl PrefixHit {
+    /// Prompt tokens whose prefill/install work the hit saves.
+    pub fn shared_tokens(&self, block_tokens: usize, prompt_len: usize) -> usize {
+        if self.full.is_some() {
+            prompt_len
+        } else {
+            self.shared.len() * block_tokens
+        }
+    }
+}
+
+const MAX_TAILS_PER_NODE: usize = 8;
+
+struct Tail {
+    tail: Vec<i32>,
+    /// 0 = no tail block (block-aligned prompt).
+    block: u32,
+    first_tok: i32,
+    logp: f32,
+    last_used: u64,
+}
+
+struct Node {
+    /// Chunk tokens keying this node under `parent` (empty for root).
+    key: Vec<i32>,
+    parent: usize,
+    /// Pool block holding this chunk's KV (0 for the root only).
+    block: u32,
+    children: HashMap<Vec<i32>, usize>,
+    tails: Vec<Tail>,
+    last_used: u64,
+    live: bool,
+}
+
+/// Trie over block-sized prompt-token chunks mapping shared prefixes to
+/// refcounted pool blocks. Single-owner (one per worker, same thread as
+/// the decode loop). LRU eviction is leaf-only, so interior blocks —
+/// still reachable by longer cached prefixes — are never freed under a
+/// live descendant.
+pub struct PrefixCache {
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    block_tokens: usize,
+    clock: u64,
+    /// Lookups that found at least one shared block (hit-rate metric).
+    pub hits: u64,
+    pub lookups: u64,
+}
+
+impl PrefixCache {
+    pub fn new(block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        PrefixCache {
+            nodes: vec![Node {
+                key: vec![],
+                parent: 0,
+                block: 0,
+                children: HashMap::new(),
+                tails: vec![],
+                last_used: 0,
+                live: true,
+            }],
+            free_nodes: vec![],
+            block_tokens,
+            clock: 0,
+            hits: 0,
+            lookups: 0,
+        }
+    }
+
+    /// Fraction of lookups that reused at least one cached block.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// Number of live trie entries (nodes excluding root, plus tails).
+    pub fn len(&self) -> usize {
+        let nodes = self.nodes.iter().filter(|n| n.live).count() - 1;
+        let tails: usize = self.nodes.iter().filter(|n| n.live).map(|n| n.tails.len()).sum();
+        nodes + tails
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Longest-prefix lookup. Touches LRU stamps on the matched path.
+    pub fn lookup(&mut self, prompt: &[i32]) -> PrefixHit {
+        self.clock += 1;
+        self.lookups += 1;
+        let bt = self.block_tokens;
+        let full = prompt.len() / bt;
+        let mut node = 0usize;
+        let mut shared = Vec::new();
+        for j in 0..full {
+            let chunk = &prompt[j * bt..(j + 1) * bt];
+            let Some(&c) = self.nodes[node].children.get(chunk) else { break };
+            self.nodes[c].last_used = self.clock;
+            shared.push(self.nodes[c].block);
+            node = c;
+        }
+        let mut full_hit = None;
+        if shared.len() == full {
+            let tail = &prompt[full * bt..];
+            let clock = self.clock;
+            if let Some(t) = self.nodes[node].tails.iter_mut().find(|t| t.tail == tail) {
+                t.last_used = clock;
+                full_hit = Some(FullHit {
+                    tail_block: (t.block != 0).then_some(t.block),
+                    first_tok: t.first_tok,
+                    logp: t.logp,
+                });
+            }
+        }
+        if !shared.is_empty() || full_hit.is_some() {
+            self.hits += 1;
+        }
+        PrefixHit { shared, full: full_hit }
+    }
+
+    /// Record an admitted prompt's blocks. `table[j]` must hold the pool
+    /// block covering chunk `j` (shared or freshly installed). Chunks
+    /// already in the trie are left untouched (their blocks *are* the
+    /// shared ones); new chunks adopt the request's block with an
+    /// incref. `first` — the sampled first token and its logprob —
+    /// is recorded as an exact-hit tail entry only when sampling was
+    /// greedy (pass `None` otherwise: at temp > 0 the first token is
+    /// seed-dependent and must not be replayed to other requests).
+    pub fn insert(
+        &mut self,
+        prompt: &[i32],
+        table: &[u32],
+        first: Option<(i32, f32)>,
+        alloc: &mut BlockAllocator,
+    ) -> Result<()> {
+        self.clock += 1;
+        let bt = self.block_tokens;
+        let full = prompt.len() / bt;
+        ensure!(
+            table.len() >= blocks_needed(prompt.len(), bt),
+            "prefix insert: table covers {} blocks, prompt needs {}",
+            table.len(),
+            blocks_needed(prompt.len(), bt)
+        );
+        let mut node = 0usize;
+        for j in 0..full {
+            let chunk = &prompt[j * bt..(j + 1) * bt];
+            let next = self.nodes[node].children.get(chunk).copied();
+            node = match next {
+                Some(c) => {
+                    self.nodes[c].last_used = self.clock;
+                    c
+                }
+                None => {
+                    let b = table[j];
+                    ensure!(b != 0, "prefix insert: chunk {j} has no block");
+                    alloc.incref(b)?;
+                    let idx = self.new_node(chunk.to_vec(), node, b);
+                    self.nodes[node].children.insert(chunk.to_vec(), idx);
+                    idx
+                }
+            };
+        }
+        if let Some((first_tok, logp)) = first {
+            let tail = &prompt[full * bt..];
+            if !self.nodes[node].tails.iter().any(|t| t.tail == tail) {
+                let block = if tail.is_empty() {
+                    0
+                } else {
+                    let b = table[full];
+                    ensure!(b != 0, "prefix insert: tail chunk has no block");
+                    alloc.incref(b)?;
+                    b
+                };
+                if self.nodes[node].tails.len() >= MAX_TAILS_PER_NODE {
+                    let oldest = self
+                        .nodes[node]
+                        .tails
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, t)| t.last_used)
+                        .map(|(i, _)| i)
+                        .expect("nonempty");
+                    let t = self.nodes[node].tails.swap_remove(oldest);
+                    if t.block != 0 {
+                        alloc.decref(t.block)?;
+                    }
+                }
+                let clock = self.clock;
+                self.nodes[node].tails.push(Tail { tail: tail.to_vec(), block, first_tok, logp, last_used: clock });
+            }
+        }
+        Ok(())
+    }
+
+    fn new_node(&mut self, key: Vec<i32>, parent: usize, block: u32) -> usize {
+        let node = Node {
+            key,
+            parent,
+            block,
+            children: HashMap::new(),
+            tails: vec![],
+            last_used: self.clock,
+            live: true,
+        };
+        match self.free_nodes.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Evict least-recently-used leaf entries (tails first-class, then
+    /// childless/tailless nodes) until the allocator has at least
+    /// `need_free` free blocks or nothing evictable remains. Returns the
+    /// number of entries evicted. Interior nodes become leaves as their
+    /// descendants go, so sustained pressure drains the whole trie.
+    pub fn evict(&mut self, alloc: &mut BlockAllocator, need_free: usize) -> Result<usize> {
+        let mut evicted = 0usize;
+        while alloc.free_count() < need_free {
+            // candidates: every tail entry, every leaf node
+            let mut best: Option<(u64, usize, Option<usize>)> = None; // (stamp, node, tail idx)
+            for (i, n) in self.nodes.iter().enumerate() {
+                if !n.live {
+                    continue;
+                }
+                for (ti, t) in n.tails.iter().enumerate() {
+                    if best.map_or(true, |(s, _, _)| t.last_used < s) {
+                        best = Some((t.last_used, i, Some(ti)));
+                    }
+                }
+                if i != 0 && n.children.is_empty() && n.tails.is_empty() {
+                    if best.map_or(true, |(s, _, _)| n.last_used < s) {
+                        best = Some((n.last_used, i, None));
+                    }
+                }
+            }
+            let Some((_, i, tail)) = best else { break };
+            match tail {
+                Some(ti) => {
+                    let t = self.nodes[i].tails.swap_remove(ti);
+                    if t.block != 0 {
+                        alloc.decref(t.block)?;
+                    }
+                }
+                None => {
+                    let (parent, key, block) = {
+                        let n = &self.nodes[i];
+                        (n.parent, n.key.clone(), n.block)
+                    };
+                    self.nodes[parent].children.remove(&key);
+                    alloc.decref(block)?;
+                    self.nodes[i].live = false;
+                    self.nodes[i].children = HashMap::new();
+                    self.nodes[i].key = vec![];
+                    self.free_nodes.push(i);
+                }
+            }
+            evicted += 1;
+        }
+        Ok(evicted)
+    }
+
+    /// Drop every entry, releasing all trie-held refcounts (worker
+    /// shutdown / tests).
+    pub fn clear(&mut self, alloc: &mut BlockAllocator) -> Result<()> {
+        self.evict(alloc, usize::MAX)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_needed_includes_first_write() {
+        assert_eq!(blocks_needed(0, 8), 1);
+        assert_eq!(blocks_needed(7, 8), 1);
+        assert_eq!(blocks_needed(8, 8), 2); // pos 8 = first write -> block 1
+        assert_eq!(blocks_needed(9, 8), 2);
+        assert_eq!(blocks_needed(16, 8), 3);
+    }
+
+    #[test]
+    fn allocator_basics() {
+        let mut a = BlockAllocator::new(4);
+        assert_eq!(a.capacity(), 4);
+        assert_eq!(a.free_count(), 3);
+        assert_eq!(a.utilization(), 0.0);
+        let b1 = a.alloc().unwrap();
+        let b2 = a.alloc().unwrap();
+        assert_ne!(b1, 0);
+        assert_ne!(b1, b2);
+        assert!((a.utilization() - 2.0 / 3.0).abs() < 1e-12);
+        a.incref(b1).unwrap();
+        assert!(!a.decref(b1).unwrap()); // still shared
+        assert!(a.decref(b1).unwrap()); // freed
+        assert_eq!(a.free_count(), 2);
+        // exhaustion is graceful
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_none());
+    }
+
+    #[test]
+    fn allocator_rejects_null_and_double_free() {
+        let mut a = BlockAllocator::new(3);
+        assert!(a.incref(0).is_err());
+        assert!(a.decref(0).is_err());
+        assert!(a.incref(99).is_err());
+        let b = a.alloc().unwrap();
+        assert!(a.incref(b).is_ok());
+        a.decref(b).unwrap();
+        a.decref(b).unwrap();
+        assert!(a.decref(b).is_err(), "double free must be an error");
+        assert!(a.incref(b).is_err(), "incref on free block must be an error");
+    }
+
+    #[test]
+    fn release_table_zeroes_and_frees() {
+        let mut a = BlockAllocator::new(8);
+        let mut table = vec![0u32; 4];
+        table[0] = a.alloc().unwrap();
+        table[2] = a.alloc().unwrap();
+        release_table(&mut table, &mut a).unwrap();
+        assert!(table.iter().all(|&b| b == 0));
+        assert_eq!(a.free_count(), 7);
+        // releasing an all-zero table is a no-op
+        release_table(&mut table, &mut a).unwrap();
+        assert_eq!(a.free_count(), 7);
+    }
+
+    #[test]
+    fn allocator_property_refcount_balance() {
+        crate::testing::check("allocator conservation", 60, |rng| {
+            let cap = rng.range(2, 24);
+            let mut a = BlockAllocator::new(cap);
+            // model: refcounts we believe each block has
+            let mut model: HashMap<u32, u32> = HashMap::new();
+            for _ in 0..200 {
+                match rng.below(3) {
+                    0 => {
+                        if let Some(b) = a.alloc() {
+                            assert!(!model.contains_key(&b), "allocated a live block");
+                            model.insert(b, 1);
+                        } else {
+                            assert_eq!(model.len(), cap - 1, "spurious exhaustion");
+                        }
+                    }
+                    1 => {
+                        let live: Vec<u32> = model.keys().copied().collect();
+                        if !live.is_empty() {
+                            let b = live[rng.below(live.len())];
+                            a.incref(b).unwrap();
+                            *model.get_mut(&b).unwrap() += 1;
+                        }
+                    }
+                    _ => {
+                        let live: Vec<u32> = model.keys().copied().collect();
+                        if !live.is_empty() {
+                            let b = live[rng.below(live.len())];
+                            let freed = a.decref(b).unwrap();
+                            let rc = model.get_mut(&b).unwrap();
+                            *rc -= 1;
+                            assert_eq!(freed, *rc == 0);
+                            if *rc == 0 {
+                                model.remove(&b);
+                            }
+                        }
+                    }
+                }
+                assert_eq!(a.free_count(), cap - 1 - model.len());
+                for (&b, &rc) in &model {
+                    assert_eq!(a.refcount(b), rc);
+                }
+            }
+            // drain: refcounts balance back to a fully free pool
+            for (b, rc) in model.drain() {
+                for i in 0..rc {
+                    assert_eq!(a.decref(b).unwrap(), i + 1 == rc);
+                }
+            }
+            assert_eq!(a.free_count(), cap - 1);
+            assert_eq!(a.utilization(), 0.0);
+        });
+    }
+
+    /// Build a table for `prompt`, reusing `hit.shared` and allocating
+    /// the rest — the same steps the serving admission path takes.
+    fn admit(
+        prompt: &[i32],
+        bt: usize,
+        cache: &mut PrefixCache,
+        alloc: &mut BlockAllocator,
+    ) -> Option<Vec<u32>> {
+        let hit = cache.lookup(prompt);
+        let need = blocks_needed(prompt.len(), bt);
+        let mut table = vec![0u32; need];
+        for (j, &b) in hit.shared.iter().take(need).enumerate() {
+            alloc.incref(b).unwrap();
+            table[j] = b;
+        }
+        let have = hit.shared.len().min(need);
+        for slot in table.iter_mut().skip(have) {
+            match alloc.alloc() {
+                Some(b) => *slot = b,
+                None => {
+                    // roll back partial allocation (what serve does
+                    // before returning Busy)
+                    release_table(&mut table, alloc).unwrap();
+                    return None;
+                }
+            }
+        }
+        cache.insert(prompt, &table, Some((7, -0.5)), alloc).unwrap();
+        Some(table)
+    }
+
+    #[test]
+    fn prefix_trie_shares_full_blocks_only() {
+        let bt = 4;
+        let mut alloc = BlockAllocator::new(64);
+        let mut cache = PrefixCache::new(bt);
+        // 10 tokens: 2 full chunks + tail of 2
+        let p1: Vec<i32> = (1..=10).collect();
+        assert_eq!(cache.lookup(&p1), PrefixHit { shared: vec![], full: None });
+        let t1 = admit(&p1, bt, &mut cache, &mut alloc).unwrap();
+        assert_eq!(t1.len(), 3);
+        // same prompt again: both full chunks shared + exact tail hit
+        let hit = cache.lookup(&p1);
+        assert_eq!(hit.shared, vec![t1[0], t1[1]]);
+        let full = hit.full.unwrap();
+        assert_eq!(full.tail_block, Some(t1[2]));
+        assert_eq!(full.first_tok, 7);
+        assert_eq!(hit.shared_tokens(bt, p1.len()), 10);
+        // longer prompt with the same first 8 tokens: shares exactly the
+        // full chunks, not the tail
+        let mut p2 = p1.clone();
+        p2.extend([99, 98, 97]); // 13 tokens: 3 full chunks + tail of 1
+        let hit2 = cache.lookup(&p2);
+        assert_eq!(hit2.shared, vec![t1[0], t1[1]]);
+        assert!(hit2.full.is_none());
+        assert_eq!(hit2.shared_tokens(bt, p2.len()), 8);
+        // diverging prompt shares nothing
+        let p3: Vec<i32> = (100..=110).collect();
+        assert_eq!(cache.lookup(&p3).shared, vec![]);
+    }
+
+    #[test]
+    fn copy_on_extend_never_mutates_parent_blocks() {
+        let bt = 4;
+        let mut alloc = BlockAllocator::new(64);
+        let mut cache = PrefixCache::new(bt);
+        let p1: Vec<i32> = (1..=10).collect();
+        let t1 = admit(&p1, bt, &mut cache, &mut alloc).unwrap();
+        let rc_before: Vec<u32> = t1.iter().map(|&b| alloc.refcount(b)).collect();
+        // a request extending the shared prefix gets fresh blocks for
+        // everything past the shared full chunks — the parent's block
+        // ids keep their identity and gain refs only on the shared part
+        let mut p2 = p1.clone();
+        p2.extend([50, 51, 52, 53, 54, 55]); // 16 tokens: 4 chunks + first-write block
+        let t2 = admit(&p2, bt, &mut cache, &mut alloc).unwrap();
+        assert_eq!(&t2[..2], &t1[..2], "shared full chunks reuse parent blocks");
+        assert_ne!(t2[2], t1[2], "tail/extension blocks are private");
+        assert!(t2[2..].iter().all(|&b| b != 0 && !t1.contains(&b)));
+        // parent's tail block refcount unchanged; shared chunks +1 user
+        // +1 trie-adoption of p2's chunk-2... which is a different block
+        assert_eq!(alloc.refcount(t1[2]), rc_before[2]);
+        assert!(alloc.refcount(t1[0]) > rc_before[0]);
+    }
+
+    #[test]
+    fn refcounts_balance_at_drain() {
+        let bt = 4;
+        crate::testing::check("prefix trie drain balance", 40, |rng| {
+            let mut alloc = BlockAllocator::new(2 + rng.range(16, 96));
+            let mut cache = PrefixCache::new(bt);
+            let mut tables: Vec<Vec<u32>> = Vec::new();
+            for _ in 0..rng.range(1, 30) {
+                // prompts drawn from few shapes so prefixes collide often
+                let base = rng.below(3) as i32 * 100;
+                let len = rng.range(1, 19);
+                let prompt: Vec<i32> = (0..len as i32).map(|i| base + i).collect();
+                if let Some(t) = admit(&prompt, bt, &mut cache, &mut alloc) {
+                    tables.push(t);
+                }
+            }
+            // release every request, then drain the trie: the pool must
+            // come back fully free with zero net refcounts
+            for t in tables.iter_mut() {
+                release_table(t, &mut alloc).unwrap();
+            }
+            cache.clear(&mut alloc).unwrap();
+            assert!(cache.is_empty());
+            assert_eq!(alloc.free_count(), alloc.capacity() - 1);
+        });
+    }
+
+    #[test]
+    fn exhaustion_is_graceful_and_eviction_recovers() {
+        let bt = 4;
+        // tiny pool: 1 null + 6 blocks
+        let mut alloc = BlockAllocator::new(7);
+        let mut cache = PrefixCache::new(bt);
+        let p1: Vec<i32> = (1..=8).collect(); // needs 3 blocks
+        let t1 = admit(&p1, bt, &mut cache, &mut alloc).unwrap();
+        assert_eq!(alloc.free_count(), 3);
+        let p2: Vec<i32> = (100..=111).collect(); // needs 4 > 3 free
+        assert!(admit(&p2, bt, &mut cache, &mut alloc).is_none(), "graceful None, no panic");
+        // failed admission must not leak: free count unchanged
+        assert_eq!(alloc.free_count(), 3);
+        // release the first request; its blocks stay cached (trie refs)
+        let mut t1 = t1;
+        release_table(&mut t1, &mut alloc).unwrap();
+        assert_eq!(alloc.free_count(), 3, "trie still holds the blocks");
+        // eviction frees them and the big prompt fits
+        cache.evict(&mut alloc, 4).unwrap();
+        assert!(alloc.free_count() >= 4);
+        assert!(admit(&p2, bt, &mut cache, &mut alloc).is_some());
+    }
+
+    #[test]
+    fn eviction_is_leaf_only_and_lru() {
+        let bt = 2;
+        let mut alloc = BlockAllocator::new(32);
+        let mut cache = PrefixCache::new(bt);
+        let short: Vec<i32> = vec![1, 2, 3, 4]; // 2 chunks
+        let long: Vec<i32> = vec![1, 2, 3, 4, 5, 6]; // extends short
+        let mut ts = admit(&short, bt, &mut cache, &mut alloc).unwrap();
+        let mut tl = admit(&long, bt, &mut cache, &mut alloc).unwrap();
+        release_table(&mut ts, &mut alloc).unwrap();
+        release_table(&mut tl, &mut alloc).unwrap();
+        let free0 = alloc.free_count();
+        // evict one entry at a time: tails and the deepest node go
+        // before the shared interior chunks
+        let shared_interior = tl[0];
+        cache.evict(&mut alloc, free0 + 1).unwrap();
+        assert!(alloc.refcount(shared_interior) > 0, "interior survives leaf eviction");
+        // drain completely: everything is eventually evictable
+        cache.clear(&mut alloc).unwrap();
+        assert_eq!(alloc.free_count(), alloc.capacity() - 1);
+        assert!(cache.is_empty());
+        // the freed node slots are recycled
+        let mut t3 = admit(&short, bt, &mut cache, &mut alloc).unwrap();
+        release_table(&mut t3, &mut alloc).unwrap();
+        cache.clear(&mut alloc).unwrap();
+    }
+
+    #[test]
+    fn greedy_tail_only_recorded_when_asked() {
+        let bt = 4;
+        let mut alloc = BlockAllocator::new(32);
+        let mut cache = PrefixCache::new(bt);
+        let p: Vec<i32> = (1..=6).collect();
+        let hit = cache.lookup(&p);
+        assert!(hit.shared.is_empty());
+        let mut table = vec![0u32; blocks_needed(p.len(), bt)];
+        for s in table.iter_mut() {
+            *s = alloc.alloc().unwrap();
+        }
+        // sampled (non-greedy) admission: no tail entry
+        cache.insert(&p, &table, None, &mut alloc).unwrap();
+        assert!(cache.lookup(&p).full.is_none());
+        // greedy admission records the exact-hit entry
+        cache.insert(&p, &table, Some((3, -0.1)), &mut alloc).unwrap();
+        let full = cache.lookup(&p).full.unwrap();
+        assert_eq!(full.first_tok, 3);
+        assert_eq!(full.tail_block, Some(table[1]));
+        // block-aligned prompt: full hit with no tail block to copy
+        let pa: Vec<i32> = (10..=17).collect(); // 8 tokens, aligned
+        let mut ta = vec![0u32; blocks_needed(pa.len(), bt)];
+        for s in ta.iter_mut() {
+            *s = alloc.alloc().unwrap();
+        }
+        cache.insert(&pa, &ta, Some((5, -0.2)), &mut alloc).unwrap();
+        let fa = cache.lookup(&pa).full.unwrap();
+        assert_eq!(fa.tail_block, None);
+        assert_eq!(fa.first_tok, 5);
+        // hygiene: everything releases
+        release_table(&mut table, &mut alloc).unwrap();
+        release_table(&mut ta, &mut alloc).unwrap();
+        cache.clear(&mut alloc).unwrap();
+        assert_eq!(alloc.free_count(), alloc.capacity() - 1);
+    }
+
+    #[test]
+    fn hit_rate_counts_lookups() {
+        let bt = 4;
+        let mut alloc = BlockAllocator::new(32);
+        let mut cache = PrefixCache::new(bt);
+        let p: Vec<i32> = (1..=8).collect();
+        assert_eq!(cache.hit_rate(), 0.0);
+        let _t = admit(&p, bt, &mut cache, &mut alloc).unwrap(); // 1 lookup, miss
+        cache.lookup(&p); // hit
+        cache.lookup(&[99, 98]); // miss
+        assert!((cache.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

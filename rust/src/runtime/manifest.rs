@@ -17,6 +17,13 @@
 //!   device. No new line grammar — v3 parses like v2; the version
 //!   advertises artifact availability ([`Manifest::prefill_buckets`],
 //!   [`Manifest::kv_install_buckets`]).
+//! * **v4** — block-paged KV cache: the `global` line gains the pool
+//!   geometry (`kvblock` tokens per block, `kvpool` blocks per layer;
+//!   both 0 on older manifests) and each LM gains `<model>.decode_paged`
+//!   (decode over `[L, kvpool, kvblock, H, Dh]` pools + per-request
+//!   block tables), `<model>.kv_install_paged@B` (paged admission
+//!   scatter) and `<model>.kv_block_copy` (copy-on-extend block moves).
+//!   Dense v3 artifacts are still present, so v4 runs either path.
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -28,10 +35,10 @@ use crate::io::DType;
 
 /// Newest manifest version this runtime understands — what the current
 /// AOT writer (`python/compile/aot.py: MANIFEST_VERSION`) emits.
-pub const SUPPORTED_VERSION: u32 = 3;
+pub const SUPPORTED_VERSION: u32 = 4;
 /// All versions this runtime can execute (older versions run through the
-/// fused-tuple / host-surgery fallback paths).
-pub const SUPPORTED_VERSIONS: [u32; 3] = [1, 2, SUPPORTED_VERSION];
+/// fused-tuple / host-surgery / dense-KV fallback paths).
+pub const SUPPORTED_VERSIONS: [u32; 4] = [1, 2, 3, SUPPORTED_VERSION];
 
 /// Global dims shared by all artifacts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,6 +50,22 @@ pub struct Globals {
     pub genb: usize,
     pub trainb: usize,
     pub scoreb: usize,
+    /// Tokens per KV block (manifest v4 paged cache; 0 on older manifests).
+    pub kvblock: usize,
+    /// Pool blocks per layer (manifest v4 paged cache; 0 on older manifests).
+    pub kvpool: usize,
+}
+
+impl Globals {
+    /// Blocks per request table: enough to cover the full context.
+    /// 0 on pre-v4 manifests (no paged geometry).
+    pub fn kv_maxblk(&self) -> usize {
+        if self.kvblock == 0 {
+            0
+        } else {
+            self.sctx / self.kvblock
+        }
+    }
 }
 
 /// Transformer dims of one roster entry.
@@ -202,6 +225,11 @@ impl Manifest {
                             .parse()
                             .context("bad global")
                     };
+                    // kvblock/kvpool appear from v4 on; default 0 so
+                    // v1–v3 global lines keep parsing unchanged
+                    let opt = |k: &str| -> Result<usize> {
+                        m.get(k).map_or(Ok(0), |v| v.parse().context("bad global"))
+                    };
                     globals = Some(Globals {
                         vocab: g("vocab")?,
                         sctx: g("sctx")?,
@@ -210,6 +238,8 @@ impl Manifest {
                         genb: g("genb")?,
                         trainb: g("trainb")?,
                         scoreb: g("scoreb")?,
+                        kvblock: opt("kvblock")?,
+                        kvpool: opt("kvpool")?,
                     });
                 }
                 Some("model") => {
@@ -342,6 +372,23 @@ impl Manifest {
     pub fn kv_install_buckets(&self, model: &str) -> Vec<usize> {
         self.bucket_sizes(model, "kv_install")
     }
+
+    /// `kv_install_paged` scatter batch sizes for `model` (manifest v4),
+    /// ascending. Empty on pre-v4 manifests.
+    pub fn kv_install_paged_buckets(&self, model: &str) -> Vec<usize> {
+        self.bucket_sizes(model, "kv_install_paged")
+    }
+
+    /// True when `model` ships the full paged-KV artifact set (manifest
+    /// v4): paged decode, at least one paged install bucket, and the
+    /// copy-on-extend block mover, plus nonzero pool geometry.
+    pub fn has_paged_kv(&self, model: &str) -> bool {
+        self.globals.kvblock > 0
+            && self.globals.kvpool > 0
+            && self.has_artifact(&format!("{model}.decode_paged"))
+            && self.has_artifact(&format!("{model}.kv_block_copy"))
+            && !self.kv_install_paged_buckets(model).is_empty()
+    }
 }
 
 /// Smallest bucket `>= n` from an ascending bucket list (admission
@@ -428,6 +475,38 @@ out vcache f32 1x4x64x2x16 state
 end
 ";
 
+    const SAMPLE_V4: &str = "\
+version 4
+global vocab 64 sctx 64 sprompt 40 amax 24 genb 4 trainb 32 scoreb 32 kvblock 8 kvpool 41
+model nano d 32 layers 1 heads 2 ff 64 headdim 16 nparams 2 head 0
+artifact nano.decode_paged file nano.decode_paged.hlo.txt
+in kcache f32 1x41x8x2x16 state
+in vcache f32 1x41x8x2x16 state
+in tables s32 4x8 data
+in tok s32 4 data
+out next s32 4 data
+out logp f32 4 data
+out kcache f32 1x41x8x2x16 state
+out vcache f32 1x41x8x2x16 state
+artifact nano.kv_install_paged@2 file nano.kv_install_paged@2.hlo.txt
+in kcache f32 1x41x8x2x16 state
+in vcache f32 1x41x8x2x16 state
+in src_k f32 1x2x64x2x16 state
+in src_v f32 1x2x64x2x16 state
+in dst_tables s32 2x8 data
+out kcache f32 1x41x8x2x16 state
+out vcache f32 1x41x8x2x16 state
+artifact nano.kv_block_copy file nano.kv_block_copy.hlo.txt
+in kcache f32 1x41x8x2x16 state
+in vcache f32 1x41x8x2x16 state
+in src s32 4 data
+in dst s32 4 data
+in count s32 scalar data
+out kcache f32 1x41x8x2x16 state
+out vcache f32 1x41x8x2x16 state
+end
+";
+
     #[test]
     fn parses_sample() {
         let m = Manifest::parse(SAMPLE).unwrap();
@@ -500,6 +579,32 @@ end
     }
 
     #[test]
+    fn v4_paged_geometry_and_artifacts() {
+        let m = Manifest::parse(SAMPLE_V4).unwrap();
+        assert_eq!(m.version, 4);
+        assert_eq!(m.globals.kvblock, 8);
+        assert_eq!(m.globals.kvpool, 41);
+        assert_eq!(m.globals.kv_maxblk(), 8);
+        assert_eq!(m.kv_install_paged_buckets("nano"), vec![2]);
+        assert!(m.has_paged_kv("nano"));
+        let dp = m.artifact("nano.decode_paged").unwrap();
+        assert_eq!(dp.input_index("tables").unwrap(), 2);
+        assert_eq!(dp.ins[2].dims, vec![4, 8]);
+        assert_eq!(dp.outs[2].class, ArgClass::State);
+        let inst = m.artifact("nano.kv_install_paged@2").unwrap();
+        assert_eq!(inst.input_index("dst_tables").unwrap(), 4);
+        // pre-v4 manifests: zero geometry, no paged path, and the
+        // paged bucket scan does not collide with the dense one
+        let v3 = Manifest::parse(SAMPLE_V3).unwrap();
+        assert_eq!(v3.globals.kvblock, 0);
+        assert_eq!(v3.globals.kvpool, 0);
+        assert_eq!(v3.globals.kv_maxblk(), 0);
+        assert!(v3.kv_install_paged_buckets("nano").is_empty());
+        assert!(!v3.has_paged_kv("nano"));
+        assert_eq!(m.kv_install_buckets("nano"), Vec::<usize>::new());
+    }
+
+    #[test]
     fn bucket_selection_picks_smallest_fit() {
         let buckets = [1, 2, 4, 8, 16];
         assert_eq!(bucket_for(&buckets, 1), Some(1));
@@ -523,6 +628,7 @@ end
         assert!(Manifest::parse(SAMPLE).is_ok());
         assert!(Manifest::parse(SAMPLE_V2).is_ok());
         assert!(Manifest::parse(SAMPLE_V3).is_ok());
+        assert!(Manifest::parse(SAMPLE_V4).is_ok());
     }
 
     #[test]

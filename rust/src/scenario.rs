@@ -70,6 +70,13 @@ pub struct TraceEvent {
     pub deadline: Option<Duration>,
     /// Client-side cancel this long after the request is accepted.
     pub cancel_after: Option<Duration>,
+    /// Prompt-content salt for [`synthetic_prompt`]. Events sharing a
+    /// salt get positionally identical token content, so a longer
+    /// prompt extends a shorter one exactly — how a trace expresses
+    /// multi-turn sessions over a shared system prompt (the prefix-
+    /// cache workload). `None` salts by event index: all prompts
+    /// distinct.
+    pub salt: Option<usize>,
 }
 
 impl TraceEvent {
@@ -81,6 +88,7 @@ impl TraceEvent {
             max_new: None,
             deadline: None,
             cancel_after: None,
+            salt: None,
         }
     }
 }
@@ -115,6 +123,9 @@ impl Trace {
             }
             if let Some(c) = e.cancel_after {
                 s.push_str(&format!(" cancel_us={}", c.as_micros()));
+            }
+            if let Some(sa) = e.salt {
+                s.push_str(&format!(" salt={sa}"));
             }
             s.push('\n');
         }
@@ -167,6 +178,7 @@ impl Trace {
                     "max" => ev.max_new = Some(parse_u64()? as usize),
                     "dl_us" => ev.deadline = Some(Duration::from_micros(parse_u64()?)),
                     "cancel_us" => ev.cancel_after = Some(Duration::from_micros(parse_u64()?)),
+                    "salt" => ev.salt = Some(parse_u64()? as usize),
                     other => anyhow::bail!("trace line {}: unknown key {other:?}", ln + 2),
                 }
             }
@@ -328,6 +340,42 @@ pub fn gen_cancel_storm(seed: u64, n: usize, shape: GenShape) -> Trace {
     Trace { name: "cancel-storm".into(), events }
 }
 
+/// Multi-turn conversations over a shared seeded system prompt: every
+/// request opens with the same system-prompt content (one shared
+/// [`TraceEvent::salt`]), and each conversation's turns extend the
+/// context a few tokens at a time — so consecutive turns re-send an
+/// ever-longer prefix the server has already seen. The prefix-cache
+/// workload: with cross-request sharing on, the hot system prompt is
+/// prefilled once per worker and every later turn's shared blocks skip
+/// prefill work.
+pub fn gen_sessions(seed: u64, n: usize, shape: GenShape) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x5E5510);
+    // the shared system prompt: half the window, identical content for
+    // every request in the trace (the salt *is* its identity)
+    let sys_len = (shape.sprompt / 2).max(1);
+    let salt = 13 + (seed % 7) as usize;
+    let mut events = Vec::with_capacity(n);
+    let mut t_us = 0u64;
+    let mut i = 0;
+    while i < n {
+        // one conversation: 2–4 turns, each extending the shared context
+        let turns = rng.range(2, 4);
+        let mut plen = sys_len;
+        for _ in 0..turns {
+            if i >= n {
+                break;
+            }
+            t_us += exp_us(&mut rng, 2_000.0);
+            let mut ev = TraceEvent::new(Duration::from_micros(t_us), plen.min(shape.sprompt));
+            ev.salt = Some(salt);
+            events.push(ev);
+            plen += rng.range(1, (shape.sprompt / 8).max(2));
+            i += 1;
+        }
+    }
+    Trace { name: "sessions".into(), events }
+}
+
 /// Replay knobs.
 #[derive(Debug, Clone)]
 pub struct ReplayOpts {
@@ -487,7 +535,8 @@ pub fn replay(server: &Server, trace: &Trace, opts: &ReplayOpts) -> Result<Repla
             let left = ev.at - now.duration_since(t0);
             std::thread::sleep(left.min(Duration::from_micros(200)));
         }
-        let mut req = Request::new(synthetic_prompt(ev.prompt_len, i)).truncate_prompt();
+        let mut req =
+            Request::new(synthetic_prompt(ev.prompt_len, ev.salt.unwrap_or(i))).truncate_prompt();
         if let Some(q) = ev.quality {
             req = req.quality(q);
         }
@@ -729,6 +778,13 @@ pub fn builtin_suite() -> Vec<Scenario> {
             queue_cap: None,
             retry_busy: true,
         },
+        Scenario {
+            name: "sessions",
+            about: "multi-turn conversations over a shared system prompt",
+            make: gen_sessions,
+            queue_cap: None,
+            retry_busy: true,
+        },
     ]
 }
 
@@ -804,6 +860,9 @@ impl KickTiresReport {
             out.push((k("shed"), s.stats.routing.shed_total() as f64));
             out.push((k("cost_advantage"), s.stats.routing.cost_advantage));
             out.push((k("admit_bytes_per_req"), s.stats.admit_bytes_per_req()));
+            out.push((k("prefix_hit_rate"), s.stats.prefix_hit_rate));
+            out.push((k("prefill_tokens"), s.stats.prefill_tokens as f64));
+            out.push((k("kv_blocks_utilization"), s.stats.kv_blocks_utilization));
             out.push((k("violations"), s.violations.len() as f64));
         }
         out
@@ -925,6 +984,7 @@ mod tests {
             ("mixed-quality", gen_mixed_quality),
             ("overload-shed", gen_overload),
             ("cancel-storm", gen_cancel_storm),
+            ("sessions", gen_sessions),
         ] {
             let a = gen(7, 50, SHAPE);
             let b = gen(7, 50, SHAPE);
@@ -962,6 +1022,29 @@ mod tests {
     }
 
     #[test]
+    fn sessions_share_a_system_prompt_prefix() {
+        let t = gen_sessions(9, 40, SHAPE);
+        // one shared salt across the whole trace: every prompt extends
+        // the same system-prompt content
+        let salts: std::collections::BTreeSet<_> =
+            t.events.iter().map(|e| e.salt.expect("sessions events carry a salt")).collect();
+        assert_eq!(salts.len(), 1);
+        let sys_len = SHAPE.sprompt / 2;
+        assert!(t.events.iter().all(|e| e.prompt_len >= sys_len));
+        // the fabricated prompts really are prefix-nested: a shorter
+        // prompt is exactly the head of any longer one
+        let salt = *salts.iter().next().unwrap();
+        let long = synthetic_prompt(SHAPE.sprompt, salt);
+        for e in &t.events {
+            assert_eq!(synthetic_prompt(e.prompt_len, salt), long[..e.prompt_len]);
+        }
+        // and some requests re-send an identical full prompt (full hits)
+        let lens: Vec<usize> = t.events.iter().map(|e| e.prompt_len).collect();
+        let distinct: std::collections::BTreeSet<_> = lens.iter().collect();
+        assert!(distinct.len() < lens.len(), "expected repeated turn lengths");
+    }
+
+    #[test]
     fn trace_text_roundtrip() {
         let trace = gen_cancel_storm(11, 12, SHAPE);
         let dir = std::env::temp_dir().join(format!("hybrid_trace_{}", std::process::id()));
@@ -969,6 +1052,11 @@ mod tests {
         trace.save(&path).unwrap();
         let loaded = Trace::load(&path).unwrap();
         assert_eq!(trace, loaded);
+        // salts survive the text format too
+        let sess = gen_sessions(11, 12, SHAPE);
+        let sess_path = dir.join("sessions.trace");
+        sess.save(&sess_path).unwrap();
+        assert_eq!(Trace::load(&sess_path).unwrap(), sess);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -1044,6 +1132,10 @@ mod tests {
             admissions: 0,
             admitted: 0,
             admit_latency: Default::default(),
+            prefix_hit_rate: 0.0,
+            prefix_shared_tokens: 0,
+            prefill_tokens: 0,
+            kv_blocks_utilization: 0.0,
         }
     }
 
@@ -1151,6 +1243,7 @@ mod tests {
             "mixed-quality",
             "overload-shed",
             "cancel-storm",
+            "sessions",
         ] {
             assert!(names.contains(want), "missing scenario {want}");
         }

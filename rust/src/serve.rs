@@ -55,8 +55,9 @@ use anyhow::{Context, Result};
 
 use crate::batching::{BatchMode, KvCache, Slot, SlotTable};
 use crate::io::Tensor;
-use crate::lm::LmEngine;
+use crate::lm::{LmEngine, PagedArtifacts};
 use crate::metrics::{LatencyRecorder, LatencySummary, RoutingCounters, RoutingSnapshot};
+use crate::paged::{blocks_needed, release_table, BlockAllocator, PagedKvCache, PrefixCache, PrefixHit};
 use crate::policy::{LadderFamily, TierPolicy};
 use crate::router::RouterEngine;
 use crate::runtime::{Exec, Globals, Manifest, Runtime, ELEM_BYTES};
@@ -197,6 +198,18 @@ pub struct ServeConfig {
     /// device-vs-host-admission equivalence tests and benches. No effect
     /// on v1/v2 artifacts (host surgery is their only path).
     pub force_host_admission: bool,
+    /// Keep the dense `[L, genb, sctx, H, Dh]` KV slab even when the
+    /// artifacts (manifest v4) carry the block-paged pool path — the A/B
+    /// knob behind the dense-vs-paged token-equivalence test and
+    /// benches, mirroring [`ServeConfig::force_host_admission`]. No
+    /// effect on pre-v4 artifacts (dense is their only path).
+    pub force_dense_kv: bool,
+    /// Run paged but without cross-request shared-prefix reuse: every
+    /// admission allocates fresh blocks and installs its full prompt.
+    /// The A/B baseline for the prefix-cache bench gate (prefill work
+    /// on a prefix-heavy trace must drop when the cache is on). No
+    /// effect on the dense path, which never shares.
+    pub disable_prefix_cache: bool,
 }
 
 impl ServeConfig {
@@ -224,6 +237,8 @@ impl ServeConfig {
             queue_cap: DEFAULT_QUEUE_CAP,
             quality_ladders: None,
             force_host_admission: false,
+            force_dense_kv: false,
+            disable_prefix_cache: false,
         }
     }
 }
@@ -625,6 +640,22 @@ pub struct ServerMetrics {
     pub admitted: AtomicU64,
     /// Wall-clock latency of each admission wave (prefill + install).
     pub admit_latency: LatencyRecorder,
+    /// Shared-prefix cache lookups (paged admissions with the cache on).
+    pub prefix_lookups: AtomicU64,
+    /// Lookups that reused at least one cached block.
+    pub prefix_hits: AtomicU64,
+    /// Prompt tokens served from shared blocks (or a full-hit replay)
+    /// instead of fresh prefill + install.
+    pub prefix_shared_tokens: AtomicU64,
+    /// Prompt tokens the workers actually prefilled and installed —
+    /// `Σ (plen − shared)` per admitted request. The prefix-reuse bench
+    /// gate compares this across cache-on/off runs of the same trace.
+    pub prefill_tokens: AtomicU64,
+    /// Block-pool utilization gauge, sampled once per paged admission
+    /// as `(sample count, Σ utilization‰)` so the snapshot can report a
+    /// mean without a float atomic.
+    pub kv_util_samples: AtomicU64,
+    pub kv_util_permille: AtomicU64,
 }
 
 /// Point-in-time per-tier report.
@@ -662,6 +693,16 @@ pub struct ServerStats {
     pub admitted: u64,
     /// Admission-wave latency (prefill + install).
     pub admit_latency: LatencySummary,
+    /// Fraction of prefix-cache lookups that reused at least one cached
+    /// block (0 on the dense path or with the cache disabled).
+    pub prefix_hit_rate: f64,
+    /// Prompt tokens served from shared prefix blocks.
+    pub prefix_shared_tokens: u64,
+    /// Prompt tokens actually prefilled + installed (`Σ plen − shared`).
+    pub prefill_tokens: u64,
+    /// Mean KV block-pool utilization sampled at each paged admission
+    /// (0 on the dense path).
+    pub kv_blocks_utilization: f64,
 }
 
 impl ServerStats {
@@ -759,6 +800,26 @@ fn snapshot_stats(metrics: &ServerMetrics, tier_names: &[String]) -> ServerStats
         admissions: metrics.admissions.load(Ordering::Relaxed),
         admitted: metrics.admitted.load(Ordering::Relaxed),
         admit_latency: metrics.admit_latency.snapshot(),
+        prefix_hit_rate: {
+            let lookups = metrics.prefix_lookups.load(Ordering::Relaxed);
+            if lookups == 0 {
+                0.0
+            } else {
+                metrics.prefix_hits.load(Ordering::Relaxed) as f64 / lookups as f64
+            }
+        },
+        prefix_shared_tokens: metrics.prefix_shared_tokens.load(Ordering::Relaxed),
+        prefill_tokens: metrics.prefill_tokens.load(Ordering::Relaxed),
+        kv_blocks_utilization: {
+            let samples = metrics.kv_util_samples.load(Ordering::Relaxed);
+            if samples == 0 {
+                0.0
+            } else {
+                metrics.kv_util_permille.load(Ordering::Relaxed) as f64
+                    / samples as f64
+                    / 1000.0
+            }
+        },
     }
 }
 
@@ -811,6 +872,12 @@ impl Server {
             admissions: AtomicU64::new(0),
             admitted: AtomicU64::new(0),
             admit_latency: LatencyRecorder::new(),
+            prefix_lookups: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            prefix_shared_tokens: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
+            kv_util_samples: AtomicU64::new(0),
+            kv_util_permille: AtomicU64::new(0),
         });
         let (ingress, router_rx) = mpsc::channel::<RouterMsg>();
         // readiness barrier: threads ack after compiling their executables
@@ -1203,6 +1270,38 @@ struct WorkerCtx {
     temp_t: Tensor,
     /// `HYBRID_SERVE_TRACE` read once at startup.
     trace: bool,
+    /// Block-paged KV state (manifest v4, unless
+    /// [`ServeConfig::force_dense_kv`]); `None` keeps the dense slab.
+    paged: Option<PagedCtx>,
+}
+
+/// Per-worker block-paged KV state (DESIGN.md §10): the device block
+/// pools, the refcounted allocator, the shared-prefix trie, and the
+/// per-slot block tables. Taken out of [`WorkerCtx`] for the duration
+/// of paged admission/decode calls (split-borrow hygiene) and always
+/// put back.
+struct PagedCtx {
+    arts: PagedArtifacts,
+    pool: PagedKvCache,
+    alloc: BlockAllocator,
+    prefix: PrefixCache,
+    /// Per-slot block tables `[genb][maxblk]`; entry 0 = unallocated
+    /// (the null block). Free lanes are all-zero, so their decode
+    /// writes land in block 0 and their garbage keys sit behind the
+    /// causal mask.
+    tables: Vec<Vec<u32>>,
+    /// Decode-input scratch: the `[genb, maxblk]` i32 table tensor
+    /// refilled in place and uploaded each step — O(B) bytes, the paged
+    /// path's only addition to the per-step host traffic.
+    tables_t: Tensor,
+    /// Cross-request prefix reuse enabled
+    /// (![`ServeConfig::disable_prefix_cache`]).
+    use_prefix: bool,
+    /// Sampling is greedy (`temp == 0`): exact full-prompt hits may
+    /// replay the cached first token and skip prefill entirely. At
+    /// `temp > 0` the first token is seed-dependent, so full hits
+    /// degrade to shared-block reuse plus a real prefill.
+    greedy: bool,
 }
 
 fn worker_thread(
@@ -1243,6 +1342,36 @@ fn worker_thread(
     }
     let prefill_resident = engine.params.resident_map();
     let decode_resident = prefill_resident.clone();
+    // block-paged KV path (manifest v4): device block pools + prefix
+    // trie instead of the dense slab. `force_dense_kv` is the A/B knob;
+    // `force_host_admission` implies dense too — host slot surgery has
+    // no meaning against a device-resident block pool.
+    let paged = if cfg.force_dense_kv || cfg.force_host_admission {
+        None
+    } else if let Some(arts) = engine.paged_artifacts()? {
+        let pool = PagedKvCache::zeros_on_device(
+            &rt,
+            meta.layers,
+            arts.nblk,
+            arts.block,
+            meta.heads,
+            meta.headdim,
+        )?;
+        let alloc = BlockAllocator::new(arts.nblk);
+        let maxblk = arts.maxblk;
+        Some(PagedCtx {
+            pool,
+            alloc,
+            prefix: PrefixCache::new(arts.block),
+            tables: vec![vec![0u32; maxblk]; g.genb],
+            tables_t: Tensor::i32(vec![g.genb, maxblk], vec![0; g.genb * maxblk]),
+            use_prefix: !cfg.disable_prefix_cache,
+            greedy: cfg.temp == 0.0,
+            arts,
+        })
+    } else {
+        None
+    };
     let mut ctx = WorkerCtx {
         table: SlotTable::new(g.genb),
         kv: KvCache::zeros(meta.layers, g.genb, g.sctx, meta.heads, meta.headdim),
@@ -1260,12 +1389,14 @@ fn worker_thread(
         seeds_t: Tensor::u32(vec![g.genb], vec![0; g.genb]),
         temp_t: Tensor::f32(vec![], vec![cfg.temp]),
         trace: std::env::var_os("HYBRID_SERVE_TRACE").is_some(),
+        paged,
         engine,
     };
-    if ctx.admit_buckets.iter().any(|b| b.install) {
+    if ctx.paged.is_none() && ctx.admit_buckets.iter().any(|b| b.install) {
         // device-side admission never pulls the cache to the host: put
         // the zeroed cache on device once, at startup, so the first
-        // admission's byte count is already O(B·sprompt)
+        // admission's byte count is already O(B·sprompt). The paged
+        // path never touches the dense slab, so it skips this upload.
         ctx.kv.to_device(&rt)?;
     }
     let _ = ready.send(());
@@ -1301,7 +1432,8 @@ fn worker_thread(
         // the freed slot pads the next decode wave and is immediately
         // reusable by admission; other slots' KV state is untouched
         sweep_backlog(&mut backlog, &mut ctx, &metrics);
-        for (_, slot) in ctx.table.take_matching(|w| w.req.cancelled()) {
+        for (idx, slot) in ctx.table.take_matching(|w| w.req.cancelled()) {
+            release_slot_blocks(&mut ctx, idx)?;
             cancel_work(&mut ctx, slot.payload, &metrics);
         }
 
@@ -1314,9 +1446,17 @@ fn worker_thread(
             let n_new = backlog
                 .len()
                 .min(ctx.table.capacity() - ctx.table.occupied());
-            let free: Vec<usize> = ctx.table.free_indices().take(n_new).collect();
+            let free: Vec<usize> = ctx.table.free_slots(n_new);
             let admitted: Vec<Work> = backlog.drain(..n_new).collect();
-            admit(&mut ctx, &free, admitted, &metrics)?;
+            // paged admission can come up short on pool blocks even
+            // after LRU eviction; the unadmitted tail goes back to the
+            // front of the backlog in order. Sustained exhaustion keeps
+            // `in_flight` pinned, so callers see `SubmitError::Busy` at
+            // the admission window instead of a worker panic.
+            let leftover = admit(&mut ctx, &free, admitted, &metrics)?;
+            for (i, w) in leftover.into_iter().enumerate() {
+                backlog.insert(i, w);
+            }
         }
 
         // 3. one decode iteration over the occupied slots
@@ -1349,7 +1489,25 @@ fn worker_thread(
 /// `to_device`); the steady-state decode loop stays zero-copy either
 /// way. All admission traffic is metered into `admit_*_bytes`, separate
 /// from the decode counters.
+///
+/// Returns the requests that could **not** be admitted this wave (only
+/// the paged path can come up short — on pool exhaustion after LRU
+/// eviction — and the caller requeues them at the backlog front).
 fn admit(
+    ctx: &mut WorkerCtx,
+    slots: &[usize],
+    work: Vec<Work>,
+    metrics: &Arc<ServerMetrics>,
+) -> Result<Vec<Work>> {
+    if ctx.paged.is_some() {
+        admit_paged(ctx, slots, work, metrics)
+    } else {
+        admit_dense(ctx, slots, work, metrics)?;
+        Ok(Vec::new())
+    }
+}
+
+fn admit_dense(
     ctx: &mut WorkerCtx,
     slots: &[usize],
     work: Vec<Work>,
@@ -1491,8 +1649,302 @@ fn admit(
         .fetch_add(moved.d2h_bytes, Ordering::Relaxed);
     metrics.admissions.fetch_add(1, Ordering::Relaxed);
     metrics.admitted.fetch_add(n_req as u64, Ordering::Relaxed);
+    metrics.prefill_tokens.fetch_add(
+        lens.iter().take(n_req).map(|&l| l as u64).sum::<u64>(),
+        Ordering::Relaxed,
+    );
     metrics.admit_latency.record(t0.elapsed());
     Ok(())
+}
+
+/// Paged admission (manifest v4, DESIGN.md §10). Per request: consult
+/// the shared-prefix trie, adopt (incref) cached blocks for the matched
+/// full prompt chunks, and allocate fresh blocks for the rest — LRU-
+/// evicting cold trie entries under pressure, and requeueing the
+/// request (graceful, never a panic) when the pool still cannot hold
+/// it. Exact full-prompt hits under greedy sampling skip prefill
+/// entirely: the cached tail block is copied into a private block
+/// (`kv_block_copy`, copy-on-extend) and the cached first token is
+/// replayed. Everyone else goes through the usual bucketed dense
+/// prefill, but `kv_install_paged@B` scatters **only the non-shared
+/// blocks** into the pool (`dst_tables` entry 0 = skip) — a hot system
+/// prompt is prefill-installed once, fleet-wide per worker. Admission
+/// traffic stays O(B·sprompt): prompt upload + the O(B) table/sample
+/// lanes, never a pool crossing.
+fn admit_paged(
+    ctx: &mut WorkerCtx,
+    slots: &[usize],
+    work: Vec<Work>,
+    metrics: &Arc<ServerMetrics>,
+) -> Result<Vec<Work>> {
+    let t0 = Instant::now();
+    let rt = ctx.engine.runtime().clone();
+    let before = rt.transfers();
+    let g = rt.manifest.globals;
+    let n = ctx.engine.params.len();
+    // take the paged state out for the call (split borrows of ctx);
+    // every exit below puts it back
+    let mut p = ctx.paged.take().expect("admit_paged without paged state");
+    let block = p.arts.block;
+    let maxblk = p.arts.maxblk;
+
+    // phase 1: prefix lookup + block-table construction, per request
+    struct Admit1 {
+        w: Work,
+        slot: usize,
+        plen: usize,
+        /// Full prompt chunks adopted from the trie (install skips them).
+        shared_blocks: usize,
+        /// Full-hit replay: (first token, logprob) — skips prefill.
+        fast: Option<(i32, f32)>,
+    }
+    let mut pend: Vec<Admit1> = Vec::with_capacity(work.len());
+    let mut copies: Vec<(u32, u32)> = Vec::new(); // (src, dst) tail copy pairs
+    let mut leftover: Vec<Work> = Vec::new();
+    let mut work_iter = work.into_iter();
+    let mut slot_iter = slots.iter().copied();
+    while let Some(w) = work_iter.next() {
+        let Some(slot_idx) = slot_iter.next() else {
+            leftover.push(w);
+            leftover.extend(&mut work_iter);
+            break;
+        };
+        let plen = w.req.prompt.len();
+        anyhow::ensure!(
+            plen <= g.sprompt,
+            "admitted prompt of {plen} tokens exceeds the {}-token window",
+            g.sprompt
+        );
+        let hit = if p.use_prefix {
+            p.prefix.lookup(&w.req.prompt)
+        } else {
+            PrefixHit { shared: vec![], full: None }
+        };
+        // the cached first token is only replayable under greedy
+        // sampling; otherwise a full hit degrades to shared blocks
+        let full_hit = if p.greedy { hit.full } else { None };
+        let need = blocks_needed(plen, block).min(maxblk);
+        let shared_n = hit.shared.len().min(need.saturating_sub(1));
+        let fresh_needed = need - shared_n;
+        if p.alloc.free_count() < fresh_needed && p.use_prefix {
+            p.prefix.evict(&mut p.alloc, fresh_needed)?;
+        }
+        if p.alloc.free_count() < fresh_needed {
+            // pool exhausted even after eviction: requeue this request
+            // and the rest of the wave in order (no starvation — they
+            // go back to the backlog front and retry first)
+            leftover.push(w);
+            leftover.extend(&mut work_iter);
+            break;
+        }
+        let mut table = vec![0u32; maxblk];
+        for (j, &b) in hit.shared.iter().take(shared_n).enumerate() {
+            p.alloc.incref(b)?;
+            table[j] = b;
+        }
+        for slot in table.iter_mut().take(need).skip(shared_n) {
+            *slot = p
+                .alloc
+                .alloc()
+                .context("kv pool exhausted despite the reservation check")?;
+        }
+        let fast = match full_hit {
+            Some(f) => {
+                if let Some(src) = f.tail_block {
+                    // copy-on-extend: the cached tail block becomes this
+                    // request's private first-write block
+                    copies.push((src, table[plen / block]));
+                }
+                Some((f.first_tok, f.logp))
+            }
+            None => None,
+        };
+        let shared_tokens = if fast.is_some() { plen } else { shared_n * block };
+        if p.use_prefix {
+            metrics.prefix_lookups.fetch_add(1, Ordering::Relaxed);
+            if shared_tokens > 0 {
+                metrics.prefix_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            metrics
+                .prefix_shared_tokens
+                .fetch_add(shared_tokens as u64, Ordering::Relaxed);
+        }
+        metrics
+            .prefill_tokens
+            .fetch_add((plen - shared_tokens) as u64, Ordering::Relaxed);
+        p.tables[slot_idx] = table;
+        pend.push(Admit1 { w, slot: slot_idx, plen, shared_blocks: shared_n, fast });
+    }
+    if pend.is_empty() {
+        ctx.paged = Some(p);
+        return Ok(leftover);
+    }
+
+    // phase 2: bucketed prefill for everyone without a full-hit replay,
+    // installing only the non-shared blocks into the pool
+    let mut firsts: Vec<(i32, f32)> = pend.iter().map(|a| a.fast.unwrap_or((0, 0.0))).collect();
+    let group: Vec<usize> = (0..pend.len()).filter(|&i| pend[i].fast.is_none()).collect();
+    if !group.is_empty() {
+        let n_group = group.len();
+        let bucket = ctx.admit_buckets.iter().find(|b| b.size >= n_group).copied();
+        let (bsz, prefill) = match bucket {
+            Some(b) => {
+                let prefill = if b.size == g.genb {
+                    ctx.prefill.clone()
+                } else {
+                    rt.exec(&format!("{}.prefill@{}", ctx.engine.name, b.size))?
+                };
+                (b.size, prefill)
+            }
+            None => (g.genb, ctx.prefill.clone()),
+        };
+        let (ib, install) = p
+            .arts
+            .install_for(bsz)
+            .with_context(|| format!("no kv_install_paged bucket covers {bsz}"))?;
+        anyhow::ensure!(
+            ib == bsz,
+            "paged install bucket {ib} does not match prefill bucket {bsz}"
+        );
+
+        let mut ptoks = vec![tok::PAD; bsz * g.sprompt];
+        let mut lens = vec![1i32; bsz];
+        let mut seedv = vec![0u32; bsz];
+        let mut dst = vec![0i32; bsz * maxblk];
+        for (bi, &pi) in group.iter().enumerate() {
+            let a = &pend[pi];
+            let prompt = &a.w.req.prompt;
+            ptoks[bi * g.sprompt..bi * g.sprompt + prompt.len()].copy_from_slice(prompt);
+            lens[bi] = prompt.len() as i32;
+            seedv[bi] = a.w.req.id as u32;
+            let table = &p.tables[a.slot];
+            // dst_tables entry 0 = skip: shared chunks keep their cached
+            // contents; entries ≥ `need` were never allocated
+            for j in a.shared_blocks..blocks_needed(a.plen, block).min(maxblk) {
+                dst[bi * maxblk + j] = table[j] as i32;
+            }
+        }
+        let ptoks = Tensor::i32(vec![bsz, g.sprompt], ptoks);
+        let lens_t = Tensor::i32(vec![bsz], lens);
+        let seeds_t = Tensor::u32(vec![bsz], seedv);
+        let host: Vec<(usize, &Tensor)> = vec![
+            (n, &ptoks),
+            (n + 1, &lens_t),
+            (n + 2, &seeds_t),
+            (n + 3, &ctx.temp_t),
+        ];
+        let mut outs = prefill.run_resident(&ctx.prefill_resident, &host)?;
+        let vc = outs.pop().context("paged prefill: vcache")?;
+        let kc = outs.pop().context("paged prefill: kcache")?;
+        let logp = outs.pop().context("paged prefill: logp")?.into_tensor()?;
+        let first = outs.pop().context("paged prefill: next")?.into_tensor()?;
+        let (Some(kb), Some(vb)) = (kc.device().cloned(), vc.device().cloned()) else {
+            anyhow::bail!(
+                "{}: paged admission needs device-resident prefill outputs",
+                ctx.engine.name
+            );
+        };
+        let dst_t = Tensor::i32(vec![bsz, maxblk], dst);
+        let mut resident: HashMap<usize, Arc<xla::PjRtBuffer>> = HashMap::with_capacity(4);
+        p.pool.bind(0, 1, &mut resident);
+        resident.insert(2, kb);
+        resident.insert(3, vb);
+        let ihost: Vec<(usize, &Tensor)> = vec![(4, &dst_t)];
+        let mut iouts = install.run_resident(&resident, &ihost)?;
+        let pv = iouts.pop().context("paged install: vcache")?;
+        let pk = iouts.pop().context("paged install: kcache")?;
+        p.pool.update(pk, pv)?;
+
+        let first = first.as_i32()?;
+        let logp = logp.as_f32()?;
+        for (bi, &pi) in group.iter().enumerate() {
+            firsts[pi] = (first[bi], logp[bi]);
+        }
+        // record the freshly installed prompts so later requests share
+        // them; the trie only ever adopts blocks fully covered by the
+        // prompt, plus — under greedy sampling — the tail entry that
+        // powers the full-hit replay
+        if p.use_prefix {
+            for &pi in &group {
+                let a = &pend[pi];
+                let table = p.tables[a.slot].clone();
+                let tail = p.greedy.then_some(firsts[pi]);
+                p.prefix.insert(&a.w.req.prompt, &table, tail, &mut p.alloc)?;
+            }
+        }
+    }
+
+    // phase 3: copy-on-extend tail copies for the full-hit replays —
+    // one batched device-side kv_block_copy for the whole wave
+    if !copies.is_empty() {
+        anyhow::ensure!(copies.len() <= g.genb, "more tail copies than lanes");
+        let mut src = vec![0i32; g.genb];
+        let mut dstv = vec![0i32; g.genb];
+        for (i, &(s, d)) in copies.iter().enumerate() {
+            src[i] = s as i32;
+            dstv[i] = d as i32;
+        }
+        let src_t = Tensor::i32(vec![g.genb], src);
+        let dst_t = Tensor::i32(vec![g.genb], dstv);
+        let count_t = Tensor::i32(vec![], vec![copies.len() as i32]);
+        let mut resident: HashMap<usize, Arc<xla::PjRtBuffer>> = HashMap::with_capacity(2);
+        p.pool.bind(0, 1, &mut resident);
+        let chost: Vec<(usize, &Tensor)> = vec![(2, &src_t), (3, &dst_t), (4, &count_t)];
+        let mut couts = p.arts.block_copy.run_resident(&resident, &chost)?;
+        let cv = couts.pop().context("kv_block_copy: vcache")?;
+        let ck = couts.pop().context("kv_block_copy: kcache")?;
+        p.pool.update(ck, cv)?;
+    }
+
+    // phase 4: stream first tokens and occupy slots
+    let n_admitted = pend.len();
+    for (a, (ft, lp)) in pend.into_iter().zip(firsts) {
+        if ft == tok::EOS {
+            release_table(&mut p.tables[a.slot], &mut p.alloc)?;
+            complete(ctx, a.w, vec![], 0.0, metrics);
+            continue;
+        }
+        if a.w.req.tx.send(Event::Token { token: ft, logprob: lp }).is_err() {
+            release_table(&mut p.tables[a.slot], &mut p.alloc)?;
+            cancel_work(ctx, a.w, metrics);
+            continue;
+        }
+        let slot = Slot {
+            answer: vec![ft],
+            logprob_sum: lp,
+            cur: ft,
+            pos: a.plen as i32,
+            seed: a.w.req.id as u32,
+            payload: a.w,
+        };
+        ctx.table.insert(a.slot, slot)?;
+    }
+
+    let moved = before.delta(rt.transfers());
+    // the §8 residency contract, paged edition: admission moves the
+    // bucketed prompt upload plus O(B) table/sample lanes — never the
+    // block pools
+    debug_assert!(
+        moved.h2d_bytes + moved.d2h_bytes < p.pool.byte_size() / 4,
+        "paged admission moved {} B — a pool is crossing the host boundary (pool pair = {} B)",
+        moved.h2d_bytes + moved.d2h_bytes,
+        p.pool.byte_size()
+    );
+    metrics
+        .admit_h2d_bytes
+        .fetch_add(moved.h2d_bytes, Ordering::Relaxed);
+    metrics
+        .admit_d2h_bytes
+        .fetch_add(moved.d2h_bytes, Ordering::Relaxed);
+    metrics.admissions.fetch_add(1, Ordering::Relaxed);
+    metrics.admitted.fetch_add(n_admitted as u64, Ordering::Relaxed);
+    metrics.kv_util_samples.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .kv_util_permille
+        .fetch_add((p.alloc.utilization() * 1000.0) as u64, Ordering::Relaxed);
+    metrics.admit_latency.record(t0.elapsed());
+    ctx.paged = Some(p);
+    Ok(leftover)
 }
 
 /// One decode iteration for every occupied slot.
@@ -1505,7 +1957,6 @@ fn admit(
 fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) -> Result<()> {
     let rt = ctx.engine.runtime().clone();
     let g = rt.manifest.globals;
-    let n = ctx.engine.params.len();
 
     // refill the per-worker scratch tensors in place — the per-token
     // loop allocates nothing for its inputs
@@ -1516,35 +1967,11 @@ fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) -> Result<()> 
         let max_pos = ctx.table.fill_decode_inputs(cur, pos, seeds);
         ctx.step_t.as_i32_mut()?[0] = max_pos + 1;
     }
-    let mut host: Vec<(usize, &Tensor)> = vec![
-        (n + 2, &ctx.cur_t),
-        (n + 3, &ctx.pos_t),
-        (n + 4, &ctx.step_t),
-        (n + 5, &ctx.seeds_t),
-        (n + 6, &ctx.temp_t),
-    ];
-    ctx.kv.bind(n, n + 1, &mut ctx.decode_resident, &mut host);
-    let before = rt.transfers();
-    let mut outs = ctx.decode.run_resident(&ctx.decode_resident, &host)?;
-    let moved = before.delta(rt.transfers());
-    let vc = outs.pop().context("vcache")?;
-    let kc = outs.pop().context("kcache")?;
-    let logp = outs.pop().context("logp")?.into_tensor()?;
-    let next = outs.pop().context("next")?.into_tensor()?;
-    ctx.kv.update(kc, vc)?;
-    let next = next.as_i32()?;
-    let logp = logp.as_f32()?;
-
-    metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
-    metrics
-        .decode_slot_steps
-        .fetch_add(ctx.table.occupied() as u64, Ordering::Relaxed);
-    metrics
-        .decode_h2d_bytes
-        .fetch_add(moved.h2d_bytes, Ordering::Relaxed);
-    metrics
-        .decode_d2h_bytes
-        .fetch_add(moved.d2h_bytes, Ordering::Relaxed);
+    let (next, logp) = if ctx.paged.is_some() {
+        run_decode_paged(ctx, metrics)?
+    } else {
+        run_decode_dense(ctx, metrics)?
+    };
 
     for idx in 0..ctx.table.capacity() {
         if ctx.table.get(idx).is_none() {
@@ -1578,14 +2005,155 @@ fn decode_step(ctx: &mut WorkerCtx, metrics: &Arc<ServerMetrics>) -> Result<()> 
             // the slot is owned now — move the answer out, no clone on
             // the per-token hot path
             let slot = ctx.table.take(idx).unwrap();
+            release_slot_blocks(ctx, idx)?;
             let mean = slot.logprob_sum / slot.answer.len().max(1) as f32;
             complete(ctx, slot.payload, slot.answer, mean, metrics);
         } else if dead {
             let slot = ctx.table.take(idx).unwrap();
+            release_slot_blocks(ctx, idx)?;
             cancel_work(ctx, slot.payload, metrics);
         }
     }
     Ok(())
+}
+
+/// Drop a retired slot's block-table references back into the pool
+/// (decref; blocks still shared through the prefix trie stay live).
+/// No-op on the dense path.
+fn release_slot_blocks(ctx: &mut WorkerCtx, idx: usize) -> Result<()> {
+    if let Some(p) = ctx.paged.as_mut() {
+        release_table(&mut p.tables[idx], &mut p.alloc)?;
+    }
+    Ok(())
+}
+
+/// Dense decode: bind the `[L, genb, sctx, H, Dh]` slab at `n`/`n+1`
+/// and run `decode`. Returns the sampled `(next, logp)` lanes.
+fn run_decode_dense(
+    ctx: &mut WorkerCtx,
+    metrics: &Arc<ServerMetrics>,
+) -> Result<(Vec<i32>, Vec<f32>)> {
+    let rt = ctx.engine.runtime().clone();
+    let n = ctx.engine.params.len();
+    let mut host: Vec<(usize, &Tensor)> = vec![
+        (n + 2, &ctx.cur_t),
+        (n + 3, &ctx.pos_t),
+        (n + 4, &ctx.step_t),
+        (n + 5, &ctx.seeds_t),
+        (n + 6, &ctx.temp_t),
+    ];
+    ctx.kv.bind(n, n + 1, &mut ctx.decode_resident, &mut host);
+    let before = rt.transfers();
+    let mut outs = ctx.decode.run_resident(&ctx.decode_resident, &host)?;
+    let moved = before.delta(rt.transfers());
+    let vc = outs.pop().context("vcache")?;
+    let kc = outs.pop().context("kcache")?;
+    let logp = outs.pop().context("logp")?.into_tensor()?;
+    let next = outs.pop().context("next")?.into_tensor()?;
+    ctx.kv.update(kc, vc)?;
+    let next = next.as_i32()?.to_vec();
+    let logp = logp.as_f32()?.to_vec();
+
+    metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .decode_slot_steps
+        .fetch_add(ctx.table.occupied() as u64, Ordering::Relaxed);
+    metrics
+        .decode_h2d_bytes
+        .fetch_add(moved.h2d_bytes, Ordering::Relaxed);
+    metrics
+        .decode_d2h_bytes
+        .fetch_add(moved.d2h_bytes, Ordering::Relaxed);
+    Ok((next, logp))
+}
+
+/// Paged decode: grow any live slot about to write into an unallocated
+/// block, upload the `[genb, maxblk]` block tables (O(B) bytes — the
+/// paged path's only addition to per-step host traffic), bind the block
+/// pools at `n`/`n+1`, and run `decode_paged`.
+fn run_decode_paged(
+    ctx: &mut WorkerCtx,
+    metrics: &Arc<ServerMetrics>,
+) -> Result<(Vec<i32>, Vec<f32>)> {
+    let rt = ctx.engine.runtime().clone();
+    let n = ctx.engine.params.len();
+    let mut p = ctx.paged.take().expect("run_decode_paged without paged state");
+    let block = p.arts.block;
+    let maxblk = p.arts.maxblk;
+
+    // growth: this step writes each live slot's K/V at `pos`; make sure
+    // block pos/block is backed before the kernel runs. `sctx/block <=
+    // maxblk` by pool geometry, so a live slot (pos < sctx) always has
+    // a table entry to grow into; the pool is sized so genb slots at
+    // maxblk blocks each fit (DESIGN.md §10), so after trie eviction
+    // the allocation cannot fail.
+    for idx in 0..ctx.table.capacity() {
+        let Some(slot) = ctx.table.get(idx) else { continue };
+        let j = slot.pos as usize / block;
+        if j < maxblk && p.tables[idx][j] == 0 {
+            if p.alloc.free_count() == 0 && p.use_prefix {
+                p.prefix.evict(&mut p.alloc, 1)?;
+            }
+            p.tables[idx][j] = p
+                .alloc
+                .alloc()
+                .context("kv pool exhausted growing a live slot (pool undersized)")?;
+        }
+    }
+    {
+        let tt = p.tables_t.as_i32_mut()?;
+        for (i, table) in p.tables.iter().enumerate() {
+            for (j, &b) in table.iter().enumerate() {
+                tt[i * maxblk + j] = b as i32;
+            }
+        }
+    }
+    let host: Vec<(usize, &Tensor)> = vec![
+        (n + 2, &p.tables_t),
+        (n + 3, &ctx.cur_t),
+        (n + 4, &ctx.pos_t),
+        (n + 5, &ctx.step_t),
+        (n + 6, &ctx.seeds_t),
+        (n + 7, &ctx.temp_t),
+    ];
+    p.pool.bind(n, n + 1, &mut ctx.decode_resident);
+    let before = rt.transfers();
+    let run = p.arts.decode.run_resident(&ctx.decode_resident, &host);
+    let moved = before.delta(rt.transfers());
+    let mut outs = match run {
+        Ok(o) => o,
+        Err(e) => {
+            ctx.paged = Some(p);
+            return Err(e);
+        }
+    };
+    let vc = outs.pop().context("vcache")?;
+    let kc = outs.pop().context("kcache")?;
+    let logp = outs.pop().context("logp")?.into_tensor()?;
+    let next = outs.pop().context("next")?.into_tensor()?;
+    p.pool.update(kc, vc)?;
+    // §8, paged edition: steady-state decode never moves a pool
+    debug_assert!(
+        moved.h2d_bytes + moved.d2h_bytes < p.pool.byte_size() / 4,
+        "paged decode moved {} B — a block pool is crossing the host boundary (pool pair = {} B)",
+        moved.h2d_bytes + moved.d2h_bytes,
+        p.pool.byte_size()
+    );
+    let next = next.as_i32()?.to_vec();
+    let logp = logp.as_f32()?.to_vec();
+
+    metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .decode_slot_steps
+        .fetch_add(ctx.table.occupied() as u64, Ordering::Relaxed);
+    metrics
+        .decode_h2d_bytes
+        .fetch_add(moved.h2d_bytes, Ordering::Relaxed);
+    metrics
+        .decode_d2h_bytes
+        .fetch_add(moved.d2h_bytes, Ordering::Relaxed);
+    ctx.paged = Some(p);
+    Ok((next, logp))
 }
 
 /// Retire cancelled / deadline-expired work still waiting in a worker's

@@ -301,5 +301,9 @@ fn empty_stats() -> hybrid_llm::serve::ServerStats {
         admissions: 0,
         admitted: 0,
         admit_latency: Default::default(),
+        prefix_hit_rate: 0.0,
+        prefix_shared_tokens: 0,
+        prefill_tokens: 0,
+        kv_blocks_utilization: 0.0,
     }
 }
