@@ -233,9 +233,12 @@ fn main() -> anyhow::Result<()> {
     // the serving invariants (exactly-one-terminal, counter balance,
     // bounded queue, O(B) transfer bounds). Per-scenario latency/shed/
     // cancel/cost-advantage metrics join the trajectory file.
-    println!("\n== serving_e2e: scenario sweep (smoke) ==");
+    println!("\n== serving_e2e: scenario sweep (smoke + chaos) ==");
     let mut opts = hybrid_llm::scenario::KickTiresOpts::new(artifacts.clone(), run_dir.clone());
     opts.smoke = true;
+    // fault-injection suite rides along: crash/stall/tier-outage chaos
+    // metrics (failovers, degraded, retries, lost) join the trajectory
+    opts.chaos = true;
     opts.bench_json = Some(json_path.to_path_buf());
     let report = hybrid_llm::scenario::kick_tires(&opts)?;
     print!("{}", report.render());

@@ -5,7 +5,7 @@
 //! repro eval <id>... --run runs/default      # fig1 fig3 ... table5, or `all`
 //! repro table2 --run runs/default [--queries 200]
 //! repro serve-demo --run runs/default [--requests 64] [--threshold 0.5]
-//! repro kick-tires --run runs/default [--smoke]       # scenario sweep + invariant gate
+//! repro kick-tires --run runs/default [--smoke] [--chaos]  # scenario sweep + invariant gate
 //! repro corpus-stats [--scale default]
 //! ```
 
@@ -54,10 +54,12 @@ subcommands:
   serve-demo   --run DIR [--requests N] [--threshold T] [--mode cont|rtc]
                [--tiers m[:replicas[:cost]],...] [--thresholds T1,T2,...] [--select rr|sq]
                [--quality Q] [--queue-cap N] [--deadline-ms MS] [--admit device|host]
-  kick-tires   --run DIR [--smoke] [--small M] [--large M] [--seed N]
+               [--decode-timeout-ms MS] [--retry-budget N]
+  kick-tires   --run DIR [--smoke] [--chaos] [--small M] [--large M] [--seed N]
                [--scenarios a,b,...] [--json PATH] [--drain-timeout-ms MS]
-               run the whole trace-replay scenario suite, gate on serving
-               invariants, and merge metrics into the perf trajectory
+               run the whole trace-replay scenario suite (--chaos adds the
+               fault-injection suite), gate on serving invariants, and
+               merge metrics into the perf trajectory
   corpus-stats [--scale S]                                print corpus stats without a run";
 
 fn scale_of(args: &Args) -> Result<Scale> {
@@ -211,6 +213,10 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let quality: Option<f32> = args.get_parse_opt("quality")?;
     let queue_cap: usize = args.get_parse("queue-cap", hybrid_llm::serve::DEFAULT_QUEUE_CAP)?;
     let deadline_ms: Option<u64> = args.get_parse_opt("deadline-ms")?;
+    // failure handling: stall detection (off by default — a timeout is
+    // workload-dependent) and the per-request requeue budget
+    let decode_timeout = args.get_ms("decode-timeout-ms")?;
+    let retry_budget: u32 = args.get_parse("retry-budget", 2)?;
     let mode = match args.get("mode", "cont") {
         "rtc" => BatchMode::RunToCompletion,
         _ => BatchMode::Continuous,
@@ -305,6 +311,9 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         force_host_admission,
         force_dense_kv,
         disable_prefix_cache,
+        decode_timeout,
+        retry_budget,
+        fault_plan: None,
     };
     println!(
         "[serve] starting fleet [{}], {mode:?}, queue cap {queue_cap}{}",
@@ -313,6 +322,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     );
     let server = hybrid_llm::serve::Server::start(cfg)?;
     let t0 = std::time::Instant::now();
+    let mut submit_rng = hybrid_llm::rng::Rng::new(0x5EB0FF);
     let mut handles = Vec::new();
     for q in &test {
         let mut req = hybrid_llm::serve::Request::new(q.prompt.clone());
@@ -322,18 +332,17 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         if let Some(ms) = deadline_ms {
             req = req.deadline(Duration::from_millis(ms));
         }
-        // bounded admission: on Busy, back off briefly and retry
-        loop {
-            match server.submit(req.clone()) {
-                Ok(h) => {
-                    handles.push(h);
-                    break;
-                }
-                Err(hybrid_llm::serve::SubmitError::Busy) => {
-                    std::thread::sleep(Duration::from_millis(5));
-                }
-                Err(e) => return Err(anyhow::anyhow!(e)).context("submit"),
-            }
+        // bounded admission: shared jittered-backoff Busy retry
+        match hybrid_llm::serve::submit_with_retry(
+            &server,
+            &req,
+            &mut submit_rng,
+            Duration::from_secs(120),
+            || {},
+        ) {
+            Ok(Some(h)) => handles.push(h),
+            Ok(None) => anyhow::bail!("admission window stayed full for 120s"),
+            Err(e) => return Err(anyhow::anyhow!(e)).context("submit"),
         }
     }
     let mut completions = Vec::new();
@@ -363,6 +372,14 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         stats.routing.to_large(),
         stats.routing.cancelled_total(),
         stats.routing.shed_total()
+    );
+    println!(
+        "failovers: {}   degraded: {}   retries: {}   worker deaths: {}   breakers: [{}]",
+        stats.failovers,
+        stats.degraded,
+        stats.retries,
+        stats.worker_deaths,
+        stats.breaker_state.join(", ")
     );
     println!(
         "router latency: mean {:.2} ms   e2e p50 {:.0} ms  p95 {:.0} ms",
@@ -449,6 +466,7 @@ fn cmd_kick_tires(args: &Args) -> Result<()> {
     opts.small = args.get("small", "small").to_string();
     opts.large = args.get("large", "medium").to_string();
     opts.smoke = args.switch("smoke");
+    opts.chaos = args.switch("chaos");
     opts.seed = args.get_parse("seed", opts.seed)?;
     opts.only = args.get_csv::<String>("scenarios").transpose()?;
     opts.bench_json = Some(PathBuf::from(args.get("json", "BENCH_serving.json")));

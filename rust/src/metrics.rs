@@ -85,6 +85,10 @@ struct RoutingCountersInner {
     /// Requests shed at dispatch/admission because their deadline had
     /// already expired, per tier.
     shed: Vec<u64>,
+    /// Requests that went terminal with `Event::Failed` after dispatch —
+    /// worker death with an exhausted retry budget, or a whole-fleet
+    /// outage (every breaker open), per tier.
+    failed: Vec<u64>,
     completed: u64,
     quality_sum: f64,
 }
@@ -100,7 +104,8 @@ impl RoutingCounters {
             inner: Mutex::new(RoutingCountersInner {
                 routed: zeros.clone(),
                 cancelled: zeros.clone(),
-                shed: zeros,
+                shed: zeros.clone(),
+                failed: zeros,
                 completed: 0,
                 quality_sum: 0.0,
             }),
@@ -147,6 +152,18 @@ impl RoutingCounters {
         }
     }
 
+    /// Count one request failed terminally at `tier` (clamped). Like
+    /// `cancelled`/`shed`, a failure after dispatch leaves the request in
+    /// `routed` too; a failure at the routing decision (no live tier)
+    /// is counted only here.
+    pub fn fail(&self, tier: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(last) = g.failed.len().checked_sub(1) {
+            let i = tier.min(last);
+            g.failed[i] += 1;
+        }
+    }
+
     pub fn complete(&self, quality: f64) {
         let mut g = self.inner.lock().unwrap();
         g.completed += 1;
@@ -180,6 +197,7 @@ impl RoutingCounters {
                     routed: g.routed[i],
                     cancelled: g.cancelled[i],
                     shed: g.shed[i],
+                    failed: g.failed[i],
                 })
                 .collect(),
             completed: g.completed,
@@ -203,6 +221,8 @@ pub struct TierRouting {
     pub cancelled: u64,
     /// Deadline-shed before decode (see [`RoutingCounters::shed`]).
     pub shed: u64,
+    /// Terminally failed (see [`RoutingCounters::fail`]).
+    pub failed: u64,
 }
 
 /// Point-in-time routing summary.
@@ -242,6 +262,11 @@ impl RoutingSnapshot {
     /// Total deadline-shed requests across tiers.
     pub fn shed_total(&self) -> u64 {
         self.tiers.iter().map(|t| t.shed).sum()
+    }
+
+    /// Total terminally failed requests across tiers.
+    pub fn failed_total(&self) -> u64 {
+        self.tiers.iter().map(|t| t.failed).sum()
     }
 }
 
@@ -338,14 +363,17 @@ mod tests {
         c.cancel(1); // cancelled after dispatch: stays in routed too
         c.shed(0); // shed at dispatch: never routed
         c.shed(99); // clamps to the last tier
+        c.fail(1); // worker death past the retry budget: stays in routed
         let s = c.snapshot();
         assert_eq!(s.total(), 2);
         assert_eq!(s.tiers[1].cancelled, 1);
         assert_eq!(s.tiers[0].cancelled, 0);
         assert_eq!(s.tiers[0].shed, 1);
         assert_eq!(s.tiers[1].shed, 1);
+        assert_eq!(s.tiers[1].failed, 1);
         assert_eq!(s.cancelled_total(), 1);
         assert_eq!(s.shed_total(), 2);
+        assert_eq!(s.failed_total(), 1);
         // cost advantage is computed over routed traffic only
         assert!((s.cost_advantage - 0.5).abs() < 1e-12);
     }
@@ -356,9 +384,11 @@ mod tests {
         c.route(0); // must not panic
         c.cancel(0);
         c.shed(0);
+        c.fail(0);
         let s = c.snapshot();
         assert_eq!(s.cancelled_total(), 0);
         assert_eq!(s.shed_total(), 0);
+        assert_eq!(s.failed_total(), 0);
         assert_eq!(s.total(), 0);
         assert_eq!(s.cost_advantage, 0.0);
         assert_eq!(s.to_small(), 0);

@@ -18,8 +18,8 @@
 //!   accepted request, stream never silently dropped;
 //! * **stream/completion agreement**: the concatenated `Token` events
 //!   equal `Completion::tokens`;
-//! * **counter balance at drain**: `completed + cancelled + shed`
-//!   equals accepted submits, and `in_flight` returns to zero;
+//! * **counter balance at drain**: `completed + cancelled + shed +
+//!   failed` equals accepted submits, and `in_flight` returns to zero;
 //! * **bounded queue honored**: the sampled in-flight count never
 //!   exceeds [`ServeConfig::queue_cap`];
 //! * **O(B) transfer bounds preserved** (manifest-v3 artifacts):
@@ -46,7 +46,8 @@ use crate::batching::BatchMode;
 use crate::rng::Rng;
 use crate::runtime::Manifest;
 use crate::serve::{
-    self, Event, Request, RequestHandle, ServeConfig, Server, ServerStats, SubmitError,
+    self, submit_with_retry, Event, Fault, FaultKind, FaultPlan, Request, RequestHandle,
+    ServeConfig, Server, ServerStats,
 };
 use crate::stats;
 use crate::tokenizer as tok;
@@ -413,7 +414,8 @@ pub struct ReplayOutcome {
     pub busy_rejected: usize,
     /// Terminal `Done` events observed.
     pub done: usize,
-    /// Terminal `Failed` events observed (deadline sheds).
+    /// Terminal `Failed` events observed (deadline sheds, worker-death
+    /// failures past the retry budget, whole-fleet outages).
     pub failed: usize,
     /// Terminal `Cancelled` events observed.
     pub cancelled: usize,
@@ -523,6 +525,8 @@ fn drain(tracked: &mut [Tracked], out: &mut ReplayOutcome, now: Instant) -> bool
 pub fn replay(server: &Server, trace: &Trace, opts: &ReplayOpts) -> Result<ReplayOutcome> {
     let mut out = ReplayOutcome { name: trace.name.clone(), ..Default::default() };
     let mut tracked: Vec<Tracked> = Vec::with_capacity(trace.events.len());
+    // seeded backoff jitter: replays stay deterministic per seed
+    let mut rng = Rng::new(0x5EB0FF);
     let t0 = Instant::now();
     for (i, ev) in trace.events.iter().enumerate() {
         // wait out the arrival gap, draining streams while we wait
@@ -546,21 +550,17 @@ pub fn replay(server: &Server, trace: &Trace, opts: &ReplayOpts) -> Result<Repla
         if let Some(d) = ev.deadline {
             req = req.deadline(d);
         }
-        let retry_until = Instant::now() + opts.busy_retry_for;
-        let handle = loop {
-            match server.submit(req.clone()) {
-                Ok(h) => break Some(h),
-                Err(SubmitError::Busy) => {
-                    if !opts.retry_busy || Instant::now() >= retry_until {
-                        out.busy_rejected += 1;
-                        break None;
-                    }
-                    drain(&mut tracked, &mut out, Instant::now());
-                    std::thread::sleep(Duration::from_micros(500));
-                }
-                Err(e) => return Err(anyhow::anyhow!(e)).context("trace replay submit"),
-            }
-        };
+        // shared Busy-retry helper: jittered backoff, draining event
+        // streams between attempts so the window can actually open
+        let retry_for = if opts.retry_busy { opts.busy_retry_for } else { Duration::ZERO };
+        let handle = submit_with_retry(server, &req, &mut rng, retry_for, || {
+            drain(&mut tracked, &mut out, Instant::now());
+        })
+        .map_err(|e| anyhow::anyhow!(e))
+        .context("trace replay submit")?;
+        if handle.is_none() {
+            out.busy_rejected += 1;
+        }
         if let Some(handle) = handle {
             let now = Instant::now();
             out.accepted += 1;
@@ -668,15 +668,17 @@ pub fn check_invariants(
     }
     let server_terminals = stats.routing.completed
         + stats.routing.cancelled_total()
-        + stats.routing.shed_total();
+        + stats.routing.shed_total()
+        + stats.routing.failed_total();
     if server_terminals != out.accepted as u64 {
         v.push(format!(
             "server counters unbalanced: {} accepted but completed {} + \
-             cancelled {} + shed {} = {}",
+             cancelled {} + shed {} + failed {} = {}",
             out.accepted,
             stats.routing.completed,
             stats.routing.cancelled_total(),
             stats.routing.shed_total(),
+            stats.routing.failed_total(),
             server_terminals
         ));
     }
@@ -788,6 +790,80 @@ pub fn builtin_suite() -> Vec<Scenario> {
     ]
 }
 
+/// One chaos scenario: background traffic plus a deterministic
+/// [`FaultPlan`] and the failure-handling knobs it exercises. Gated on
+/// exactly the same invariants as the clean suite — the point is that
+/// no injected schedule can make an accepted request go terminal-less.
+pub struct ChaosSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// Background traffic generator (seed, request count, shape).
+    pub make: fn(u64, usize, GenShape) -> Trace,
+    /// The deterministic fault schedule.
+    pub plan: fn() -> FaultPlan,
+    /// [`ServeConfig::decode_timeout`] for the run (stall detection).
+    pub decode_timeout: Option<Duration>,
+    /// [`ServeConfig::retry_budget`] for the run.
+    pub retry_budget: u32,
+}
+
+/// The chaos suite (run by `kick-tires --chaos`): every spec injects
+/// faults into the *large* tier (tier 1) of the two-tier fleet, so
+/// recovery is visible as degradation onto the small tier.
+pub fn chaos_suite() -> Vec<ChaosSpec> {
+    vec![
+        ChaosSpec {
+            name: "chaos_crash",
+            about: "replica crash mid-decode (+ one admission error), requeue + respawn",
+            make: gen_steady,
+            plan: || {
+                FaultPlan::new(vec![
+                    Fault { tier: 1, replica: 0, at_step: 3, kind: FaultKind::Crash },
+                    Fault { tier: 1, replica: 0, at_step: 9, kind: FaultKind::AdmitError },
+                ])
+            },
+            decode_timeout: None,
+            retry_budget: 3,
+        },
+        ChaosSpec {
+            name: "chaos_stall",
+            about: "frozen replica trips the decode-timeout monitor; traffic routes around",
+            make: gen_steady,
+            plan: || {
+                FaultPlan::new(vec![Fault {
+                    tier: 1,
+                    replica: 0,
+                    at_step: 2,
+                    kind: FaultKind::Stall { ms: 600 },
+                }])
+            },
+            decode_timeout: Some(Duration::from_millis(150)),
+            retry_budget: 2,
+        },
+        ChaosSpec {
+            name: "chaos_tier_outage",
+            about: "repeated large-tier crashes open the breaker; requests degrade, then recover",
+            make: gen_steady,
+            plan: || {
+                FaultPlan::new(
+                    (1..=5)
+                        .map(|k| Fault {
+                            tier: 1,
+                            replica: 0,
+                            at_step: k,
+                            kind: FaultKind::Crash,
+                        })
+                        .collect(),
+                )
+            },
+            decode_timeout: None,
+            // every request survives all five deaths even if it is
+            // unlucky enough to ride the doomed replica each time
+            retry_budget: 6,
+        },
+    ]
+}
+
 /// `kick-tires` options: where the fleet lives and how hard to push.
 #[derive(Debug, Clone)]
 pub struct KickTiresOpts {
@@ -799,6 +875,8 @@ pub struct KickTiresOpts {
     pub large: String,
     /// Downscaled sweep (fewer requests per scenario) for CI.
     pub smoke: bool,
+    /// Also run the fault-injection suite ([`chaos_suite`]).
+    pub chaos: bool,
     pub seed: u64,
     /// Run only scenarios whose name is in this list (all when `None`).
     pub only: Option<Vec<String>>,
@@ -816,6 +894,7 @@ impl KickTiresOpts {
             small: "small".into(),
             large: "medium".into(),
             smoke: false,
+            chaos: false,
             seed: 0x7EA5E7,
             only: None,
             bench_json: None,
@@ -863,6 +942,13 @@ impl KickTiresReport {
             out.push((k("prefix_hit_rate"), s.stats.prefix_hit_rate));
             out.push((k("prefill_tokens"), s.stats.prefill_tokens as f64));
             out.push((k("kv_blocks_utilization"), s.stats.kv_blocks_utilization));
+            // failure-handling trajectory (the chaos scenarios' gate:
+            // CI fails the run unless every `lost` entry is zero)
+            out.push((k("failovers"), s.stats.failovers as f64));
+            out.push((k("degraded"), s.stats.degraded as f64));
+            out.push((k("retries"), s.stats.retries as f64));
+            let terminals = s.outcome.done + s.outcome.failed + s.outcome.cancelled;
+            out.push((k("lost"), s.outcome.accepted.saturating_sub(terminals) as f64));
             out.push((k("violations"), s.violations.len() as f64));
         }
         out
@@ -917,13 +1003,7 @@ pub fn kick_tires(opts: &KickTiresOpts) -> Result<KickTiresReport> {
     let shape = GenShape { sprompt: g.sprompt, amax: g.amax };
     let bounds = transfer_bounds(&manifest, &[&opts.small, &opts.large])?;
     let n = if opts.smoke { 24 } else { 96 };
-    let mut scenarios = Vec::new();
-    for sc in builtin_suite() {
-        if let Some(only) = &opts.only {
-            if !only.iter().any(|o| o == sc.name) {
-                continue;
-            }
-        }
+    let base_cfg = || {
         let mut cfg = ServeConfig::two_tier(
             opts.artifacts_dir.clone(),
             opts.run_dir.clone(),
@@ -935,20 +1015,36 @@ pub fn kick_tires(opts: &KickTiresOpts) -> Result<KickTiresReport> {
         cfg.temp = 0.8;
         cfg.batch_window = Duration::from_millis(2);
         cfg.mode = BatchMode::Continuous;
-        if let Some(cap) = sc.queue_cap {
-            cfg.queue_cap = cap;
-        }
+        cfg
+    };
+    let skip = |name: &str| match &opts.only {
+        Some(only) => !only.iter().any(|o| o == name),
+        None => false,
+    };
+    let run_one = |cfg: ServeConfig, trace: &Trace, retry_busy: bool, name: &'static str| {
         let queue_cap = cfg.queue_cap as u64;
-        let trace = (sc.make)(opts.seed, n, shape);
-        let server = Server::start(cfg).with_context(|| format!("scenario {}", sc.name))?;
-        let mut replay_opts = ReplayOpts { retry_busy: sc.retry_busy, ..Default::default() };
+        let server = Server::start(cfg).with_context(|| format!("scenario {name}"))?;
+        let mut replay_opts = ReplayOpts { retry_busy, ..Default::default() };
         if let Some(d) = opts.drain_timeout {
             replay_opts.drain_timeout = d;
         }
-        let outcome = replay(&server, &trace, &replay_opts)
-            .with_context(|| format!("scenario {}", sc.name))?;
-        let stats = server.shutdown().with_context(|| format!("scenario {}", sc.name))?;
+        let outcome =
+            replay(&server, trace, &replay_opts).with_context(|| format!("scenario {name}"))?;
+        let stats = server.shutdown().with_context(|| format!("scenario {name}"))?;
         let violations = check_invariants(&outcome, &stats, queue_cap, &bounds);
+        Ok::<_, anyhow::Error>((outcome, stats, violations))
+    };
+    let mut scenarios = Vec::new();
+    for sc in builtin_suite() {
+        if skip(sc.name) {
+            continue;
+        }
+        let mut cfg = base_cfg();
+        if let Some(cap) = sc.queue_cap {
+            cfg.queue_cap = cap;
+        }
+        let trace = (sc.make)(opts.seed, n, shape);
+        let (outcome, stats, violations) = run_one(cfg, &trace, sc.retry_busy, sc.name)?;
         scenarios.push(ScenarioReport {
             scenario: sc.name,
             about: sc.about,
@@ -956,6 +1052,26 @@ pub fn kick_tires(opts: &KickTiresOpts) -> Result<KickTiresReport> {
             stats,
             violations,
         });
+    }
+    if opts.chaos {
+        for sc in chaos_suite() {
+            if skip(sc.name) {
+                continue;
+            }
+            let mut cfg = base_cfg();
+            cfg.fault_plan = Some((sc.plan)());
+            cfg.decode_timeout = sc.decode_timeout;
+            cfg.retry_budget = sc.retry_budget;
+            let trace = (sc.make)(opts.seed, n, shape);
+            let (outcome, stats, violations) = run_one(cfg, &trace, true, sc.name)?;
+            scenarios.push(ScenarioReport {
+                scenario: sc.name,
+                about: sc.about,
+                outcome,
+                stats,
+                violations,
+            });
+        }
     }
     anyhow::ensure!(!scenarios.is_empty(), "no scenarios matched the filter");
     let report = KickTiresReport { scenarios };
@@ -1136,6 +1252,11 @@ mod tests {
             prefix_shared_tokens: 0,
             prefill_tokens: 0,
             kv_blocks_utilization: 0.0,
+            failovers: 0,
+            degraded: 0,
+            retries: 0,
+            worker_deaths: 0,
+            breaker_state: Vec::new(),
         }
     }
 
@@ -1225,6 +1346,10 @@ mod tests {
             assert!(v.is_finite() || *v == 0.0);
         }
         assert!(entries.iter().any(|(k, v)| k.ends_with(".violations") && *v == 1.0));
+        // the chaos gate's keys are always present (zero on clean runs)
+        for m in ["failovers", "degraded", "retries", "lost"] {
+            assert!(entries.iter().any(|(k, _)| k.ends_with(&format!(".{m}"))), "missing {m}");
+        }
         let text = report.render();
         assert!(text.contains("cancel-storm"));
         assert!(text.contains("INVARIANT VIOLATIONS"));
@@ -1252,6 +1377,35 @@ mod tests {
         let over = suite.iter().find(|s| s.name == "overload-shed").unwrap();
         assert_eq!(over.queue_cap, Some(8));
         assert!(!over.retry_busy);
+    }
+
+    #[test]
+    fn chaos_suite_targets_the_large_tier_deterministically() {
+        let suite = chaos_suite();
+        let names: std::collections::BTreeSet<_> = suite.iter().map(|s| s.name).collect();
+        assert_eq!(names.len(), suite.len());
+        for want in ["chaos_crash", "chaos_stall", "chaos_tier_outage"] {
+            assert!(names.contains(want), "missing chaos scenario {want}");
+            // underscore names keep the flat-JSON bench keys legal
+            assert!(!want.contains(['"', ',', ':', ' ']));
+        }
+        for sc in &suite {
+            let plan = (sc.plan)();
+            assert!(!plan.faults.is_empty(), "{} has an empty fault plan", sc.name);
+            assert!(
+                plan.faults.iter().all(|f| f.tier == 1),
+                "{} must fault the large tier so degradation is observable",
+                sc.name
+            );
+            // plans are pure: the same schedule on every call
+            assert_eq!(plan.faults.len(), (sc.plan)().faults.len());
+        }
+        // the outage spec crashes often enough to trip the breaker (3
+        // consecutive failures) and budgets a retry per death
+        let outage = suite.iter().find(|s| s.name == "chaos_tier_outage").unwrap();
+        let plan = (outage.plan)();
+        assert!(plan.faults.len() >= 4);
+        assert!(outage.retry_budget as usize >= plan.faults.len());
     }
 
     #[test]

@@ -44,10 +44,11 @@
 //! [`ServeConfig::force_host_admission`]) round-trips.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -59,6 +60,7 @@ use crate::lm::{LmEngine, PagedArtifacts};
 use crate::metrics::{LatencyRecorder, LatencySummary, RoutingCounters, RoutingSnapshot};
 use crate::paged::{blocks_needed, release_table, BlockAllocator, PagedKvCache, PrefixCache, PrefixHit};
 use crate::policy::{LadderFamily, TierPolicy};
+use crate::rng::Rng;
 use crate::router::RouterEngine;
 use crate::runtime::{Exec, Globals, Manifest, Runtime, ELEM_BYTES};
 use crate::tokenizer as tok;
@@ -210,6 +212,79 @@ pub struct ServeConfig {
     /// on a prefix-heavy trace must drop when the cache is on). No
     /// effect on the dense path, which never shares.
     pub disable_prefix_cache: bool,
+    /// Stall detection: a replica whose decode loop makes no progress
+    /// for this long while holding work is declared stalled — its tier
+    /// breaker records a failure and the router routes around it
+    /// (`--decode-timeout-ms`). `None` disables the stall monitor.
+    pub decode_timeout: Option<Duration>,
+    /// How many times a request orphaned by a dying worker is requeued
+    /// (re-scored, re-resolved, `Routed` re-emitted) before it goes
+    /// terminal with [`Event::Failed`] (`--retry-budget`).
+    pub retry_budget: u32,
+    /// Deterministic fault injection for the chaos scenarios — a
+    /// **test-only hook**: workers check the plan at loop safe points
+    /// (never while holding unpublished request state), so an injected
+    /// crash/stall exercises exactly the recovery machinery a real one
+    /// would. `None` (the default everywhere outside the chaos suite)
+    /// compiles to an always-empty check.
+    pub fault_plan: Option<FaultPlan>,
+}
+
+/// One injected fault: fires in tier `tier`, replica `replica`, when
+/// that worker's cumulative decode-step counter reaches `at_step`.
+/// Counters survive respawn (they live outside the supervisor's unwind
+/// boundary), so multi-fault plans describe a deterministic schedule
+/// over the worker's whole lifetime.
+#[derive(Debug, Clone)]
+pub struct Fault {
+    pub tier: usize,
+    pub replica: usize,
+    /// Cumulative decode steps completed by the worker when the fault
+    /// fires (0 = before the first step).
+    pub at_step: u64,
+    pub kind: FaultKind,
+}
+
+/// What an injected [`Fault`] does at its safe point.
+#[derive(Debug, Clone)]
+pub enum FaultKind {
+    /// Panic the worker's serve loop — the supervisor catches it,
+    /// retires/requeues the in-flight requests, and respawns in place.
+    Crash,
+    /// Freeze the serve loop (heartbeat stops ticking) for this long —
+    /// long stalls trip the decode-timeout monitor.
+    Stall { ms: u64 },
+    /// Sleep before each of the next `steps` decode steps — degraded
+    /// but alive; must NOT trip the stall monitor (the heartbeat keeps
+    /// advancing).
+    SlowDecode { ms: u64, steps: u64 },
+    /// Fail the admission path once with an error — the supervisor
+    /// treats worker-loop errors like panics.
+    AdmitError,
+}
+
+/// A seeded, deterministic fault schedule for the chaos scenarios.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new(faults: Vec<Fault>) -> FaultPlan {
+        FaultPlan { faults }
+    }
+
+    /// The faults destined for one worker, in firing order.
+    fn for_worker(&self, tier: usize, replica: usize) -> Vec<Fault> {
+        let mut v: Vec<Fault> = self
+            .faults
+            .iter()
+            .filter(|f| f.tier == tier && f.replica == replica)
+            .cloned()
+            .collect();
+        v.sort_by_key(|f| f.at_step);
+        v
+    }
 }
 
 impl ServeConfig {
@@ -239,6 +314,9 @@ impl ServeConfig {
             force_host_admission: false,
             force_dense_kv: false,
             disable_prefix_cache: false,
+            decode_timeout: None,
+            retry_budget: 2,
+            fault_plan: None,
         }
     }
 }
@@ -533,6 +611,9 @@ struct InFlight {
     t0: Instant,
     tx: Sender<Event>,
     cancel: Arc<AtomicBool>,
+    /// Times this request has been requeued after a worker death;
+    /// bounded by [`ServeConfig::retry_budget`].
+    retries: u32,
     /// Holds the admission-window slot for this request's lifetime.
     _admission: AdmissionGuard,
 }
@@ -606,6 +687,207 @@ struct TierDispatch {
     rr: usize,
 }
 
+/// Circuit-breaker state for one tier (DESIGN.md §11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BreakerState {
+    /// Healthy: all traffic admitted.
+    Closed,
+    /// Tripped: no traffic until the cooldown elapses.
+    Open,
+    /// Cooled down: one probe request at a time tests the tier.
+    HalfOpen,
+}
+
+#[derive(Debug)]
+struct TierBreaker {
+    state: BreakerState,
+    /// Consecutive failures while `Closed`; reset by any success.
+    consecutive: u32,
+    opened_at: Instant,
+    /// A half-open probe is outstanding (claimed but not yet resolved).
+    probing: bool,
+    probing_since: Instant,
+}
+
+/// Consecutive failures that trip a tier's breaker `Closed → Open`.
+const BREAKER_TRIP: u32 = 3;
+/// How long an `Open` breaker waits before admitting a half-open probe.
+const BREAKER_COOLDOWN: Duration = Duration::from_millis(250);
+/// A claimed-but-unresolved probe (e.g. its request was cancelled before
+/// reaching the tier) stops blocking further probes after this long.
+const PROBE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Fleet availability, shared by the router (availability mask +
+/// quality-aware degradation), the worker supervisors (failure/success
+/// signals on death/completion), and the stall monitor. Tier breakers
+/// follow the classic state machine: `Closed` trips to `Open` after
+/// [`BREAKER_TRIP`] consecutive failures, `Open` relaxes to `HalfOpen`
+/// after [`BREAKER_COOLDOWN`], and a half-open tier admits one probe
+/// request at a time — a success closes the breaker, a failure reopens
+/// it.
+struct FleetHealth {
+    breakers: Vec<Mutex<TierBreaker>>,
+    /// Per-tier, per-replica liveness: `false` between a replica's death
+    /// and its respawn (or permanently, past the respawn cap).
+    replica_up: Vec<Vec<AtomicBool>>,
+    /// Set by the stall monitor while a replica holds work but its
+    /// heartbeat is frozen; cleared when the heartbeat advances again.
+    replica_stalled: Vec<Vec<AtomicBool>>,
+}
+
+impl FleetHealth {
+    fn new(replicas_per_tier: &[usize]) -> FleetHealth {
+        let now = Instant::now();
+        FleetHealth {
+            breakers: replicas_per_tier
+                .iter()
+                .map(|_| {
+                    Mutex::new(TierBreaker {
+                        state: BreakerState::Closed,
+                        consecutive: 0,
+                        opened_at: now,
+                        probing: false,
+                        probing_since: now,
+                    })
+                })
+                .collect(),
+            replica_up: replicas_per_tier
+                .iter()
+                .map(|&n| (0..n).map(|_| AtomicBool::new(true)).collect())
+                .collect(),
+            replica_stalled: replicas_per_tier
+                .iter()
+                .map(|&n| (0..n).map(|_| AtomicBool::new(false)).collect())
+                .collect(),
+        }
+    }
+
+    /// One failure signal (worker death, stall detection, failed probe).
+    fn record_failure(&self, tier: usize) {
+        let Some(m) = self.breakers.get(tier) else { return };
+        let mut b = m.lock().unwrap();
+        b.probing = false;
+        match b.state {
+            BreakerState::Closed => {
+                b.consecutive += 1;
+                if b.consecutive >= BREAKER_TRIP {
+                    b.state = BreakerState::Open;
+                    b.opened_at = Instant::now();
+                }
+            }
+            // a failed probe (or a straggler failure) restarts the cooldown
+            BreakerState::HalfOpen | BreakerState::Open => {
+                b.state = BreakerState::Open;
+                b.opened_at = Instant::now();
+            }
+        }
+    }
+
+    /// One success signal (any completion on the tier): closes the
+    /// breaker and resets the consecutive-failure count.
+    fn record_success(&self, tier: usize) {
+        let Some(m) = self.breakers.get(tier) else { return };
+        let mut b = m.lock().unwrap();
+        b.consecutive = 0;
+        b.probing = false;
+        b.state = BreakerState::Closed;
+    }
+
+    fn claim_probe(b: &mut TierBreaker, now: Instant) -> bool {
+        if b.probing && now.duration_since(b.probing_since) < PROBE_TIMEOUT {
+            return false;
+        }
+        b.probing = true;
+        b.probing_since = now;
+        true
+    }
+
+    /// Would this tier accept a request right now? `Open` breakers relax
+    /// to `HalfOpen` lazily once the cooldown has elapsed; a half-open
+    /// tier admits (and claims the slot for) one probe at a time. A tier
+    /// with every replica down/stalled never admits — its breaker may
+    /// lag the replica flags by one failure signal.
+    fn tier_admits(&self, tier: usize, now: Instant) -> bool {
+        if !self.any_replica_live(tier) {
+            return false;
+        }
+        let Some(m) = self.breakers.get(tier) else { return false };
+        let mut b = m.lock().unwrap();
+        match b.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if now.duration_since(b.opened_at) >= BREAKER_COOLDOWN {
+                    b.state = BreakerState::HalfOpen;
+                    b.probing = false;
+                    Self::claim_probe(&mut b, now)
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => Self::claim_probe(&mut b, now),
+        }
+    }
+
+    /// Quality-aware degradation: resolve `want` over the live tiers.
+    /// Prefer the resolved tier itself; otherwise scan *down* (cheaper
+    /// tiers — a measured quality drop, the paper's knob turned by the
+    /// outage), then *up* (a cost bump beats a failure). `None` means no
+    /// tier is live — the request sheds with a distinct reason.
+    fn degrade(&self, want: usize, now: Instant) -> Option<usize> {
+        if self.tier_admits(want, now) {
+            return Some(want);
+        }
+        for t in (0..want).rev() {
+            if self.tier_admits(t, now) {
+                return Some(t);
+            }
+        }
+        for t in want + 1..self.breakers.len() {
+            if self.tier_admits(t, now) {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn any_replica_live(&self, tier: usize) -> bool {
+        self.replica_up
+            .get(tier)
+            .is_some_and(|reps| (0..reps.len()).any(|r| self.replica_live(tier, r)))
+    }
+
+    fn replica_live(&self, tier: usize, rep: usize) -> bool {
+        self.replica_up[tier][rep].load(Ordering::Relaxed)
+            && !self.replica_stalled[tier][rep].load(Ordering::Relaxed)
+    }
+
+    fn set_replica_up(&self, tier: usize, rep: usize, up: bool) {
+        self.replica_up[tier][rep].store(up, Ordering::Relaxed);
+    }
+
+    fn set_replica_stalled(&self, tier: usize, rep: usize, stalled: bool) {
+        self.replica_stalled[tier][rep].store(stalled, Ordering::Relaxed);
+    }
+
+    /// Set the stall flag, returning the previous value (edge detection
+    /// for the monitor's one-failure-per-stall signal).
+    fn swap_replica_stalled(&self, tier: usize, rep: usize, stalled: bool) -> bool {
+        self.replica_stalled[tier][rep].swap(stalled, Ordering::Relaxed)
+    }
+
+    /// Per-tier breaker states for [`ServerStats::breaker_state`].
+    fn states(&self) -> Vec<&'static str> {
+        self.breakers
+            .iter()
+            .map(|m| match m.lock().unwrap().state {
+                BreakerState::Closed => "closed",
+                BreakerState::Open => "open",
+                BreakerState::HalfOpen => "half-open",
+            })
+            .collect()
+    }
+}
+
 /// Shared (Send) metrics.
 pub struct ServerMetrics {
     /// Accepted-but-unfinished requests — the admission window
@@ -656,6 +938,18 @@ pub struct ServerMetrics {
     /// mean without a float atomic.
     pub kv_util_samples: AtomicU64,
     pub kv_util_permille: AtomicU64,
+    /// Requests dispatched to a tier other than the one routing resolved
+    /// (the resolved tier's breaker was open or its replicas dead).
+    pub failovers: AtomicU64,
+    /// The subset of `failovers` that landed on a *cheaper* tier — the
+    /// outage-as-quality-drop headline counter.
+    pub degraded: AtomicU64,
+    /// Requests requeued after a worker death (each requeue counts once;
+    /// bounded per request by [`ServeConfig::retry_budget`]).
+    pub retries: AtomicU64,
+    /// Worker serve-loop deaths absorbed by the supervisor (panic or
+    /// error; each respawn-in-place increments once).
+    pub worker_deaths: AtomicU64,
 }
 
 /// Point-in-time per-tier report.
@@ -703,6 +997,20 @@ pub struct ServerStats {
     /// Mean KV block-pool utilization sampled at each paged admission
     /// (0 on the dense path).
     pub kv_blocks_utilization: f64,
+    /// Requests dispatched to a tier other than the one routing resolved
+    /// (dead/tripped tier absorbed by a live one).
+    pub failovers: u64,
+    /// `failovers` that landed on a cheaper tier: outages surface as a
+    /// measured quality drop, not lost requests.
+    pub degraded: u64,
+    /// Requeues after worker deaths (per-request bound:
+    /// [`ServeConfig::retry_budget`]).
+    pub retries: u64,
+    /// Worker serve-loop deaths absorbed by supervisors.
+    pub worker_deaths: u64,
+    /// Per-tier breaker state at snapshot time (`"closed"` / `"open"` /
+    /// `"half-open"`), indexed like `tiers`.
+    pub breaker_state: Vec<&'static str>,
 }
 
 impl ServerStats {
@@ -774,13 +1082,22 @@ pub struct Server {
     router_handle: JoinHandle<Result<()>>,
     worker_handles: Vec<JoinHandle<Result<()>>>,
     metrics: Arc<ServerMetrics>,
+    health: Arc<FleetHealth>,
+    /// Stall-monitor thread (spawned only with a decode timeout set) and
+    /// its stop flag.
+    monitor_handle: Option<JoinHandle<()>>,
+    monitor_stop: Arc<AtomicBool>,
     next_id: AtomicU64,
     queue_cap: u64,
     /// The artifacts' prompt window, for submit-time length validation.
     sprompt: usize,
 }
 
-fn snapshot_stats(metrics: &ServerMetrics, tier_names: &[String]) -> ServerStats {
+fn snapshot_stats(
+    metrics: &ServerMetrics,
+    tier_names: &[String],
+    health: &FleetHealth,
+) -> ServerStats {
     ServerStats {
         in_flight: metrics.in_flight.load(Ordering::Relaxed),
         router_latency: metrics.router_latency.snapshot(),
@@ -820,6 +1137,11 @@ fn snapshot_stats(metrics: &ServerMetrics, tier_names: &[String]) -> ServerStats
                     / 1000.0
             }
         },
+        failovers: metrics.failovers.load(Ordering::Relaxed),
+        degraded: metrics.degraded.load(Ordering::Relaxed),
+        retries: metrics.retries.load(Ordering::Relaxed),
+        worker_deaths: metrics.worker_deaths.load(Ordering::Relaxed),
+        breaker_state: health.states(),
     }
 }
 
@@ -878,7 +1200,13 @@ impl Server {
             prefill_tokens: AtomicU64::new(0),
             kv_util_samples: AtomicU64::new(0),
             kv_util_permille: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            worker_deaths: AtomicU64::new(0),
         });
+        let replicas: Vec<usize> = cfg.tiers.iter().map(|t| t.replicas).collect();
+        let health = Arc::new(FleetHealth::new(&replicas));
         let (ingress, router_rx) = mpsc::channel::<RouterMsg>();
         // readiness barrier: threads ack after compiling their executables
         // so `start` returns a warm server (PJRT compilation is seconds;
@@ -888,6 +1216,8 @@ impl Server {
         let mut worker_handles = Vec::new();
         let mut dispatch = Vec::new();
         let mut tier_txs = Vec::new();
+        // (tier, replica, depth, heartbeat) per worker, for the monitor
+        let mut watch: Vec<(usize, usize, Arc<AtomicU64>, Arc<AtomicU64>)> = Vec::new();
         let mut n_workers = 0usize;
         for (ti, tier) in cfg.tiers.iter().enumerate() {
             let mut txs = Vec::new();
@@ -895,15 +1225,23 @@ impl Server {
             for r in 0..tier.replicas {
                 let (tx, rx) = mpsc::channel::<WorkMsg>();
                 let depth = Arc::new(AtomicU64::new(0));
+                let heartbeat = Arc::new(AtomicU64::new(0));
                 let cfg = cfg.clone();
-                let m = metrics.clone();
-                let rtx = ready_tx.clone();
-                let d = depth.clone();
+                let links = WorkerLinks {
+                    rx,
+                    depth: depth.clone(),
+                    metrics: metrics.clone(),
+                    health: health.clone(),
+                    heartbeat: heartbeat.clone(),
+                    ingress: ingress.clone(),
+                    ready: ready_tx.clone(),
+                };
                 worker_handles.push(
                     std::thread::Builder::new()
                         .name(format!("worker-{}-{r}", tier.name))
-                        .spawn(move || worker_thread(cfg, ti, rx, d, m, rtx))?,
+                        .spawn(move || worker_thread(cfg, ti, r, links))?,
                 );
+                watch.push((ti, r, depth.clone(), heartbeat));
                 txs.push(tx);
                 depths.push(depth);
                 n_workers += 1;
@@ -914,10 +1252,11 @@ impl Server {
         let router_handle = {
             let cfg = cfg.clone();
             let m = metrics.clone();
+            let h = health.clone();
             let rtx = ready_tx.clone();
             std::thread::Builder::new()
                 .name("router".into())
-                .spawn(move || router_thread(cfg, router_rx, dispatch, m, rtx))?
+                .spawn(move || router_thread(cfg, router_rx, dispatch, m, h, rtx))?
         };
         drop(ready_tx);
         for _ in 0..n_workers + 1 {
@@ -925,6 +1264,19 @@ impl Server {
                 .recv()
                 .map_err(|_| anyhow::anyhow!("server thread died during warm-up"))?;
         }
+        let monitor_stop = Arc::new(AtomicBool::new(false));
+        let monitor_handle = match cfg.decode_timeout {
+            Some(timeout) => {
+                let health = health.clone();
+                let stop = monitor_stop.clone();
+                Some(
+                    std::thread::Builder::new()
+                        .name("stall-monitor".into())
+                        .spawn(move || stall_monitor(watch, health, timeout, stop))?,
+                )
+            }
+            None => None,
+        };
         Ok(Server {
             ingress,
             tier_txs,
@@ -932,6 +1284,9 @@ impl Server {
             router_handle,
             worker_handles,
             metrics,
+            health,
+            monitor_handle,
+            monitor_stop,
             next_id: AtomicU64::new(0),
             queue_cap: cfg.queue_cap as u64,
             sprompt,
@@ -994,6 +1349,7 @@ impl Server {
             t0: now,
             tx,
             cancel: cancel.clone(),
+            retries: 0,
             _admission: AdmissionGuard(self.metrics.in_flight.clone()),
         };
         // a failed send returns (and drops) the request, releasing its
@@ -1005,7 +1361,7 @@ impl Server {
     }
 
     pub fn stats(&self) -> ServerStats {
-        snapshot_stats(&self.metrics, &self.tier_names)
+        snapshot_stats(&self.metrics, &self.tier_names, &self.health)
     }
 
     /// Accepted-but-unfinished requests right now — the counter the
@@ -1040,6 +1396,9 @@ impl Server {
             router_handle,
             worker_handles,
             metrics,
+            health,
+            monitor_handle,
+            monitor_stop,
             ..
         } = self;
         let _ = ingress.send(RouterMsg::Shutdown);
@@ -1047,6 +1406,10 @@ impl Server {
             Ok(r) => r,
             Err(_) => Err(anyhow::anyhow!("router thread panicked")),
         };
+        // the workers hold ingress clones (their requeue path); those
+        // clones die with the worker threads below, after which no
+        // requeued work can be in flight anywhere
+        drop(ingress);
         // all dispatches are now enqueued (or the router failed); workers
         // may stop once they drain
         for txs in &tier_txs {
@@ -1062,21 +1425,70 @@ impl Server {
                 Err(_) => worker_err = Some(anyhow::anyhow!("worker thread panicked")),
             }
         }
+        monitor_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = monitor_handle {
+            let _ = h.join();
+        }
         router_res?;
         if let Some(e) = worker_err {
             return Err(e);
         }
         // snapshot after the full drain so completions that raced the
         // shutdown call are included
-        Ok(snapshot_stats(&metrics, &tier_names))
+        Ok(snapshot_stats(&metrics, &tier_names, &health))
     }
 }
+
+/// Submit with bounded retry on [`SubmitError::Busy`]: jittered
+/// exponential backoff (200 µs doubling to a 5 ms cap, ±50% jitter from
+/// the caller's seeded [`Rng`] for deterministic replay), giving up
+/// after `retry_for` of wall time. `between` runs before every sleep —
+/// replay harnesses drain completed handles there so the admission
+/// window can actually open up instead of busy-waiting against a full
+/// queue.
+///
+/// Returns `Ok(Some(handle))` on acceptance, `Ok(None)` when the window
+/// stayed full for the whole budget (the caller counts a shed), and
+/// propagates every non-`Busy` error (`Closed`, `PromptTooLong`, …)
+/// immediately — those never resolve by waiting.
+pub fn submit_with_retry(
+    server: &Server,
+    req: &Request,
+    rng: &mut Rng,
+    retry_for: Duration,
+    mut between: impl FnMut(),
+) -> std::result::Result<Option<RequestHandle>, SubmitError> {
+    const BASE: Duration = Duration::from_micros(200);
+    const CAP: Duration = Duration::from_millis(5);
+    let t0 = Instant::now();
+    let mut backoff = BASE;
+    loop {
+        match server.submit(req.clone()) {
+            Ok(h) => return Ok(Some(h)),
+            Err(SubmitError::Busy) => {
+                if t0.elapsed() >= retry_for {
+                    return Ok(None);
+                }
+                between();
+                // ±50% jitter decorrelates concurrent submitters
+                let jitter = 0.5 + rng.next_f64();
+                std::thread::sleep(backoff.mul_f64(jitter).min(CAP));
+                backoff = (backoff * 2).min(CAP);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Shed reason when routing finds no live tier to degrade to.
+const NO_LIVE_TIER: &str = "no live tier: every breaker is open or every replica is down";
 
 fn router_thread(
     cfg: ServeConfig,
     rx: Receiver<RouterMsg>,
     mut tiers: Vec<TierDispatch>,
     metrics: Arc<ServerMetrics>,
+    health: Arc<FleetHealth>,
     ready: Sender<()>,
 ) -> Result<()> {
     let rt = Runtime::load(&cfg.artifacts_dir)?;
@@ -1152,7 +1564,7 @@ fn router_thread(
             // then the quality target through the ladder family, then
             // the server-wide default — so one batch window can mix
             // quality targets
-            let tier = match (&req.policy, req.quality) {
+            let want = match (&req.policy, req.quality) {
                 // a seeded Random policy replays the same stream on
                 // every assign() call, and overrides are evaluated one
                 // request at a time — fold the request id into the seed
@@ -1175,45 +1587,111 @@ fn router_thread(
             }
             .min(last_tier);
             if req.cancelled() {
-                metrics.routing.cancel(tier);
+                metrics.routing.cancel(want);
                 finish(req, Event::Cancelled);
                 continue;
             }
             if req.expired() {
-                metrics.routing.shed(tier);
+                metrics.routing.shed(want);
                 finish(req, Event::Failed { reason: "deadline expired before dispatch".into() });
                 continue;
             }
             let routed = Instant::now();
-            if req.tx.send(Event::Routed { tier, score }).is_err() {
-                // handle already dropped: implicit cancellation — skip
-                // the dispatch and drop the request (the admission guard
-                // frees its slot)
-                metrics.routing.cancel(tier);
+            // availability mask: re-resolve the decision over live tiers
+            // only — a dead tier degrades to a cheaper live one (or
+            // escalates to a costlier one) instead of failing
+            let Some(first_choice) = health.degrade(want, routed) else {
+                metrics.routing.fail(want);
+                finish(req, Event::Failed { reason: NO_LIVE_TIER.into() });
                 continue;
-            }
-            metrics.routing.route(tier);
-            let d = &mut tiers[tier];
-            let rep = match cfg.select {
-                ReplicaSelect::RoundRobin => {
-                    let r = d.rr % d.txs.len();
-                    d.rr = d.rr.wrapping_add(1);
-                    r
-                }
-                ReplicaSelect::ShortestQueue => d
-                    .depths
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(_, q)| q.load(Ordering::Relaxed))
-                    .map(|(i, _)| i)
-                    .unwrap_or(0),
             };
-            d.depths[rep].fetch_add(1, Ordering::Relaxed);
-            d.txs[rep]
-                .send(WorkMsg::Work(Work { req, score, routed }))
-                .ok()
-                .context("worker channel closed")?;
+            // dispatch with dead-replica recovery: a replica can die
+            // between the health check and the send — recover the work
+            // from the SendError, mark the replica down, and retry the
+            // next live replica (or the next live tier). The router
+            // itself never dies on a dead worker channel.
+            let mut tier = first_choice;
+            let mut announced: Option<usize> = None;
+            let mut work = Work { req, score, routed };
+            let delivered = loop {
+                if announced != Some(tier) {
+                    // announce (or, on failover, re-announce) the
+                    // routing decision; clients treat repeated `Routed`
+                    // events as an update, never a terminal
+                    if work.req.tx.send(Event::Routed { tier, score }).is_err() {
+                        // handle already dropped: implicit cancellation —
+                        // dropping the work frees its admission slot
+                        metrics.routing.cancel(tier);
+                        break false;
+                    }
+                    announced = Some(tier);
+                }
+                let d = &mut tiers[tier];
+                let nrep = d.txs.len();
+                let rep = match cfg.select {
+                    ReplicaSelect::RoundRobin => {
+                        let mut pick = None;
+                        for k in 0..nrep {
+                            let r = (d.rr + k) % nrep;
+                            if health.replica_live(tier, r) {
+                                d.rr = r.wrapping_add(1);
+                                pick = Some(r);
+                                break;
+                            }
+                        }
+                        pick
+                    }
+                    ReplicaSelect::ShortestQueue => (0..nrep)
+                        .filter(|&r| health.replica_live(tier, r))
+                        .min_by_key(|&r| d.depths[r].load(Ordering::Relaxed)),
+                };
+                let Some(rep) = rep else {
+                    // every replica of this tier is down/stalled;
+                    // tier_admits sees that too, so degrade() cannot
+                    // hand the same tier back
+                    match health.degrade(tier, Instant::now()) {
+                        Some(t) => {
+                            tier = t;
+                            continue;
+                        }
+                        None => {
+                            metrics.routing.fail(tier);
+                            finish(work.req, Event::Failed { reason: NO_LIVE_TIER.into() });
+                            break false;
+                        }
+                    }
+                };
+                d.depths[rep].fetch_add(1, Ordering::Relaxed);
+                match d.txs[rep].send(WorkMsg::Work(work)) {
+                    Ok(()) => break true,
+                    Err(mpsc::SendError(msg)) => {
+                        d.depths[rep].fetch_sub(1, Ordering::Relaxed);
+                        health.set_replica_up(tier, rep, false);
+                        health.record_failure(tier);
+                        let WorkMsg::Work(w) = msg else {
+                            unreachable!("router only sends Work")
+                        };
+                        work = w;
+                    }
+                }
+            };
+            if delivered {
+                // `route` counts at (successful) dispatch, like before
+                metrics.routing.route(tier);
+                if tier != first_choice || tier != want {
+                    metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                    if tier < want {
+                        metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
         }
+    }
+    // late arrivals racing the shutdown drain (worker crash-requeues)
+    // still get a terminal event instead of a silent drop
+    while let Ok(RouterMsg::Req(req)) = rx.try_recv() {
+        metrics.routing.fail(0);
+        finish(req, Event::Failed { reason: "server shutting down".into() });
     }
     Ok(())
 }
@@ -1244,6 +1722,9 @@ struct WorkerCtx {
     kv: KvCache,
     tier: usize,
     depth: Arc<AtomicU64>,
+    /// Fleet availability: completions feed the tier breaker's success
+    /// signal ([`FleetHealth::record_success`]).
+    health: Arc<FleetHealth>,
     /// Full-batch prefill — the admission fallback when no bucket fits
     /// (pre-v3 manifests; on v3 it is the `@genb` bucket's exec).
     prefill: Arc<Exec>,
@@ -1304,14 +1785,158 @@ struct PagedCtx {
     greedy: bool,
 }
 
-fn worker_thread(
-    cfg: ServeConfig,
-    tier: usize,
+/// Channels and shared state linking one replica worker back to the
+/// fleet, bundled so the spawn site, the supervisor, and the serve loop
+/// pass one handle.
+struct WorkerLinks {
     rx: Receiver<WorkMsg>,
     depth: Arc<AtomicU64>,
     metrics: Arc<ServerMetrics>,
+    health: Arc<FleetHealth>,
+    /// Ticked once per serve-loop iteration; frozen while `depth > 0` is
+    /// what the stall monitor calls a stall.
+    heartbeat: Arc<AtomicU64>,
+    /// Requeue path for requests orphaned by a worker death — the router
+    /// re-scores, re-resolves over live tiers, and re-emits `Routed`.
+    ingress: Sender<RouterMsg>,
     ready: Sender<()>,
-) -> Result<()> {
+}
+
+/// Per-worker respawn budget: after this many serve-loop deaths the
+/// supervisor stops respawning and terminally fails arrivals instead.
+const MAX_RESPAWNS: u32 = 8;
+
+/// Deterministic fault-injection state for one worker (the chaos
+/// suite's test-only hook; empty everywhere else). Lives OUTSIDE the
+/// supervisor's unwind boundary so `steps`/`next` survive respawns and a
+/// multi-fault plan describes one schedule over the worker's lifetime.
+struct FaultState {
+    /// This worker's faults, ascending by `at_step`.
+    faults: Vec<Fault>,
+    /// First unfired fault.
+    next: usize,
+    /// Cumulative decode steps, across respawns.
+    steps: u64,
+    /// Active slow-decode fault: (per-step sleep ms, steps left).
+    slow: Option<(u64, u64)>,
+}
+
+impl FaultState {
+    fn new(faults: Vec<Fault>) -> FaultState {
+        FaultState { faults, next: 0, steps: 0, slow: None }
+    }
+
+    fn empty() -> FaultState {
+        FaultState::new(Vec::new())
+    }
+
+    /// Fire due faults at the serve-loop safe point, where the backlog
+    /// and slot table own every request (nothing half-published), so an
+    /// injected crash exercises exactly the recovery a real one would.
+    /// `Crash` panics and `AdmitError` returns `Err` — both absorbed by
+    /// the supervisor; `Stall` blocks the loop (the heartbeat freezes,
+    /// tripping the decode-timeout monitor); `SlowDecode` arms a
+    /// per-step sleep that keeps the heartbeat ticking — degraded, not
+    /// stalled.
+    fn poll(&mut self) -> Result<()> {
+        while self.next < self.faults.len() && self.faults[self.next].at_step <= self.steps {
+            let f = self.faults[self.next].clone();
+            self.next += 1;
+            match f.kind {
+                FaultKind::Crash => {
+                    panic!("injected fault: crash at decode step {}", f.at_step)
+                }
+                FaultKind::Stall { ms } => std::thread::sleep(Duration::from_millis(ms)),
+                FaultKind::SlowDecode { ms, steps } => self.slow = Some((ms, steps)),
+                FaultKind::AdmitError => anyhow::bail!(
+                    "injected fault: admission error at decode step {}",
+                    f.at_step
+                ),
+            }
+        }
+        if let Some((ms, left)) = &mut self.slow {
+            std::thread::sleep(Duration::from_millis(*ms));
+            *left -= 1;
+            if *left == 0 {
+                self.slow = None;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Retire one request orphaned by a worker death: cancelled requests
+/// retire as `Cancelled`; under the retry budget (and outside shutdown,
+/// when the router is gone or going) the request requeues through
+/// ingress for re-scoring and re-resolution over the surviving tiers;
+/// otherwise it goes terminal with [`Event::Failed`]. Never silently
+/// dropped.
+fn retire_orphan(cfg: &ServeConfig, w: Work, links: &WorkerLinks, tier: usize, shutdown: bool) {
+    links.depth.fetch_sub(1, Ordering::Relaxed);
+    let mut req = w.req;
+    if req.cancelled() {
+        links.metrics.routing.cancel(tier);
+        finish(req, Event::Cancelled);
+        return;
+    }
+    if !shutdown && req.retries < cfg.retry_budget {
+        req.retries += 1;
+        links.metrics.retries.fetch_add(1, Ordering::Relaxed);
+        match links.ingress.send(RouterMsg::Req(req)) {
+            Ok(()) => return,
+            // the router is gone (shutdown raced the death): fall
+            // through to the terminal event
+            Err(mpsc::SendError(RouterMsg::Req(r))) => req = r,
+            Err(_) => return,
+        }
+    }
+    links.metrics.routing.fail(tier);
+    finish(
+        req,
+        Event::Failed { reason: format!("worker died with the request in flight (tier {tier})") },
+    );
+}
+
+/// Stall monitor (spawned only with [`ServeConfig::decode_timeout`]):
+/// watches every worker's heartbeat. A replica holding work whose
+/// heartbeat stays frozen past the timeout is flagged stalled — the
+/// router routes around it and its tier breaker records one failure. A
+/// thread cannot be killed from outside, so stalls are *contained*, not
+/// cured: if the loop thaws, the flag clears and the tier heals through
+/// the breaker's half-open probe.
+fn stall_monitor(
+    watch: Vec<(usize, usize, Arc<AtomicU64>, Arc<AtomicU64>)>,
+    health: Arc<FleetHealth>,
+    timeout: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    let mut last: Vec<(u64, Instant)> = watch
+        .iter()
+        .map(|(_, _, _, hb)| (hb.load(Ordering::Relaxed), Instant::now()))
+        .collect();
+    let poll = (timeout / 4).max(Duration::from_millis(5));
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(poll);
+        let now = Instant::now();
+        for (i, (tier, rep, depth, hb)) in watch.iter().enumerate() {
+            let cur = hb.load(Ordering::Relaxed);
+            if cur != last[i].0 {
+                last[i] = (cur, now);
+                // thawed: clear the flag; the next completion closes the
+                // breaker through its record_success
+                health.set_replica_stalled(*tier, *rep, false);
+            } else if depth.load(Ordering::Relaxed) > 0
+                && now.duration_since(last[i].1) >= timeout
+                && !health.swap_replica_stalled(*tier, *rep, true)
+            {
+                // newly stalled (edge-triggered): one failure signal
+                health.record_failure(*tier);
+            }
+        }
+    }
+}
+
+fn worker_thread(cfg: ServeConfig, tier: usize, replica: usize, links: WorkerLinks) -> Result<()> {
     let model = cfg.tiers[tier].model.clone();
     let rt = Runtime::load(&cfg.artifacts_dir)?;
     let g = rt.manifest.globals;
@@ -1345,10 +1970,16 @@ fn worker_thread(
     // block-paged KV path (manifest v4): device block pools + prefix
     // trie instead of the dense slab. `force_dense_kv` is the A/B knob;
     // `force_host_admission` implies dense too — host slot surgery has
-    // no meaning against a device-resident block pool.
-    let paged = if cfg.force_dense_kv || cfg.force_host_admission {
-        None
-    } else if let Some(arts) = engine.paged_artifacts()? {
+    // no meaning against a device-resident block pool. A closure because
+    // the supervisor rebuilds this state fresh when a panic fires while
+    // it was checked out of the ctx (and so unwound away).
+    let make_paged = |engine: &LmEngine| -> Result<Option<PagedCtx>> {
+        if cfg.force_dense_kv || cfg.force_host_admission {
+            return Ok(None);
+        }
+        let Some(arts) = engine.paged_artifacts()? else {
+            return Ok(None);
+        };
         let pool = PagedKvCache::zeros_on_device(
             &rt,
             meta.layers,
@@ -1359,7 +1990,7 @@ fn worker_thread(
         )?;
         let alloc = BlockAllocator::new(arts.nblk);
         let maxblk = arts.maxblk;
-        Some(PagedCtx {
+        Ok(Some(PagedCtx {
             pool,
             alloc,
             prefix: PrefixCache::new(arts.block),
@@ -1368,15 +1999,15 @@ fn worker_thread(
             use_prefix: !cfg.disable_prefix_cache,
             greedy: cfg.temp == 0.0,
             arts,
-        })
-    } else {
-        None
+        }))
     };
+    let paged = make_paged(&engine)?;
     let mut ctx = WorkerCtx {
         table: SlotTable::new(g.genb),
         kv: KvCache::zeros(meta.layers, g.genb, g.sctx, meta.heads, meta.headdim),
         tier,
-        depth,
+        depth: links.depth.clone(),
+        health: links.health.clone(),
         prefill,
         decode,
         admit_buckets,
@@ -1399,42 +2030,159 @@ fn worker_thread(
         // path never touches the dense slab, so it skips this upload.
         ctx.kv.to_device(&rt)?;
     }
-    let _ = ready.send(());
+    let _ = links.ready.send(());
     let mut backlog: Vec<Work> = Vec::new();
     let mut shutdown = false;
+    let mut faults = match &cfg.fault_plan {
+        Some(p) => FaultState::new(p.for_worker(tier, replica)),
+        None => FaultState::empty(),
+    };
+    let had_paged = ctx.paged.is_some();
+    let mut deaths = 0u32;
 
-    while !(shutdown && ctx.table.is_empty() && backlog.is_empty()) {
+    // supervisor: the serve loop runs under catch_unwind while
+    // `ctx`/`backlog`/`shutdown`/`faults` stay out here, on the far side
+    // of the unwind boundary — a panic (or error) leaves every request
+    // the worker held recoverable, to be retired or requeued below, and
+    // the worker respawns in place.
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            serve_loop(&cfg, &model, &mut ctx, &links, &mut backlog, &mut shutdown, &mut faults)
+        }));
+        let err = match run {
+            // graceful: shutdown signalled and the drain completed
+            Ok(Ok(())) => return Ok(()),
+            Ok(Err(e)) => format!("error: {e:#}"),
+            Err(p) => match p.downcast_ref::<&str>() {
+                Some(s) => format!("panic: {s}"),
+                None => match p.downcast_ref::<String>() {
+                    Some(s) => format!("panic: {s}"),
+                    None => "panic".into(),
+                },
+            },
+        };
+        deaths += 1;
+        links.metrics.worker_deaths.fetch_add(1, Ordering::Relaxed);
+        links.health.set_replica_up(tier, replica, false);
+        links.health.record_failure(tier);
+        eprintln!(
+            "[serve] worker {model} replica {replica} died ({err}); {}",
+            if deaths < MAX_RESPAWNS { "respawning" } else { "respawn budget exhausted" }
+        );
+        // every request this worker held is retired or requeued — never
+        // silently dropped; KV blocks go back through the normal
+        // refcount-release path (a no-op if the paged state itself
+        // unwound away — it is rebuilt wholesale below)
+        for (idx, slot) in ctx.table.take_matching(|_| true) {
+            release_slot_blocks(&mut ctx, idx)?;
+            retire_orphan(&cfg, slot.payload, &links, tier, shutdown);
+        }
+        for w in backlog.drain(..) {
+            retire_orphan(&cfg, w, &links, tier, shutdown);
+        }
+        if had_paged && ctx.paged.is_none() {
+            // the panic fired while the paged state was checked out of
+            // the ctx (admission/decode split-borrow) and it unwound
+            // away: rebuild fresh — zeroed pool, empty allocator/trie
+            ctx.paged = make_paged(&ctx.engine)?;
+        }
+        if deaths >= MAX_RESPAWNS {
+            break;
+        }
+        // respawn in place: mark the replica live and keep serving
+        links.health.set_replica_up(tier, replica, true);
+    }
+    // respawn budget exhausted: the replica stays down, but arrivals
+    // that raced the death still get terminal events until shutdown
+    loop {
+        let msg = if shutdown {
+            match links.rx.try_recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            }
+        } else {
+            match links.rx.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            }
+        };
+        match msg {
+            WorkMsg::Work(w) => {
+                links.depth.fetch_sub(1, Ordering::Relaxed);
+                links.metrics.routing.fail(tier);
+                finish(
+                    w.req,
+                    Event::Failed {
+                        reason: format!("tier {tier} replica {replica}: respawn budget exhausted"),
+                    },
+                );
+            }
+            WorkMsg::Shutdown => shutdown = true,
+        }
+    }
+    Err(anyhow::anyhow!(
+        "worker {model} replica {replica} died {deaths} times; respawn budget exhausted"
+    ))
+}
+
+/// One supervised serve loop: pull work, sweep, admit, decode — until
+/// shutdown completes its drain. Owns **no** request state: everything
+/// lives in `ctx`/`backlog` on the caller's side of the unwind boundary,
+/// which is what makes the supervisor's recovery exhaustive.
+fn serve_loop(
+    cfg: &ServeConfig,
+    model: &str,
+    ctx: &mut WorkerCtx,
+    links: &WorkerLinks,
+    backlog: &mut Vec<Work>,
+    shutdown: &mut bool,
+    faults: &mut FaultState,
+) -> Result<()> {
+    let metrics = &links.metrics;
+    while !(*shutdown && ctx.table.is_empty() && backlog.is_empty()) {
+        // progress watermark for the stall monitor: one tick per
+        // iteration (the idle recv timeout below keeps an idle worker
+        // ticking; only a genuinely frozen loop stops)
+        links.heartbeat.fetch_add(1, Ordering::Relaxed);
+
         // 1. pull work (non-blocking while busy; blocking when idle)
         loop {
-            let msg = if ctx.table.is_empty() && backlog.is_empty() && !shutdown {
-                match rx.recv_timeout(Duration::from_millis(100)) {
+            let msg = if ctx.table.is_empty() && backlog.is_empty() && !*shutdown {
+                match links.rx.recv_timeout(Duration::from_millis(100)) {
                     Ok(m) => m,
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => {
-                        shutdown = true;
+                        *shutdown = true;
                         break;
                     }
                 }
             } else {
-                match rx.try_recv() {
+                match links.rx.try_recv() {
                     Ok(m) => m,
                     Err(_) => break,
                 }
             };
             match msg {
                 WorkMsg::Work(w) => backlog.push(w),
-                WorkMsg::Shutdown => shutdown = true,
+                WorkMsg::Shutdown => *shutdown = true,
             }
+        }
+
+        // 1.4 injected faults fire here — the safe point where the
+        // backlog and slot table own every request, so a crash/stall
+        // exercises exactly the recovery machinery a real one would
+        if !(backlog.is_empty() && ctx.table.is_empty()) {
+            faults.poll()?;
         }
 
         // 1.5 retire cancelled / deadline-expired queued work before it
         // costs a prefill, and release cancelled in-flight slots —
         // the freed slot pads the next decode wave and is immediately
         // reusable by admission; other slots' KV state is untouched
-        sweep_backlog(&mut backlog, &mut ctx, &metrics);
+        sweep_backlog(backlog, ctx, metrics);
         for (idx, slot) in ctx.table.take_matching(|w| w.req.cancelled()) {
-            release_slot_blocks(&mut ctx, idx)?;
-            cancel_work(&mut ctx, slot.payload, &metrics);
+            release_slot_blocks(ctx, idx)?;
+            cancel_work(ctx, slot.payload, metrics);
         }
 
         // 2. admission per batching mode
@@ -1453,7 +2201,7 @@ fn worker_thread(
             // front of the backlog in order. Sustained exhaustion keeps
             // `in_flight` pinned, so callers see `SubmitError::Busy` at
             // the admission window instead of a worker panic.
-            let leftover = admit(&mut ctx, &free, admitted, &metrics)?;
+            let leftover = admit(ctx, &free, admitted, metrics)?;
             for (i, w) in leftover.into_iter().enumerate() {
                 backlog.insert(i, w);
             }
@@ -1462,7 +2210,8 @@ fn worker_thread(
         // 3. one decode iteration over the occupied slots
         if !ctx.table.is_empty() {
             let t0 = Instant::now();
-            decode_step(&mut ctx, &metrics)?;
+            decode_step(ctx, metrics)?;
+            faults.steps += 1;
             if ctx.trace {
                 eprintln!(
                     "[trace {model}] decode iter {:.1} ms occ {} kv {}",
@@ -1781,8 +2530,13 @@ fn admit_paged(
     }
 
     // phase 2: bucketed prefill for everyone without a full-hit replay,
-    // installing only the non-shared blocks into the pool
-    let mut firsts: Vec<(i32, f32)> = pend.iter().map(|a| a.fast.unwrap_or((0, 0.0))).collect();
+    // installing only the non-shared blocks into the pool. Entries
+    // without a replayed first token start as a sentinel the prefill
+    // loop below must overwrite — (i32::MIN, NAN) is unmistakable in a
+    // token stream, where the old (0, 0.0) fallback silently decoded
+    // token 0 if a lane ever fell through the group
+    let mut firsts: Vec<(i32, f32)> =
+        pend.iter().map(|a| a.fast.unwrap_or((i32::MIN, f32::NAN))).collect();
     let group: Vec<usize> = (0..pend.len()).filter(|&i| pend[i].fast.is_none()).collect();
     if !group.is_empty() {
         let n_group = group.len();
@@ -1860,6 +2614,12 @@ fn admit_paged(
         for (bi, &pi) in group.iter().enumerate() {
             firsts[pi] = (first[bi], logp[bi]);
         }
+        // every lane either replayed a cached first token or was just
+        // prefilled — no sentinel may survive into decode
+        debug_assert!(
+            firsts.iter().all(|&(t, _)| t != i32::MIN),
+            "paged admission left a lane without a first token"
+        );
         // record the freshly installed prompts so later requests share
         // them; the trie only ever adopts blocks fully covered by the
         // prompt, plus — under greedy sampling — the tail entry that
@@ -2207,6 +2967,9 @@ fn complete(
     metrics.e2e_latency.record(e2e);
     metrics.tier_latency[ctx.tier].record(e2e);
     metrics.routing.complete(0.0);
+    // any completion is the breaker's success signal: it closes a
+    // half-open breaker (successful probe) and resets failure counts
+    ctx.health.record_success(ctx.tier);
     ctx.depth.fetch_sub(1, Ordering::Relaxed);
     let done = Event::Done(Completion {
         id: req.id,
@@ -2302,6 +3065,7 @@ mod tests {
             t0: Instant::now(),
             tx: mpsc::channel().0,
             cancel: Arc::new(AtomicBool::new(false)),
+            retries: 0,
             _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
         };
         // default reproduces the seed's `len + 1 >= amax` stop rule
@@ -2353,6 +3117,7 @@ mod tests {
             t0: Instant::now(),
             tx: mpsc::channel().0,
             cancel: cancel.clone(),
+            retries: 0,
             _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
         };
         assert!(req.expired());
@@ -2397,6 +3162,7 @@ mod tests {
             t0: Instant::now(),
             tx: mpsc::channel().0,
             cancel: Arc::new(AtomicBool::new(false)),
+            retries: 0,
             _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
         };
         let now = Instant::now();
@@ -2421,6 +3187,7 @@ mod tests {
             t0: Instant::now(),
             tx: mpsc::channel().0,
             cancel: Arc::new(AtomicBool::new(false)),
+            retries: 0,
             _admission: AdmissionGuard(counter.clone()),
         };
         // terminal path: finish() drops the request
@@ -2439,6 +3206,7 @@ mod tests {
             t0: Instant::now(),
             tx: mpsc::channel().0,
             cancel: Arc::new(AtomicBool::new(false)),
+            retries: 0,
             _admission: AdmissionGuard(counter.clone()),
         };
         drop(req);

@@ -16,7 +16,9 @@ use hybrid_llm::scenario::{
     self, check_invariants, gen_cancel_storm, gen_overload, gen_poisson_burst, replay, GenShape,
     ReplayOpts, TransferBounds,
 };
-use hybrid_llm::serve::{Request, ServeConfig, Server, SubmitError};
+use hybrid_llm::serve::{
+    Fault, FaultKind, FaultPlan, Request, ServeConfig, Server, ServerStats, SubmitError,
+};
 use hybrid_llm::testing::check;
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -305,5 +307,126 @@ fn empty_stats() -> hybrid_llm::serve::ServerStats {
         prefix_shared_tokens: 0,
         prefill_tokens: 0,
         kv_blocks_utilization: 0.0,
+        failovers: 0,
+        degraded: 0,
+        retries: 0,
+        worker_deaths: 0,
+        breaker_state: Vec::new(),
     }
+}
+
+/// Regression (satellite of the failover PR): a worker that panics
+/// mid-decode with *no* retry budget must still deliver exactly one
+/// terminal event to every accepted request — before the supervisor
+/// landed, panicked workers silently orphaned their in-flight requests
+/// until `Server::shutdown`.
+#[test]
+fn panicking_worker_never_orphans_requests() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (shape, manifest) = shape_of(&artifacts);
+    let run_dir = seed_run_dir(&artifacts, "panic");
+    let mut cfg = base_cfg(artifacts, run_dir.clone());
+    // zero budget: every orphan must fail terminally *now*, not requeue
+    cfg.retry_budget = 0;
+    cfg.fault_plan = Some(FaultPlan::new(vec![
+        Fault { tier: 0, replica: 0, at_step: 1, kind: FaultKind::Crash },
+        Fault { tier: 1, replica: 0, at_step: 1, kind: FaultKind::Crash },
+    ]));
+    let queue_cap = cfg.queue_cap as u64;
+    let server = Server::start(cfg).unwrap();
+    let trace = scenario::gen_steady(0xDEADBEE, 16, shape);
+    let out = replay(&server, &trace, &ReplayOpts::default()).unwrap();
+    let stats = server.shutdown().unwrap();
+    let bounds = scenario::transfer_bounds(&manifest, &["nano", "micro"]).unwrap();
+    let violations = check_invariants(&out, &stats, queue_cap, &bounds);
+    assert!(violations.is_empty(), "panicking-worker violations: {violations:?}");
+    // exactly one terminal per accepted request, and the crash really
+    // fired: whichever tier was decoding died holding work
+    assert_eq!(out.done + out.failed + out.cancelled, out.accepted);
+    assert!(stats.worker_deaths > 0, "the injected crash never fired");
+    assert!(out.failed > 0, "orphans with no retry budget must fail terminally");
+    assert_eq!(stats.routing.failed_total(), out.failed as u64);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// Run one chaos-suite spec against real artifacts; `None` when the
+/// artifacts aren't built (the test then skips).
+fn run_chaos(name: &str, tag: &str) -> Option<(scenario::ReplayOutcome, ServerStats, Vec<String>)> {
+    let artifacts = artifacts_dir()?;
+    let (shape, manifest) = shape_of(&artifacts);
+    let run_dir = seed_run_dir(&artifacts, tag);
+    let sc = scenario::chaos_suite()
+        .into_iter()
+        .find(|s| s.name == name)
+        .unwrap_or_else(|| panic!("no chaos spec named {name}"));
+    let mut cfg = base_cfg(artifacts, run_dir.clone());
+    cfg.fault_plan = Some((sc.plan)());
+    cfg.decode_timeout = sc.decode_timeout;
+    cfg.retry_budget = sc.retry_budget;
+    let queue_cap = cfg.queue_cap as u64;
+    let server = Server::start(cfg).unwrap();
+    let trace = (sc.make)(0x7EA5E7, 24, shape);
+    let out = replay(&server, &trace, &ReplayOpts::default()).unwrap();
+    let stats = server.shutdown().unwrap();
+    let bounds = scenario::transfer_bounds(&manifest, &["nano", "micro"]).unwrap();
+    let violations = check_invariants(&out, &stats, queue_cap, &bounds);
+    let _ = std::fs::remove_dir_all(&run_dir);
+    Some((out, stats, violations))
+}
+
+/// Chaos: a large-tier replica crash mid-decode (plus one injected
+/// admission error) requeues or fails every request it held — no
+/// terminal-less requests, balanced counters.
+#[test]
+fn chaos_crash_mid_decode_invariants_hold() {
+    let Some((out, stats, violations)) = run_chaos("chaos_crash", "crash") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    assert!(violations.is_empty(), "chaos_crash violations: {violations:?}");
+    assert_eq!(out.done + out.failed + out.cancelled, out.accepted);
+    assert!(stats.worker_deaths > 0, "the injected crash never fired");
+}
+
+/// Chaos: a frozen replica (600 ms stall against a 150 ms decode
+/// timeout) is contained — the stall monitor flags it, traffic routes
+/// around, and once it thaws every queued request still resolves.
+#[test]
+fn chaos_stalled_replica_invariants_hold() {
+    let Some((out, stats, violations)) = run_chaos("chaos_stall", "stall") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    assert!(violations.is_empty(), "chaos_stall violations: {violations:?}");
+    assert_eq!(out.done + out.failed + out.cancelled, out.accepted);
+    // a stall is not a death: the loop thaws and keeps serving
+    assert_eq!(stats.worker_deaths, 0);
+}
+
+/// Pinning (the PR's headline): a whole-large-tier outage *degrades*
+/// requests onto the small tier instead of failing them — `degraded >
+/// 0`, zero lost, zero failed — and the tier heals afterwards (the
+/// breaker's half-open probe; final state not asserted, it races the
+/// drain).
+#[test]
+fn tier_outage_degrades_to_small_tier_with_zero_lost() {
+    let Some((out, stats, violations)) = run_chaos("chaos_tier_outage", "outage") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    assert!(violations.is_empty(), "chaos_tier_outage violations: {violations:?}");
+    // zero lost: every accepted request reached exactly one terminal
+    assert_eq!(out.done + out.failed + out.cancelled, out.accepted, "lost requests");
+    // repeated crashes tripped the breaker (3 consecutive failures)...
+    assert!(stats.worker_deaths >= 3, "only {} deaths", stats.worker_deaths);
+    // ...and the outage degraded traffic to the small tier rather than
+    // failing it: the paper's quality knob absorbing a fault
+    assert!(stats.degraded > 0, "no requests degraded to the small tier");
+    assert!(stats.retries > 0, "orphans should have requeued");
+    assert_eq!(out.failed, 0, "degradation, not failure");
+    assert!(stats.routing.tiers[0].routed > 0, "small tier saw no traffic");
+    let _ = &stats.breaker_state; // shape only; final state races the drain
 }
