@@ -55,6 +55,18 @@ geometry on the ``global`` line as ``kvblock``/``kvpool``):
 The dense v3 artifacts are still lowered and registered, so the rust
 side can A/B the two paths (``ServeConfig::force_dense_kv``) and fall
 back when paged artifacts are absent.
+
+Manifest v5 adds the speculative draft–verify family:
+
+* **Multi-token verify** — ``<model>.verify@K`` for every power-of-two
+  draft length ``K`` up to ``KV_BLOCK``: ``model.verify_step`` appends K
+  draft tokens per lane through the paged block tables (non-empty KV
+  prefix — the bucketed-``prefill@B`` idea generalized to mid-stream)
+  and emits the model's own next-token choice at *every* appended
+  position, which is what the rust hybrid decoder's longest-prefix
+  acceptance consumes. Bitwise-equal to K sequential ``decode_paged``
+  steps (pinned in ``python/tests/test_model.py``), so hybrid greedy
+  output stays byte-identical to large-only greedy decoding.
 """
 
 import argparse
@@ -82,7 +94,7 @@ from .common import (
     VOCAB,
 )
 
-MANIFEST_VERSION = 4
+MANIFEST_VERSION = 5
 
 F32 = jnp.float32
 S32 = jnp.int32
@@ -113,6 +125,15 @@ def prefill_buckets(genb):
         b *= 2
     out.append(genb)
     return out
+
+
+def verify_buckets(kvblock):
+    """Draft-length buckets for the v5 ``verify@K`` family: powers of two
+    up to one KV block. A draft block never spans more than one page, so
+    the rust side can bound the rejected-suffix release to a single
+    block-table entry; rust discovers the lowered K set from artifact
+    names (``Manifest::verify_buckets``) rather than recomputing this."""
+    return prefill_buckets(kvblock)
 
 
 def _out_class(name):
@@ -345,6 +366,34 @@ def lm_artifacts(out_dir, mw, cfg):
         ],
         ["kcache", "vcache"],
     )
+
+    # --- speculative verify (manifest v5) ---------------------------------
+    # one artifact per draft-length bucket K; same host-input discipline
+    # as decode_paged (tables + O(B·K) tokens per call)
+    for kb in verify_buckets(KV_BLOCK):
+
+        def verify_fn(*flat, _k=kb):
+            params, rest = flat[:n], flat[n:]
+            kp, vp, tables, toks, pos, step, seeds, temp = rest
+            return M.verify_step(
+                cfg, list(params), kp, vp, tables, toks, pos, step, seeds, temp
+            )
+
+        lower_one(
+            out_dir, mw, f"{cfg.name}.verify@{kb}", verify_fn,
+            param_ins(cfg)
+            + [
+                ("kcache", pool, "state"),
+                ("vcache", pool, "state"),
+                ("tables", _spec((GEN_B, KV_MAXBLK), S32), "data"),
+                ("toks", _spec((GEN_B, kb), S32), "data"),
+                ("pos", _spec((GEN_B,), S32), "data"),
+                ("step", _spec((), S32), "data"),
+                ("seeds", _spec((GEN_B,), U32), "data"),
+                ("temp", _spec((), F32), "data"),
+            ],
+            ["next", "logp", "kcache", "vcache"],
+        )
 
     # --- train ------------------------------------------------------------
     def train_fn(*flat):

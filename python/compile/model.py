@@ -298,24 +298,17 @@ def kv_install(kcache, vcache, src_k, src_v, slots, count):
     return kcache, vcache
 
 
-def paged_decode_step(cfg, flat, kpool, vpool, tables, tok, pos, step, seeds, temp, use_pallas=True):
-    """One autoregressive step against the block-paged KV pool (manifest v4).
+def _paged_token(cfg, p, kpool, vpool, tables, tok, pos, use_pallas):
+    """One token through all layers against the paged pool.
 
-    The paged sibling of ``decode_step``: K/V for this step are written
-    through the block table — lane ``b``'s position ``pos[b]`` lives at
-    offset ``pos[b] % BLOCK`` of pool block ``tables[b, pos[b]//BLOCK]``
-    — and attention gathers the lane's blocks back into position order.
-    Free/padding lanes carry an all-zero table row, so their writes land
-    in the reserved null block 0 and never touch live state.
+    The shared body of ``paged_decode_step`` and ``verify_step``: writes
+    this position's K/V through the block table, runs paged attention +
+    MLP per layer, and returns the pre-sampling logits. Keeping the op
+    sequence identical between the two callers is what makes the K-token
+    verify step bitwise-equal to K single-token decode steps.
 
-    Args:
-      kpool, vpool: [L, NBLK, BLOCK, H, Dh] per-layer block pools.
-      tables: [B, MAXBLK] i32 pool block ids (0 = unallocated/null).
-      tok, pos, step, seeds, temp: as in ``decode_step``.
-
-    Returns: (next_tok [B], logprob [B], kpool', vpool').
+    Returns: (logits [B, V], kpool', vpool').
     """
-    p = as_dict(cfg, flat)
     B = tok.shape[0]
     H, Dh, L = cfg.heads, cfg.head_dim, cfg.layers
     BLOCK = kpool.shape[2]
@@ -346,9 +339,76 @@ def paged_decode_step(cfg, flat, kpool, vpool, tables, tok, pos, step, seeds, te
         x = x + attn.reshape(B, cfg.d) @ p[pre + "wo"]
         x = _mlp(cfg, p, l, x[:, None, :])[:, 0, :]
     x = _ln(x, p["lnfg"], p["lnfb"])
-    logits = x @ p["emb"].T
+    return x @ p["emb"].T, kpool, vpool
+
+
+def paged_decode_step(cfg, flat, kpool, vpool, tables, tok, pos, step, seeds, temp, use_pallas=True):
+    """One autoregressive step against the block-paged KV pool (manifest v4).
+
+    The paged sibling of ``decode_step``: K/V for this step are written
+    through the block table — lane ``b``'s position ``pos[b]`` lives at
+    offset ``pos[b] % BLOCK`` of pool block ``tables[b, pos[b]//BLOCK]``
+    — and attention gathers the lane's blocks back into position order.
+    Free/padding lanes carry an all-zero table row, so their writes land
+    in the reserved null block 0 and never touch live state.
+
+    Args:
+      kpool, vpool: [L, NBLK, BLOCK, H, Dh] per-layer block pools.
+      tables: [B, MAXBLK] i32 pool block ids (0 = unallocated/null).
+      tok, pos, step, seeds, temp: as in ``decode_step``.
+
+    Returns: (next_tok [B], logprob [B], kpool', vpool').
+    """
+    p = as_dict(cfg, flat)
+    logits, kpool, vpool = _paged_token(cfg, p, kpool, vpool, tables, tok, pos, use_pallas)
     tok2, lp = _sample(logits, seeds, step, temp)
     return tok2, lp, kpool, vpool
+
+
+def verify_step(cfg, flat, kpool, vpool, tables, toks, pos, step, seeds, temp, use_pallas=True):
+    """K-token verify step for speculative draft–verify (manifest v5).
+
+    The multi-token generalization of ``paged_decode_step``: lane ``b``
+    appends K draft tokens ``toks[b, 0..K-1]`` at positions
+    ``pos[b]..pos[b]+K-1`` of its paged KV state and gets back the
+    model's own next-token choice *at every appended position*. Token
+    ``i`` is processed with all earlier draft tokens already resident
+    (causal within the appended block), so ``next[b, i]`` is exactly what
+    single-token decoding would have produced after consuming
+    ``toks[b, :i+1]`` — the longest-prefix acceptance rule on the rust
+    side compares ``next[b, i]`` against ``toks[b, i+1]`` and takes
+    ``next[b, m]`` as the correction token at the first mismatch, which
+    pins hybrid greedy output byte-identical to large-only decoding.
+
+    Implemented as K unrolled single-token bodies (``_paged_token``) in
+    one graph, so results are bitwise-equal to K sequential
+    ``paged_decode_step`` calls (pinned by ``test_model.py``); one
+    artifact is lowered per draft-length bucket K.
+
+    Args:
+      kpool, vpool: [L, NBLK, BLOCK, H, Dh] per-layer block pools.
+      tables: [B, MAXBLK] i32 pool block ids (0 = unallocated/null).
+      toks: [B, K] i32 draft tokens; idle/padding lanes carry PAD with an
+        all-zero table row (writes land in null block 0).
+      pos: [B] i32 position of ``toks[:, 0]``; caller guarantees
+        ``pos[b] + K <= S_CTX`` for live lanes.
+      step, seeds, temp: as in ``decode_step``; sampling at position i
+        folds ``step + i`` so stochastic mode decorrelates positions
+        (greedy temp=0 is pure argmax either way).
+
+    Returns: (next [B, K], logprob [B, K], kpool', vpool').
+    """
+    p = as_dict(cfg, flat)
+    K = toks.shape[1]
+    nexts, lps = [], []
+    for i in range(K):
+        logits, kpool, vpool = _paged_token(
+            cfg, p, kpool, vpool, tables, toks[:, i], pos + i, use_pallas
+        )
+        t, lp = _sample(logits, seeds, step + i, temp)
+        nexts.append(t)
+        lps.append(lp)
+    return jnp.stack(nexts, axis=1), jnp.stack(lps, axis=1), kpool, vpool
 
 
 def kv_install_paged(kpool, vpool, src_k, src_v, dst_tables):

@@ -117,6 +117,43 @@ def test_sampling_seeds_vary_output(params):
     assert len(set(np.asarray(t1).tolist())) > 1
 
 
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_verify_step_matches_sequential_paged_decode(params, k):
+    """The v5 verify@K contract: one K-token verify step is *bitwise*
+    equal to K sequential paged_decode_step calls — next tokens, per-token
+    logprobs, and the updated pools. This is what lets the rust hybrid
+    decoder accept a drafted prefix and keep output byte-identical to
+    large-only decoding."""
+    cfg = CFG
+    L, H, Dh = cfg.layers, cfg.heads, cfg.head_dim
+    B, NBLK, BLOCK, MAXBLK = 2, 9, 4, 4
+    key = jax.random.PRNGKey(3)
+    kpool = jax.random.normal(key, (L, NBLK, BLOCK, H, Dh), jnp.float32)
+    vpool = jax.random.normal(jax.random.fold_in(key, 1), (L, NBLK, BLOCK, H, Dh), jnp.float32)
+    # two live lanes with disjoint nonzero blocks; lane 0 starts mid-block
+    tables = jnp.array([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    pos = jnp.array([5, 2], jnp.int32)
+    toks = jax.random.randint(jax.random.fold_in(key, 2), (B, k), 4, VOCAB).astype(jnp.int32)
+    seeds = jnp.array([11, 12], jnp.uint32)
+    step = jnp.int32(7)
+    for temp in (jnp.float32(0.0), jnp.float32(0.9)):
+        got_n, got_lp, got_kp, got_vp = M.verify_step(
+            cfg, params, kpool, vpool, tables, toks, pos, step, seeds, temp
+        )
+        kp, vp = kpool, vpool
+        want_n, want_lp = [], []
+        for i in range(k):
+            t, lp, kp, vp = M.paged_decode_step(
+                cfg, params, kp, vp, tables, toks[:, i], pos + i, step + i, seeds, temp
+            )
+            want_n.append(t)
+            want_lp.append(lp)
+        np.testing.assert_array_equal(np.asarray(got_n), np.stack([np.asarray(t) for t in want_n], 1))
+        np.testing.assert_array_equal(np.asarray(got_lp), np.stack([np.asarray(t) for t in want_lp], 1))
+        np.testing.assert_array_equal(np.asarray(got_kp), np.asarray(kp))
+        np.testing.assert_array_equal(np.asarray(got_vp), np.asarray(vp))
+
+
 def test_score_is_mean_logprob(params):
     """Hand-check the scorer math on the nano config."""
     cfg = CFG

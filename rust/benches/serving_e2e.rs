@@ -323,6 +323,117 @@ fn main() -> anyhow::Result<()> {
         )?;
     }
 
+    // hybrid draft–verify A/B (manifest v5 `verify@K`): same prompts at
+    // temperature 0, three passes —
+    //   (a) routed with every request pinned to the large tier: the
+    //       baseline, exactly one large forward pass per emitted token;
+    //   (b) hybrid small→medium at quality 1.0 (always verify): must be
+    //       **byte-identical** to (a), and its acceptance / large-call /
+    //       throughput metrics join the trajectory. Reported, not gated
+    //       on savings: seeded-init weights share no greedy agreement,
+    //       so the cross-pair acceptance floor is ~1/vocab;
+    //   (c) hybrid medium→medium (a perfectly-agreeing draft): the
+    //       protocol-efficiency CI gate — `large_call_fraction`
+    //       (verify calls per emitted token) must be ≤ 0.7, i.e. ≥ 30%
+    //       fewer large forward passes than routed decoding pays by
+    //       construction, with speculation the only possible source of
+    //       the saving.
+    if manifest.has_verify("medium") && manifest.has_paged_kv("small") {
+        use hybrid_llm::policy::TierPolicy;
+        use hybrid_llm::serve::DecodeMode;
+        println!("\n== serving_e2e: hybrid draft–verify A/B ==");
+        let ab_prompts = &prompts[..48.min(prompts.len())];
+        type PassOut = (hybrid_llm::serve::ServerStats, Vec<Vec<i32>>, f64);
+        let run_pass = |draft: &str, hybrid: bool| -> anyhow::Result<PassOut> {
+            let mut cfg = ServeConfig::two_tier(
+                artifacts.clone(),
+                run_dir.clone(),
+                draft,
+                "medium",
+                String::new(),
+                0.5,
+            );
+            cfg.temp = 0.0; // the byte-identity claim is greedy-only
+            cfg.mode = BatchMode::Continuous;
+            cfg.batch_window = Duration::from_millis(2);
+            if hybrid {
+                cfg.decode = DecodeMode::Hybrid;
+            }
+            let server = Server::start(cfg)?;
+            let t0 = Instant::now();
+            let handles = ab_prompts
+                .iter()
+                .map(|p| {
+                    let req = Request::new(p.clone());
+                    let req = if hybrid {
+                        req.quality(1.0)
+                    } else {
+                        req.policy(TierPolicy::Fixed { tier: 1 })
+                    };
+                    server.submit(req)
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            let streams = handles
+                .into_iter()
+                .map(|h| {
+                    h.wait_timeout(Duration::from_secs(120))
+                        .map(|c| c.tokens)
+                        .map_err(|e| anyhow::anyhow!("hybrid A/B completion: {e}"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let wall = t0.elapsed().as_secs_f64();
+            Ok((server.shutdown()?, streams, wall))
+        };
+        let (routed, reference, _) = run_pass("small", false)?;
+        let (cross, cross_streams, cross_wall) = run_pass("small", true)?;
+        anyhow::ensure!(
+            cross_streams == reference,
+            "hybrid decode diverged from large-only greedy — the draft–verify pin is broken"
+        );
+        let emitted: usize = reference.iter().map(|t| t.len().saturating_sub(1)).sum();
+        let routed_per_tok = routed.large_slot_steps as f64 / emitted.max(1) as f64;
+        let cross_tokens: usize = cross_streams.iter().map(Vec::len).sum();
+        let cross_tok_s = cross_tokens as f64 / cross_wall.max(1e-9);
+        println!(
+            "cross-pair (small drafts medium): byte-identical to large-only; accept rate \
+             {:.0}%   large-call fraction {:.2} (routed baseline {:.2})   {:.1} tok/s",
+            cross.draft_accept_rate * 100.0,
+            cross.large_call_fraction,
+            routed_per_tok,
+            cross_tok_s
+        );
+        let (agree, _, _) = run_pass("medium", true)?;
+        anyhow::ensure!(
+            agree.hybrid_requests > 0 && agree.hybrid_emitted > 0,
+            "hybrid self-pair pass produced no hybrid traffic"
+        );
+        println!(
+            "self-pair (medium drafts medium): accept rate {:.0}%   large-call fraction {:.2}",
+            agree.draft_accept_rate * 100.0,
+            agree.large_call_fraction
+        );
+        anyhow::ensure!(
+            agree.large_call_fraction <= 0.7,
+            "speculation gate failed: {:.2} large forward passes per emitted hybrid token \
+             with a perfectly-agreeing draft (routed decoding pays 1.0; gate requires <= 0.7)",
+            agree.large_call_fraction
+        );
+        println!("hybrid gate OK: >= 30% fewer large-tier forward passes than routed decoding");
+        merge_bench_json(
+            json_path,
+            &[
+                ("serving.draft_accept_rate".to_string(), cross.draft_accept_rate),
+                ("serving.large_call_fraction".to_string(), cross.large_call_fraction),
+                ("serving.hybrid_tokens_per_sec".to_string(), cross_tok_s),
+                ("serving.routed_large_passes_per_token".to_string(), routed_per_tok),
+                (
+                    "serving.hybrid_selfpair_large_call_fraction".to_string(),
+                    agree.large_call_fraction,
+                ),
+            ],
+        )?;
+    }
+
     let _ = std::fs::remove_dir_all(&run_dir);
     Ok(())
 }

@@ -1,0 +1,359 @@
+//! Token-level hybrid decoding: the speculative draft–verify protocol
+//! between adjacent tiers (DESIGN.md §12).
+//!
+//! The small tier streams a block of draft tokens from its own KV
+//! state; the large tier verifies the whole block in **one** forward
+//! pass through the manifest-v5 `verify@K` artifact, which scores K
+//! appended positions through the paged block tables and returns the
+//! large model's next-token choice at every one. Longest-prefix greedy
+//! acceptance plus a correction token pins the emitted stream to what
+//! large-only greedy decoding would produce — byte-identical when every
+//! block verifies (the [`crate::policy::ALWAYS_VERIFY_QUALITY`] regime)
+//! — while spending one large forward pass per *block* instead of one
+//! per *token*.
+//!
+//! This module holds the pure protocol logic — acceptance, block
+//! planning, the token ledger, and the verify-path circuit breaker —
+//! all unit-testable without artifacts. The threaded worker that drives
+//! it against real executables lives in [`crate::serve`] (hybrid
+//! dispatch mode), and the per-token escalation policy deciding *which*
+//! blocks are worth a large forward pass lives in [`crate::policy`]
+//! ([`crate::policy::should_verify`]).
+
+use std::time::{Duration, Instant};
+
+/// Longest accepted draft prefix: the number of leading draft tokens
+/// that match the large tier's own next-token choices.
+///
+/// `verified[i]` is the large model's choice after consuming the
+/// current token plus `drafts[..i]` — so `drafts[i]` is accepted iff it
+/// equals `verified[i]`, and acceptance is prefix-closed (the first
+/// mismatch invalidates every later draft, whose context already
+/// diverged).
+pub fn accept_len(drafts: &[i32], verified: &[i32]) -> usize {
+    drafts
+        .iter()
+        .zip(verified)
+        .take_while(|(d, v)| d == v)
+        .count()
+}
+
+/// Resolve one verify call: returns `(accepted, emit)` where `accepted`
+/// is the accepted draft-prefix length and `emit` the tokens to stream.
+///
+/// `emit` is always `verified[..=accepted]`: the accepted drafts (which
+/// *are* the large model's choices at those positions) followed by one
+/// more large-chosen token — the correction at the first mismatch, or
+/// the bonus token when every draft survived. Every emitted token is
+/// therefore the large model's greedy choice, which is the whole
+/// byte-identity argument. With K−1 drafts per `verify@K` call the
+/// large tier emits up to K tokens per forward pass.
+pub fn resolve_verify(drafts: &[i32], verified: &[i32]) -> (usize, Vec<i32>) {
+    debug_assert!(drafts.len() < verified.len(), "verify@K covers K-1 drafts plus the current token");
+    let a = accept_len(drafts, verified);
+    (a, verified[..=a.min(verified.len() - 1)].to_vec())
+}
+
+/// Largest verify bucket not exceeding `cap` — block planning near the
+/// end of the context window, where a full-size block would write past
+/// the reserved EOS slot. `buckets` ascending (manifest order);
+/// `None` means not even a 1-token verify fits (the lane must finish).
+pub fn largest_bucket_at_most(buckets: &[usize], cap: usize) -> Option<usize> {
+    buckets.iter().rev().find(|&&b| b <= cap).copied()
+}
+
+/// Tokens a lane may still consume before its next write position hits
+/// the reserved EOS slot: positions `lpos .. sctx-1` exclusive
+/// (mirrors [`crate::serve`]'s `context_full` stop rule).
+pub fn context_room(lpos: usize, sctx: usize) -> usize {
+    (sctx.saturating_sub(1)).saturating_sub(lpos)
+}
+
+/// Per-worker draft/verify token ledger. The serving layer mirrors
+/// these into [`crate::serve::ServerStats`]; scenario invariant checks
+/// ([`crate::scenario`]) re-derive the same inequalities fleet-wide.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Ledger {
+    /// Tokens drafted by the small tier (catch-up steps excluded).
+    pub draft_tokens: u64,
+    /// Drafted tokens accepted by a large-tier verify call.
+    pub draft_accepted: u64,
+    /// Drafted tokens streamed without verification (escalation policy
+    /// short-circuit, or verify-breaker degradation).
+    pub local_accepted: u64,
+    /// Per-lane verify invocations — each is one large forward pass for
+    /// that lane.
+    pub verify_calls: u64,
+    /// Tokens emitted (streamed) by hybrid lanes, all sources.
+    pub emitted: u64,
+    /// Blocks streamed unverified because the verify breaker was open
+    /// (large-tier outage degraded to pure small-tier drafting).
+    pub degraded_blocks: u64,
+}
+
+impl Ledger {
+    /// Fold one resolved verify call into the ledger.
+    pub fn record_verify(&mut self, drafted: usize, accepted: usize, emitted: usize) {
+        self.draft_tokens += drafted as u64;
+        self.draft_accepted += accepted as u64;
+        self.verify_calls += 1;
+        self.emitted += emitted as u64;
+    }
+
+    /// Fold one locally-accepted (unverified) block into the ledger.
+    pub fn record_local(&mut self, drafted: usize, emitted: usize, degraded: bool) {
+        self.draft_tokens += drafted as u64;
+        self.local_accepted += emitted as u64;
+        self.emitted += emitted as u64;
+        if degraded {
+            self.degraded_blocks += 1;
+        }
+    }
+
+    /// Fraction of drafted tokens that survived verification (1.0 when
+    /// nothing was drafted — an empty ledger is not a failing one).
+    pub fn accept_rate(&self) -> f64 {
+        if self.draft_tokens == 0 {
+            1.0
+        } else {
+            self.draft_accepted as f64 / self.draft_tokens as f64
+        }
+    }
+
+    /// Large forward passes per emitted token — the cost headline. Pure
+    /// large-tier decoding is 1.0 by construction; hybrid decoding sits
+    /// below it whenever any draft is accepted or streamed locally.
+    pub fn large_call_fraction(&self) -> f64 {
+        if self.emitted == 0 {
+            0.0
+        } else {
+            self.verify_calls as f64 / self.emitted as f64
+        }
+    }
+
+    /// The ledger's internal accounting invariants; violation means the
+    /// draft/verify bookkeeping desynced from the token stream.
+    pub fn check(&self) -> Result<(), String> {
+        if self.draft_accepted > self.draft_tokens {
+            return Err(format!(
+                "accepted {} drafts but only {} were drafted",
+                self.draft_accepted, self.draft_tokens
+            ));
+        }
+        if self.local_accepted > self.draft_tokens {
+            return Err(format!(
+                "locally accepted {} drafts but only {} were drafted",
+                self.local_accepted, self.draft_tokens
+            ));
+        }
+        if self.draft_accepted + self.local_accepted > self.draft_tokens {
+            return Err(format!(
+                "accepted {} + local {} exceeds drafted {}",
+                self.draft_accepted, self.local_accepted, self.draft_tokens
+            ));
+        }
+        if self.emitted < self.draft_accepted + self.local_accepted {
+            return Err(format!(
+                "emitted {} < accepted {} + local {} (every accepted draft is streamed)",
+                self.emitted, self.draft_accepted, self.local_accepted
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Consecutive verify-path failures before the breaker opens.
+pub const VERIFY_BREAKER_TRIP: u32 = 3;
+
+/// How long an open verify breaker degrades to pure small-tier
+/// drafting before probing the large tier again.
+pub const VERIFY_BREAKER_COOLDOWN: Duration = Duration::from_millis(250);
+
+/// Circuit breaker on the hybrid worker's verify path. The fleet-level
+/// [`crate::serve::FleetHealth`] breakers guard whole tiers of routed
+/// workers; this one guards the *internal* large-tier dependency of a
+/// single hybrid worker, whose failure mode is not "route elsewhere"
+/// but "degrade to pure small-tier drafting" — requests keep streaming
+/// (unverified, counted in [`Ledger::degraded_blocks`]) instead of
+/// failing, and a half-open probe retries the large tier after the
+/// cooldown.
+#[derive(Debug)]
+pub struct VerifyBreaker {
+    failures: u32,
+    opened: Option<Instant>,
+}
+
+impl VerifyBreaker {
+    pub fn new() -> VerifyBreaker {
+        VerifyBreaker { failures: 0, opened: None }
+    }
+
+    /// May the next block attempt a verify call at `now`? Closed and
+    /// half-open (cooldown elapsed — one probe) say yes; open says no.
+    pub fn allow(&self, now: Instant) -> bool {
+        match self.opened {
+            None => true,
+            Some(at) => now.duration_since(at) >= VERIFY_BREAKER_COOLDOWN,
+        }
+    }
+
+    /// A verify call failed. Trips open after
+    /// [`VERIFY_BREAKER_TRIP`] consecutive failures; a failed half-open
+    /// probe re-opens immediately (the cooldown restarts).
+    pub fn record_failure(&mut self, now: Instant) {
+        self.failures += 1;
+        if self.failures >= VERIFY_BREAKER_TRIP || self.opened.is_some() {
+            self.opened = Some(now);
+        }
+    }
+
+    /// A verify call succeeded: close and reset.
+    pub fn record_success(&mut self) {
+        self.failures = 0;
+        self.opened = None;
+    }
+
+    /// `"closed"` / `"open"` / `"half-open"`, mirroring
+    /// [`crate::serve::FleetHealth::states`]' vocabulary.
+    pub fn state(&self, now: Instant) -> &'static str {
+        match self.opened {
+            None => "closed",
+            Some(at) if now.duration_since(at) >= VERIFY_BREAKER_COOLDOWN => "half-open",
+            Some(_) => "open",
+        }
+    }
+}
+
+impl Default for VerifyBreaker {
+    fn default() -> Self {
+        VerifyBreaker::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_len_is_longest_matching_prefix() {
+        assert_eq!(accept_len(&[], &[9]), 0);
+        assert_eq!(accept_len(&[5], &[5, 7]), 1);
+        assert_eq!(accept_len(&[5], &[6, 7]), 0);
+        assert_eq!(accept_len(&[5, 6, 7], &[5, 6, 7, 8]), 3);
+        assert_eq!(accept_len(&[5, 6, 7], &[5, 9, 7, 8]), 1);
+        // a later match after a mismatch must NOT count: the context
+        // diverged at the first rejection
+        assert_eq!(accept_len(&[5, 6, 7], &[9, 6, 7, 8]), 0);
+    }
+
+    #[test]
+    fn resolve_verify_emits_accepted_prefix_plus_correction() {
+        // full acceptance: every draft plus the bonus token
+        let (a, emit) = resolve_verify(&[5, 6, 7], &[5, 6, 7, 8]);
+        assert_eq!((a, emit), (3, vec![5, 6, 7, 8]));
+        // mid-block rejection: accepted prefix plus the correction
+        let (a, emit) = resolve_verify(&[5, 6, 7], &[5, 9, 7, 8]);
+        assert_eq!((a, emit), (1, vec![5, 9]));
+        // immediate rejection still makes progress: one correction
+        let (a, emit) = resolve_verify(&[5, 6, 7], &[9, 6, 7, 8]);
+        assert_eq!((a, emit), (0, vec![9]));
+        // K=1 degenerate case: no drafts, pure large decode
+        let (a, emit) = resolve_verify(&[], &[4]);
+        assert_eq!((a, emit), (0, vec![4]));
+    }
+
+    #[test]
+    fn every_emitted_token_is_large_chosen() {
+        // the byte-identity core: emit is literally a prefix of the
+        // large model's own choices, regardless of the drafts
+        let verified = [10, 11, 12, 13];
+        for drafts in [[10, 11, 12], [10, 99, 12], [99, 11, 12]] {
+            let (a, emit) = resolve_verify(&drafts, &verified);
+            assert_eq!(emit, verified[..=a], "drafts {drafts:?}");
+        }
+    }
+
+    #[test]
+    fn bucket_planning_near_the_context_edge() {
+        let buckets = [1, 2, 4, 8];
+        assert_eq!(largest_bucket_at_most(&buckets, 8), Some(8));
+        assert_eq!(largest_bucket_at_most(&buckets, 9), Some(8));
+        assert_eq!(largest_bucket_at_most(&buckets, 7), Some(4));
+        assert_eq!(largest_bucket_at_most(&buckets, 1), Some(1));
+        assert_eq!(largest_bucket_at_most(&buckets, 0), None);
+        // room mirrors context_full: with sctx=64 the last writable
+        // position is 62, so a lane at lpos=61 has room for 2 tokens
+        assert_eq!(context_room(61, 64), 2);
+        assert_eq!(context_room(62, 64), 1);
+        assert_eq!(context_room(63, 64), 0);
+        assert_eq!(context_room(64, 64), 0);
+        assert_eq!(context_room(0, 0), 0);
+    }
+
+    #[test]
+    fn ledger_accounting_and_rates() {
+        let mut l = Ledger::default();
+        assert_eq!(l.accept_rate(), 1.0);
+        assert_eq!(l.large_call_fraction(), 0.0);
+        l.check().unwrap();
+        // one verify round: 7 drafts, 5 accepted, 6 emitted (correction)
+        l.record_verify(7, 5, 6);
+        // one local block: 7 drafted, all streamed unverified
+        l.record_local(7, 7, false);
+        // one degraded block
+        l.record_local(3, 3, true);
+        assert_eq!(l.draft_tokens, 17);
+        assert_eq!(l.draft_accepted, 5);
+        assert_eq!(l.local_accepted, 10);
+        assert_eq!(l.verify_calls, 1);
+        assert_eq!(l.emitted, 16);
+        assert_eq!(l.degraded_blocks, 1);
+        assert!((l.accept_rate() - 5.0 / 17.0).abs() < 1e-12);
+        assert!((l.large_call_fraction() - 1.0 / 16.0).abs() < 1e-12);
+        l.check().unwrap();
+    }
+
+    #[test]
+    fn ledger_check_catches_desyncs() {
+        let l = Ledger { draft_tokens: 2, draft_accepted: 3, ..Default::default() };
+        assert!(l.check().is_err());
+        let l = Ledger { draft_tokens: 2, local_accepted: 3, ..Default::default() };
+        assert!(l.check().is_err());
+        let l = Ledger {
+            draft_tokens: 4,
+            draft_accepted: 2,
+            local_accepted: 2,
+            emitted: 3,
+            ..Default::default()
+        };
+        assert!(l.check().is_err());
+    }
+
+    #[test]
+    fn breaker_trips_cools_down_and_probes() {
+        let t0 = Instant::now();
+        let mut b = VerifyBreaker::new();
+        assert!(b.allow(t0));
+        assert_eq!(b.state(t0), "closed");
+        b.record_failure(t0);
+        b.record_failure(t0);
+        assert!(b.allow(t0), "under the trip count the breaker stays closed");
+        b.record_failure(t0);
+        assert!(!b.allow(t0), "third consecutive failure opens it");
+        assert_eq!(b.state(t0), "open");
+        // cooldown elapses: half-open, one probe allowed
+        let later = t0 + VERIFY_BREAKER_COOLDOWN;
+        assert!(b.allow(later));
+        assert_eq!(b.state(later), "half-open");
+        // failed probe re-opens immediately (no 3-strike grace)
+        b.record_failure(later);
+        assert!(!b.allow(later + Duration::from_millis(1)));
+        // successful probe closes and resets the strike count
+        let probe2 = later + VERIFY_BREAKER_COOLDOWN;
+        assert!(b.allow(probe2));
+        b.record_success();
+        assert_eq!(b.state(probe2), "closed");
+        b.record_failure(probe2);
+        assert!(b.allow(probe2), "success reset the consecutive-failure count");
+    }
+}

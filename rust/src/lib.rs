@@ -50,6 +50,18 @@
 //! blocking convenience for callers that only want the final
 //! [`serve::Completion`].
 //!
+//! Beyond per-request tier routing, the server offers a **token-level
+//! hybrid decode mode** ([`serve::DecodeMode::Hybrid`], DESIGN.md §12):
+//! the small tier drafts blocks of tokens from its own KV state and the
+//! large tier verifies each block in one `verify@K` forward pass
+//! (manifest v5), with longest-prefix acceptance plus a correction
+//! token ([`hybrid::resolve_verify`]) keeping the stream byte-identical
+//! to large-only greedy decoding whenever every block verifies. The
+//! per-token escalation policy ([`policy::should_verify`]) trades
+//! verification frequency against the request's quality target, and a
+//! verify-path breaker ([`hybrid::VerifyBreaker`]) degrades a large-tier
+//! outage to pure small-tier drafting instead of failing requests.
+//!
 //! The [`scenario`] module stress-tests this API with trace-driven
 //! replays (Poisson bursts, diurnal swings, long-tail lengths, mixed
 //! quality targets, overload, cancel storms) gated on serving
@@ -66,6 +78,7 @@ pub mod calibrate;
 pub mod cli;
 pub mod corpus;
 pub mod eval;
+pub mod hybrid;
 pub mod io;
 pub mod labels;
 pub mod lm;

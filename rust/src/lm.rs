@@ -91,6 +91,35 @@ impl PagedArtifacts {
     }
 }
 
+/// Exec handles for the manifest-v5 speculative `verify@K` family
+/// (DESIGN.md §12): multi-token paged decode steps the hybrid decoder
+/// uses to batch-verify a drafted block on the large tier. Built by
+/// [`LmEngine::verify_artifacts`]; `None` on pre-v5 manifests, which
+/// keep per-request routing.
+pub struct VerifyArtifacts {
+    /// `(K, <name>.verify@K)` pairs, ascending by draft length `K`.
+    pub execs: Vec<(usize, Arc<Exec>)>,
+}
+
+impl VerifyArtifacts {
+    /// The smallest lowered draft-length bucket that fits `k` appended
+    /// tokens (first-fit, like the admission buckets). Callers pad the
+    /// token block with PAD up to the bucket; padded positions attend
+    /// through the same causal mask and their outputs are ignored.
+    pub fn bucket_for(&self, k: usize) -> Option<(usize, Arc<Exec>)> {
+        self.execs
+            .iter()
+            .find(|(b, _)| *b >= k)
+            .map(|(b, e)| (*b, e.clone()))
+    }
+
+    /// Largest lowered draft length — the cap on how many unverified
+    /// tokens a hybrid lane may hold before a verify pass is forced.
+    pub fn max_k(&self) -> usize {
+        self.execs.last().map_or(0, |(b, _)| *b)
+    }
+}
+
 /// One roster LM bound to the runtime.
 pub struct LmEngine {
     rt: Arc<Runtime>,
@@ -499,6 +528,21 @@ impl LmEngine {
             nblk: g.kvpool,
             maxblk: g.kv_maxblk(),
         }))
+    }
+
+    /// The speculative `verify@K` artifact set, or `None` when the
+    /// manifest predates v5 or this model was lowered without the
+    /// family. Execs come back ascending by K so
+    /// [`VerifyArtifacts::bucket_for`] can first-fit.
+    pub fn verify_artifacts(&self) -> Result<Option<VerifyArtifacts>> {
+        if !self.rt.manifest.has_verify(&self.name) {
+            return Ok(None);
+        }
+        let mut execs = Vec::new();
+        for k in self.rt.manifest.verify_buckets(&self.name) {
+            execs.push((k, self.rt.exec(&format!("{}.verify@{k}", self.name))?));
+        }
+        Ok(Some(VerifyArtifacts { execs }))
     }
 
     /// Single-request latency path (B=1 artifacts) — used by the Table 2

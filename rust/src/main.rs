@@ -54,7 +54,7 @@ subcommands:
   serve-demo   --run DIR [--requests N] [--threshold T] [--mode cont|rtc]
                [--tiers m[:replicas[:cost]],...] [--thresholds T1,T2,...] [--select rr|sq]
                [--quality Q] [--queue-cap N] [--deadline-ms MS] [--admit device|host]
-               [--decode-timeout-ms MS] [--retry-budget N]
+               [--decode-timeout-ms MS] [--retry-budget N] [--decode routed|hybrid]
   kick-tires   --run DIR [--smoke] [--chaos] [--small M] [--large M] [--seed N]
                [--scenarios a,b,...] [--json PATH] [--drain-timeout-ms MS]
                run the whole trace-replay scenario suite (--chaos adds the
@@ -240,6 +240,14 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         "on" => false,
         other => anyhow::bail!("bad --prefix-cache {other:?} (on|off)"),
     };
+    // --decode hybrid: token-level draft–verify between the boundary
+    // tiers (v5 artifacts); requests fall back to routed when the
+    // artifacts can't support the protocol
+    let decode = match args.get("decode", "routed") {
+        "hybrid" => hybrid_llm::serve::DecodeMode::Hybrid,
+        "routed" => hybrid_llm::serve::DecodeMode::Routed,
+        other => anyhow::bail!("bad --decode {other:?} (routed|hybrid)"),
+    };
     let pair_small = args.get("small", "medium").to_string();
     let pair_large = args.get("large", "large").to_string();
 
@@ -314,6 +322,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         decode_timeout,
         retry_budget,
         fault_plan: None,
+        decode,
     };
     println!(
         "[serve] starting fleet [{}], {mode:?}, queue cap {queue_cap}{}",
@@ -444,6 +453,18 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         stats.prefix_shared_tokens,
         stats.prefill_tokens
     );
+    if stats.hybrid_requests > 0 {
+        println!(
+            "hybrid decode: {} requests   draft accept rate {:.0}%   large-call fraction {:.2} \
+             ({} verify calls / {} emitted, {} degraded blocks)",
+            stats.hybrid_requests,
+            stats.draft_accept_rate * 100.0,
+            stats.large_call_fraction,
+            stats.verify_calls,
+            stats.hybrid_emitted,
+            stats.hybrid_degraded_blocks
+        );
+    }
     Ok(())
 }
 

@@ -495,6 +495,58 @@ pub fn nmodel_assign(pair_scores: &[Vec<f32>], thresholds: &[f32], n_queries: us
         .collect()
 }
 
+/// Quality targets at or above this verify every drafted block — the
+/// regime in which hybrid decoding is byte-identical to large-only
+/// greedy decoding (every emitted token is the large tier's choice).
+pub const ALWAYS_VERIFY_QUALITY: f32 = 0.75;
+
+/// Draft-confidence floor of the escalation ladder: at quality target 0
+/// only blocks whose weakest draft logprob falls below this get a
+/// verify call.
+const ESCALATION_LO: f32 = -8.0;
+
+/// Upper end of the linear ramp, just below certainty — at targets
+/// approaching [`ALWAYS_VERIFY_QUALITY`] essentially every block
+/// escalates.
+const ESCALATION_HI: f32 = -0.05;
+
+/// Token-level escalation threshold for hybrid draft–verify decoding
+/// (DESIGN.md §12): a drafted block whose weakest per-token draft
+/// logprob falls below `escalation_threshold(quality)` is sent to the
+/// large tier for verification; a block clearing it is accepted locally
+/// (streamed small-tier tokens, no large forward pass).
+///
+/// Monotone nondecreasing in the quality target: a higher target never
+/// yields a lower threshold, so it never verifies *less* (property-
+/// tested). Non-finite targets and targets at or above
+/// [`ALWAYS_VERIFY_QUALITY`] pin the threshold to `+∞` — every block
+/// verifies, which is what makes the high-quality regime byte-identical
+/// to large-only decoding.
+pub fn escalation_threshold(quality: f32) -> f32 {
+    if !quality.is_finite() {
+        return f32::INFINITY;
+    }
+    let q = quality.clamp(0.0, 1.0);
+    if q >= ALWAYS_VERIFY_QUALITY {
+        return f32::INFINITY;
+    }
+    // linear ramp over [0, ALWAYS_VERIFY_QUALITY): LO at 0, HI as the
+    // always-verify regime is approached
+    ESCALATION_LO + (ESCALATION_HI - ESCALATION_LO) * (q / ALWAYS_VERIFY_QUALITY)
+}
+
+/// Should a drafted block with weakest draft logprob `conf` be verified
+/// by the large tier under quality target `quality`? Total-order
+/// comparison ([`f32::total_cmp`]) plus an explicit non-finite guard:
+/// a NaN confidence always verifies — corrupted confidence must never
+/// silently skip the large tier.
+pub fn should_verify(quality: f32, conf: f32) -> bool {
+    if !conf.is_finite() {
+        return true;
+    }
+    conf.total_cmp(&escalation_threshold(quality)) == std::cmp::Ordering::Less
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -508,6 +560,43 @@ mod tests {
         assert_eq!(r, vec![true; 3]);
         let r = Policy::Random { p_small: 0.0, seed: 1 }.assign(&scores);
         assert_eq!(r, vec![false; 3]);
+    }
+
+    #[test]
+    fn escalation_threshold_is_monotone_and_pins_high_quality() {
+        // coarse sweep; the exhaustive sweep lives in the property suite
+        let mut prev = f32::NEG_INFINITY;
+        for i in 0..=100 {
+            let q = i as f32 / 100.0;
+            let t = escalation_threshold(q);
+            assert!(t >= prev, "threshold dipped at q={q}: {t} < {prev}");
+            prev = t;
+        }
+        assert_eq!(escalation_threshold(ALWAYS_VERIFY_QUALITY), f32::INFINITY);
+        assert_eq!(escalation_threshold(1.0), f32::INFINITY);
+        assert_eq!(escalation_threshold(f32::NAN), f32::INFINITY);
+        assert_eq!(escalation_threshold(f32::INFINITY), f32::INFINITY);
+        // below the pin the ramp is finite and anchored at LO
+        assert_eq!(escalation_threshold(0.0), ESCALATION_LO);
+        assert!(escalation_threshold(0.5).is_finite());
+        // out-of-range targets clamp instead of extrapolating
+        assert_eq!(escalation_threshold(-3.0), escalation_threshold(0.0));
+        assert_eq!(escalation_threshold(7.0), f32::INFINITY);
+    }
+
+    #[test]
+    fn should_verify_gates_on_confidence_and_is_nan_safe() {
+        // high quality: everything verifies, even a perfect confidence
+        assert!(should_verify(1.0, 0.0));
+        assert!(should_verify(0.9, -0.001));
+        // low quality: confident blocks skip the large tier …
+        assert!(!should_verify(0.0, -0.5));
+        // … but hopeless drafts still escalate
+        assert!(should_verify(0.0, -20.0));
+        // corrupted confidence never silently skips verification
+        assert!(should_verify(0.0, f32::NAN));
+        assert!(should_verify(0.0, f32::INFINITY));
+        assert!(should_verify(0.0, f32::NEG_INFINITY));
     }
 
     #[test]

@@ -24,6 +24,14 @@
 //!   block tables), `<model>.kv_install_paged@B` (paged admission
 //!   scatter) and `<model>.kv_block_copy` (copy-on-extend block moves).
 //!   Dense v3 artifacts are still present, so v4 runs either path.
+//! * **v5** — speculative draft–verify: each LM gains a bucketed
+//!   **`<model>.verify@K`** family (multi-token paged decode: K draft
+//!   tokens appended per lane through the block tables, with the model's
+//!   own next-token choice emitted at *every* appended position) for
+//!   power-of-two draft lengths up to `kvblock`. No new line grammar —
+//!   v5 parses like v4; the version advertises availability
+//!   ([`Manifest::verify_buckets`], [`Manifest::has_verify`]). The
+//!   hybrid decoder falls back to per-request routing on v1–v4.
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -35,10 +43,10 @@ use crate::io::DType;
 
 /// Newest manifest version this runtime understands — what the current
 /// AOT writer (`python/compile/aot.py: MANIFEST_VERSION`) emits.
-pub const SUPPORTED_VERSION: u32 = 4;
+pub const SUPPORTED_VERSION: u32 = 5;
 /// All versions this runtime can execute (older versions run through the
-/// fused-tuple / host-surgery / dense-KV fallback paths).
-pub const SUPPORTED_VERSIONS: [u32; 4] = [1, 2, 3, SUPPORTED_VERSION];
+/// fused-tuple / host-surgery / dense-KV / routed-decode fallback paths).
+pub const SUPPORTED_VERSIONS: [u32; 5] = [1, 2, 3, 4, SUPPORTED_VERSION];
 
 /// Global dims shared by all artifacts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -389,6 +397,19 @@ impl Manifest {
             && self.has_artifact(&format!("{model}.kv_block_copy"))
             && !self.kv_install_paged_buckets(model).is_empty()
     }
+
+    /// `verify@K` draft-length buckets for `model` (manifest v5),
+    /// ascending. Empty on pre-v5 manifests.
+    pub fn verify_buckets(&self, model: &str) -> Vec<usize> {
+        self.bucket_sizes(model, "verify")
+    }
+
+    /// True when `model` can act as the verifier tier of the hybrid
+    /// draft–verify loop (manifest v5): at least one `verify@K` bucket
+    /// on top of the full paged-KV set the verifier's lanes live in.
+    pub fn has_verify(&self, model: &str) -> bool {
+        self.has_paged_kv(model) && !self.verify_buckets(model).is_empty()
+    }
 }
 
 /// Smallest bucket `>= n` from an ascending bucket list (admission
@@ -507,6 +528,58 @@ out vcache f32 1x41x8x2x16 state
 end
 ";
 
+    const SAMPLE_V5: &str = "\
+version 5
+global vocab 64 sctx 64 sprompt 40 amax 24 genb 4 trainb 32 scoreb 32 kvblock 8 kvpool 41
+model nano d 32 layers 1 heads 2 ff 64 headdim 16 nparams 2 head 0
+artifact nano.decode_paged file nano.decode_paged.hlo.txt
+in kcache f32 1x41x8x2x16 state
+in vcache f32 1x41x8x2x16 state
+in tables s32 4x8 data
+in tok s32 4 data
+out next s32 4 data
+out logp f32 4 data
+out kcache f32 1x41x8x2x16 state
+out vcache f32 1x41x8x2x16 state
+artifact nano.kv_install_paged@2 file nano.kv_install_paged@2.hlo.txt
+in kcache f32 1x41x8x2x16 state
+in vcache f32 1x41x8x2x16 state
+in src_k f32 1x2x64x2x16 state
+in src_v f32 1x2x64x2x16 state
+in dst_tables s32 2x8 data
+out kcache f32 1x41x8x2x16 state
+out vcache f32 1x41x8x2x16 state
+artifact nano.kv_block_copy file nano.kv_block_copy.hlo.txt
+in kcache f32 1x41x8x2x16 state
+in vcache f32 1x41x8x2x16 state
+in src s32 4 data
+in dst s32 4 data
+in count s32 scalar data
+out kcache f32 1x41x8x2x16 state
+out vcache f32 1x41x8x2x16 state
+artifact nano.verify@2 file nano.verify@2.hlo.txt
+in kcache f32 1x41x8x2x16 state
+in vcache f32 1x41x8x2x16 state
+in tables s32 4x8 data
+in toks s32 4x2 data
+in pos s32 4 data
+out next s32 4x2 data
+out logp f32 4x2 data
+out kcache f32 1x41x8x2x16 state
+out vcache f32 1x41x8x2x16 state
+artifact nano.verify@4 file nano.verify@4.hlo.txt
+in kcache f32 1x41x8x2x16 state
+in vcache f32 1x41x8x2x16 state
+in tables s32 4x8 data
+in toks s32 4x4 data
+in pos s32 4 data
+out next s32 4x4 data
+out logp f32 4x4 data
+out kcache f32 1x41x8x2x16 state
+out vcache f32 1x41x8x2x16 state
+end
+";
+
     #[test]
     fn parses_sample() {
         let m = Manifest::parse(SAMPLE).unwrap();
@@ -605,6 +678,30 @@ end
     }
 
     #[test]
+    fn v5_verify_buckets_discovered() {
+        let m = Manifest::parse(SAMPLE_V5).unwrap();
+        assert_eq!(m.version, 5);
+        assert_eq!(m.verify_buckets("nano"), vec![2, 4]);
+        assert!(m.has_verify("nano"));
+        let v = m.artifact("nano.verify@2").unwrap();
+        assert_eq!(v.input_index("toks").unwrap(), 3);
+        assert_eq!(v.ins[3].dims, vec![4, 2]);
+        assert_eq!(v.output_index("next").unwrap(), 0);
+        assert_eq!(v.outs[0].dims, vec![4, 2]);
+        assert_eq!(v.outs[2].class, ArgClass::State);
+        // the verify scan never collides with other bucket families,
+        // and pre-v5 manifests advertise neither buckets nor the kit
+        assert_eq!(m.kv_install_paged_buckets("nano"), vec![2]);
+        let v4 = Manifest::parse(SAMPLE_V4).unwrap();
+        assert!(v4.verify_buckets("nano").is_empty());
+        assert!(!v4.has_verify("nano"));
+        // verify without the paged-KV base set is not a verifier
+        let no_paged = SAMPLE_V5.replace("artifact nano.kv_block_copy", "artifact nano.kv_other");
+        let m2 = Manifest::parse(&no_paged).unwrap();
+        assert!(!m2.has_verify("nano"));
+    }
+
+    #[test]
     fn bucket_selection_picks_smallest_fit() {
         let buckets = [1, 2, 4, 8, 16];
         assert_eq!(bucket_for(&buckets, 1), Some(1));
@@ -629,6 +726,7 @@ end
         assert!(Manifest::parse(SAMPLE_V2).is_ok());
         assert!(Manifest::parse(SAMPLE_V3).is_ok());
         assert!(Manifest::parse(SAMPLE_V4).is_ok());
+        assert!(Manifest::parse(SAMPLE_V5).is_ok());
     }
 
     #[test]

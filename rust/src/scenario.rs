@@ -46,8 +46,8 @@ use crate::batching::BatchMode;
 use crate::rng::Rng;
 use crate::runtime::Manifest;
 use crate::serve::{
-    self, submit_with_retry, Event, Fault, FaultKind, FaultPlan, Request, RequestHandle,
-    ServeConfig, Server, ServerStats,
+    self, submit_with_retry, DecodeMode, Event, Fault, FaultKind, FaultPlan, Request,
+    RequestHandle, ServeConfig, Server, ServerStats,
 };
 use crate::stats;
 use crate::tokenizer as tok;
@@ -300,6 +300,27 @@ pub fn gen_mixed_quality(seed: u64, n: usize, shape: GenShape) -> Trace {
         events.push(ev);
     }
     Trace { name: "mixed-quality".into(), events }
+}
+
+/// Traffic for the hybrid draft–verify decode mode: mixed per-request
+/// quality targets (exercising the escalation policy's verify/local
+/// split) over varied token budgets, so verify blocks of every bucket
+/// size and mid-block EOS/budget exhaustion all occur. Arrivals are
+/// gently bursty to keep several lanes resident at once — the masking
+/// rule for occupied-but-inactive lanes only matters under concurrency.
+pub fn gen_hybrid_decode(seed: u64, n: usize, shape: GenShape) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x4B12D);
+    const LEVELS: [f32; 5] = [0.05, 0.25, 0.5, 0.75, 1.0];
+    let mut events = Vec::with_capacity(n);
+    let mut t_us = 0u64;
+    for i in 0..n {
+        t_us += if i % 4 == 0 { exp_us(&mut rng, 6_000.0) } else { exp_us(&mut rng, 800.0) };
+        let mut ev = TraceEvent::new(Duration::from_micros(t_us), plen_uniform(&mut rng, shape));
+        ev.quality = Some(LEVELS[rng.below(LEVELS.len())]);
+        ev.max_new = Some(rng.range(1, shape.amax));
+        events.push(ev);
+    }
+    Trace { name: "hybrid-decode".into(), events }
 }
 
 /// Overload against a small admission window: arrivals far faster than
@@ -711,6 +732,33 @@ pub fn check_invariants(
             }
         }
     }
+    // hybrid draft/verify token ledger (all zero in routed mode, so
+    // these gate every scenario for free)
+    if stats.draft_accepted + stats.draft_local_accepted > stats.draft_tokens {
+        v.push(format!(
+            "hybrid ledger unbalanced: {} verify-accepted + {} local-accepted \
+             draft tokens exceed {} drafted",
+            stats.draft_accepted, stats.draft_local_accepted, stats.draft_tokens
+        ));
+    }
+    if !(0.0..=1.0).contains(&stats.draft_accept_rate) {
+        v.push(format!("draft_accept_rate {} outside [0, 1]", stats.draft_accept_rate));
+    }
+    if !stats.large_call_fraction.is_finite() || stats.large_call_fraction < 0.0 {
+        v.push(format!("large_call_fraction {} not finite and non-negative", stats.large_call_fraction));
+    }
+    if stats.hybrid_emitted > 0 && stats.verify_calls == 0 && stats.hybrid_degraded_blocks == 0 {
+        v.push(format!(
+            "{} hybrid tokens emitted with zero verify calls and no degraded blocks",
+            stats.hybrid_emitted
+        ));
+    }
+    if stats.hybrid_requests > 0 && stats.decode_steps == 0 {
+        v.push(format!(
+            "{} hybrid requests admitted but no draft decode steps ran",
+            stats.hybrid_requests
+        ));
+    }
     v
 }
 
@@ -726,6 +774,11 @@ pub struct Scenario {
     /// Whether the replay retries `Busy` (off for overload, where Busy
     /// is the expected behavior under test).
     pub retry_busy: bool,
+    /// Decode mode the server runs in ([`DecodeMode::Hybrid`] for the
+    /// draft–verify scenario; the server falls back to routed decoding
+    /// when the artifacts predate `verify@K`, so the scenario stays
+    /// runnable — and its invariants meaningful — on any manifest).
+    pub decode: DecodeMode,
 }
 
 /// The built-in scenario suite, in run order.
@@ -737,6 +790,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             make: gen_steady,
             queue_cap: None,
             retry_busy: true,
+            decode: DecodeMode::Routed,
         },
         Scenario {
             name: "poisson-burst",
@@ -744,6 +798,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             make: gen_poisson_burst,
             queue_cap: None,
             retry_busy: true,
+            decode: DecodeMode::Routed,
         },
         Scenario {
             name: "diurnal",
@@ -751,6 +806,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             make: gen_diurnal,
             queue_cap: None,
             retry_busy: true,
+            decode: DecodeMode::Routed,
         },
         Scenario {
             name: "long-tail",
@@ -758,6 +814,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             make: gen_long_tail,
             queue_cap: None,
             retry_busy: true,
+            decode: DecodeMode::Routed,
         },
         Scenario {
             name: "mixed-quality",
@@ -765,6 +822,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             make: gen_mixed_quality,
             queue_cap: None,
             retry_busy: true,
+            decode: DecodeMode::Routed,
         },
         Scenario {
             name: "overload-shed",
@@ -772,6 +830,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             make: gen_overload,
             queue_cap: Some(8),
             retry_busy: false,
+            decode: DecodeMode::Routed,
         },
         Scenario {
             name: "cancel-storm",
@@ -779,6 +838,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             make: gen_cancel_storm,
             queue_cap: None,
             retry_busy: true,
+            decode: DecodeMode::Routed,
         },
         Scenario {
             name: "sessions",
@@ -786,6 +846,15 @@ pub fn builtin_suite() -> Vec<Scenario> {
             make: gen_sessions,
             queue_cap: None,
             retry_busy: true,
+            decode: DecodeMode::Routed,
+        },
+        Scenario {
+            name: "hybrid-decode",
+            about: "token-level draft–verify decoding under mixed quality targets",
+            make: gen_hybrid_decode,
+            queue_cap: None,
+            retry_busy: true,
+            decode: DecodeMode::Hybrid,
         },
     ]
 }
@@ -942,6 +1011,11 @@ impl KickTiresReport {
             out.push((k("prefix_hit_rate"), s.stats.prefix_hit_rate));
             out.push((k("prefill_tokens"), s.stats.prefill_tokens as f64));
             out.push((k("kv_blocks_utilization"), s.stats.kv_blocks_utilization));
+            out.push((k("pool_exhausted_requeues"), s.stats.pool_exhausted_requeues as f64));
+            // hybrid draft–verify trajectory (all zero in routed mode)
+            out.push((k("hybrid_requests"), s.stats.hybrid_requests as f64));
+            out.push((k("draft_accept_rate"), s.stats.draft_accept_rate));
+            out.push((k("large_call_fraction"), s.stats.large_call_fraction));
             // failure-handling trajectory (the chaos scenarios' gate:
             // CI fails the run unless every `lost` entry is zero)
             out.push((k("failovers"), s.stats.failovers as f64));
@@ -1043,6 +1117,7 @@ pub fn kick_tires(opts: &KickTiresOpts) -> Result<KickTiresReport> {
         if let Some(cap) = sc.queue_cap {
             cfg.queue_cap = cap;
         }
+        cfg.decode = sc.decode;
         let trace = (sc.make)(opts.seed, n, shape);
         let (outcome, stats, violations) = run_one(cfg, &trace, sc.retry_busy, sc.name)?;
         scenarios.push(ScenarioReport {
@@ -1101,6 +1176,7 @@ mod tests {
             ("overload-shed", gen_overload),
             ("cancel-storm", gen_cancel_storm),
             ("sessions", gen_sessions),
+            ("hybrid-decode", gen_hybrid_decode),
         ] {
             let a = gen(7, 50, SHAPE);
             let b = gen(7, 50, SHAPE);
@@ -1257,6 +1333,17 @@ mod tests {
             retries: 0,
             worker_deaths: 0,
             breaker_state: Vec::new(),
+            hybrid_requests: 0,
+            draft_tokens: 0,
+            draft_accepted: 0,
+            draft_local_accepted: 0,
+            verify_calls: 0,
+            hybrid_emitted: 0,
+            hybrid_degraded_blocks: 0,
+            draft_accept_rate: 0.0,
+            large_call_fraction: 0.0,
+            large_slot_steps: 0,
+            pool_exhausted_requeues: 0,
         }
     }
 
@@ -1329,6 +1416,42 @@ mod tests {
     }
 
     #[test]
+    fn invariants_catch_hybrid_ledger_imbalance() {
+        let out = outcome(4, 4, 0, 0);
+        // accepted tokens exceed drafted tokens
+        let mut st = stats_with(4, 0, 0);
+        st.draft_tokens = 5;
+        st.draft_accepted = 4;
+        st.draft_local_accepted = 2;
+        let v = check_invariants(&out, &st, 256, &TransferBounds::default());
+        assert!(v.iter().any(|m| m.contains("hybrid ledger unbalanced")), "{v:?}");
+        // emitted tokens without any verify call or degraded block
+        let mut st = stats_with(4, 0, 0);
+        st.hybrid_emitted = 3;
+        let v = check_invariants(&out, &st, 256, &TransferBounds::default());
+        assert!(v.iter().any(|m| m.contains("zero verify calls")), "{v:?}");
+        // out-of-range derived rates
+        let mut st = stats_with(4, 0, 0);
+        st.draft_accept_rate = 1.5;
+        st.large_call_fraction = f64::NAN;
+        let v = check_invariants(&out, &st, 256, &TransferBounds::default());
+        assert!(v.iter().any(|m| m.contains("draft_accept_rate")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("large_call_fraction")), "{v:?}");
+        // a consistent hybrid ledger passes
+        let mut st = stats_with(4, 0, 0);
+        st.hybrid_requests = 4;
+        st.decode_steps = 12;
+        st.draft_tokens = 10;
+        st.draft_accepted = 6;
+        st.draft_local_accepted = 2;
+        st.verify_calls = 3;
+        st.hybrid_emitted = 11;
+        st.draft_accept_rate = 0.6;
+        st.large_call_fraction = 3.0 / 11.0;
+        assert!(check_invariants(&out, &st, 256, &TransferBounds::default()).is_empty());
+    }
+
+    #[test]
     fn bench_entries_use_legal_flat_json_keys() {
         let report = KickTiresReport {
             scenarios: vec![ScenarioReport {
@@ -1369,6 +1492,7 @@ mod tests {
             "overload-shed",
             "cancel-storm",
             "sessions",
+            "hybrid-decode",
         ] {
             assert!(names.contains(want), "missing scenario {want}");
         }
@@ -1377,6 +1501,20 @@ mod tests {
         let over = suite.iter().find(|s| s.name == "overload-shed").unwrap();
         assert_eq!(over.queue_cap, Some(8));
         assert!(!over.retry_busy);
+        // exactly one scenario opts into the hybrid draft–verify mode
+        let hybrid: Vec<_> =
+            suite.iter().filter(|s| s.decode == DecodeMode::Hybrid).map(|s| s.name).collect();
+        assert_eq!(hybrid, ["hybrid-decode"]);
+        // its traffic mixes quality targets and token budgets so the
+        // escalation policy's verify/local split actually engages
+        let t = gen_hybrid_decode(5, 60, SHAPE);
+        let qs: std::collections::BTreeSet<_> =
+            t.events.iter().map(|e| (e.quality.unwrap() * 100.0) as u32).collect();
+        assert!(qs.len() >= 4, "expected mixed quality targets, got {qs:?}");
+        assert!(t.events.iter().all(|e| {
+            let m = e.max_new.unwrap();
+            (1..=SHAPE.amax).contains(&m)
+        }));
     }
 
     #[test]

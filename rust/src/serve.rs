@@ -55,8 +55,9 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::batching::{BatchMode, KvCache, Slot, SlotTable};
+use crate::hybrid::{self, VerifyBreaker};
 use crate::io::Tensor;
-use crate::lm::{LmEngine, PagedArtifacts};
+use crate::lm::{LmEngine, PagedArtifacts, VerifyArtifacts};
 use crate::metrics::{LatencyRecorder, LatencySummary, RoutingCounters, RoutingSnapshot};
 use crate::paged::{blocks_needed, release_table, BlockAllocator, PagedKvCache, PrefixCache, PrefixHit};
 use crate::policy::{LadderFamily, TierPolicy};
@@ -153,6 +154,23 @@ pub fn parse_tiers(spec: &str) -> Result<Vec<TierSpec>> {
         .collect())
 }
 
+/// How the server turns a routed request into tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Per-request tier routing (the paper's baseline): the router picks
+    /// one tier and that tier's worker decodes the whole answer.
+    Routed,
+    /// Token-level speculative draft–verify between the cheapest and the
+    /// most expensive tier (DESIGN.md §12): the small tier drafts blocks
+    /// from its own KV state, the large tier verifies each block in one
+    /// `verify@K` forward pass, and longest-prefix acceptance plus a
+    /// correction token keeps the stream byte-identical to large-only
+    /// greedy decoding whenever every block verifies. Requires manifest
+    /// v5 `verify@K` artifacts plus the paged-KV path on both tiers;
+    /// otherwise requests silently fall back to `Routed`.
+    Hybrid,
+}
+
 /// Replica selection within a tier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReplicaSelect {
@@ -228,6 +246,14 @@ pub struct ServeConfig {
     /// would. `None` (the default everywhere outside the chaos suite)
     /// compiles to an always-empty check.
     pub fault_plan: Option<FaultPlan>,
+    /// Default decode mode for requests without a per-request override
+    /// ([`Request::decode`]). [`DecodeMode::Hybrid`] needs a ≥2-tier
+    /// fleet, manifest-v5 `verify@K` artifacts on the large tier, and
+    /// the paged-KV path on both ends (`force_dense_kv` /
+    /// `force_host_admission` disable it); when unavailable the server
+    /// serves every request `Routed` and reports zero hybrid activity in
+    /// [`ServerStats`].
+    pub decode: DecodeMode,
 }
 
 /// One injected fault: fires in tier `tier`, replica `replica`, when
@@ -317,6 +343,7 @@ impl ServeConfig {
             decode_timeout: None,
             retry_budget: 2,
             fault_plan: None,
+            decode: DecodeMode::Routed,
         }
     }
 }
@@ -356,6 +383,7 @@ pub struct Request {
     deadline: Option<Duration>,
     policy: Option<TierPolicy>,
     truncate: bool,
+    decode: Option<DecodeMode>,
 }
 
 impl Request {
@@ -409,6 +437,17 @@ impl Request {
     /// decode worker instead.
     pub fn truncate_prompt(mut self) -> Request {
         self.truncate = true;
+        self
+    }
+
+    /// Per-request decode-mode override (takes precedence over
+    /// [`ServeConfig::decode`]): opt one request into token-level hybrid
+    /// draft–verify decoding, or pin it to classic per-request routing,
+    /// regardless of the server default. Hybrid requests fall back to
+    /// `Routed` when the artifacts cannot support the protocol (pre-v5
+    /// manifest, single-tier fleet, dense-KV mode).
+    pub fn decode(mut self, mode: DecodeMode) -> Request {
+        self.decode = Some(mode);
         self
     }
 }
@@ -614,6 +653,12 @@ struct InFlight {
     /// Times this request has been requeued after a worker death;
     /// bounded by [`ServeConfig::retry_budget`].
     retries: u32,
+    /// Resolved decode mode: serve through the hybrid draft–verify
+    /// worker instead of a routed tier. Set at submit from the request
+    /// override / server default, and only when the artifacts support
+    /// the protocol; stripped on requeue after a hybrid-worker death so
+    /// the retry lands on the routed path.
+    hybrid: bool,
     /// Holds the admission-window slot for this request's lifetime.
     _admission: AdmissionGuard,
 }
@@ -950,6 +995,35 @@ pub struct ServerMetrics {
     /// Worker serve-loop deaths absorbed by the supervisor (panic or
     /// error; each respawn-in-place increments once).
     pub worker_deaths: AtomicU64,
+    /// Requests served by the hybrid draft–verify worker.
+    pub hybrid_requests: AtomicU64,
+    /// Tokens drafted by the small tier in hybrid lanes (catch-up
+    /// steps excluded).
+    pub draft_tokens: AtomicU64,
+    /// Drafted tokens accepted by a large-tier verify call.
+    pub draft_accepted: AtomicU64,
+    /// Drafted tokens streamed without verification (escalation-policy
+    /// short-circuit or verify-breaker degradation).
+    pub draft_local_accepted: AtomicU64,
+    /// Per-lane verify invocations — each is one large-tier forward
+    /// pass for that lane.
+    pub verify_calls: AtomicU64,
+    /// Tokens emitted by hybrid lanes (all sources, first token
+    /// excluded — it comes from the large tier's prefill).
+    pub hybrid_emitted: AtomicU64,
+    /// Draft blocks streamed unverified because the verify breaker was
+    /// open (large-tier outage degraded to pure small-tier drafting).
+    pub hybrid_degraded_blocks: AtomicU64,
+    /// Occupied-slot decode steps on the most expensive tier's routed
+    /// workers — per-lane large forward passes, the routed-side term of
+    /// the hybrid-vs-routed cost comparison (hybrid's term is
+    /// `verify_calls`).
+    pub large_slot_steps: AtomicU64,
+    /// Admission waves cut short by KV block-pool exhaustion *after*
+    /// LRU eviction (the evict-then-requeue path in paged admission).
+    /// Distinct from ordinary slot-table pressure: sustained growth here
+    /// means the pool, not the batch, is the bottleneck.
+    pub pool_exhausted_requeues: AtomicU64,
 }
 
 /// Point-in-time per-tier report.
@@ -1011,6 +1085,36 @@ pub struct ServerStats {
     /// Per-tier breaker state at snapshot time (`"closed"` / `"open"` /
     /// `"half-open"`), indexed like `tiers`.
     pub breaker_state: Vec<&'static str>,
+    /// Requests served by the hybrid draft–verify worker (0 in routed
+    /// mode or when the artifacts cannot support the protocol).
+    pub hybrid_requests: u64,
+    /// Tokens drafted by the small tier in hybrid lanes.
+    pub draft_tokens: u64,
+    /// Drafted tokens a large-tier verify call accepted.
+    pub draft_accepted: u64,
+    /// Drafted tokens streamed without verification (escalation-policy
+    /// short-circuit or verify-breaker degradation).
+    pub draft_local_accepted: u64,
+    /// Per-lane verify invocations (one large forward pass each).
+    pub verify_calls: u64,
+    /// Tokens emitted by hybrid lanes (prefill first token excluded).
+    pub hybrid_emitted: u64,
+    /// Draft blocks streamed unverified under an open verify breaker.
+    pub hybrid_degraded_blocks: u64,
+    /// `draft_accepted / draft_tokens` (0 with no hybrid drafting) —
+    /// the draft-quality headline.
+    pub draft_accept_rate: f64,
+    /// `verify_calls / hybrid_emitted` (0 with no hybrid traffic):
+    /// large forward passes per emitted hybrid token. Pure large-tier
+    /// decoding is 1.0 by construction; anything below it is the
+    /// speculative win.
+    pub large_call_fraction: f64,
+    /// Occupied-slot decode steps on the most expensive tier's routed
+    /// workers — per-lane large forward passes on the routed path.
+    pub large_slot_steps: u64,
+    /// Paged-admission waves requeued on KV block-pool exhaustion after
+    /// LRU eviction — the pool (not the slot table) was the bottleneck.
+    pub pool_exhausted_requeues: u64,
 }
 
 impl ServerStats {
@@ -1091,6 +1195,16 @@ pub struct Server {
     queue_cap: u64,
     /// The artifacts' prompt window, for submit-time length validation.
     sprompt: usize,
+    /// Shutdown channel to the hybrid draft–verify worker (`None` when
+    /// the artifacts cannot support the protocol; its join handle lives
+    /// in `worker_handles`).
+    hybrid_tx: Option<Sender<WorkMsg>>,
+    /// Resolved at start: `submit` only flags a request hybrid when a
+    /// worker exists to serve it, so the router never holds an
+    /// unserviceable hybrid request.
+    hybrid_available: bool,
+    /// Server-wide default decode mode ([`ServeConfig::decode`]).
+    default_decode: DecodeMode,
 }
 
 fn snapshot_stats(
@@ -1142,6 +1256,31 @@ fn snapshot_stats(
         retries: metrics.retries.load(Ordering::Relaxed),
         worker_deaths: metrics.worker_deaths.load(Ordering::Relaxed),
         breaker_state: health.states(),
+        hybrid_requests: metrics.hybrid_requests.load(Ordering::Relaxed),
+        draft_tokens: metrics.draft_tokens.load(Ordering::Relaxed),
+        draft_accepted: metrics.draft_accepted.load(Ordering::Relaxed),
+        draft_local_accepted: metrics.draft_local_accepted.load(Ordering::Relaxed),
+        verify_calls: metrics.verify_calls.load(Ordering::Relaxed),
+        hybrid_emitted: metrics.hybrid_emitted.load(Ordering::Relaxed),
+        hybrid_degraded_blocks: metrics.hybrid_degraded_blocks.load(Ordering::Relaxed),
+        draft_accept_rate: {
+            let drafted = metrics.draft_tokens.load(Ordering::Relaxed);
+            if drafted == 0 {
+                0.0
+            } else {
+                metrics.draft_accepted.load(Ordering::Relaxed) as f64 / drafted as f64
+            }
+        },
+        large_call_fraction: {
+            let emitted = metrics.hybrid_emitted.load(Ordering::Relaxed);
+            if emitted == 0 {
+                0.0
+            } else {
+                metrics.verify_calls.load(Ordering::Relaxed) as f64 / emitted as f64
+            }
+        },
+        large_slot_steps: metrics.large_slot_steps.load(Ordering::Relaxed),
+        pool_exhausted_requeues: metrics.pool_exhausted_requeues.load(Ordering::Relaxed),
     }
 }
 
@@ -1171,12 +1310,20 @@ impl Server {
                 cfg.tiers.len()
             );
         }
-        // the manifest is the source of truth for the prompt window;
-        // loading it here (text parse, no PJRT) lets submit() reject
-        // oversized prompts before they reach a prefill
-        let sprompt = Manifest::load(&cfg.artifacts_dir.join("manifest.txt"))?
-            .globals
-            .sprompt;
+        // the manifest is the source of truth for the prompt window
+        // (submit() rejects oversized prompts before they reach a
+        // prefill) and for hybrid availability — a text parse, no PJRT
+        let manifest = Manifest::load(&cfg.artifacts_dir.join("manifest.txt"))?;
+        let sprompt = manifest.globals.sprompt;
+        // hybrid draft–verify worker (DESIGN.md §12): spawned only when
+        // the artifacts can honour the protocol — a ≥2-tier fleet, the
+        // paged-KV path on both ends, and manifest-v5 `verify@K`
+        // artifacts on the most expensive tier
+        let hybrid_available = cfg.tiers.len() >= 2
+            && !cfg.force_dense_kv
+            && !cfg.force_host_admission
+            && manifest.has_verify(&cfg.tiers[cfg.tiers.len() - 1].model)
+            && manifest.has_paged_kv(&cfg.tiers[0].model);
         let tier_names: Vec<String> = cfg.tiers.iter().map(|t| t.name.clone()).collect();
         let costs: Vec<f64> = cfg.tiers.iter().map(|t| t.cost).collect();
         let metrics = Arc::new(ServerMetrics {
@@ -1204,6 +1351,15 @@ impl Server {
             degraded: AtomicU64::new(0),
             retries: AtomicU64::new(0),
             worker_deaths: AtomicU64::new(0),
+            hybrid_requests: AtomicU64::new(0),
+            draft_tokens: AtomicU64::new(0),
+            draft_accepted: AtomicU64::new(0),
+            draft_local_accepted: AtomicU64::new(0),
+            verify_calls: AtomicU64::new(0),
+            hybrid_emitted: AtomicU64::new(0),
+            hybrid_degraded_blocks: AtomicU64::new(0),
+            large_slot_steps: AtomicU64::new(0),
+            pool_exhausted_requeues: AtomicU64::new(0),
         });
         let replicas: Vec<usize> = cfg.tiers.iter().map(|t| t.replicas).collect();
         let health = Arc::new(FleetHealth::new(&replicas));
@@ -1249,14 +1405,43 @@ impl Server {
             dispatch.push(TierDispatch { txs: txs.clone(), depths, rr: 0 });
             tier_txs.push(txs);
         }
+        // the hybrid worker sits outside the tier fleet: its own
+        // channel, depth, and heartbeat, supervised like a replica but
+        // never watched by the stall monitor (verify outages degrade to
+        // drafting instead of stalling, so its heartbeat semantics
+        // differ)
+        let hybrid = if hybrid_available {
+            let (tx, rx) = mpsc::channel::<WorkMsg>();
+            let depth = Arc::new(AtomicU64::new(0));
+            let links = WorkerLinks {
+                rx,
+                depth: depth.clone(),
+                metrics: metrics.clone(),
+                health: health.clone(),
+                heartbeat: Arc::new(AtomicU64::new(0)),
+                ingress: ingress.clone(),
+                ready: ready_tx.clone(),
+            };
+            let cfg = cfg.clone();
+            worker_handles.push(
+                std::thread::Builder::new()
+                    .name("hybrid".into())
+                    .spawn(move || hybrid_thread(cfg, links))?,
+            );
+            n_workers += 1;
+            Some((tx, depth))
+        } else {
+            None
+        };
         let router_handle = {
             let cfg = cfg.clone();
             let m = metrics.clone();
             let h = health.clone();
             let rtx = ready_tx.clone();
+            let hd = hybrid.clone();
             std::thread::Builder::new()
                 .name("router".into())
-                .spawn(move || router_thread(cfg, router_rx, dispatch, m, h, rtx))?
+                .spawn(move || router_thread(cfg, router_rx, dispatch, m, h, rtx, hd))?
         };
         drop(ready_tx);
         for _ in 0..n_workers + 1 {
@@ -1290,6 +1475,9 @@ impl Server {
             next_id: AtomicU64::new(0),
             queue_cap: cfg.queue_cap as u64,
             sprompt,
+            hybrid_tx: hybrid.map(|(tx, _)| tx),
+            hybrid_available,
+            default_decode: cfg.decode,
         })
     }
 
@@ -1350,6 +1538,8 @@ impl Server {
             tx,
             cancel: cancel.clone(),
             retries: 0,
+            hybrid: self.hybrid_available
+                && req.decode.unwrap_or(self.default_decode) == DecodeMode::Hybrid,
             _admission: AdmissionGuard(self.metrics.in_flight.clone()),
         };
         // a failed send returns (and drops) the request, releasing its
@@ -1399,6 +1589,7 @@ impl Server {
             health,
             monitor_handle,
             monitor_stop,
+            hybrid_tx,
             ..
         } = self;
         let _ = ingress.send(RouterMsg::Shutdown);
@@ -1411,7 +1602,11 @@ impl Server {
         // requeued work can be in flight anywhere
         drop(ingress);
         // all dispatches are now enqueued (or the router failed); workers
-        // may stop once they drain
+        // may stop once they drain (the hybrid worker joins with the
+        // tier workers — its handle lives in `worker_handles`)
+        if let Some(tx) = &hybrid_tx {
+            let _ = tx.send(WorkMsg::Shutdown);
+        }
         for txs in &tier_txs {
             for tx in txs {
                 let _ = tx.send(WorkMsg::Shutdown);
@@ -1490,6 +1685,7 @@ fn router_thread(
     metrics: Arc<ServerMetrics>,
     health: Arc<FleetHealth>,
     ready: Sender<()>,
+    hybrid: Option<(Sender<WorkMsg>, Arc<AtomicU64>)>,
 ) -> Result<()> {
     let rt = Runtime::load(&cfg.artifacts_dir)?;
     let router = if cfg.router.is_empty() {
@@ -1558,7 +1754,7 @@ fn router_thread(
         };
         let per_query = t_score.elapsed() / batch.len() as u32;
         let assigns = cfg.policy.assign(&scores);
-        for ((req, score), default_tier) in batch.into_iter().zip(scores).zip(assigns) {
+        for ((mut req, score), default_tier) in batch.into_iter().zip(scores).zip(assigns) {
             metrics.router_latency.record(per_query);
             // per-request resolution: an explicit policy override wins,
             // then the quality target through the ladder family, then
@@ -1595,6 +1791,41 @@ fn router_thread(
                 metrics.routing.shed(want);
                 finish(req, Event::Failed { reason: "deadline expired before dispatch".into() });
                 continue;
+            }
+            // hybrid dispatch: draft–verify requests bypass tier
+            // selection (both boundary tiers participate) and go to the
+            // dedicated hybrid worker; the `Routed` announcement names
+            // the large tier, whose output the stream is pinned to. A
+            // dead hybrid channel strips the flag and falls through to
+            // classic routing instead of failing the request.
+            if req.hybrid {
+                match &hybrid {
+                    Some((htx, hdepth)) => {
+                        if req.tx.send(Event::Routed { tier: last_tier, score }).is_err() {
+                            // handle already dropped: implicit
+                            // cancellation, the drop frees the slot
+                            metrics.routing.cancel(last_tier);
+                            continue;
+                        }
+                        hdepth.fetch_add(1, Ordering::Relaxed);
+                        let routed = Instant::now();
+                        match htx.send(WorkMsg::Work(Work { req, score, routed })) {
+                            Ok(()) => {
+                                metrics.routing.route(last_tier);
+                                continue;
+                            }
+                            Err(mpsc::SendError(WorkMsg::Work(w))) => {
+                                hdepth.fetch_sub(1, Ordering::Relaxed);
+                                req = w.req;
+                                req.hybrid = false;
+                            }
+                            Err(mpsc::SendError(WorkMsg::Shutdown)) => {
+                                unreachable!("router only sends Work")
+                            }
+                        }
+                    }
+                    None => req.hybrid = false,
+                }
             }
             let routed = Instant::now();
             // availability mask: re-resolve the decision over live tiers
@@ -1721,6 +1952,10 @@ struct WorkerCtx {
     table: SlotTable<Work>,
     kv: KvCache,
     tier: usize,
+    /// This worker serves the most expensive tier: its per-slot decode
+    /// work feeds [`ServerMetrics::large_slot_steps`], the routed-mode
+    /// term of the hybrid-vs-routed large-pass comparison.
+    large_tier: bool,
     depth: Arc<AtomicU64>,
     /// Fleet availability: completions feed the tier breaker's success
     /// signal ([`FleetHealth::record_success`]).
@@ -2006,6 +2241,7 @@ fn worker_thread(cfg: ServeConfig, tier: usize, replica: usize, links: WorkerLin
         table: SlotTable::new(g.genb),
         kv: KvCache::zeros(meta.layers, g.genb, g.sctx, meta.heads, meta.headdim),
         tier,
+        large_tier: tier + 1 == cfg.tiers.len(),
         depth: links.depth.clone(),
         health: links.health.clone(),
         prefill,
@@ -2481,7 +2717,12 @@ fn admit_paged(
         if p.alloc.free_count() < fresh_needed {
             // pool exhausted even after eviction: requeue this request
             // and the rest of the wave in order (no starvation — they
-            // go back to the backlog front and retry first)
+            // go back to the backlog front and retry first). Counted
+            // distinctly so operators can tell pool pressure from
+            // admission-window backpressure in `ServerStats`.
+            metrics
+                .pool_exhausted_requeues
+                .fetch_add(1, Ordering::Relaxed);
             leftover.push(w);
             leftover.extend(&mut work_iter);
             break;
@@ -2818,6 +3059,11 @@ fn run_decode_dense(
     metrics
         .decode_slot_steps
         .fetch_add(ctx.table.occupied() as u64, Ordering::Relaxed);
+    if ctx.large_tier {
+        metrics
+            .large_slot_steps
+            .fetch_add(ctx.table.occupied() as u64, Ordering::Relaxed);
+    }
     metrics
         .decode_h2d_bytes
         .fetch_add(moved.h2d_bytes, Ordering::Relaxed);
@@ -2906,6 +3152,11 @@ fn run_decode_paged(
     metrics
         .decode_slot_steps
         .fetch_add(ctx.table.occupied() as u64, Ordering::Relaxed);
+    if ctx.large_tier {
+        metrics
+            .large_slot_steps
+            .fetch_add(ctx.table.occupied() as u64, Ordering::Relaxed);
+    }
     metrics
         .decode_h2d_bytes
         .fetch_add(moved.h2d_bytes, Ordering::Relaxed);
@@ -2981,6 +3232,1015 @@ fn complete(
         routing: routed - req.t0,
     });
     finish(req, done);
+}
+
+// ---------------------------------------------------------------------------
+// Hybrid draft–verify worker (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// One in-flight hybrid request. Token bookkeeping (positions are
+/// 0-based sequence indices; `seq[i]` sits at position `i`):
+///
+/// * `seq` = prompt ++ every streamed token — the committed stream;
+/// * `spos` — the small tier's KV is valid for positions `< spos`
+///   (later positions may hold rejected-draft state, overwritten on the
+///   next catch-up pass);
+/// * `lpos` — the large tier's KV is valid for positions `< lpos` and
+///   `seq[lpos..]` is the *unverified tail*: streamed (local-accepted)
+///   tokens the large tier has not consumed yet. After any successful
+///   verify call `lpos == seq.len() - 1` (the tail is empty and only
+///   the newest token awaits the next call).
+struct HybridLane {
+    work: Work,
+    seq: Vec<i32>,
+    answer: Vec<i32>,
+    logprob_sum: f32,
+    spos: usize,
+    lpos: usize,
+    /// Quality target driving the escalation policy
+    /// ([`crate::policy::should_verify`]); unset requests default to 1.0
+    /// (always verify — byte-identical to large-only greedy decoding).
+    quality: f32,
+    seed: u32,
+}
+
+/// One tier's engine-side state inside the hybrid worker: a private
+/// block pool (no cross-request prefix trie — lanes always prefill into
+/// fresh blocks; the pool is sized for `genb` full-context lanes, so
+/// allocation cannot fail) plus the resident maps mirroring
+/// [`WorkerCtx`]'s.
+struct HybridEngine {
+    engine: LmEngine,
+    arts: PagedArtifacts,
+    pool: PagedKvCache,
+    alloc: BlockAllocator,
+    /// Per-lane block tables `[genb][maxblk]`; entry 0 = unallocated.
+    tables: Vec<Vec<u32>>,
+    tables_t: Tensor,
+    prefill: Arc<Exec>,
+    /// Prefill admission bucket sizes (ascending, `<= genb`).
+    buckets: Vec<usize>,
+    prefill_resident: HashMap<usize, Arc<xla::PjRtBuffer>>,
+    decode_resident: HashMap<usize, Arc<xla::PjRtBuffer>>,
+}
+
+impl HybridEngine {
+    /// Back position `pos` of lane `idx` with a pool block before a
+    /// kernel writes KV there (same growth rule as [`run_decode_paged`];
+    /// fresh-blocks-only pool geometry makes exhaustion impossible).
+    fn grow(&mut self, idx: usize, pos: usize) -> Result<()> {
+        let j = pos / self.arts.block;
+        if j < self.arts.maxblk && self.tables[idx][j] == 0 {
+            self.tables[idx][j] = self
+                .alloc
+                .alloc()
+                .context("hybrid pool exhausted growing a lane (pool undersized)")?;
+        }
+        Ok(())
+    }
+
+    /// Refill and return the `[genb, maxblk]` block-table tensor.
+    fn fill_tables(&mut self) -> Result<&Tensor> {
+        let maxblk = self.arts.maxblk;
+        let tt = self.tables_t.as_i32_mut()?;
+        for (i, table) in self.tables.iter().enumerate() {
+            for (j, &b) in table.iter().enumerate() {
+                tt[i * maxblk + j] = b as i32;
+            }
+        }
+        Ok(&self.tables_t)
+    }
+
+    /// Release lane `idx`'s blocks back to the pool.
+    fn release(&mut self, idx: usize) -> Result<()> {
+        release_table(&mut self.tables[idx], &mut self.alloc)
+    }
+}
+
+/// Everything the hybrid worker owns, on the supervisor's side of the
+/// unwind boundary (mirrors [`WorkerCtx`]).
+struct HybridCtx {
+    /// Small (cheapest) tier: drafts tokens from its own KV state.
+    draft: HybridEngine,
+    /// Large (most expensive) tier: batch-verifies drafted blocks.
+    verify: HybridEngine,
+    varts: VerifyArtifacts,
+    /// Verify bucket sizes (ascending) and the largest one.
+    vbuckets: Vec<usize>,
+    max_k: usize,
+    lanes: Vec<Option<HybridLane>>,
+    breaker: VerifyBreaker,
+    ledger: hybrid::Ledger,
+    /// Index of the most expensive tier — hybrid completions are
+    /// attributed to it (the stream is pinned to its output).
+    tier: usize,
+    depth: Arc<AtomicU64>,
+    health: Arc<FleetHealth>,
+    // decode/verify-input scratch, refilled in place per call
+    cur_t: Tensor,
+    pos_t: Tensor,
+    step_t: Tensor,
+    seeds_t: Tensor,
+    temp_t: Tensor,
+}
+
+impl HybridCtx {
+    fn occupied(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Release lane `idx`'s blocks on **both** tiers.
+    fn release_lane(&mut self, idx: usize) -> Result<()> {
+        self.draft.release(idx)?;
+        self.verify.release(idx)
+    }
+}
+
+/// What one round does with one lane.
+#[derive(Clone, Copy, PartialEq)]
+enum LanePlan {
+    /// Draft `gamma` fresh tokens, then verify the unverified tail plus
+    /// the drafts in one `verify@k` call (`k = pending + 1 + gamma`).
+    Verify { k: usize, gamma: usize },
+    /// The unverified tail outgrew every verify bucket: feed `k` tail
+    /// tokens through `verify@k` purely to advance the large KV
+    /// (outputs ignored, nothing emitted).
+    Sync { k: usize },
+    /// Draft `gamma` tokens and stream them unverified (open breaker
+    /// degradation; `degraded` distinguishes it from a policy skip).
+    Local { gamma: usize, degraded: bool },
+}
+
+/// How [`lane_emit`] left the lane.
+enum LaneEnd {
+    Alive,
+    /// Stop rule hit (EOS / token budget / context edge) — complete.
+    Finished,
+    /// The client dropped its handle — cancel.
+    Dead,
+}
+
+/// Stream one token to a lane, enforcing exactly the routed decoder's
+/// stop rules ([`decode_step`]): EOS and budget/context checks fire
+/// *before* the token is appended, so a hybrid stream truncates at the
+/// same point a routed large-tier stream would.
+fn lane_emit(l: &mut HybridLane, t: i32, lp: f32, amax: usize, sctx: usize) -> LaneEnd {
+    let n = l.answer.len();
+    let plen = l.seq.len() - n;
+    if t == tok::EOS || n >= l.work.req.token_limit(amax) || context_full(plen + n, sctx) {
+        return LaneEnd::Finished;
+    }
+    if l.work.req.tx.send(Event::Token { token: t, logprob: lp }).is_err() {
+        return LaneEnd::Dead;
+    }
+    l.answer.push(t);
+    l.seq.push(t);
+    l.logprob_sum += lp;
+    LaneEnd::Alive
+}
+
+/// Terminal `Done` for a finished hybrid lane (mirrors [`complete`]).
+fn hybrid_complete(ctx: &HybridCtx, lane: HybridLane, metrics: &Arc<ServerMetrics>) {
+    let HybridLane { work, answer, logprob_sum, .. } = lane;
+    let Work { req, score, routed } = work;
+    let mean = logprob_sum / answer.len().max(1) as f32;
+    let e2e = req.t0.elapsed();
+    metrics.e2e_latency.record(e2e);
+    metrics.tier_latency[ctx.tier].record(e2e);
+    metrics.routing.complete(0.0);
+    ctx.health.record_success(ctx.tier);
+    ctx.depth.fetch_sub(1, Ordering::Relaxed);
+    let done = Event::Done(Completion {
+        id: req.id,
+        tokens: answer,
+        tier: ctx.tier,
+        router_score: score,
+        mean_logprob: mean,
+        e2e,
+        routing: routed - req.t0,
+    });
+    finish(req, done);
+}
+
+/// Terminal `Cancelled` for a hybrid lane or backlog entry.
+fn hybrid_cancel(ctx: &HybridCtx, w: Work, metrics: &Arc<ServerMetrics>) {
+    metrics.routing.cancel(ctx.tier);
+    ctx.depth.fetch_sub(1, Ordering::Relaxed);
+    finish(w.req, Event::Cancelled);
+}
+
+/// Retire cancelled / deadline-expired work queued for the hybrid
+/// worker (mirrors [`sweep_backlog`]).
+fn hybrid_sweep(backlog: &mut Vec<Work>, ctx: &HybridCtx, metrics: &Arc<ServerMetrics>) {
+    let now = Instant::now();
+    if !backlog
+        .iter()
+        .any(|w| w.req.cancelled() || w.req.expired_at(now))
+    {
+        return;
+    }
+    let mut kept: Vec<Work> = Vec::with_capacity(backlog.len());
+    for w in backlog.drain(..) {
+        if w.req.cancelled() {
+            hybrid_cancel(ctx, w, metrics);
+        } else if w.req.expired_at(now) {
+            metrics.routing.shed(ctx.tier);
+            ctx.depth.fetch_sub(1, Ordering::Relaxed);
+            finish(w.req, Event::Failed { reason: "deadline expired before decode".into() });
+        } else {
+            kept.push(w);
+        }
+    }
+    *backlog = kept;
+}
+
+/// The hybrid worker's supervisor thread: mirrors [`worker_thread`]'s
+/// catch-unwind/respawn protocol, with one twist — requests orphaned by
+/// a death are stripped of their hybrid flag before the requeue, so the
+/// retry lands on the classic routed path instead of bouncing off the
+/// same failure.
+fn hybrid_thread(cfg: ServeConfig, links: WorkerLinks) -> Result<()> {
+    let small = cfg.tiers[0].model.clone();
+    let large = cfg.tiers[cfg.tiers.len() - 1].model.clone();
+    let tier = cfg.tiers.len() - 1;
+    // one PJRT client for both engines: unlike tier replicas (separate
+    // address spaces by design), draft and verify are one worker's two
+    // halves and share a runtime
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let g = rt.manifest.globals;
+    let make_engine = |model: &str| -> Result<HybridEngine> {
+        let engine =
+            LmEngine::load(rt.clone(), model, &cfg.run_dir.join("params").join(model))?;
+        let arts = engine
+            .paged_artifacts()?
+            .with_context(|| format!("{model}: hybrid decode needs the paged-KV artifacts"))?;
+        let meta = *rt.manifest.model(model)?;
+        let pool = PagedKvCache::zeros_on_device(
+            &rt,
+            meta.layers,
+            arts.nblk,
+            arts.block,
+            meta.heads,
+            meta.headdim,
+        )?;
+        let alloc = BlockAllocator::new(arts.nblk);
+        let prefill = rt.exec(&format!("{model}.prefill"))?;
+        let buckets: Vec<usize> = rt
+            .manifest
+            .prefill_buckets(model)
+            .into_iter()
+            .filter(|&b| b <= g.genb)
+            .collect();
+        let prefill_resident = engine.params.resident_map();
+        let decode_resident = prefill_resident.clone();
+        let maxblk = arts.maxblk;
+        Ok(HybridEngine {
+            engine,
+            pool,
+            alloc,
+            tables: vec![vec![0u32; maxblk]; g.genb],
+            tables_t: Tensor::i32(vec![g.genb, maxblk], vec![0; g.genb * maxblk]),
+            prefill,
+            buckets,
+            prefill_resident,
+            decode_resident,
+            arts,
+        })
+    };
+    let draft = make_engine(&small)?;
+    let verify_eng = make_engine(&large)?;
+    let varts = verify_eng
+        .engine
+        .verify_artifacts()?
+        .with_context(|| format!("{large}: hybrid decode needs the verify@K artifacts"))?;
+    let vbuckets: Vec<usize> = varts.execs.iter().map(|(k, _)| *k).collect();
+    let max_k = varts.max_k();
+    anyhow::ensure!(max_k >= 1, "{large}: empty verify@K family");
+    // warm the largest verify bucket (the steady-state call)
+    rt.exec(&format!("{large}.verify@{max_k}"))?;
+    let mut ctx = HybridCtx {
+        draft,
+        verify: verify_eng,
+        varts,
+        vbuckets,
+        max_k,
+        lanes: (0..g.genb).map(|_| None).collect(),
+        breaker: VerifyBreaker::new(),
+        ledger: hybrid::Ledger::default(),
+        tier,
+        depth: links.depth.clone(),
+        health: links.health.clone(),
+        cur_t: Tensor::i32(vec![g.genb], vec![tok::PAD; g.genb]),
+        pos_t: Tensor::i32(vec![g.genb], vec![0; g.genb]),
+        step_t: Tensor::i32(vec![], vec![1]),
+        seeds_t: Tensor::u32(vec![g.genb], vec![0; g.genb]),
+        temp_t: Tensor::f32(vec![], vec![cfg.temp]),
+    };
+    let _ = links.ready.send(());
+    let mut backlog: Vec<Work> = Vec::new();
+    let mut shutdown = false;
+    let mut deaths = 0u32;
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            hybrid_loop(&cfg, &mut ctx, &links, &mut backlog, &mut shutdown)
+        }));
+        let err = match run {
+            Ok(Ok(())) => return Ok(()),
+            Ok(Err(e)) => format!("error: {e:#}"),
+            Err(p) => match p.downcast_ref::<&str>() {
+                Some(s) => format!("panic: {s}"),
+                None => match p.downcast_ref::<String>() {
+                    Some(s) => format!("panic: {s}"),
+                    None => "panic".into(),
+                },
+            },
+        };
+        deaths += 1;
+        links.metrics.worker_deaths.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "[serve] hybrid worker ({small}+{large}) died ({err}); {}",
+            if deaths < MAX_RESPAWNS { "respawning" } else { "respawn budget exhausted" }
+        );
+        // strip the hybrid flag before retiring: a requeued request
+        // re-resolves onto the routed path (the flag is what steered it
+        // here, and whatever killed the loop would kill the retry too)
+        for i in 0..ctx.lanes.len() {
+            if let Some(lane) = ctx.lanes[i].take() {
+                let mut w = lane.work;
+                w.req.hybrid = false;
+                retire_orphan(&cfg, w, &links, tier, shutdown);
+            }
+        }
+        for mut w in backlog.drain(..) {
+            w.req.hybrid = false;
+            retire_orphan(&cfg, w, &links, tier, shutdown);
+        }
+        // reset both pools' allocation state wholesale: every lane is
+        // gone, and a reused block's stale contents are harmless (any
+        // attended position is rewritten before it is read — the same
+        // argument that makes normal block reuse sound)
+        for eng in [&mut ctx.draft, &mut ctx.verify] {
+            eng.alloc = BlockAllocator::new(eng.arts.nblk);
+            for t in &mut eng.tables {
+                t.iter_mut().for_each(|b| *b = 0);
+            }
+        }
+        ctx.breaker = VerifyBreaker::new();
+        if deaths >= MAX_RESPAWNS {
+            break;
+        }
+    }
+    // respawn budget exhausted: terminally fail arrivals until shutdown
+    loop {
+        let msg = if shutdown {
+            match links.rx.try_recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            }
+        } else {
+            match links.rx.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            }
+        };
+        match msg {
+            WorkMsg::Work(w) => {
+                links.depth.fetch_sub(1, Ordering::Relaxed);
+                links.metrics.routing.fail(tier);
+                finish(
+                    w.req,
+                    Event::Failed { reason: "hybrid worker: respawn budget exhausted".into() },
+                );
+            }
+            WorkMsg::Shutdown => shutdown = true,
+        }
+    }
+    Err(anyhow::anyhow!(
+        "hybrid worker died {deaths} times; respawn budget exhausted"
+    ))
+}
+
+/// One supervised hybrid serve loop (mirrors [`serve_loop`]): pull
+/// work, sweep, admit on both tiers, then run one draft–verify round
+/// over the occupied lanes — until shutdown completes its drain. Owns
+/// no request state (everything lives in `ctx`/`backlog` on the
+/// supervisor's side of the unwind boundary).
+fn hybrid_loop(
+    cfg: &ServeConfig,
+    ctx: &mut HybridCtx,
+    links: &WorkerLinks,
+    backlog: &mut Vec<Work>,
+    shutdown: &mut bool,
+) -> Result<()> {
+    let metrics = &links.metrics;
+    let genb = ctx.lanes.len();
+    while !(*shutdown && ctx.occupied() == 0 && backlog.is_empty()) {
+        links.heartbeat.fetch_add(1, Ordering::Relaxed);
+
+        // 1. pull work (non-blocking while busy; blocking when idle)
+        loop {
+            let msg = if ctx.occupied() == 0 && backlog.is_empty() && !*shutdown {
+                match links.rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        *shutdown = true;
+                        break;
+                    }
+                }
+            } else {
+                match links.rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                WorkMsg::Work(w) => backlog.push(w),
+                WorkMsg::Shutdown => *shutdown = true,
+            }
+        }
+
+        // 2. retire cancelled / expired queued work before it costs two
+        // prefills, and free cancelled lanes on both tiers
+        hybrid_sweep(backlog, ctx, metrics);
+        for idx in 0..genb {
+            if ctx.lanes[idx].as_ref().is_some_and(|l| l.work.req.cancelled()) {
+                let lane = ctx.lanes[idx].take().expect("checked occupied");
+                ctx.release_lane(idx)?;
+                hybrid_cancel(ctx, lane.work, metrics);
+            }
+        }
+
+        // 3. admission per batching mode (continuous: lanes join
+        // mid-flight between rounds)
+        let can_admit = match cfg.mode {
+            BatchMode::Continuous => true,
+            BatchMode::RunToCompletion => ctx.occupied() == 0,
+        };
+        if can_admit && !backlog.is_empty() && ctx.occupied() < genb {
+            let free: Vec<usize> = (0..genb).filter(|&i| ctx.lanes[i].is_none()).collect();
+            let n_new = backlog.len().min(free.len());
+            let admitted: Vec<Work> = backlog.drain(..n_new).collect();
+            hybrid_admit(ctx, &free[..n_new], admitted, metrics)?;
+        }
+
+        // 4. one draft–verify round over the occupied lanes
+        if ctx.occupied() > 0 {
+            hybrid_round(ctx, metrics)?;
+            debug_assert_eq!(ctx.ledger.check(), Ok(()));
+        }
+    }
+    Ok(())
+}
+
+/// One draft–verify round (DESIGN.md §12), five phases over the
+/// occupied lanes:
+///
+/// 1. **plan** — per lane: how many tokens to draft and whether the
+///    round ends in a `verify@k` call, a KV-sync call (tail catch-up,
+///    nothing emitted), or an unverified local accept;
+/// 2. **draft** — batched small-tier paged-decode steps; a lane whose
+///    small KV lags the committed stream (`spos < seq.len() - 1`)
+///    feeds committed tokens first, then feeds its own drafts;
+/// 3. **escalation policy** — a lane with no unverified tail may skip
+///    this round's verify call when every draft cleared the
+///    quality-indexed confidence threshold
+///    ([`crate::policy::should_verify`]);
+/// 4. **verify** — one `verify@k` call per distinct bucket size over
+///    the participating lanes (non-participating rows are masked into
+///    the null block: zero table row, position 0, PAD tokens), then
+///    longest-prefix acceptance plus the correction token
+///    ([`hybrid::resolve_verify`]);
+/// 5. **resolve** — stream accepted/local tokens under the routed stop
+///    rules, advance the `spos`/`lpos` validity markers, retire
+///    finished/dead lanes on both tiers.
+fn hybrid_round(ctx: &mut HybridCtx, metrics: &Arc<ServerMetrics>) -> Result<()> {
+    let rt = ctx.verify.engine.runtime().clone();
+    let g = rt.manifest.globals;
+    let genb = ctx.lanes.len();
+    let amax = g.amax;
+    let sctx = g.sctx;
+    let degraded_round = !ctx.breaker.allow(Instant::now());
+
+    // --- phase 1: plan ---
+    let mut plans: Vec<Option<LanePlan>> = vec![None; genb];
+    let mut pend: Vec<usize> = vec![0; genb];
+    for idx in 0..genb {
+        let Some(lane) = ctx.lanes[idx].as_ref() else { continue };
+        let len = lane.seq.len();
+        let pending = len - 1 - lane.lpos;
+        pend[idx] = pending;
+        plans[idx] = if degraded_round {
+            // open breaker: draft blocks locally; a lane out of draft
+            // headroom idles until the half-open probe heals the path
+            let gamma = (ctx.max_k - 1).min((sctx - 1).saturating_sub(len));
+            (gamma > 0).then_some(LanePlan::Local { gamma, degraded: true })
+        } else {
+            let room = hybrid::context_room(lane.lpos, sctx);
+            match hybrid::largest_bucket_at_most(&ctx.vbuckets, room.min(ctx.max_k)) {
+                // k covers the tail (pending), the newest token, and
+                // k - 1 - pending fresh drafts
+                Some(k) if k > pending => Some(LanePlan::Verify { k, gamma: k - 1 - pending }),
+                // the unverified tail outgrew every verify bucket (only
+                // possible after degraded local accepts): sync the
+                // large KV forward over committed tokens instead
+                _ => hybrid::largest_bucket_at_most(&ctx.vbuckets, pending.min(room))
+                    .map(|k| LanePlan::Sync { k }),
+            }
+        };
+    }
+
+    // --- phase 2: draft (batched small-tier decode steps) ---
+    let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); genb];
+    let mut dlps: Vec<Vec<f32>> = vec![Vec::new(); genb];
+    let mut fed: Vec<usize> = vec![0; genb];
+    let mut want: Vec<usize> = vec![0; genb];
+    for idx in 0..genb {
+        if let Some(LanePlan::Verify { gamma, .. } | LanePlan::Local { gamma, .. }) = plans[idx] {
+            want[idx] = gamma;
+            fed[idx] = ctx.lanes[idx].as_ref().expect("planned lane").spos;
+        }
+    }
+    let nd_params = ctx.draft.engine.params.len();
+    loop {
+        let active: Vec<usize> =
+            (0..genb).filter(|&i| want[i] > 0 && drafts[i].len() < want[i]).collect();
+        if active.is_empty() {
+            break;
+        }
+        // back the written position with a pool block, per active lane
+        for &idx in &active {
+            ctx.draft.grow(idx, fed[idx])?;
+        }
+        {
+            let cur = ctx.cur_t.as_i32_mut()?;
+            let pos = ctx.pos_t.as_i32_mut()?;
+            let seeds = ctx.seeds_t.as_u32_mut()?;
+            for i in 0..genb {
+                cur[i] = tok::PAD;
+                pos[i] = 0;
+                seeds[i] = 0;
+            }
+            for &idx in &active {
+                let lane = ctx.lanes[idx].as_ref().expect("active lane");
+                let f = fed[idx];
+                let len = lane.seq.len();
+                // catch-up feeds the committed stream; past the stream
+                // end the lane stream-feeds its own drafts
+                cur[idx] = if f < len { lane.seq[f] } else { drafts[idx][f - len] };
+                pos[idx] = f as i32;
+                seeds[idx] = lane.seed;
+            }
+        }
+        {
+            // unlike the routed worker (where every occupied slot steps
+            // every iteration), an occupied-but-inactive lane here must
+            // be masked into the null block or the step would overwrite
+            // its committed KV at position 0
+            let maxblk = ctx.draft.arts.maxblk;
+            let tt = ctx.draft.tables_t.as_i32_mut()?;
+            for v in tt.iter_mut() {
+                *v = 0;
+            }
+            for &idx in &active {
+                for j in 0..maxblk {
+                    tt[idx * maxblk + j] = ctx.draft.tables[idx][j] as i32;
+                }
+            }
+        }
+        let host: Vec<(usize, &Tensor)> = vec![
+            (nd_params + 2, &ctx.draft.tables_t),
+            (nd_params + 3, &ctx.cur_t),
+            (nd_params + 4, &ctx.pos_t),
+            (nd_params + 5, &ctx.step_t),
+            (nd_params + 6, &ctx.seeds_t),
+            (nd_params + 7, &ctx.temp_t),
+        ];
+        ctx.draft.pool.bind(nd_params, nd_params + 1, &mut ctx.draft.decode_resident);
+        let before = rt.transfers();
+        let mut outs = ctx.draft.arts.decode.run_resident(&ctx.draft.decode_resident, &host)?;
+        let moved = before.delta(rt.transfers());
+        let vc = outs.pop().context("hybrid draft: vcache")?;
+        let kc = outs.pop().context("hybrid draft: kcache")?;
+        let logp = outs.pop().context("hybrid draft: logp")?.into_tensor()?;
+        let next = outs.pop().context("hybrid draft: next")?.into_tensor()?;
+        ctx.draft.pool.update(kc, vc)?;
+        let next = next.as_i32()?;
+        let logp = logp.as_f32()?;
+        for &idx in &active {
+            let len = ctx.lanes[idx].as_ref().expect("active lane").seq.len();
+            // the step at position `fed` predicts position `fed + 1`:
+            // a draft iff that lands past the committed stream
+            if fed[idx] + 1 >= len {
+                drafts[idx].push(next[idx]);
+                dlps[idx].push(logp[idx]);
+            }
+            fed[idx] += 1;
+        }
+        metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+        metrics.decode_slot_steps.fetch_add(active.len() as u64, Ordering::Relaxed);
+        metrics.decode_h2d_bytes.fetch_add(moved.h2d_bytes, Ordering::Relaxed);
+        metrics.decode_d2h_bytes.fetch_add(moved.d2h_bytes, Ordering::Relaxed);
+    }
+
+    // --- phase 3: escalation policy ---
+    // Only a lane with no unverified tail may skip its verify call (a
+    // tail means a previous round already deferred large-tier work),
+    // and only when it actually drafted something to stream.
+    for idx in 0..genb {
+        if let Some(LanePlan::Verify { gamma, .. }) = plans[idx] {
+            if gamma > 0 && pend[idx] == 0 {
+                let lane = ctx.lanes[idx].as_ref().expect("planned lane");
+                let conf = dlps[idx].iter().copied().fold(f32::INFINITY, f32::min);
+                if !crate::policy::should_verify(lane.quality, conf) {
+                    plans[idx] = Some(LanePlan::Local { gamma, degraded: false });
+                }
+            }
+        }
+    }
+
+    // --- phase 4: verify, one call per distinct bucket size ---
+    let nv = ctx.verify.engine.params.len();
+    let mut ks: Vec<usize> = plans
+        .iter()
+        .filter_map(|p| match p {
+            Some(LanePlan::Verify { k, .. } | LanePlan::Sync { k }) => Some(*k),
+            _ => None,
+        })
+        .collect();
+    ks.sort_unstable();
+    ks.dedup();
+    for k in ks {
+        let group: Vec<usize> = (0..genb)
+            .filter(|&i| {
+                matches!(
+                    plans[i],
+                    Some(LanePlan::Verify { k: kk, .. } | LanePlan::Sync { k: kk }) if kk == k
+                )
+            })
+            .collect();
+        let exec = ctx
+            .varts
+            .execs
+            .iter()
+            .find(|(kk, _)| *kk == k)
+            .map(|(_, e)| e.clone())
+            .expect("planned k comes from vbuckets");
+        // back the k written positions with pool blocks, per lane
+        for &idx in &group {
+            let lpos = ctx.lanes[idx].as_ref().expect("participant").lpos;
+            for p in lpos..lpos + k {
+                ctx.verify.grow(idx, p)?;
+            }
+        }
+        // masked inputs: non-participating rows aim at the null block
+        let mut toks = vec![tok::PAD; genb * k];
+        {
+            let posv = ctx.pos_t.as_i32_mut()?;
+            let seeds = ctx.seeds_t.as_u32_mut()?;
+            for i in 0..genb {
+                posv[i] = 0;
+                seeds[i] = 0;
+            }
+            for &idx in &group {
+                let lane = ctx.lanes[idx].as_ref().expect("participant");
+                let row: Vec<i32> = match plans[idx] {
+                    Some(LanePlan::Sync { .. }) => lane.seq[lane.lpos..lane.lpos + k].to_vec(),
+                    _ => {
+                        // unverified tail ++ this round's drafts
+                        let mut r = lane.seq[lane.lpos..].to_vec();
+                        r.extend_from_slice(&drafts[idx]);
+                        r
+                    }
+                };
+                debug_assert_eq!(row.len(), k, "verify row must fill the bucket exactly");
+                toks[idx * k..(idx + 1) * k].copy_from_slice(&row);
+                posv[idx] = lane.lpos as i32;
+                seeds[idx] = lane.seed;
+            }
+        }
+        {
+            let maxblk = ctx.verify.arts.maxblk;
+            let tt = ctx.verify.tables_t.as_i32_mut()?;
+            for v in tt.iter_mut() {
+                *v = 0;
+            }
+            for &idx in &group {
+                for j in 0..maxblk {
+                    tt[idx * maxblk + j] = ctx.verify.tables[idx][j] as i32;
+                }
+            }
+        }
+        let toks_t = Tensor::i32(vec![genb, k], toks);
+        let host: Vec<(usize, &Tensor)> = vec![
+            (nv + 2, &ctx.verify.tables_t),
+            (nv + 3, &toks_t),
+            (nv + 4, &ctx.pos_t),
+            (nv + 5, &ctx.step_t),
+            (nv + 6, &ctx.seeds_t),
+            (nv + 7, &ctx.temp_t),
+        ];
+        ctx.verify.pool.bind(nv, nv + 1, &mut ctx.verify.decode_resident);
+        let before = rt.transfers();
+        let run = exec.run_resident(&ctx.verify.decode_resident, &host);
+        let moved = before.delta(rt.transfers());
+        metrics.decode_h2d_bytes.fetch_add(moved.h2d_bytes, Ordering::Relaxed);
+        metrics.decode_d2h_bytes.fetch_add(moved.d2h_bytes, Ordering::Relaxed);
+        let mut outs = match run {
+            Ok(o) => o,
+            Err(e) => {
+                // large-tier failure: one breaker notch, and this
+                // round's would-be-verified drafts degrade to an
+                // unverified local accept (sync lanes retry next round)
+                ctx.breaker.record_failure(Instant::now());
+                eprintln!("[serve] hybrid verify@{k} failed ({e:#}); degrading to local accept");
+                for &idx in &group {
+                    plans[idx] = match plans[idx] {
+                        Some(LanePlan::Verify { gamma, .. }) => {
+                            Some(LanePlan::Local { gamma, degraded: true })
+                        }
+                        _ => None,
+                    };
+                }
+                continue;
+            }
+        };
+        ctx.breaker.record_success();
+        let vc = outs.pop().context("hybrid verify: vcache")?;
+        let kc = outs.pop().context("hybrid verify: kcache")?;
+        let logp = outs.pop().context("hybrid verify: logp")?.into_tensor()?;
+        let next = outs.pop().context("hybrid verify: next")?.into_tensor()?;
+        ctx.verify.pool.update(kc, vc)?;
+        let next = next.as_i32()?.to_vec();
+        let lps = logp.as_f32()?.to_vec();
+        for &idx in &group {
+            let mut lane = ctx.lanes[idx].take().expect("participant");
+            match plans[idx] {
+                Some(LanePlan::Sync { .. }) => {
+                    // outputs ignored: the call only advanced the large
+                    // KV over k already-committed tail tokens
+                    lane.lpos += k;
+                    ctx.ledger.record_verify(0, 0, 0);
+                    metrics.verify_calls.fetch_add(1, Ordering::Relaxed);
+                    ctx.lanes[idx] = Some(lane);
+                }
+                Some(LanePlan::Verify { .. }) => {
+                    let pending = pend[idx];
+                    let nd = drafts[idx].len();
+                    let old_len = lane.seq.len();
+                    // row idx, positions past the tail: the large
+                    // tier's verdict on the newest token + the drafts
+                    let verified = &next[idx * k + pending..(idx + 1) * k];
+                    let (a, emit) = hybrid::resolve_verify(&drafts[idx], verified);
+                    let mut end = LaneEnd::Alive;
+                    let mut streamed = 0usize;
+                    for (j, &t) in emit.iter().enumerate() {
+                        end = lane_emit(&mut lane, t, lps[idx * k + pending + j], amax, sctx);
+                        match end {
+                            LaneEnd::Alive => streamed += 1,
+                            _ => break,
+                        }
+                    }
+                    ctx.ledger.record_verify(nd, a, streamed);
+                    metrics.draft_tokens.fetch_add(nd as u64, Ordering::Relaxed);
+                    metrics.draft_accepted.fetch_add(a as u64, Ordering::Relaxed);
+                    metrics.verify_calls.fetch_add(1, Ordering::Relaxed);
+                    metrics.hybrid_emitted.fetch_add(streamed as u64, Ordering::Relaxed);
+                    match end {
+                        LaneEnd::Alive => {
+                            // tail fully consumed: only the newest
+                            // token awaits the next call
+                            lane.lpos = old_len + a;
+                            if nd > 0 {
+                                // the small KV saw drafts, not the
+                                // correction token: valid through the
+                                // last *accepted* drafted-from position
+                                lane.spos = old_len + a.min(nd - 1);
+                            }
+                            ctx.lanes[idx] = Some(lane);
+                        }
+                        LaneEnd::Finished => {
+                            ctx.release_lane(idx)?;
+                            hybrid_complete(ctx, lane, metrics);
+                        }
+                        LaneEnd::Dead => {
+                            ctx.release_lane(idx)?;
+                            hybrid_cancel(ctx, lane.work, metrics);
+                        }
+                    }
+                }
+                _ => unreachable!("verify group holds only Verify/Sync plans"),
+            }
+        }
+    }
+
+    // --- phase 5: local accepts (policy skips + degraded blocks) ---
+    for idx in 0..genb {
+        let Some(LanePlan::Local { degraded, .. }) = plans[idx] else { continue };
+        let nd = drafts[idx].len();
+        if nd == 0 {
+            continue;
+        }
+        let mut lane = ctx.lanes[idx].take().expect("planned lane");
+        let old_len = lane.seq.len();
+        let mut end = LaneEnd::Alive;
+        let mut streamed = 0usize;
+        for j in 0..nd {
+            end = lane_emit(&mut lane, drafts[idx][j], dlps[idx][j], amax, sctx);
+            match end {
+                LaneEnd::Alive => streamed += 1,
+                _ => break,
+            }
+        }
+        ctx.ledger.record_local(nd, streamed, degraded);
+        metrics.draft_tokens.fetch_add(nd as u64, Ordering::Relaxed);
+        metrics.draft_local_accepted.fetch_add(streamed as u64, Ordering::Relaxed);
+        metrics.hybrid_emitted.fetch_add(streamed as u64, Ordering::Relaxed);
+        if degraded {
+            metrics.hybrid_degraded_blocks.fetch_add(1, Ordering::Relaxed);
+        }
+        match end {
+            LaneEnd::Alive => {
+                // every draft is committed stream now; the small KV is
+                // valid through the last drafted-from position, and the
+                // unverified tail (lpos unchanged) grew by `nd`
+                lane.spos = old_len + nd - 1;
+                ctx.lanes[idx] = Some(lane);
+            }
+            LaneEnd::Finished => {
+                ctx.release_lane(idx)?;
+                hybrid_complete(ctx, lane, metrics);
+            }
+            LaneEnd::Dead => {
+                ctx.release_lane(idx)?;
+                hybrid_cancel(ctx, lane.work, metrics);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Dual-tier admission: bucketed prefill on **both** engines into fresh
+/// pool blocks, with the lane's first token (and its logprob) taken
+/// from the **large** prefill only — the stream is pinned to the large
+/// tier from token zero.
+fn hybrid_admit(
+    ctx: &mut HybridCtx,
+    free: &[usize],
+    work: Vec<Work>,
+    metrics: &Arc<ServerMetrics>,
+) -> Result<()> {
+    let t0 = Instant::now();
+    let rt = ctx.verify.engine.runtime().clone();
+    let before = rt.transfers();
+    let g = rt.manifest.globals;
+    let n_req = work.len();
+    debug_assert!(n_req <= free.len());
+
+    // allocate fresh block tables for the prompt on both tiers
+    for (w, &slot) in work.iter().zip(free) {
+        let plen = w.req.prompt.len();
+        anyhow::ensure!(
+            plen <= g.sprompt,
+            "admitted prompt of {plen} tokens exceeds the {}-token window",
+            g.sprompt
+        );
+        for eng in [&mut ctx.draft, &mut ctx.verify] {
+            let need = blocks_needed(plen, eng.arts.block).min(eng.arts.maxblk);
+            let mut table = vec![0u32; eng.arts.maxblk];
+            for entry in table.iter_mut().take(need) {
+                *entry = eng
+                    .alloc
+                    .alloc()
+                    .context("hybrid pool exhausted at admission (pool undersized)")?;
+            }
+            eng.tables[slot] = table;
+        }
+    }
+
+    // shared prefill inputs (identical for both tiers)
+    let bucket = |eng: &HybridEngine| eng.buckets.iter().find(|&&b| b >= n_req).copied();
+    let mut firsts: Vec<(i32, f32)> = vec![(0, 0.0); n_req];
+    for (ei, eng) in [&mut ctx.draft, &mut ctx.verify].into_iter().enumerate() {
+        let (bsz, prefill) = match bucket(eng) {
+            Some(b) if b < g.genb => {
+                (b, rt.exec(&format!("{}.prefill@{b}", eng.engine.name))?)
+            }
+            _ => (g.genb, eng.prefill.clone()),
+        };
+        let (ib, install) = eng
+            .arts
+            .install_for(bsz)
+            .with_context(|| format!("no kv_install_paged bucket covers {bsz}"))?;
+        anyhow::ensure!(ib == bsz, "paged install bucket {ib} != prefill bucket {bsz}");
+        let maxblk = eng.arts.maxblk;
+        let mut ptoks = vec![tok::PAD; bsz * g.sprompt];
+        let mut lens = vec![1i32; bsz];
+        let mut seedv = vec![0u32; bsz];
+        let mut dst = vec![0i32; bsz * maxblk];
+        for (b, (w, &slot)) in work.iter().zip(free).enumerate() {
+            let p = &w.req.prompt;
+            ptoks[b * g.sprompt..b * g.sprompt + p.len()].copy_from_slice(p);
+            lens[b] = p.len() as i32;
+            seedv[b] = w.req.id as u32;
+            let need = blocks_needed(p.len(), eng.arts.block).min(maxblk);
+            for j in 0..need {
+                dst[b * maxblk + j] = eng.tables[slot][j] as i32;
+            }
+        }
+        let ptoks = Tensor::i32(vec![bsz, g.sprompt], ptoks);
+        let lens_t = Tensor::i32(vec![bsz], lens);
+        let seeds_t = Tensor::u32(vec![bsz], seedv);
+        let host: Vec<(usize, &Tensor)> = vec![
+            (eng.engine.params.len(), &ptoks),
+            (eng.engine.params.len() + 1, &lens_t),
+            (eng.engine.params.len() + 2, &seeds_t),
+            (eng.engine.params.len() + 3, &ctx.temp_t),
+        ];
+        let mut outs = prefill.run_resident(&eng.prefill_resident, &host)?;
+        let vc = outs.pop().context("hybrid prefill: vcache")?;
+        let kc = outs.pop().context("hybrid prefill: kcache")?;
+        let logp = outs.pop().context("hybrid prefill: logp")?.into_tensor()?;
+        let first = outs.pop().context("hybrid prefill: next")?.into_tensor()?;
+        let (Some(kb), Some(vb)) = (kc.device().cloned(), vc.device().cloned()) else {
+            anyhow::bail!(
+                "{}: hybrid admission needs device-resident prefill outputs",
+                eng.engine.name
+            );
+        };
+        let dst_t = Tensor::i32(vec![bsz, maxblk], dst);
+        let mut resident: HashMap<usize, Arc<xla::PjRtBuffer>> = HashMap::with_capacity(4);
+        eng.pool.bind(0, 1, &mut resident);
+        resident.insert(2, kb);
+        resident.insert(3, vb);
+        let ihost: Vec<(usize, &Tensor)> = vec![(4, &dst_t)];
+        let mut iouts = install.run_resident(&resident, &ihost)?;
+        let pv = iouts.pop().context("hybrid install: vcache")?;
+        let pk = iouts.pop().context("hybrid install: kcache")?;
+        eng.pool.update(pk, pv)?;
+        if ei == 1 {
+            // the large tier's choices ARE the stream
+            let first = first.as_i32()?;
+            let logp = logp.as_f32()?;
+            for b in 0..n_req {
+                firsts[b] = (first[b], logp[b]);
+            }
+        }
+    }
+
+    // occupy lanes, streaming the large first token
+    let mut prefilled = 0u64;
+    for ((w, &slot), (ft, lp)) in work.into_iter().zip(free).zip(firsts) {
+        let plen = w.req.prompt.len();
+        prefilled += plen as u64;
+        if ft == tok::EOS {
+            ctx.release_lane(slot)?;
+            hybrid_complete(ctx, HybridLane {
+                seq: w.req.prompt.clone(),
+                answer: vec![],
+                logprob_sum: 0.0,
+                spos: plen,
+                lpos: plen,
+                quality: 1.0,
+                seed: w.req.id as u32,
+                work: w,
+            }, metrics);
+            continue;
+        }
+        if w.req.tx.send(Event::Token { token: ft, logprob: lp }).is_err() {
+            ctx.release_lane(slot)?;
+            hybrid_cancel(ctx, w, metrics);
+            continue;
+        }
+        let mut seq = w.req.prompt.clone();
+        seq.push(ft);
+        metrics.hybrid_requests.fetch_add(1, Ordering::Relaxed);
+        ctx.lanes[slot] = Some(HybridLane {
+            seq,
+            answer: vec![ft],
+            logprob_sum: lp,
+            spos: plen,
+            lpos: plen,
+            quality: w.req.quality.unwrap_or(1.0),
+            seed: w.req.id as u32,
+            work: w,
+        });
+    }
+
+    let moved = before.delta(rt.transfers());
+    metrics
+        .admit_h2d_bytes
+        .fetch_add(moved.h2d_bytes, Ordering::Relaxed);
+    metrics
+        .admit_d2h_bytes
+        .fetch_add(moved.d2h_bytes, Ordering::Relaxed);
+    metrics.admissions.fetch_add(1, Ordering::Relaxed);
+    metrics.admitted.fetch_add(n_req as u64, Ordering::Relaxed);
+    // prefill work is counted once (the large tier's pass): the serving
+    // invariant `prefill_tokens <= prompt tokens admitted` stays intact
+    metrics.prefill_tokens.fetch_add(prefilled, Ordering::Relaxed);
+    metrics.admit_latency.record(t0.elapsed());
+    Ok(())
 }
 
 #[cfg(test)]
@@ -3066,6 +4326,7 @@ mod tests {
             tx: mpsc::channel().0,
             cancel: Arc::new(AtomicBool::new(false)),
             retries: 0,
+            hybrid: false,
             _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
         };
         // default reproduces the seed's `len + 1 >= amax` stop rule
@@ -3118,6 +4379,7 @@ mod tests {
             tx: mpsc::channel().0,
             cancel: cancel.clone(),
             retries: 0,
+            hybrid: false,
             _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
         };
         assert!(req.expired());
@@ -3163,6 +4425,7 @@ mod tests {
             tx: mpsc::channel().0,
             cancel: Arc::new(AtomicBool::new(false)),
             retries: 0,
+            hybrid: false,
             _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
         };
         let now = Instant::now();
@@ -3188,6 +4451,7 @@ mod tests {
             tx: mpsc::channel().0,
             cancel: Arc::new(AtomicBool::new(false)),
             retries: 0,
+            hybrid: false,
             _admission: AdmissionGuard(counter.clone()),
         };
         // terminal path: finish() drops the request
@@ -3207,6 +4471,7 @@ mod tests {
             tx: mpsc::channel().0,
             cancel: Arc::new(AtomicBool::new(false)),
             retries: 0,
+            hybrid: false,
             _admission: AdmissionGuard(counter.clone()),
         };
         drop(req);

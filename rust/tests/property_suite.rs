@@ -318,6 +318,88 @@ fn histogram_conserves_mass() {
 }
 
 #[test]
+fn escalation_threshold_monotone_in_quality() {
+    // the hybrid decode escalation knob (DESIGN.md §12): a higher
+    // quality target must never verify *less* — threshold monotone
+    // nondecreasing under total_cmp, including targets outside [0, 1]
+    check("escalation threshold monotone in quality", 60, |rng| {
+        let n = rng.range(2, 40);
+        let mut qs: Vec<f32> = (0..n).map(|_| rng.next_f32() * 1.4 - 0.2).collect();
+        qs.sort_by(|a, b| a.total_cmp(b));
+        let thrs: Vec<f32> = qs.iter().map(|&q| policy::escalation_threshold(q)).collect();
+        for (w, t) in qs.windows(2).zip(thrs.windows(2)) {
+            assert!(
+                t[0].total_cmp(&t[1]) != std::cmp::Ordering::Greater,
+                "threshold fell from {} to {} as quality rose {} -> {}",
+                t[0],
+                t[1],
+                w[0],
+                w[1]
+            );
+        }
+        // the operational consequence: for any fixed confidence, a block
+        // verified at some target stays verified at every higher target
+        let conf = -(rng.next_f32() * 10.0);
+        for w in qs.windows(2) {
+            if policy::should_verify(w[0], conf) {
+                assert!(
+                    policy::should_verify(w[1], conf),
+                    "raising quality {} -> {} stopped verifying conf {conf}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn escalation_policy_is_nan_safe_and_pins_high_quality() {
+    check("non-finite inputs always verify; quality 1 always verifies", 40, |rng| {
+        let q = rng.next_f32();
+        // corrupted confidence must never silently skip the large tier
+        assert!(policy::should_verify(q, f32::NAN));
+        assert!(policy::should_verify(q, f32::INFINITY));
+        assert!(policy::should_verify(q, f32::NEG_INFINITY));
+        // non-finite or saturated targets pin the threshold to +inf —
+        // the always-verify regime that makes hybrid decoding
+        // byte-identical to large-only greedy
+        let conf = rng.next_f32() * 20.0 - 10.0;
+        assert!(policy::should_verify(f32::NAN, conf));
+        assert!(policy::should_verify(1.0, conf));
+        assert!(policy::should_verify(2.5, conf));
+        assert_eq!(policy::escalation_threshold(f32::NAN), f32::INFINITY);
+        assert_eq!(policy::escalation_threshold(1.0), f32::INFINITY);
+        // at the laxest target a hopeless draft still escalates, while a
+        // confident one is accepted locally (the cost-saving side)
+        assert!(policy::should_verify(0.0, -100.0));
+        assert!(!policy::should_verify(0.0, 0.0));
+    });
+}
+
+#[test]
+fn resolve_verify_rederives_the_large_stream_prefix() {
+    // the draft–verify pin: whatever the small tier drafts, the tokens
+    // resolve_verify emits are exactly a prefix of the large model's
+    // verified stream — accepted drafts matched it and the correction
+    // token IS its next choice
+    check("resolve_verify == verified prefix + correction", 60, |rng| {
+        let nd = rng.range(0, 8);
+        let drafts: Vec<i32> = (0..nd).map(|_| rng.below(8) as i32).collect();
+        let verified: Vec<i32> = (0..nd + 1).map(|_| rng.below(8) as i32).collect();
+        let a = hybrid_llm::hybrid::accept_len(&drafts, &verified);
+        let (a2, emit) = hybrid_llm::hybrid::resolve_verify(&drafts, &verified);
+        assert_eq!(a, a2);
+        assert!(a <= nd);
+        assert_eq!(emit, &verified[..a + 1], "emission is not a large-stream prefix");
+        assert_eq!(&drafts[..a], &verified[..a], "accepted drafts diverge from large");
+        if a < nd {
+            assert_ne!(drafts[a], verified[a], "rejection without a mismatch");
+        }
+    });
+}
+
+#[test]
 fn gap_diff_antisymmetric_in_score_inversion() {
     check("inverting scores flips the gap-diff sign", 30, |rng| {
         // even n and distinct scores: the 50% split is then exactly

@@ -75,6 +75,7 @@ fn generators_always_yield_valid_traces() {
             scenario::gen_mixed_quality,
             gen_overload,
             gen_cancel_storm,
+            scenario::gen_hybrid_decode,
         ] {
             let t = gen(seed, n, shape);
             assert_eq!(t.events.len(), n);
@@ -312,7 +313,60 @@ fn empty_stats() -> hybrid_llm::serve::ServerStats {
         retries: 0,
         worker_deaths: 0,
         breaker_state: Vec::new(),
+        hybrid_requests: 0,
+        draft_tokens: 0,
+        draft_accepted: 0,
+        draft_local_accepted: 0,
+        verify_calls: 0,
+        hybrid_emitted: 0,
+        hybrid_degraded_blocks: 0,
+        draft_accept_rate: 0.0,
+        large_call_fraction: 0.0,
+        large_slot_steps: 0,
+        pool_exhausted_requeues: 0,
     }
+}
+
+/// The hybrid-decode scenario: token-level draft–verify under mixed
+/// quality targets and budgets. Gated on exactly the same invariants as
+/// every other scenario plus the hybrid token ledger; on artifacts that
+/// predate `verify@K` the server falls back to routed decoding and the
+/// run must report zero hybrid traffic.
+#[test]
+fn hybrid_decode_scenario_invariants_hold() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (shape, manifest) = shape_of(&artifacts);
+    let hybrid_capable = manifest.has_verify("micro") && manifest.has_paged_kv("nano");
+    let run_dir = seed_run_dir(&artifacts, "hybdec");
+    let mut cfg = base_cfg(artifacts, run_dir.clone());
+    cfg.decode = hybrid_llm::serve::DecodeMode::Hybrid;
+    let queue_cap = cfg.queue_cap as u64;
+    let server = Server::start(cfg).unwrap();
+    let trace = scenario::gen_hybrid_decode(0x5BEC, 24, shape);
+    let out = replay(&server, &trace, &ReplayOpts::default()).unwrap();
+    let stats = server.shutdown().unwrap();
+    let bounds = scenario::transfer_bounds(&manifest, &["nano", "micro"]).unwrap();
+    let violations = check_invariants(&out, &stats, queue_cap, &bounds);
+    assert!(violations.is_empty(), "hybrid-decode violations: {violations:?}");
+    assert_eq!(out.done + out.failed + out.cancelled, out.accepted);
+    if hybrid_capable {
+        assert!(stats.hybrid_requests > 0, "hybrid-capable artifacts, no hybrid admissions");
+        assert!(stats.draft_tokens > 0, "no tokens drafted");
+        assert!(stats.verify_calls > 0, "no verify calls");
+        assert!(
+            stats.draft_accepted + stats.draft_local_accepted <= stats.draft_tokens,
+            "ledger: accepted {} + local {} > drafted {}",
+            stats.draft_accepted,
+            stats.draft_local_accepted,
+            stats.draft_tokens
+        );
+    } else {
+        assert_eq!(stats.hybrid_requests, 0, "pre-verify artifacts must fall back to routed");
+    }
+    let _ = std::fs::remove_dir_all(&run_dir);
 }
 
 /// Regression (satellite of the failover PR): a worker that panics

@@ -13,8 +13,8 @@ use hybrid_llm::lm::LmEngine;
 use hybrid_llm::policy::{LadderFamily, TierPolicy};
 use hybrid_llm::runtime::Runtime;
 use hybrid_llm::serve::{
-    admission_byte_bound, min_kv_pair_bytes, Event, ReplicaSelect, Request, RequestError,
-    ServeConfig, Server, SubmitError, TierSpec,
+    admission_byte_bound, min_kv_pair_bytes, DecodeMode, Event, ReplicaSelect, Request,
+    RequestError, ServeConfig, Server, SubmitError, TierSpec,
 };
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -734,5 +734,92 @@ fn deadline_expired_requests_are_shed() {
     assert_eq!(stats.routing.shed_total(), 1);
     assert_eq!(stats.routing.total(), 0, "shed requests are not counted as routed");
     assert_eq!(stats.in_flight, 0);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// The hybrid draft–verify pin (DESIGN.md §12): at temperature 0 with an
+/// always-verify quality target, token-level hybrid decoding must be
+/// **byte-identical** to routing every request to the large tier —
+/// longest-prefix acceptance plus the correction token re-derives
+/// exactly the large model's greedy stream, whatever the small tier
+/// drafts. Budgets are varied so draft blocks of every length occur
+/// (including budget 1, which finishes at prefill with no drafting).
+#[test]
+fn hybrid_decode_matches_large_only_greedy() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&artifacts).unwrap();
+    if !(rt.manifest.has_verify("micro") && rt.manifest.has_paged_kv("nano")) {
+        eprintln!("skipping: artifacts predate verify@K");
+        return;
+    }
+    let run_dir = seed_run_dir(&artifacts, "hybeq");
+    let mut cfg = base_cfg(artifacts.clone(), run_dir.clone(), BatchMode::Continuous);
+    cfg.temp = 0.0; // the byte-identity claim is greedy-only
+    let server = Server::start(cfg).unwrap();
+    let corpus = generate(53, Scale::Smoke);
+    let budgets = [1usize, 2, 5, rt.manifest.globals.amax];
+    let prompts: Vec<(Vec<i32>, usize)> = corpus
+        .iter()
+        .filter(|q| q.split == Split::Test)
+        .take(8)
+        .enumerate()
+        .map(|(i, q)| (q.prompt.clone(), budgets[i % budgets.len()]))
+        .collect();
+
+    // reference: every request pinned to the large tier, routed decode
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|(p, m)| {
+            server
+                .submit(
+                    Request::new(p.clone())
+                        .max_new_tokens(*m)
+                        .policy(TierPolicy::Fixed { tier: 1 }),
+                )
+                .expect("submit routed reference")
+        })
+        .collect();
+    let reference: Vec<Vec<i32>> = handles
+        .into_iter()
+        .map(|h| h.wait_timeout(Duration::from_secs(120)).expect("reference completion").tokens)
+        .collect();
+
+    // hybrid: same prompts and budgets, quality 1.0 => always verify
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|(p, m)| {
+            server
+                .submit(
+                    Request::new(p.clone())
+                        .max_new_tokens(*m)
+                        .quality(1.0)
+                        .decode(DecodeMode::Hybrid),
+                )
+                .expect("submit hybrid")
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let c = h.wait_timeout(Duration::from_secs(120)).expect("hybrid completion");
+        assert_eq!(
+            c.tokens, reference[i],
+            "request {i} (budget {}): hybrid stream diverged from large-only greedy",
+            prompts[i].1
+        );
+    }
+    let stats = server.shutdown().unwrap();
+    // EOS-at-prefill completions bypass lane occupation, so <= not ==
+    assert!(stats.hybrid_requests >= 1 && stats.hybrid_requests <= prompts.len() as u64);
+    assert!(stats.verify_calls > 0, "always-verify hybrid decode made no verify calls");
+    assert_eq!(stats.hybrid_degraded_blocks, 0, "no outage was injected");
+    assert_eq!(stats.draft_local_accepted, 0, "quality 1.0 must never accept locally");
+    assert!(
+        stats.draft_accepted <= stats.draft_tokens,
+        "ledger: accepted {} > drafted {}",
+        stats.draft_accepted,
+        stats.draft_tokens
+    );
     let _ = std::fs::remove_dir_all(&run_dir);
 }
