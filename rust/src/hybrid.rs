@@ -330,6 +330,25 @@ mod tests {
     }
 
     #[test]
+    fn ledger_stays_balanced_when_emit_truncates_the_accepted_prefix() {
+        // a stop rule (EOS / token budget / context edge) inside the
+        // accepted prefix truncates the emit loop: the serving layer
+        // must clamp accepted to the streamed count before recording,
+        // or `emitted >= accepted` breaks
+        let mut l = Ledger::default();
+        let streamed = 2usize;
+        let accepted = 5usize.min(streamed);
+        l.record_verify(5, accepted, streamed);
+        assert_eq!(l.draft_accepted, 2);
+        assert_eq!(l.emitted, 2);
+        l.check().unwrap();
+        // the unclamped record is exactly what check() rejects
+        let mut bad = Ledger::default();
+        bad.record_verify(5, 5, 2);
+        assert!(bad.check().is_err());
+    }
+
+    #[test]
     fn breaker_trips_cools_down_and_probes() {
         let t0 = Instant::now();
         let mut b = VerifyBreaker::new();

@@ -2038,7 +2038,9 @@ struct WorkerLinks {
 }
 
 /// Per-worker respawn budget: after this many serve-loop deaths the
-/// supervisor stops respawning and terminally fails arrivals instead.
+/// supervisor stops respawning — a tier replica terminally fails its
+/// arrivals (siblings still cover the tier); the hybrid worker bounces
+/// them back through ingress as routed requests (it has no sibling).
 const MAX_RESPAWNS: u32 = 8;
 
 /// Deterministic fault-injection state for one worker (the chaos
@@ -3458,7 +3460,11 @@ fn hybrid_sweep(backlog: &mut Vec<Work>, ctx: &HybridCtx, metrics: &Arc<ServerMe
 /// catch-unwind/respawn protocol, with one twist — requests orphaned by
 /// a death are stripped of their hybrid flag before the requeue, so the
 /// retry lands on the classic routed path instead of bouncing off the
-/// same failure.
+/// same failure. The same contract holds past the respawn budget:
+/// unlike a tier replica (whose exhausted supervisor terminally fails
+/// arrivals — siblings still cover the tier), the hybrid worker has no
+/// sibling, so its terminal state bounces arrivals back through
+/// ingress as routed requests instead of failing them.
 fn hybrid_thread(cfg: ServeConfig, links: WorkerLinks) -> Result<()> {
     let small = cfg.tiers[0].model.clone();
     let large = cfg.tiers[cfg.tiers.len() - 1].model.clone();
@@ -3586,11 +3592,18 @@ fn hybrid_thread(cfg: ServeConfig, links: WorkerLinks) -> Result<()> {
             }
         }
         ctx.breaker = VerifyBreaker::new();
+        // a death mid-round can leave the ledger between records —
+        // restart its invariants from a clean slate with the lanes
+        ctx.ledger = hybrid::Ledger::default();
         if deaths >= MAX_RESPAWNS {
             break;
         }
     }
-    // respawn budget exhausted: terminally fail arrivals until shutdown
+    // respawn budget exhausted: the hybrid worker stays down, but the
+    // routed fleet is still healthy — bounce arrivals back through
+    // ingress with the hybrid flag stripped (the DecodeMode contract:
+    // hybrid unavailability degrades to classic routing, it does not
+    // fail requests) until shutdown drains the channel
     loop {
         let msg = if shutdown {
             match links.rx.try_recv() {
@@ -3606,11 +3619,29 @@ fn hybrid_thread(cfg: ServeConfig, links: WorkerLinks) -> Result<()> {
         match msg {
             WorkMsg::Work(w) => {
                 links.depth.fetch_sub(1, Ordering::Relaxed);
-                links.metrics.routing.fail(tier);
-                finish(
-                    w.req,
-                    Event::Failed { reason: "hybrid worker: respawn budget exhausted".into() },
-                );
+                let mut req = w.req;
+                req.hybrid = false;
+                if req.cancelled() {
+                    links.metrics.routing.cancel(tier);
+                    finish(req, Event::Cancelled);
+                    continue;
+                }
+                // no retry-budget charge: the request was never decoded
+                match links.ingress.send(RouterMsg::Req(req)) {
+                    Ok(()) => {}
+                    // the router is gone (shutdown raced the bounce):
+                    // nothing left to serve the request
+                    Err(mpsc::SendError(RouterMsg::Req(r))) => {
+                        links.metrics.routing.fail(tier);
+                        finish(
+                            r,
+                            Event::Failed {
+                                reason: "hybrid worker: respawn budget exhausted".into(),
+                            },
+                        );
+                    }
+                    Err(_) => {}
+                }
             }
             WorkMsg::Shutdown => shutdown = true,
         }
@@ -4001,9 +4032,14 @@ fn hybrid_round(ctx: &mut HybridCtx, metrics: &Arc<ServerMetrics>) -> Result<()>
                             _ => break,
                         }
                     }
-                    ctx.ledger.record_verify(nd, a, streamed);
+                    // `lane_emit` may truncate the accepted prefix
+                    // (EOS / budget / context stop, dead client): only
+                    // drafts actually streamed count as accepted, or
+                    // `emitted >= accepted` in the ledger breaks
+                    let accepted = a.min(streamed);
+                    ctx.ledger.record_verify(nd, accepted, streamed);
                     metrics.draft_tokens.fetch_add(nd as u64, Ordering::Relaxed);
-                    metrics.draft_accepted.fetch_add(a as u64, Ordering::Relaxed);
+                    metrics.draft_accepted.fetch_add(accepted as u64, Ordering::Relaxed);
                     metrics.verify_calls.fetch_add(1, Ordering::Relaxed);
                     metrics.hybrid_emitted.fetch_add(streamed as u64, Ordering::Relaxed);
                     match end {
@@ -4194,6 +4230,9 @@ fn hybrid_admit(
         let plen = w.req.prompt.len();
         prefilled += plen as u64;
         if ft == tok::EOS {
+            // hybrid-served even though it never occupies a lane: its
+            // completion/latency are attributed to the large tier below
+            metrics.hybrid_requests.fetch_add(1, Ordering::Relaxed);
             ctx.release_lane(slot)?;
             hybrid_complete(ctx, HybridLane {
                 seq: w.req.prompt.clone(),
