@@ -218,6 +218,10 @@ fn main() -> anyhow::Result<()> {
             }
             json.push(("serving.e2e_p50_ms".to_string(), stats.e2e_latency.p50_ms));
             json.push(("serving.e2e_p95_ms".to_string(), stats.e2e_latency.p95_ms));
+            // submit→dispatch sojourn — the brownout controller's delay
+            // sensor, tracked whether or not the controller is armed
+            json.push(("serving.queue_delay_p50_ms".to_string(), stats.queue_delay.p50_ms));
+            json.push(("serving.queue_delay_p99_ms".to_string(), stats.queue_delay.p99_ms));
             json.push(("serving.slot_efficiency".to_string(), eff));
             json.push(("serving.d2h_bytes_per_step".to_string(), stats.d2h_bytes_per_step()));
             json.push(("serving.h2d_bytes_per_step".to_string(), stats.h2d_bytes_per_step()));
@@ -233,12 +237,16 @@ fn main() -> anyhow::Result<()> {
     // the serving invariants (exactly-one-terminal, counter balance,
     // bounded queue, O(B) transfer bounds). Per-scenario latency/shed/
     // cancel/cost-advantage metrics join the trajectory file.
-    println!("\n== serving_e2e: scenario sweep (smoke + chaos) ==");
+    println!("\n== serving_e2e: scenario sweep (smoke + chaos + overload) ==");
     let mut opts = hybrid_llm::scenario::KickTiresOpts::new(artifacts.clone(), run_dir.clone());
     opts.smoke = true;
     // fault-injection suite rides along: crash/stall/tier-outage chaos
     // metrics (failovers, degraded, retries, lost) join the trajectory
     opts.chaos = true;
+    // overload-brownout suite too: 3x sustained load against the armed
+    // controller, gated on zero lost, the interactive goodput floor,
+    // strict priority ordering, and level-0 recovery after the drain
+    opts.overload = true;
     opts.bench_json = Some(json_path.to_path_buf());
     let report = hybrid_llm::scenario::kick_tires(&opts)?;
     print!("{}", report.render());

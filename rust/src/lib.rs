@@ -62,6 +62,23 @@
 //! verify-path breaker ([`hybrid::VerifyBreaker`]) degrades a large-tier
 //! outage to pure small-tier drafting instead of failing requests.
 //!
+//! Under sustained overload the server doesn't shed blindly: an
+//! **overload brownout controller** ([`policy::BrownoutController`],
+//! DESIGN.md §13) senses queue sojourn (EWMA of submit→dispatch delay
+//! against a CoDel-style target), queue depth, and shed rate, and
+//! actuates a small integer brownout level with AIMD ramp-up and
+//! hysteretic recovery. Level 1 caps the *effective* quality target
+//! resolved through the ladder family — the paper's dial, driven by
+//! load; level 2 thins hybrid verification (escalation relaxes, draft
+//! blocks shrink); level 3 sheds by request class, strictly
+//! lowest-first via [`serve::Request::priority`]
+//! ([`policy::Priority`]: `Interactive` / `Batch` / `BestEffort`). At
+//! level 0 every actuator is the identity, so an unloaded server is
+//! byte-identical to one built without the controller
+//! (`ServeConfig::brownout_target: None`). Deadlines are enforced both
+//! before dispatch and *mid-decode*: an expired in-flight request is
+//! swept from the decode loop, freeing its KV slot for live work.
+//!
 //! The [`scenario`] module stress-tests this API with trace-driven
 //! replays (Poisson bursts, diurnal swings, long-tail lengths, mixed
 //! quality targets, overload, cancel storms) gated on serving

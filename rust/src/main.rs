@@ -5,7 +5,7 @@
 //! repro eval <id>... --run runs/default      # fig1 fig3 ... table5, or `all`
 //! repro table2 --run runs/default [--queries 200]
 //! repro serve-demo --run runs/default [--requests 64] [--threshold 0.5]
-//! repro kick-tires --run runs/default [--smoke] [--chaos]  # scenario sweep + invariant gate
+//! repro kick-tires --run runs/default [--smoke] [--chaos] [--overload]  # scenario sweep + invariant gate
 //! repro corpus-stats [--scale default]
 //! ```
 
@@ -55,11 +55,13 @@ subcommands:
                [--tiers m[:replicas[:cost]],...] [--thresholds T1,T2,...] [--select rr|sq]
                [--quality Q] [--queue-cap N] [--deadline-ms MS] [--admit device|host]
                [--decode-timeout-ms MS] [--retry-budget N] [--decode routed|hybrid]
-  kick-tires   --run DIR [--smoke] [--chaos] [--small M] [--large M] [--seed N]
-               [--scenarios a,b,...] [--json PATH] [--drain-timeout-ms MS]
+               [--brownout-target-ms MS] [--priority interactive|batch|best-effort]
+  kick-tires   --run DIR [--smoke] [--chaos] [--overload] [--small M] [--large M]
+               [--seed N] [--scenarios a,b,...] [--json PATH] [--drain-timeout-ms MS]
                run the whole trace-replay scenario suite (--chaos adds the
-               fault-injection suite), gate on serving invariants, and
-               merge metrics into the perf trajectory
+               fault-injection suite, --overload the brownout suite), gate
+               on serving invariants, and merge metrics into the perf
+               trajectory
   corpus-stats [--scale S]                                print corpus stats without a run";
 
 fn scale_of(args: &Args) -> Result<Scale> {
@@ -217,6 +219,16 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     // workload-dependent) and the per-request requeue budget
     let decode_timeout = args.get_ms("decode-timeout-ms")?;
     let retry_budget: u32 = args.get_parse("retry-budget", 2)?;
+    // --brownout-target-ms: arm the overload controller with a CoDel-style
+    // target sojourn; absent, the server runs without one (byte-identical
+    // routing to the pre-brownout build)
+    let brownout_target = args.get_ms("brownout-target-ms")?;
+    let priority = match args.get("priority", "interactive") {
+        "interactive" => hybrid_llm::policy::Priority::Interactive,
+        "batch" => hybrid_llm::policy::Priority::Batch,
+        "best-effort" => hybrid_llm::policy::Priority::BestEffort,
+        other => anyhow::bail!("bad --priority {other:?} (interactive|batch|best-effort)"),
+    };
     let mode = match args.get("mode", "cont") {
         "rtc" => BatchMode::RunToCompletion,
         _ => BatchMode::Continuous,
@@ -323,6 +335,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         retry_budget,
         fault_plan: None,
         decode,
+        brownout_target,
     };
     println!(
         "[serve] starting fleet [{}], {mode:?}, queue cap {queue_cap}{}",
@@ -334,7 +347,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let mut submit_rng = hybrid_llm::rng::Rng::new(0x5EB0FF);
     let mut handles = Vec::new();
     for q in &test {
-        let mut req = hybrid_llm::serve::Request::new(q.prompt.clone());
+        let mut req = hybrid_llm::serve::Request::new(q.prompt.clone()).priority(priority);
         if let Some(qt) = quality {
             req = req.quality(qt);
         }
@@ -394,6 +407,25 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         "router latency: mean {:.2} ms   e2e p50 {:.0} ms  p95 {:.0} ms",
         stats.router_latency.mean_ms, stats.e2e_latency.p50_ms, stats.e2e_latency.p95_ms
     );
+    println!(
+        "queue delay: p50 {:.2} ms  p99 {:.2} ms   brownout level: {}   \
+         effective quality delta: {:.3}",
+        stats.queue_delay.p50_ms,
+        stats.queue_delay.p99_ms,
+        stats.brownout_level,
+        stats.effective_quality_delta
+    );
+    for p in hybrid_llm::policy::Priority::all() {
+        let i = p.index();
+        if stats.class_admitted[i] > 0 || stats.class_shed[i] > 0 {
+            println!(
+                "class {:<12} admitted {:>5}   shed {:>5}",
+                p.name(),
+                stats.class_admitted[i],
+                stats.class_shed[i]
+            );
+        }
+    }
     let total = stats.routing.total().max(1);
     for (ts, tr) in stats.tiers.iter().zip(&stats.routing.tiers) {
         println!(
@@ -488,6 +520,7 @@ fn cmd_kick_tires(args: &Args) -> Result<()> {
     opts.large = args.get("large", "medium").to_string();
     opts.smoke = args.switch("smoke");
     opts.chaos = args.switch("chaos");
+    opts.overload = args.switch("overload");
     opts.seed = args.get_parse("seed", opts.seed)?;
     opts.only = args.get_csv::<String>("scenarios").transpose()?;
     opts.bench_json = Some(PathBuf::from(args.get("json", "BENCH_serving.json")));

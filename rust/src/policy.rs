@@ -547,6 +547,241 @@ pub fn should_verify(quality: f32, conf: f32) -> bool {
     conf.total_cmp(&escalation_threshold(quality)) == std::cmp::Ordering::Less
 }
 
+/// Request priority class for admission and shedding under overload
+/// (DESIGN.md §13). Declaration order is shedding order — under
+/// brownout pressure `BestEffort` sheds first and `Interactive` last —
+/// and the derived `Ord` agrees: `BestEffort < Batch < Interactive`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Shed first: opportunistic work with no latency contract.
+    BestEffort,
+    /// Shed second: throughput-oriented offline work.
+    Batch,
+    /// Shed last: latency-sensitive user-facing traffic (the default).
+    #[default]
+    Interactive,
+}
+
+/// Number of priority classes ([`Priority::index`] is dense in
+/// `0..PRIORITY_CLASSES`).
+pub const PRIORITY_CLASSES: usize = 3;
+
+impl Priority {
+    /// Dense per-class counter index in shedding order:
+    /// 0 = `BestEffort`, 1 = `Batch`, 2 = `Interactive`.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// All classes, ascending (shedding order).
+    pub fn all() -> [Priority; PRIORITY_CLASSES] {
+        [Priority::BestEffort, Priority::Batch, Priority::Interactive]
+    }
+
+    /// Stable lowercase name for reports and trace files.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::BestEffort => "best-effort",
+            Priority::Batch => "batch",
+            Priority::Interactive => "interactive",
+        }
+    }
+}
+
+/// Highest brownout level the controller will actuate. Levels:
+/// 0 = normal, 1 = cap effective quality targets (route cheaper),
+/// 2 = additionally relax hybrid escalation and shrink draft blocks,
+/// 3 = additionally apply priority-weighted admission.
+pub const BROWNOUT_MAX_LEVEL: u8 = 3;
+
+/// Consecutive hot ticks before the level ramps up one step (the
+/// additive-increase half of AIMD, gated so a single noisy sample
+/// cannot trip a level).
+const BROWNOUT_TRIP_TICKS: u32 = 3;
+
+/// Consecutive calm ticks before the level steps back down. Larger
+/// than [`BROWNOUT_TRIP_TICKS`]: recovery is deliberately slower than
+/// ramp-up (hysteresis), so the controller cannot oscillate on load
+/// hovering near the target.
+const BROWNOUT_RECOVER_TICKS: u32 = 6;
+
+/// EWMA smoothing factor for the queue-delay sensor.
+const BROWNOUT_EWMA_ALPHA: f64 = 0.2;
+
+/// Pressure at or below this fraction of the trip point counts as a
+/// calm tick; the band between calm and hot holds the level steady.
+const BROWNOUT_CALM_FRACTION: f64 = 0.5;
+
+/// Queue depth (as a fraction of `queue_cap`) that alone saturates the
+/// pressure signal: a queue this full is overloaded even if delay has
+/// not caught up yet.
+const BROWNOUT_DEPTH_TRIP_FRACTION: f64 = 0.85;
+
+/// Load-adaptive brownout controller (DESIGN.md §13): senses sustained
+/// queue pressure and actuates a small integer brownout level with
+/// AIMD ramp-up and hysteretic recovery.
+///
+/// Sensors (all pushed in by the caller — the controller owns no clock
+/// and no server state, which is what makes it property-testable):
+/// an EWMA of submit→dispatch queue delay against a CoDel-style target
+/// sojourn, instantaneous queue depth as a fraction of `queue_cap`,
+/// and the shed count delta since the last tick. The pressure signal
+/// is the max of the three normalized sensors; a tick is *hot* at
+/// pressure ≥ 1, *calm* at pressure ≤ [`BROWNOUT_CALM_FRACTION`], and
+/// the band between holds the level (hysteresis).
+///
+/// Dynamics, property-tested in `tests/property_suite.rs`:
+/// the level is monotone under constant pressure (never changes
+/// direction on steady input, so it cannot oscillate), ramps only
+/// after [`BROWNOUT_TRIP_TICKS`] consecutive hot ticks, recovers only
+/// after [`BROWNOUT_RECOVER_TICKS`] consecutive calm ticks, and always
+/// walks back to level 0 when load recedes.
+#[derive(Debug, Clone)]
+pub struct BrownoutController {
+    target_ms: f64,
+    ewma_ms: f64,
+    level: u8,
+    hot: u32,
+    calm: u32,
+}
+
+impl BrownoutController {
+    /// Controller targeting a queue sojourn of `target_ms` (CoDel-style
+    /// target delay). Non-finite or non-positive targets clamp to 1ms
+    /// rather than disabling the delay sensor.
+    pub fn new(target_ms: f64) -> BrownoutController {
+        let target_ms = if target_ms.is_finite() { target_ms.max(1e-3) } else { 1.0 };
+        BrownoutController { target_ms, ewma_ms: 0.0, level: 0, hot: 0, calm: 0 }
+    }
+
+    /// Current brownout level in `0..=BROWNOUT_MAX_LEVEL`.
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Fold one observed submit→dispatch queue delay into the EWMA.
+    /// NaN and negative samples are dropped, not folded.
+    pub fn observe_delay_ms(&mut self, ms: f64) {
+        if ms.is_finite() && ms >= 0.0 {
+            self.ewma_ms += BROWNOUT_EWMA_ALPHA * (ms - self.ewma_ms);
+        }
+    }
+
+    /// Normalized pressure for the given instantaneous sensors plus the
+    /// internal delay EWMA: ≥ 1 means overloaded. Non-finite or
+    /// negative sensor values are treated as zero pressure from that
+    /// sensor, never as a trip.
+    pub fn pressure(&self, depth_fraction: f64, shed_delta: u64) -> f64 {
+        let delay = self.ewma_ms / self.target_ms;
+        let depth = if depth_fraction.is_finite() && depth_fraction > 0.0 {
+            depth_fraction / BROWNOUT_DEPTH_TRIP_FRACTION
+        } else {
+            0.0
+        };
+        let shed = if shed_delta > 0 { 1.0 } else { 0.0 };
+        delay.max(depth).max(shed)
+    }
+
+    /// One control tick: classify the pressure as hot / calm / in-band,
+    /// update the streak counters, and (de)actuate the level. Returns
+    /// the level in force after the tick. Call at a steady cadence; the
+    /// caller owns the clock.
+    pub fn tick(&mut self, depth_fraction: f64, shed_delta: u64) -> u8 {
+        // an empty queue has zero sojourn by definition: fold a zero
+        // delay sample so an EWMA left high by the last burst cannot
+        // pin the pressure signal after the queue drains — recovery
+        // must not depend on fresh dispatches that never come
+        if depth_fraction == 0.0 {
+            self.observe_delay_ms(0.0);
+        }
+        let p = self.pressure(depth_fraction, shed_delta);
+        if p >= 1.0 {
+            self.calm = 0;
+            self.hot += 1;
+            if self.hot >= BROWNOUT_TRIP_TICKS {
+                self.hot = 0;
+                self.level = (self.level + 1).min(BROWNOUT_MAX_LEVEL);
+            }
+        } else if p <= BROWNOUT_CALM_FRACTION {
+            self.hot = 0;
+            self.calm += 1;
+            if self.calm >= BROWNOUT_RECOVER_TICKS {
+                self.calm = 0;
+                self.level = self.level.saturating_sub(1);
+            }
+        } else {
+            // hysteresis band: hold the level, restart both streaks
+            self.hot = 0;
+            self.calm = 0;
+        }
+        self.level
+    }
+}
+
+/// Effective per-request quality-target ceiling at a brownout level —
+/// the L1 actuator. Level 0 never caps (byte-identical routing to a
+/// server without the controller); deeper levels bias the
+/// [`LadderFamily`] resolution toward cheaper tiers. Monotone
+/// non-increasing in the level.
+pub fn brownout_quality_cap(level: u8) -> f32 {
+    match level {
+        0 => 1.0,
+        1 => 0.7,
+        2 => 0.5,
+        _ => 0.3,
+    }
+}
+
+/// Effective quality target used for *routing* under brownout: the
+/// request's own target capped by [`brownout_quality_cap`]. Level 0 is
+/// the identity.
+pub fn brownout_effective_quality(level: u8, quality: f32) -> f32 {
+    if level == 0 { quality } else { quality.min(brownout_quality_cap(level)) }
+}
+
+/// Effective quality target used for *hybrid escalation*
+/// ([`should_verify`]) under brownout — the L2 actuator. Only levels
+/// ≥ 2 relax escalation (L1 touches routing, not verification), which
+/// thins out the large tier's verify passes first.
+pub fn brownout_escalation_quality(level: u8, quality: f32) -> f32 {
+    if level >= 2 { quality.min(brownout_quality_cap(level)) } else { quality }
+}
+
+/// Draft-block size under brownout — the other half of the L2
+/// actuator: at levels ≥ 2 the speculative draft block γ halves
+/// (min 1), shrinking the work a failed verify throws away. Never
+/// grows γ and maps 0 to 0.
+pub fn brownout_gamma(level: u8, gamma: usize) -> usize {
+    if level < 2 || gamma <= 1 { gamma } else { (gamma / 2).max(1) }
+}
+
+/// Fraction of `queue_cap` a priority class may occupy at a brownout
+/// level — the L3 actuator. Below [`BROWNOUT_MAX_LEVEL`] every class
+/// gets the full queue; at L3 admission is priority-weighted. Monotone
+/// non-decreasing in priority at every level, which is what makes
+/// shedding strictly lowest-class-first: at any occupancy where a
+/// lower class is admitted, every higher class is admitted too
+/// (property-tested in `tests/property_suite.rs`).
+pub fn admission_fraction(level: u8, prio: Priority) -> f64 {
+    if level < BROWNOUT_MAX_LEVEL {
+        return 1.0;
+    }
+    match prio {
+        Priority::Interactive => 1.0,
+        Priority::Batch => 0.6,
+        Priority::BestEffort => 0.25,
+    }
+}
+
+/// In-flight cap for a priority class: `queue_cap` scaled by
+/// [`admission_fraction`], floored at 1 so `Interactive` (fraction
+/// 1.0) always retains at least the full cap and no class cap rounds
+/// to a hard lockout at tiny queue sizes.
+pub fn class_queue_cap(level: u8, prio: Priority, queue_cap: usize) -> usize {
+    let f = admission_fraction(level, prio);
+    ((queue_cap as f64 * f).floor() as usize).max(1).min(queue_cap)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -893,5 +1128,142 @@ mod tests {
         for p in &c {
             assert!((p.achieved_cost_advantage - p.target_cost_advantage).abs() < 0.06);
         }
+    }
+
+    #[test]
+    fn priority_orders_and_indexes_in_shedding_order() {
+        assert!(Priority::BestEffort < Priority::Batch);
+        assert!(Priority::Batch < Priority::Interactive);
+        assert_eq!(Priority::default(), Priority::Interactive);
+        for (i, p) in Priority::all().iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+        assert_eq!(Priority::all().len(), PRIORITY_CLASSES);
+        assert_eq!(Priority::Interactive.name(), "interactive");
+        assert_eq!(Priority::Batch.name(), "batch");
+        assert_eq!(Priority::BestEffort.name(), "best-effort");
+    }
+
+    #[test]
+    fn brownout_trips_after_sustained_pressure_only() {
+        let mut c = BrownoutController::new(10.0);
+        assert_eq!(c.level(), 0);
+        // two hot ticks are not enough …
+        for _ in 0..2 {
+            assert_eq!(c.tick(1.0, 0), 0);
+        }
+        // … a calm tick resets the streak …
+        assert_eq!(c.tick(0.0, 0), 0);
+        // … and only TRIP_TICKS consecutive hot ticks ramp the level
+        for _ in 0..3 {
+            c.tick(1.0, 0);
+        }
+        assert_eq!(c.level(), 1);
+        // sustained overload saturates at the max level
+        for _ in 0..100 {
+            c.tick(1.0, 0);
+        }
+        assert_eq!(c.level(), BROWNOUT_MAX_LEVEL);
+    }
+
+    #[test]
+    fn brownout_recovery_is_hysteretic_and_reaches_zero() {
+        let mut c = BrownoutController::new(10.0);
+        for _ in 0..100 {
+            c.tick(1.0, 0);
+        }
+        assert_eq!(c.level(), BROWNOUT_MAX_LEVEL);
+        // in-band pressure holds the level instead of recovering
+        for _ in 0..50 {
+            assert_eq!(c.tick(0.7, 0), BROWNOUT_MAX_LEVEL);
+        }
+        // calm ticks walk the level back down one step per
+        // RECOVER_TICKS, monotonically, all the way to zero
+        let mut prev = c.level();
+        let mut ticks = 0u32;
+        while c.level() > 0 {
+            let l = c.tick(0.0, 0);
+            assert!(l <= prev, "recovery went back up: {l} > {prev}");
+            prev = l;
+            ticks += 1;
+            assert!(ticks < 1000, "recovery never reached level 0");
+        }
+        assert!(ticks >= 6, "recovery was not hysteretic: {ticks} ticks");
+        // and it stays at zero under continued calm
+        for _ in 0..20 {
+            assert_eq!(c.tick(0.0, 0), 0);
+        }
+    }
+
+    #[test]
+    fn brownout_sensors_are_nan_safe_and_shed_trips() {
+        let mut c = BrownoutController::new(10.0);
+        // corrupted sensors are zero pressure, not a trip
+        c.observe_delay_ms(f64::NAN);
+        c.observe_delay_ms(-5.0);
+        for _ in 0..10 {
+            assert_eq!(c.tick(f64::NAN, 0), 0);
+            assert_eq!(c.tick(-1.0, 0), 0);
+        }
+        // a nonzero shed delta alone saturates pressure
+        assert!(c.pressure(0.0, 1) >= 1.0);
+        // delay EWMA over target saturates pressure
+        for _ in 0..50 {
+            c.observe_delay_ms(100.0);
+        }
+        assert!(c.pressure(0.0, 0) >= 1.0);
+        // … but empty-queue ticks decay the stale EWMA: recovery never
+        // depends on fresh dispatches arriving to pull the EWMA down
+        let mut ticks = 0u32;
+        while c.pressure(0.0, 0) > 0.5 {
+            c.tick(0.0, 0);
+            ticks += 1;
+            assert!(ticks < 1000, "stale delay EWMA never decayed");
+        }
+        for _ in 0..200 {
+            c.tick(0.0, 0);
+        }
+        assert_eq!(c.level(), 0, "drained controller must return to level 0");
+    }
+
+    #[test]
+    fn brownout_actuators_are_monotone_and_identity_at_level_zero() {
+        // L1: quality cap non-increasing in level, identity at 0
+        let mut prev = f32::INFINITY;
+        for l in 0..=BROWNOUT_MAX_LEVEL {
+            let cap = brownout_quality_cap(l);
+            assert!(cap <= prev);
+            prev = cap;
+        }
+        assert_eq!(brownout_effective_quality(0, 0.9), 0.9);
+        assert_eq!(brownout_effective_quality(1, 0.9), 0.7);
+        assert_eq!(brownout_effective_quality(1, 0.2), 0.2);
+        // L2: escalation only relaxes at level >= 2
+        assert_eq!(brownout_escalation_quality(1, 0.9), 0.9);
+        assert_eq!(brownout_escalation_quality(2, 0.9), 0.5);
+        // gamma never grows, never hits 0 from a positive input
+        for l in 0..=BROWNOUT_MAX_LEVEL {
+            for g in 0..16 {
+                let s = brownout_gamma(l, g);
+                assert!(s <= g);
+                assert!(g == 0 || s >= 1);
+            }
+        }
+        assert_eq!(brownout_gamma(2, 8), 4);
+        assert_eq!(brownout_gamma(1, 8), 8);
+        // L3: admission fraction monotone in priority, full below max
+        for l in 0..BROWNOUT_MAX_LEVEL {
+            for p in Priority::all() {
+                assert_eq!(admission_fraction(l, p), 1.0);
+            }
+        }
+        let f = Priority::all().map(|p| admission_fraction(BROWNOUT_MAX_LEVEL, p));
+        assert!(f[0] < f[1] && f[1] < f[2]);
+        assert_eq!(f[2], 1.0);
+        // class caps respect the fraction, floor at 1, ceil at cap
+        assert_eq!(class_queue_cap(BROWNOUT_MAX_LEVEL, Priority::Interactive, 64), 64);
+        assert_eq!(class_queue_cap(BROWNOUT_MAX_LEVEL, Priority::BestEffort, 64), 16);
+        assert_eq!(class_queue_cap(BROWNOUT_MAX_LEVEL, Priority::BestEffort, 1), 1);
+        assert_eq!(class_queue_cap(0, Priority::BestEffort, 64), 64);
     }
 }

@@ -43,6 +43,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::batching::BatchMode;
+use crate::policy::{Priority, PRIORITY_CLASSES};
 use crate::rng::Rng;
 use crate::runtime::Manifest;
 use crate::serve::{
@@ -78,6 +79,9 @@ pub struct TraceEvent {
     /// cache workload). `None` salts by event index: all prompts
     /// distinct.
     pub salt: Option<usize>,
+    /// Priority class ([`Request::priority`]); `None` = the server
+    /// default (`Interactive`).
+    pub priority: Option<Priority>,
 }
 
 impl TraceEvent {
@@ -90,6 +94,7 @@ impl TraceEvent {
             deadline: None,
             cancel_after: None,
             salt: None,
+            priority: None,
         }
     }
 }
@@ -127,6 +132,9 @@ impl Trace {
             }
             if let Some(sa) = e.salt {
                 s.push_str(&format!(" salt={sa}"));
+            }
+            if let Some(p) = e.priority {
+                s.push_str(&format!(" prio={}", p.name()));
             }
             s.push('\n');
         }
@@ -180,6 +188,17 @@ impl Trace {
                     "dl_us" => ev.deadline = Some(Duration::from_micros(parse_u64()?)),
                     "cancel_us" => ev.cancel_after = Some(Duration::from_micros(parse_u64()?)),
                     "salt" => ev.salt = Some(parse_u64()? as usize),
+                    "prio" => {
+                        ev.priority = Some(match v {
+                            "interactive" => Priority::Interactive,
+                            "batch" => Priority::Batch,
+                            "best-effort" => Priority::BestEffort,
+                            other => anyhow::bail!(
+                                "trace line {}: unknown prio {other:?}",
+                                ln + 2
+                            ),
+                        })
+                    }
                     other => anyhow::bail!("trace line {}: unknown key {other:?}", ln + 2),
                 }
             }
@@ -362,6 +381,46 @@ pub fn gen_cancel_storm(seed: u64, n: usize, shape: GenShape) -> Trace {
     Trace { name: "cancel-storm".into(), events }
 }
 
+/// Sustained ~3× overload with mixed priority classes, then a quiet
+/// tail: the brownout workload. The burst phase offers interactive,
+/// batch, and best-effort traffic round-robin at arrivals far faster
+/// than service — every request carries a high quality target so the
+/// L1 quality cap is observable as `effective_quality_delta` — and the
+/// tail phase trickles sparse interactive requests long enough for the
+/// controller's hysteretic recovery (ticks every ~10 ms, six calm
+/// ticks per level) to walk the level back to 0 *before* the trace
+/// ends, so the drained-stats `brownout_level == 0` invariant is
+/// meaningful rather than racy.
+pub fn gen_overload_brownout(seed: u64, n: usize, shape: GenShape) -> Trace {
+    let mut rng = Rng::new(seed ^ 0xB40740);
+    let mut events = Vec::with_capacity(n);
+    let tail = 8.min(n.saturating_sub(1));
+    let burst = n - tail;
+    let mut t_us = 0u64;
+    for i in 0..burst {
+        t_us += exp_us(&mut rng, 300.0);
+        let mut ev = TraceEvent::new(Duration::from_micros(t_us), plen_uniform(&mut rng, shape));
+        ev.quality = Some(0.9);
+        ev.max_new = Some(rng.range(4, shape.amax));
+        ev.priority = Some(Priority::all()[i % crate::policy::PRIORITY_CLASSES]);
+        events.push(ev);
+    }
+    // quiet tail: sparse interactive trickle while the server drains
+    t_us += 250_000;
+    for _ in 0..tail {
+        let mut ev = TraceEvent::new(
+            Duration::from_micros(t_us),
+            (shape.sprompt / 4).max(1),
+        );
+        ev.quality = Some(0.9);
+        ev.max_new = Some(2);
+        ev.priority = Some(Priority::Interactive);
+        events.push(ev);
+        t_us += 120_000;
+    }
+    Trace { name: "overload-brownout".into(), events }
+}
+
 /// Multi-turn conversations over a shared seeded system prompt: every
 /// request opens with the same system-prompt content (one shared
 /// [`TraceEvent::salt`]), and each conversation's turns extend the
@@ -453,9 +512,27 @@ pub struct ReplayOutcome {
     pub max_in_flight: u64,
     /// Client-observed submit → terminal latencies, ms.
     pub e2e_ms: Vec<f64>,
+    /// Trace events offered per priority class (accepted or not),
+    /// indexed by [`Priority::index`].
+    pub class_offered: [usize; PRIORITY_CLASSES],
+    /// Accepted submits per priority class.
+    pub class_accepted: [usize; PRIORITY_CLASSES],
+    /// Terminal `Done` events per priority class — the per-class
+    /// goodput numerator for the brownout gates.
+    pub class_done: [usize; PRIORITY_CLASSES],
 }
 
 impl ReplayOutcome {
+    /// Fraction of offered interactive requests that completed (`Done`);
+    /// 1.0 when none were offered — the brownout goodput gate.
+    pub fn interactive_goodput(&self) -> f64 {
+        let i = Priority::Interactive.index();
+        if self.class_offered[i] == 0 {
+            return 1.0;
+        }
+        self.class_done[i] as f64 / self.class_offered[i] as f64
+    }
+
     pub fn e2e_p50_ms(&self) -> f64 {
         stats::percentile(&self.e2e_ms, 50.0)
     }
@@ -477,6 +554,7 @@ struct Tracked {
     terminals: usize,
     done_tokens: Option<usize>,
     open: bool,
+    priority: Priority,
 }
 
 /// Fabricate a deterministic prompt of `len` letter tokens (valid vocab,
@@ -517,6 +595,7 @@ fn drain(tracked: &mut [Tracked], out: &mut ReplayOutcome, now: Instant) -> bool
                     match ev {
                         Event::Done(c) => {
                             out.done += 1;
+                            out.class_done[t.priority.index()] += 1;
                             t.done_tokens = Some(c.tokens.len());
                         }
                         Event::Failed { .. } => out.failed += 1,
@@ -571,6 +650,9 @@ pub fn replay(server: &Server, trace: &Trace, opts: &ReplayOpts) -> Result<Repla
         if let Some(d) = ev.deadline {
             req = req.deadline(d);
         }
+        let priority = ev.priority.unwrap_or_default();
+        req = req.priority(priority);
+        out.class_offered[priority.index()] += 1;
         // shared Busy-retry helper: jittered backoff, draining event
         // streams between attempts so the window can actually open
         let retry_for = if opts.retry_busy { opts.busy_retry_for } else { Duration::ZERO };
@@ -585,6 +667,7 @@ pub fn replay(server: &Server, trace: &Trace, opts: &ReplayOpts) -> Result<Repla
         if let Some(handle) = handle {
             let now = Instant::now();
             out.accepted += 1;
+            out.class_accepted[priority.index()] += 1;
             out.max_in_flight = out.max_in_flight.max(server.in_flight());
             tracked.push(Tracked {
                 handle,
@@ -595,6 +678,7 @@ pub fn replay(server: &Server, trace: &Trace, opts: &ReplayOpts) -> Result<Repla
                 terminals: 0,
                 done_tokens: None,
                 open: true,
+                priority,
             });
         }
     }
@@ -759,6 +843,58 @@ pub fn check_invariants(
             stats.hybrid_requests
         ));
     }
+    // brownout / priority accounting (holds for every scenario: with
+    // the controller disabled the level is pinned to 0 and the class
+    // counters still balance)
+    if stats.brownout_level != 0 {
+        v.push(format!(
+            "brownout level {} nonzero after drain (monotone recovery violated)",
+            stats.brownout_level
+        ));
+    }
+    let class_admitted: u64 = stats.class_admitted.iter().sum();
+    if class_admitted != out.accepted as u64 {
+        v.push(format!(
+            "priority ledger unbalanced: {} accepted but per-class admits sum to {}",
+            out.accepted, class_admitted
+        ));
+    }
+    v
+}
+
+/// Interactive-class goodput (`Done` / offered) the brownout scenario
+/// must preserve under 3× overload — the CI gate floor.
+pub const INTERACTIVE_GOODPUT_FLOOR: f64 = 0.9;
+
+/// Extra gates for the `overload-brownout` scenario, on top of
+/// [`check_invariants`]: interactive goodput holds the floor while the
+/// lower classes absorb the shedding, and the controller actually
+/// engaged (a brownout run that never trips is vacuous).
+pub fn check_brownout_invariants(out: &ReplayOutcome, stats: &ServerStats) -> Vec<String> {
+    let mut v = Vec::new();
+    let goodput = out.interactive_goodput();
+    if goodput < INTERACTIVE_GOODPUT_FLOOR {
+        let i = Priority::Interactive.index();
+        v.push(format!(
+            "interactive goodput {goodput:.3} below the {INTERACTIVE_GOODPUT_FLOOR} floor \
+             ({} done / {} offered)",
+            out.class_done[i], out.class_offered[i]
+        ));
+    }
+    // strict lowest-class-first shedding, aggregate form: the
+    // interactive class never absorbs more shed events than best-effort
+    let shed_i = stats.class_shed[Priority::Interactive.index()];
+    let shed_b = stats.class_shed[Priority::BestEffort.index()];
+    if shed_i > shed_b {
+        v.push(format!(
+            "priority inversion: interactive absorbed {shed_i} sheds vs best-effort {shed_b}"
+        ));
+    }
+    if stats.effective_quality_delta <= 0.0 {
+        v.push(
+            "brownout never engaged: effective_quality_delta is zero under 3x overload".into(),
+        );
+    }
     v
 }
 
@@ -779,6 +915,11 @@ pub struct Scenario {
     /// when the artifacts predate `verify@K`, so the scenario stays
     /// runnable — and its invariants meaningful — on any manifest).
     pub decode: DecodeMode,
+    /// Arm the brownout controller with this target sojourn
+    /// ([`ServeConfig::brownout_target`]); `None` (every scenario but
+    /// `overload-brownout`) leaves the controller unbuilt, pinning the
+    /// level to 0 — byte-identical to the pre-brownout server.
+    pub brownout_target: Option<Duration>,
 }
 
 /// The built-in scenario suite, in run order.
@@ -791,6 +932,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             queue_cap: None,
             retry_busy: true,
             decode: DecodeMode::Routed,
+            brownout_target: None,
         },
         Scenario {
             name: "poisson-burst",
@@ -799,6 +941,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             queue_cap: None,
             retry_busy: true,
             decode: DecodeMode::Routed,
+            brownout_target: None,
         },
         Scenario {
             name: "diurnal",
@@ -807,6 +950,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             queue_cap: None,
             retry_busy: true,
             decode: DecodeMode::Routed,
+            brownout_target: None,
         },
         Scenario {
             name: "long-tail",
@@ -815,6 +959,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             queue_cap: None,
             retry_busy: true,
             decode: DecodeMode::Routed,
+            brownout_target: None,
         },
         Scenario {
             name: "mixed-quality",
@@ -823,6 +968,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             queue_cap: None,
             retry_busy: true,
             decode: DecodeMode::Routed,
+            brownout_target: None,
         },
         Scenario {
             name: "overload-shed",
@@ -831,6 +977,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             queue_cap: Some(8),
             retry_busy: false,
             decode: DecodeMode::Routed,
+            brownout_target: None,
         },
         Scenario {
             name: "cancel-storm",
@@ -839,6 +986,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             queue_cap: None,
             retry_busy: true,
             decode: DecodeMode::Routed,
+            brownout_target: None,
         },
         Scenario {
             name: "sessions",
@@ -847,6 +995,7 @@ pub fn builtin_suite() -> Vec<Scenario> {
             queue_cap: None,
             retry_busy: true,
             decode: DecodeMode::Routed,
+            brownout_target: None,
         },
         Scenario {
             name: "hybrid-decode",
@@ -855,8 +1004,31 @@ pub fn builtin_suite() -> Vec<Scenario> {
             queue_cap: None,
             retry_busy: true,
             decode: DecodeMode::Hybrid,
+            brownout_target: None,
         },
     ]
+}
+
+/// The overload suite (run by `kick-tires --overload`): sustained ~3×
+/// capacity with mixed priority classes against an armed brownout
+/// controller, gated on [`check_invariants`] plus
+/// [`check_brownout_invariants`] — zero lost requests, interactive
+/// goodput above the floor while best-effort absorbs the shedding, and
+/// the level back at 0 once the burst drains.
+pub fn overload_suite() -> Vec<Scenario> {
+    vec![Scenario {
+        name: "overload-brownout",
+        about: "3x sustained load, mixed priorities, brownout controller armed",
+        make: gen_overload_brownout,
+        queue_cap: Some(16),
+        // Busy retries on: under brownout the point is graceful
+        // degradation, not rejection — lower classes wait (absorbing
+        // the shedding as repeated per-class shed counts) while
+        // interactive traffic keeps its full admission window
+        retry_busy: true,
+        decode: DecodeMode::Routed,
+        brownout_target: Some(Duration::from_millis(25)),
+    }]
 }
 
 /// One chaos scenario: background traffic plus a deterministic
@@ -946,6 +1118,8 @@ pub struct KickTiresOpts {
     pub smoke: bool,
     /// Also run the fault-injection suite ([`chaos_suite`]).
     pub chaos: bool,
+    /// Also run the brownout overload suite ([`overload_suite`]).
+    pub overload: bool,
     pub seed: u64,
     /// Run only scenarios whose name is in this list (all when `None`).
     pub only: Option<Vec<String>>,
@@ -964,6 +1138,7 @@ impl KickTiresOpts {
             large: "medium".into(),
             smoke: false,
             chaos: false,
+            overload: false,
             seed: 0x7EA5E7,
             only: None,
             bench_json: None,
@@ -1021,6 +1196,20 @@ impl KickTiresReport {
             out.push((k("failovers"), s.stats.failovers as f64));
             out.push((k("degraded"), s.stats.degraded as f64));
             out.push((k("retries"), s.stats.retries as f64));
+            // overload-brownout trajectory (level 0 / zero deltas in
+            // every scenario that leaves the controller unarmed); the
+            // CI gate greps brownout_level == 0, lost == 0, and
+            // violations == 0 for the overload-brownout row
+            out.push((k("queue_delay_p99_ms"), s.stats.queue_delay.p99_ms));
+            out.push((k("brownout_level"), s.stats.brownout_level as f64));
+            out.push((k("effective_quality_delta"), s.stats.effective_quality_delta));
+            out.push((k("interactive_goodput"), s.outcome.interactive_goodput()));
+            for p in Priority::all() {
+                let i = p.index();
+                out.push((k(&format!("{}_admitted", p.name())), s.stats.class_admitted[i] as f64));
+                out.push((k(&format!("{}_shed", p.name())), s.stats.class_shed[i] as f64));
+                out.push((k(&format!("{}_done", p.name())), s.outcome.class_done[i] as f64));
+            }
             let terminals = s.outcome.done + s.outcome.failed + s.outcome.cancelled;
             out.push((k("lost"), s.outcome.accepted.saturating_sub(terminals) as f64));
             out.push((k("violations"), s.violations.len() as f64));
@@ -1109,7 +1298,11 @@ pub fn kick_tires(opts: &KickTiresOpts) -> Result<KickTiresReport> {
         Ok::<_, anyhow::Error>((outcome, stats, violations))
     };
     let mut scenarios = Vec::new();
-    for sc in builtin_suite() {
+    let mut suite = builtin_suite();
+    if opts.overload {
+        suite.extend(overload_suite());
+    }
+    for sc in suite {
         if skip(sc.name) {
             continue;
         }
@@ -1118,8 +1311,12 @@ pub fn kick_tires(opts: &KickTiresOpts) -> Result<KickTiresReport> {
             cfg.queue_cap = cap;
         }
         cfg.decode = sc.decode;
+        cfg.brownout_target = sc.brownout_target;
         let trace = (sc.make)(opts.seed, n, shape);
-        let (outcome, stats, violations) = run_one(cfg, &trace, sc.retry_busy, sc.name)?;
+        let (outcome, stats, mut violations) = run_one(cfg, &trace, sc.retry_busy, sc.name)?;
+        if sc.brownout_target.is_some() {
+            violations.extend(check_brownout_invariants(&outcome, &stats));
+        }
         scenarios.push(ScenarioReport {
             scenario: sc.name,
             about: sc.about,
@@ -1177,6 +1374,7 @@ mod tests {
             ("cancel-storm", gen_cancel_storm),
             ("sessions", gen_sessions),
             ("hybrid-decode", gen_hybrid_decode),
+            ("overload-brownout", gen_overload_brownout),
         ] {
             let a = gen(7, 50, SHAPE);
             let b = gen(7, 50, SHAPE);
@@ -1249,6 +1447,12 @@ mod tests {
         let sess_path = dir.join("sessions.trace");
         sess.save(&sess_path).unwrap();
         assert_eq!(Trace::load(&sess_path).unwrap(), sess);
+        // priority classes survive the text format too
+        let brown = gen_overload_brownout(11, 12, SHAPE);
+        assert!(brown.events.iter().all(|e| e.priority.is_some()));
+        let brown_path = dir.join("brownout.trace");
+        brown.save(&brown_path).unwrap();
+        assert_eq!(Trace::load(&brown_path).unwrap(), brown);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -1260,6 +1464,9 @@ mod tests {
         assert!(Trace::parse("# hybrid-trace v1 x\nplen=4").is_err()); // no at_us
         assert!(Trace::parse("# hybrid-trace v1 x\nat_us=5 plen=4 bogus=1").is_err());
         assert!(Trace::parse("# hybrid-trace v1 x\nat_us=zzz plen=4").is_err());
+        assert!(Trace::parse("# hybrid-trace v1 x\nat_us=5 plen=4 prio=urgent").is_err());
+        let t = Trace::parse("# hybrid-trace v1 x\nat_us=5 plen=4 prio=best-effort").unwrap();
+        assert_eq!(t.events[0].priority, Some(Priority::BestEffort));
         // valid lines parse; comments and blanks are skipped, rows sort
         let t = Trace::parse(
             "# hybrid-trace v1 demo\n\n# a comment\nat_us=90 plen=4\nat_us=5 plen=2 q=0.5 max=3 dl_us=100 cancel_us=7\n",
@@ -1344,6 +1551,14 @@ mod tests {
             large_call_fraction: 0.0,
             large_slot_steps: 0,
             pool_exhausted_requeues: 0,
+            queue_delay: Default::default(),
+            brownout_level: 0,
+            // the helper's requests are all default-priority
+            // (Interactive, index 2); summing to `accepted` keeps the
+            // priority-ledger invariant balanced
+            class_admitted: [0, 0, completed + cancelled + shed],
+            class_shed: [0; PRIORITY_CLASSES],
+            effective_quality_delta: 0.0,
         }
     }
 
@@ -1544,6 +1759,85 @@ mod tests {
         let plan = (outage.plan)();
         assert!(plan.faults.len() >= 4);
         assert!(outage.retry_budget as usize >= plan.faults.len());
+    }
+
+    #[test]
+    fn overload_suite_arms_the_brownout_controller() {
+        let suite = overload_suite();
+        assert_eq!(suite.len(), 1);
+        let sc = &suite[0];
+        assert_eq!(sc.name, "overload-brownout");
+        assert!(sc.brownout_target.is_some(), "controller must be armed");
+        assert_eq!(sc.queue_cap, Some(16));
+        assert!(sc.retry_busy, "lower classes wait rather than reject");
+        // no clean-suite scenario arms the controller: their replays
+        // must stay byte-identical to the pre-brownout server
+        assert!(builtin_suite().iter().all(|s| s.brownout_target.is_none()));
+        // the trace mixes all three classes in the burst and trickles
+        // interactive-only traffic through the recovery tail
+        let t = gen_overload_brownout(5, 60, SHAPE);
+        for p in Priority::all() {
+            assert!(
+                t.events.iter().any(|e| e.priority == Some(p)),
+                "burst must offer {} traffic",
+                p.name()
+            );
+        }
+        let tail: Vec<_> = t.events.iter().rev().take(8).collect();
+        assert!(tail.iter().all(|e| e.priority == Some(Priority::Interactive)));
+        // the tail spans enough wall time for hysteretic recovery
+        // (>= 18 calm ticks at the 10 ms cadence, with margin)
+        let span = t.events.last().unwrap().at - t.events[t.events.len() - 8].at;
+        assert!(span >= Duration::from_millis(500), "recovery tail too short: {span:?}");
+        // every burst request carries a quality target above the L1
+        // cap, so an engaged controller is visible as a quality delta
+        assert!(t.events.iter().all(|e| e.quality == Some(0.9)));
+    }
+
+    #[test]
+    fn brownout_invariants_gate_goodput_ordering_and_engagement() {
+        let i = Priority::Interactive.index();
+        let mk_out = |offered: usize, done: usize| {
+            let mut o = ReplayOutcome { name: "brownout".into(), ..Default::default() };
+            o.class_offered[i] = offered;
+            o.class_done[i] = done;
+            o
+        };
+        let mut st = stats_with(0, 0, 0);
+        st.effective_quality_delta = 0.05;
+        // healthy run: goodput at 1.0, shedding on best-effort only
+        st.class_shed = [7, 2, 0];
+        assert!(check_brownout_invariants(&mk_out(10, 10), &st).is_empty());
+        // goodput below the floor is a violation
+        let v = check_brownout_invariants(&mk_out(10, 5), &st);
+        assert!(v.iter().any(|m| m.contains("interactive goodput")), "{v:?}");
+        // priority inversion: interactive shed more than best-effort
+        let mut st_inv = stats_with(0, 0, 0);
+        st_inv.effective_quality_delta = 0.05;
+        st_inv.class_shed = [1, 0, 4];
+        let v = check_brownout_invariants(&mk_out(10, 10), &st_inv);
+        assert!(v.iter().any(|m| m.contains("priority inversion")), "{v:?}");
+        // a run where the controller never engaged is vacuous
+        let mut st_idle = stats_with(0, 0, 0);
+        st_idle.class_shed = [5, 0, 0];
+        let v = check_brownout_invariants(&mk_out(10, 10), &st_idle);
+        assert!(v.iter().any(|m| m.contains("never engaged")), "{v:?}");
+        // no interactive traffic offered => goodput is vacuously 1.0
+        assert_eq!(ReplayOutcome::default().interactive_goodput(), 1.0);
+    }
+
+    #[test]
+    fn invariants_catch_nonzero_drained_brownout_level() {
+        let out = outcome(4, 4, 0, 0);
+        let mut st = stats_with(4, 0, 0);
+        st.brownout_level = 2;
+        let v = check_invariants(&out, &st, 256, &TransferBounds::default());
+        assert!(v.iter().any(|m| m.contains("brownout level")), "{v:?}");
+        // and an unbalanced per-class admit ledger
+        let mut st = stats_with(4, 0, 0);
+        st.class_admitted = [0, 0, 3];
+        let v = check_invariants(&out, &st, 256, &TransferBounds::default());
+        assert!(v.iter().any(|m| m.contains("priority ledger unbalanced")), "{v:?}");
     }
 
     #[test]

@@ -60,7 +60,7 @@ use crate::io::Tensor;
 use crate::lm::{LmEngine, PagedArtifacts, VerifyArtifacts};
 use crate::metrics::{LatencyRecorder, LatencySummary, RoutingCounters, RoutingSnapshot};
 use crate::paged::{blocks_needed, release_table, BlockAllocator, PagedKvCache, PrefixCache, PrefixHit};
-use crate::policy::{LadderFamily, TierPolicy};
+use crate::policy::{self, LadderFamily, Priority, TierPolicy, PRIORITY_CLASSES};
 use crate::rng::Rng;
 use crate::router::RouterEngine;
 use crate::runtime::{Exec, Globals, Manifest, Runtime, ELEM_BYTES};
@@ -254,6 +254,18 @@ pub struct ServeConfig {
     /// serves every request `Routed` and reports zero hybrid activity in
     /// [`ServerStats`].
     pub decode: DecodeMode,
+    /// Overload brownout controller (DESIGN.md §13): the CoDel-style
+    /// target sojourn for submit→dispatch queue delay. `Some(target)`
+    /// arms the controller — the router senses sustained pressure
+    /// (queue-delay EWMA vs this target, admission-window depth vs
+    /// `queue_cap`, shed rate) and actuates
+    /// [`ServerStats::brownout_level`]: L1 caps effective quality
+    /// targets (routes cheaper), L2 relaxes hybrid escalation and
+    /// shrinks draft blocks, L3 applies priority-weighted admission.
+    /// `None` (the default) builds no controller at all: the level is
+    /// pinned to 0 and routing is byte-identical to a server without
+    /// brownout (A/B-gated in `tests/serve_integration.rs`).
+    pub brownout_target: Option<Duration>,
 }
 
 /// One injected fault: fires in tier `tier`, replica `replica`, when
@@ -344,6 +356,7 @@ impl ServeConfig {
             retry_budget: 2,
             fault_plan: None,
             decode: DecodeMode::Routed,
+            brownout_target: None,
         }
     }
 }
@@ -384,6 +397,7 @@ pub struct Request {
     policy: Option<TierPolicy>,
     truncate: bool,
     decode: Option<DecodeMode>,
+    priority: Priority,
 }
 
 impl Request {
@@ -391,15 +405,28 @@ impl Request {
         Request { prompt, ..Default::default() }
     }
 
-    /// Quality target in `[0, 1]` (clamped; non-finite treated as `1`):
-    /// `0` routes for cost, `1` for quality. Resolved to a tier at
-    /// routing time through the server's quality-indexed
-    /// [`LadderFamily`], so two requests in the same batch window can
-    /// route under different targets. Without a target (and without a
-    /// [`Request::policy`] override) the server's default
-    /// [`ServeConfig::policy`] applies.
+    /// Quality target in `[0, 1]`: `0` routes for cost, `1` for
+    /// quality. Resolved to a tier at routing time through the server's
+    /// quality-indexed [`LadderFamily`], so two requests in the same
+    /// batch window can route under different targets. Without a target
+    /// (and without a [`Request::policy`] override) the server's
+    /// default [`ServeConfig::policy`] applies. NaN or out-of-range
+    /// targets are rejected at submit with
+    /// [`SubmitError::InvalidQuality`] — earlier revisions let them
+    /// flow into the ladder resolution with unspecified semantics.
     pub fn quality(mut self, q: f32) -> Request {
         self.quality = Some(q);
+        self
+    }
+
+    /// Priority class for admission and shedding under overload
+    /// (default [`Priority::Interactive`]). Below brownout level 3
+    /// every class is admitted alike; at level 3 admission is
+    /// priority-weighted and shedding is strictly lowest-class-first —
+    /// `BestEffort` absorbs the shedding so `Interactive` goodput
+    /// survives the overload (DESIGN.md §13).
+    pub fn priority(mut self, p: Priority) -> Request {
+        self.priority = p;
         self
     }
 
@@ -414,9 +441,12 @@ impl Request {
         self
     }
 
-    /// Relative deadline: if the request has not reached a decode slot
-    /// when it expires, it is shed ([`Event::Failed`]) instead of doing
-    /// work nobody is waiting for. Already-decoding requests finish.
+    /// Relative deadline: an expired request is shed ([`Event::Failed`])
+    /// instead of doing work nobody is waiting for — before dispatch
+    /// (`deadline expired before decode`) or between decode steps
+    /// (`deadline expired mid-decode`, releasing its KV slot/blocks).
+    /// Earlier revisions only checked before dispatch, so an expired
+    /// in-flight request burned decode steps to completion.
     pub fn deadline(mut self, d: Duration) -> Request {
         self.deadline = Some(d);
         self
@@ -477,10 +507,13 @@ pub enum Event {
 
 /// Errors surfaced by [`Server::submit`] — the request was **not**
 /// accepted.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum SubmitError {
     /// The admission window ([`ServeConfig::queue_cap`]) is full —
-    /// backpressure; retry after completions drain.
+    /// backpressure; retry after completions drain. Under brownout
+    /// level 3 lower-priority classes see `Busy` at a reduced
+    /// per-class window ([`crate::policy::class_queue_cap`]), so
+    /// shedding is strictly lowest-class-first.
     Busy,
     /// The server's ingress is gone (router thread exited). The seed
     /// silently dropped such requests and left callers blocked forever.
@@ -500,6 +533,14 @@ pub enum SubmitError {
     /// honored. Earlier revisions silently promoted it to 1; rejecting
     /// at submit makes the contract explicit.
     ZeroTokenBudget,
+    /// The request carried a NaN or out-of-`[0, 1]` quality target.
+    /// Rejected at submit — earlier revisions let such values flow into
+    /// the [`LadderFamily`] resolution with unspecified semantics
+    /// (non-finite silently routed to the most capable tier).
+    InvalidQuality {
+        /// The offending target.
+        quality: f32,
+    },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -516,6 +557,10 @@ impl std::fmt::Display for SubmitError {
                 f,
                 "max_new_tokens(0) is unsatisfiable: decode samples at \
                  least one token at prefill"
+            ),
+            SubmitError::InvalidQuality { quality } => write!(
+                f,
+                "invalid quality target {quality}: must be finite and in [0, 1]"
             ),
         }
     }
@@ -659,6 +704,9 @@ struct InFlight {
     /// the protocol; stripped on requeue after a hybrid-worker death so
     /// the retry lands on the routed path.
     hybrid: bool,
+    /// Priority class for admission/shedding under overload
+    /// (DESIGN.md §13).
+    priority: Priority,
     /// Holds the admission-window slot for this request's lifetime.
     _admission: AdmissionGuard,
 }
@@ -1024,6 +1072,33 @@ pub struct ServerMetrics {
     /// Distinct from ordinary slot-table pressure: sustained growth here
     /// means the pool, not the batch, is the bottleneck.
     pub pool_exhausted_requeues: AtomicU64,
+    /// Per-request submit→dispatch wait, recorded by the router at both
+    /// dispatch sites — the brownout controller's primary sensor and
+    /// the `queue_delay_ms` observability satellite.
+    pub queue_delay: LatencyRecorder,
+    /// Brownout level in force (0 with the controller disarmed),
+    /// published by the router's control tick and read by `submit`
+    /// (L3 per-class admission) and the hybrid worker (L2 escalation).
+    pub brownout_level: AtomicU64,
+    /// Requests accepted through the admission window, per priority
+    /// class ([`Priority::index`] order: best-effort, batch,
+    /// interactive).
+    pub class_admitted: [AtomicU64; PRIORITY_CLASSES],
+    /// Requests shed per priority class — submit-time `Busy` rejections
+    /// plus deadline sheds, same index order as `class_admitted`. The
+    /// sum feeds the controller's shed-rate sensor.
+    pub class_shed: [AtomicU64; PRIORITY_CLASSES],
+    /// Effective-quality-reduction gauge, sampled per quality-carrying
+    /// request routed under brownout as `(sample count, Σ delta‰)` —
+    /// the same no-float-atomic pattern as `kv_util_*`.
+    pub eq_delta_samples: AtomicU64,
+    pub eq_delta_permille: AtomicU64,
+}
+
+/// Sum of per-class sheds — the brownout controller's shed-rate sensor
+/// reads the delta of this between control ticks.
+fn class_shed_total(metrics: &ServerMetrics) -> u64 {
+    metrics.class_shed.iter().map(|c| c.load(Ordering::Relaxed)).sum()
 }
 
 /// Point-in-time per-tier report.
@@ -1115,6 +1190,23 @@ pub struct ServerStats {
     /// Paged-admission waves requeued on KV block-pool exhaustion after
     /// LRU eviction — the pool (not the slot table) was the bottleneck.
     pub pool_exhausted_requeues: u64,
+    /// Submit→dispatch wait per request (`queue_delay_ms` p50/p99 are
+    /// the serve-demo/bench headline) — the brownout sensor.
+    pub queue_delay: LatencySummary,
+    /// Brownout level at snapshot time (0 unless
+    /// [`ServeConfig::brownout_target`] armed the controller and load
+    /// tripped it; always back to 0 once load recedes).
+    pub brownout_level: u64,
+    /// Requests admitted per priority class, [`Priority::index`] order
+    /// (best-effort, batch, interactive).
+    pub class_admitted: [u64; PRIORITY_CLASSES],
+    /// Requests shed per priority class (submit `Busy` + deadline
+    /// sheds), same order. Under brownout L3 shedding is strictly
+    /// lowest-class-first.
+    pub class_shed: [u64; PRIORITY_CLASSES],
+    /// Mean reduction applied to quality-carrying requests' targets by
+    /// the L1 brownout actuator (0.0 at level 0 / controller off).
+    pub effective_quality_delta: f64,
 }
 
 impl ServerStats {
@@ -1281,6 +1373,20 @@ fn snapshot_stats(
         },
         large_slot_steps: metrics.large_slot_steps.load(Ordering::Relaxed),
         pool_exhausted_requeues: metrics.pool_exhausted_requeues.load(Ordering::Relaxed),
+        queue_delay: metrics.queue_delay.snapshot(),
+        brownout_level: metrics.brownout_level.load(Ordering::Relaxed),
+        class_admitted: std::array::from_fn(|i| metrics.class_admitted[i].load(Ordering::Relaxed)),
+        class_shed: std::array::from_fn(|i| metrics.class_shed[i].load(Ordering::Relaxed)),
+        effective_quality_delta: {
+            let samples = metrics.eq_delta_samples.load(Ordering::Relaxed);
+            if samples == 0 {
+                0.0
+            } else {
+                metrics.eq_delta_permille.load(Ordering::Relaxed) as f64
+                    / samples as f64
+                    / 1000.0
+            }
+        },
     }
 }
 
@@ -1360,6 +1466,12 @@ impl Server {
             hybrid_degraded_blocks: AtomicU64::new(0),
             large_slot_steps: AtomicU64::new(0),
             pool_exhausted_requeues: AtomicU64::new(0),
+            queue_delay: LatencyRecorder::new(),
+            brownout_level: AtomicU64::new(0),
+            class_admitted: std::array::from_fn(|_| AtomicU64::new(0)),
+            class_shed: std::array::from_fn(|_| AtomicU64::new(0)),
+            eq_delta_samples: AtomicU64::new(0),
+            eq_delta_permille: AtomicU64::new(0),
         });
         let replicas: Vec<usize> = cfg.tiers.iter().map(|t| t.replicas).collect();
         let health = Arc::new(FleetHealth::new(&replicas));
@@ -1496,6 +1608,11 @@ impl Server {
         if req.max_new_tokens == Some(0) {
             return Err(SubmitError::ZeroTokenBudget);
         }
+        if let Some(q) = req.quality {
+            if !q.is_finite() || !(0.0..=1.0).contains(&q) {
+                return Err(SubmitError::InvalidQuality { quality: q });
+            }
+        }
         if req.prompt.len() > self.sprompt {
             if req.truncate {
                 req.prompt.truncate(self.sprompt);
@@ -1507,10 +1624,18 @@ impl Server {
             }
         }
         // reserve an admission slot (CAS loop: submit is called from
-        // many client threads)
+        // many client threads). The bound is per priority class: below
+        // brownout level 3 every class sees the full queue_cap (so the
+        // level-0 path is byte-identical to the pre-brownout server);
+        // at level 3 lower classes see a reduced window, which is what
+        // makes shedding strictly lowest-class-first.
+        let level = self.metrics.brownout_level.load(Ordering::Relaxed) as u8;
+        let class_cap =
+            policy::class_queue_cap(level, req.priority, self.queue_cap as usize) as u64;
         let mut cur = self.metrics.in_flight.load(Ordering::Acquire);
         loop {
-            if cur >= self.queue_cap {
+            if cur >= class_cap {
+                self.metrics.class_shed[req.priority.index()].fetch_add(1, Ordering::Relaxed);
                 return Err(SubmitError::Busy);
             }
             match self.metrics.in_flight.compare_exchange_weak(
@@ -1523,6 +1648,7 @@ impl Server {
                 Err(seen) => cur = seen,
             }
         }
+        self.metrics.class_admitted[req.priority.index()].fetch_add(1, Ordering::Relaxed);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let cancel = Arc::new(AtomicBool::new(false));
@@ -1540,6 +1666,7 @@ impl Server {
             retries: 0,
             hybrid: self.hybrid_available
                 && req.decode.unwrap_or(self.default_decode) == DecodeMode::Hybrid,
+            priority: req.priority,
             _admission: AdmissionGuard(self.metrics.in_flight.clone()),
         };
         // a failed send returns (and drops) the request, releasing its
@@ -1678,6 +1805,63 @@ pub fn submit_with_retry(
 /// Shed reason when routing finds no live tier to degrade to.
 const NO_LIVE_TIER: &str = "no live tier: every breaker is open or every replica is down";
 
+/// Cadence of the router's brownout control tick.
+const BROWNOUT_TICK: Duration = Duration::from_millis(10);
+
+/// The router's side of the brownout control loop: owns the (optional)
+/// [`policy::BrownoutController`] plus the tick clock and the shed
+/// watermark its rate sensor differentiates. Ticked from the top of the
+/// router loop *and* from the batching window's idle-timeout branch —
+/// the window blocks while the server is idle, and recovery back to
+/// level 0 must not wait for traffic to arrive.
+struct BrownoutTick {
+    ctrl: Option<policy::BrownoutController>,
+    last_tick: Instant,
+    last_shed: u64,
+}
+
+impl BrownoutTick {
+    fn new(cfg: &ServeConfig, metrics: &ServerMetrics) -> BrownoutTick {
+        BrownoutTick {
+            ctrl: cfg
+                .brownout_target
+                .map(|t| policy::BrownoutController::new(t.as_secs_f64() * 1e3)),
+            last_tick: Instant::now(),
+            last_shed: class_shed_total(metrics),
+        }
+    }
+
+    /// Fold one observed submit→dispatch delay into the delay EWMA.
+    fn observe(&mut self, delay: Duration) {
+        if let Some(c) = &mut self.ctrl {
+            c.observe_delay_ms(delay.as_secs_f64() * 1e3);
+        }
+    }
+
+    /// Level in force right now (0 with the controller disarmed).
+    fn level(&self) -> u8 {
+        self.ctrl.as_ref().map_or(0, |c| c.level())
+    }
+
+    /// Run one control tick if the cadence has elapsed, publishing the
+    /// level to [`ServerMetrics::brownout_level`] for `submit` (L3
+    /// admission) and the hybrid worker (L2 escalation).
+    fn maybe_tick(&mut self, metrics: &ServerMetrics, queue_cap: usize) {
+        let Some(ctrl) = &mut self.ctrl else { return };
+        let now = Instant::now();
+        if now.duration_since(self.last_tick) < BROWNOUT_TICK {
+            return;
+        }
+        self.last_tick = now;
+        let depth =
+            metrics.in_flight.load(Ordering::Relaxed) as f64 / queue_cap.max(1) as f64;
+        let shed = class_shed_total(metrics);
+        let level = ctrl.tick(depth, shed.saturating_sub(self.last_shed));
+        self.last_shed = shed;
+        metrics.brownout_level.store(level as u64, Ordering::Relaxed);
+    }
+}
+
 fn router_thread(
     cfg: ServeConfig,
     rx: Receiver<RouterMsg>,
@@ -1710,14 +1894,23 @@ fn router_thread(
         .unwrap_or_else(|| LadderFamily::synthetic(tiers.len(), DEFAULT_QUALITY_LEVELS));
     let mut pending: Vec<InFlight> = Vec::new();
     let mut shutdown = false;
+    // overload brownout controller (DESIGN.md §13): armed only by
+    // `brownout_target` — disarmed, the level is pinned to 0 and every
+    // brownout branch below is the identity, so routing stays
+    // byte-identical to a server built without the controller
+    let mut brownout = BrownoutTick::new(&cfg, &metrics);
 
     while !shutdown {
+        brownout.maybe_tick(&metrics, cfg.queue_cap);
         // batching window: collect until deadline or max batch
         let deadline = Instant::now() + cfg.batch_window;
         while pending.len() < max_batch {
             let now = Instant::now();
             let wait = if pending.is_empty() {
-                Duration::from_millis(50)
+                // nap short while a brownout level is in force: the
+                // recovery ticks below must keep firing on an idle
+                // server or the level could never walk back to 0
+                if brownout.level() > 0 { BROWNOUT_TICK } else { Duration::from_millis(50) }
             } else if now >= deadline {
                 break;
             } else {
@@ -1730,6 +1923,7 @@ fn router_thread(
                     break;
                 }
                 Err(RecvTimeoutError::Timeout) => {
+                    brownout.maybe_tick(&metrics, cfg.queue_cap);
                     if !pending.is_empty() {
                         break;
                     }
@@ -1754,12 +1948,19 @@ fn router_thread(
         };
         let per_query = t_score.elapsed() / batch.len() as u32;
         let assigns = cfg.policy.assign(&scores);
+        let level = brownout.level();
         for ((mut req, score), default_tier) in batch.into_iter().zip(scores).zip(assigns) {
             metrics.router_latency.record(per_query);
             // per-request resolution: an explicit policy override wins,
             // then the quality target through the ladder family, then
             // the server-wide default — so one batch window can mix
-            // quality targets
+            // quality targets. Under brownout the L1 actuator caps the
+            // *effective* quality target (the paper's dial, turned by
+            // load): quality-carrying requests resolve through the
+            // capped target, and default-policy requests resolve as if
+            // they carried the cap. Level 0 is the identity on every
+            // arm. Policy overrides are explicit tier pins — brownout
+            // never rewrites them.
             let want = match (&req.policy, req.quality) {
                 // a seeded Random policy replays the same stream on
                 // every assign() call, and overrides are evaluated one
@@ -1778,7 +1979,19 @@ fn router_thread(
                     .first()
                     .copied()
                     .unwrap_or(default_tier),
-                (None, Some(q)) => family.assign_one(q, score),
+                (None, Some(q)) => {
+                    let eff = policy::brownout_effective_quality(level, q);
+                    if level > 0 {
+                        metrics.eq_delta_samples.fetch_add(1, Ordering::Relaxed);
+                        metrics
+                            .eq_delta_permille
+                            .fetch_add(((q - eff).max(0.0) * 1000.0) as u64, Ordering::Relaxed);
+                    }
+                    family.assign_one(eff, score)
+                }
+                (None, None) if level > 0 => {
+                    family.assign_one(policy::brownout_quality_cap(level), score)
+                }
                 (None, None) => default_tier,
             }
             .min(last_tier);
@@ -1789,9 +2002,16 @@ fn router_thread(
             }
             if req.expired() {
                 metrics.routing.shed(want);
+                metrics.class_shed[req.priority.index()].fetch_add(1, Ordering::Relaxed);
                 finish(req, Event::Failed { reason: "deadline expired before dispatch".into() });
                 continue;
             }
+            // submit→dispatch wait, recorded once per routing pass (the
+            // cancelled/expired requests above never reached dispatch)
+            // and folded into the brownout controller's delay EWMA
+            let qdelay = Instant::now().duration_since(req.t0);
+            metrics.queue_delay.record(qdelay);
+            brownout.observe(qdelay);
             // hybrid dispatch: draft–verify requests bypass tier
             // selection (both boundary tiers participate) and go to the
             // dedicated hybrid worker; the `Routed` announcement names
@@ -2414,13 +2634,26 @@ fn serve_loop(
         }
 
         // 1.5 retire cancelled / deadline-expired queued work before it
-        // costs a prefill, and release cancelled in-flight slots —
-        // the freed slot pads the next decode wave and is immediately
-        // reusable by admission; other slots' KV state is untouched
+        // costs a prefill, and release cancelled *or expired* in-flight
+        // slots — the freed slot pads the next decode wave and is
+        // immediately reusable by admission; other slots' KV state is
+        // untouched. The expired half is the mid-decode deadline sweep:
+        // a request whose deadline passes while decoding used to burn
+        // decode steps (and KV blocks) to completion; now its slot and
+        // block refcounts release within one iteration and it sheds
+        // with a distinct terminal reason.
         sweep_backlog(backlog, ctx, metrics);
-        for (idx, slot) in ctx.table.take_matching(|w| w.req.cancelled()) {
+        let now = Instant::now();
+        for (idx, slot) in ctx
+            .table
+            .take_matching(|w| w.req.cancelled() || w.req.expired_at(now))
+        {
             release_slot_blocks(ctx, idx)?;
-            cancel_work(ctx, slot.payload, metrics);
+            if slot.payload.req.cancelled() {
+                cancel_work(ctx, slot.payload, metrics);
+            } else {
+                shed_work(ctx, slot.payload, "deadline expired mid-decode", metrics);
+            }
         }
 
         // 2. admission per batching mode
@@ -3190,9 +3423,7 @@ fn sweep_backlog(backlog: &mut Vec<Work>, ctx: &mut WorkerCtx, metrics: &Arc<Ser
         if w.req.cancelled() {
             cancel_work(ctx, w, metrics);
         } else if w.req.expired_at(now) {
-            metrics.routing.shed(ctx.tier);
-            ctx.depth.fetch_sub(1, Ordering::Relaxed);
-            finish(w.req, Event::Failed { reason: "deadline expired before decode".into() });
+            shed_work(ctx, w, "deadline expired before decode", metrics);
         } else {
             kept.push(w);
         }
@@ -3206,6 +3437,17 @@ fn cancel_work(ctx: &mut WorkerCtx, w: Work, metrics: &Arc<ServerMetrics>) {
     metrics.routing.cancel(ctx.tier);
     ctx.depth.fetch_sub(1, Ordering::Relaxed);
     finish(w.req, Event::Cancelled);
+}
+
+/// Shed one deadline-expired request owned by this worker — queued
+/// (`"deadline expired before decode"`) or already decoding
+/// (`"deadline expired mid-decode"`, caller releases the slot first).
+/// Counts under `shed` on this tier plus the request's priority class.
+fn shed_work(ctx: &mut WorkerCtx, w: Work, reason: &str, metrics: &Arc<ServerMetrics>) {
+    metrics.routing.shed(ctx.tier);
+    metrics.class_shed[w.req.priority.index()].fetch_add(1, Ordering::Relaxed);
+    ctx.depth.fetch_sub(1, Ordering::Relaxed);
+    finish(w.req, Event::Failed { reason: reason.into() });
 }
 
 fn complete(
@@ -3431,6 +3673,16 @@ fn hybrid_cancel(ctx: &HybridCtx, w: Work, metrics: &Arc<ServerMetrics>) {
     finish(w.req, Event::Cancelled);
 }
 
+/// Terminal `Failed` for deadline-expired hybrid work (mirrors
+/// [`shed_work`]): counted under `shed` and the request's priority
+/// class so the brownout controller sees it.
+fn hybrid_shed(ctx: &HybridCtx, w: Work, reason: &str, metrics: &Arc<ServerMetrics>) {
+    metrics.routing.shed(ctx.tier);
+    metrics.class_shed[w.req.priority.index()].fetch_add(1, Ordering::Relaxed);
+    ctx.depth.fetch_sub(1, Ordering::Relaxed);
+    finish(w.req, Event::Failed { reason: reason.into() });
+}
+
 /// Retire cancelled / deadline-expired work queued for the hybrid
 /// worker (mirrors [`sweep_backlog`]).
 fn hybrid_sweep(backlog: &mut Vec<Work>, ctx: &HybridCtx, metrics: &Arc<ServerMetrics>) {
@@ -3446,9 +3698,7 @@ fn hybrid_sweep(backlog: &mut Vec<Work>, ctx: &HybridCtx, metrics: &Arc<ServerMe
         if w.req.cancelled() {
             hybrid_cancel(ctx, w, metrics);
         } else if w.req.expired_at(now) {
-            metrics.routing.shed(ctx.tier);
-            ctx.depth.fetch_sub(1, Ordering::Relaxed);
-            finish(w.req, Event::Failed { reason: "deadline expired before decode".into() });
+            hybrid_shed(ctx, w, "deadline expired before decode", metrics);
         } else {
             kept.push(w);
         }
@@ -3692,13 +3942,21 @@ fn hybrid_loop(
         }
 
         // 2. retire cancelled / expired queued work before it costs two
-        // prefills, and free cancelled lanes on both tiers
+        // prefills, and free cancelled / deadline-expired lanes on both
+        // tiers (a lane past its deadline must not burn another
+        // draft–verify round)
         hybrid_sweep(backlog, ctx, metrics);
+        let now = Instant::now();
         for idx in 0..genb {
-            if ctx.lanes[idx].as_ref().is_some_and(|l| l.work.req.cancelled()) {
+            let Some(l) = ctx.lanes[idx].as_ref() else { continue };
+            if l.work.req.cancelled() {
                 let lane = ctx.lanes[idx].take().expect("checked occupied");
                 ctx.release_lane(idx)?;
                 hybrid_cancel(ctx, lane.work, metrics);
+            } else if l.work.req.expired_at(now) {
+                let lane = ctx.lanes[idx].take().expect("checked occupied");
+                ctx.release_lane(idx)?;
+                hybrid_shed(ctx, lane.work, "deadline expired mid-decode", metrics);
             }
         }
 
@@ -3752,6 +4010,9 @@ fn hybrid_round(ctx: &mut HybridCtx, metrics: &Arc<ServerMetrics>) -> Result<()>
     let amax = g.amax;
     let sctx = g.sctx;
     let degraded_round = !ctx.breaker.allow(Instant::now());
+    // brownout L2: one level read per round — every lane in the round
+    // sees the same actuator state (identity at levels 0 and 1)
+    let level = metrics.brownout_level.load(Ordering::Relaxed) as u8;
 
     // --- phase 1: plan ---
     let mut plans: Vec<Option<LanePlan>> = vec![None; genb];
@@ -3768,7 +4029,18 @@ fn hybrid_round(ctx: &mut HybridCtx, metrics: &Arc<ServerMetrics>) -> Result<()>
             (gamma > 0).then_some(LanePlan::Local { gamma, degraded: true })
         } else {
             let room = hybrid::context_room(lane.lpos, sctx);
-            match hybrid::largest_bucket_at_most(&ctx.vbuckets, room.min(ctx.max_k)) {
+            let full = room.min(ctx.max_k);
+            // brownout L2: halve the verify-bucket bound (shrinking
+            // both k and the draft-block γ = k - 1 - pending) so the
+            // large tier's passes thin out under sustained pressure —
+            // unless no smaller bucket can still make progress, in
+            // which case the full bound keeps the lane moving
+            let capped = crate::policy::brownout_gamma(level, full);
+            let bound = match hybrid::largest_bucket_at_most(&ctx.vbuckets, capped) {
+                Some(k) if k > pending => capped,
+                _ => full,
+            };
+            match hybrid::largest_bucket_at_most(&ctx.vbuckets, bound) {
                 // k covers the tail (pending), the newest token, and
                 // k - 1 - pending fresh drafts
                 Some(k) if k > pending => Some(LanePlan::Verify { k, gamma: k - 1 - pending }),
@@ -3883,7 +4155,11 @@ fn hybrid_round(ctx: &mut HybridCtx, metrics: &Arc<ServerMetrics>) -> Result<()>
             if gamma > 0 && pend[idx] == 0 {
                 let lane = ctx.lanes[idx].as_ref().expect("planned lane");
                 let conf = dlps[idx].iter().copied().fold(f32::INFINITY, f32::min);
-                if !crate::policy::should_verify(lane.quality, conf) {
+                // brownout L2: judge escalation against the capped
+                // quality target so verify passes are skipped more
+                // aggressively under pressure (identity below level 2)
+                let q = crate::policy::brownout_escalation_quality(level, lane.quality);
+                if !crate::policy::should_verify(q, conf) {
                     plans[idx] = Some(LanePlan::Local { gamma, degraded: false });
                 }
             }
@@ -4366,6 +4642,7 @@ mod tests {
             cancel: Arc::new(AtomicBool::new(false)),
             retries: 0,
             hybrid: false,
+            priority: Priority::Interactive,
             _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
         };
         // default reproduces the seed's `len + 1 >= amax` stop rule
@@ -4419,6 +4696,7 @@ mod tests {
             cancel: cancel.clone(),
             retries: 0,
             hybrid: false,
+            priority: Priority::Interactive,
             _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
         };
         assert!(req.expired());
@@ -4436,6 +4714,10 @@ mod tests {
         assert!(e.to_string().contains("40"));
         assert_ne!(e, SubmitError::Busy);
         assert!(SubmitError::ZeroTokenBudget.to_string().contains("max_new_tokens(0)"));
+        let q = SubmitError::InvalidQuality { quality: f32::NAN };
+        assert!(q.to_string().contains("invalid quality target"));
+        assert!(q.to_string().contains("[0, 1]"));
+        assert_ne!(q, SubmitError::Busy);
         assert!(RequestError::Failed("deadline".into()).to_string().contains("deadline"));
         assert_ne!(RequestError::Cancelled, RequestError::Timeout);
     }
@@ -4465,6 +4747,7 @@ mod tests {
             cancel: Arc::new(AtomicBool::new(false)),
             retries: 0,
             hybrid: false,
+            priority: Priority::Interactive,
             _admission: AdmissionGuard(Arc::new(AtomicU64::new(1))),
         };
         let now = Instant::now();
@@ -4491,6 +4774,7 @@ mod tests {
             cancel: Arc::new(AtomicBool::new(false)),
             retries: 0,
             hybrid: false,
+            priority: Priority::Interactive,
             _admission: AdmissionGuard(counter.clone()),
         };
         // terminal path: finish() drops the request
@@ -4511,6 +4795,7 @@ mod tests {
             cancel: Arc::new(AtomicBool::new(false)),
             retries: 0,
             hybrid: false,
+            priority: Priority::Interactive,
             _admission: AdmissionGuard(counter.clone()),
         };
         drop(req);

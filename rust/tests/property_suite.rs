@@ -400,6 +400,158 @@ fn resolve_verify_rederives_the_large_stream_prefix() {
 }
 
 #[test]
+fn brownout_level_never_oscillates_on_steady_input() {
+    // the no-oscillation contract (DESIGN.md §13): holding the sensor
+    // inputs constant, the level sequence never changes direction —
+    // whatever state the controller starts in
+    check("steady input => monotone level sequence", 60, |rng| {
+        let mut c = policy::BrownoutController::new(1.0 + rng.next_f64() * 50.0);
+        // arbitrary starting state: random delay history and some ticks
+        for _ in 0..rng.below(20) {
+            c.observe_delay_ms(rng.next_f64() * 200.0);
+            c.tick(rng.next_f64(), rng.below(2) as u64);
+        }
+        let depth = if rng.next_f64() < 0.3 { 0.0 } else { rng.next_f64() * 1.5 };
+        let shed = if rng.next_f64() < 0.2 { 1u64 } else { 0 };
+        // with constant inputs the sensed pressure is non-increasing
+        // (the delay EWMA only decays), so once the level has stepped
+        // down it must never step up again — the no-ringing contract
+        let mut fell = false;
+        let mut last = c.level();
+        for _ in 0..rng.range(10, 120) {
+            let l = c.tick(depth, shed);
+            assert!(
+                !(fell && l > last),
+                "level rose after falling on constant input (depth {depth}, shed {shed})"
+            );
+            fell |= l < last;
+            last = l;
+        }
+    });
+}
+
+#[test]
+fn brownout_trip_is_gated_and_recovery_is_hysteretic() {
+    check("trip needs a streak; recovery is slower and reaches 0", 40, |rng| {
+        let mut c = policy::BrownoutController::new(1.0 + rng.next_f64() * 20.0);
+        // sustained overload: the level must not move on the first hot
+        // tick, must eventually saturate, and must take strictly more
+        // ticks per step coming down than going up
+        let mut ticks_to_max = 0u32;
+        assert_eq!(c.tick(1.0, 1), 0, "a single hot tick must not trip a level");
+        while c.level() < policy::BROWNOUT_MAX_LEVEL {
+            c.tick(1.0, 1);
+            ticks_to_max += 1;
+            assert!(ticks_to_max < 1000, "sustained overload never saturated the level");
+        }
+        // in-band pressure holds the level indefinitely (hysteresis
+        // band: depth 0.6/0.85 ≈ 0.71 is neither hot nor calm)
+        for _ in 0..rng.range(1, 50) {
+            assert_eq!(
+                c.tick(0.6, 0),
+                policy::BROWNOUT_MAX_LEVEL,
+                "in-band pressure must hold the level"
+            );
+        }
+        // load recedes: the controller must walk all the way back to 0
+        // and stay there, taking longer to recover than it took to ramp
+        let mut ticks_to_zero = 0u32;
+        while c.level() > 0 {
+            c.tick(0.0, 0);
+            ticks_to_zero += 1;
+            assert!(ticks_to_zero < 1000, "drained controller never recovered to 0");
+        }
+        assert!(
+            ticks_to_zero > ticks_to_max,
+            "recovery ({ticks_to_zero} ticks) must be slower than ramp-up ({ticks_to_max})"
+        );
+        for _ in 0..rng.range(1, 40) {
+            assert_eq!(c.tick(0.0, 0), 0, "an idle controller must stay at level 0");
+        }
+    });
+}
+
+#[test]
+fn brownout_level_monotone_in_sensed_load() {
+    // two fresh controllers under constant load, one strictly heavier:
+    // at every tick the heavier one's level dominates
+    check("heavier load => level at least as high", 50, |rng| {
+        let target = 1.0 + rng.next_f64() * 20.0;
+        let mut lo = policy::BrownoutController::new(target);
+        let mut hi = policy::BrownoutController::new(target);
+        let d_lo = rng.next_f64() * 1.2;
+        let d_hi = d_lo + rng.next_f64() * (1.5 - d_lo);
+        for t in 0..rng.range(5, 150) {
+            let ll = lo.tick(d_lo, 0);
+            let lh = hi.tick(d_hi, 0);
+            assert!(
+                ll <= lh,
+                "tick {t}: depth {d_lo} reached level {ll} > level {lh} at depth {d_hi}"
+            );
+        }
+    });
+}
+
+#[test]
+fn brownout_actuators_identity_at_level_0_and_monotone() {
+    check("actuators: identity at 0, monotone in level", 60, |rng| {
+        let q = rng.next_f32() * 1.4 - 0.2;
+        let gamma = rng.below(12);
+        // level 0 is the byte-identity pin: every actuator is a no-op
+        assert_eq!(policy::brownout_effective_quality(0, q), q);
+        assert_eq!(policy::brownout_escalation_quality(0, q), q);
+        assert_eq!(policy::brownout_gamma(0, gamma), gamma);
+        assert_eq!(policy::brownout_quality_cap(0), 1.0);
+        let mut last_cap = f32::INFINITY;
+        for level in 0..=policy::BROWNOUT_MAX_LEVEL {
+            let cap = policy::brownout_quality_cap(level);
+            assert!(cap <= last_cap, "quality cap rose at level {level}");
+            last_cap = cap;
+            assert!(policy::brownout_effective_quality(level, q) <= q.max(cap));
+            assert!(policy::brownout_gamma(level, gamma) <= gamma, "brownout grew γ");
+            assert!(gamma == 0 || policy::brownout_gamma(level, gamma) >= 1);
+        }
+    });
+}
+
+#[test]
+fn admission_is_strictly_lowest_class_first() {
+    // the L3 invariant: at any level and any occupancy where a lower
+    // class is admitted, every higher class is admitted too — so no
+    // higher-priority request is ever shed in a window where a
+    // lower-priority one was admitted
+    check("class caps monotone in priority at every level", 60, |rng| {
+        let cap = rng.range(1, 64);
+        for level in 0..=policy::BROWNOUT_MAX_LEVEL {
+            let mut last = 0usize;
+            for p in policy::Priority::all() {
+                let c = policy::class_queue_cap(level, p, cap);
+                assert!((1..=cap).contains(&c), "class cap {c} outside [1, {cap}]");
+                assert!(
+                    c >= last,
+                    "level {level}: {} admits less than a lower class",
+                    p.name()
+                );
+                let f = policy::admission_fraction(level, p);
+                assert!((0.0..=1.0).contains(&f) && f > 0.0);
+                last = c;
+            }
+            // Interactive always keeps the full queue
+            assert_eq!(
+                policy::class_queue_cap(level, policy::Priority::Interactive, cap),
+                cap
+            );
+            if level < policy::BROWNOUT_MAX_LEVEL {
+                // below L3 admission is not priority-weighted at all
+                for p in policy::Priority::all() {
+                    assert_eq!(policy::class_queue_cap(level, p, cap), cap);
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn gap_diff_antisymmetric_in_score_inversion() {
     check("inverting scores flips the gap-diff sign", 30, |rng| {
         // even n and distinct scores: the 50% split is then exactly

@@ -76,6 +76,7 @@ fn generators_always_yield_valid_traces() {
             gen_overload,
             gen_cancel_storm,
             scenario::gen_hybrid_decode,
+            scenario::gen_overload_brownout,
         ] {
             let t = gen(seed, n, shape);
             assert_eq!(t.events.len(), n);
@@ -324,6 +325,11 @@ fn empty_stats() -> hybrid_llm::serve::ServerStats {
         large_call_fraction: 0.0,
         large_slot_steps: 0,
         pool_exhausted_requeues: 0,
+        queue_delay: Default::default(),
+        brownout_level: 0,
+        class_admitted: [0; hybrid_llm::policy::PRIORITY_CLASSES],
+        class_shed: [0; hybrid_llm::policy::PRIORITY_CLASSES],
+        effective_quality_delta: 0.0,
     }
 }
 
@@ -366,6 +372,50 @@ fn hybrid_decode_scenario_invariants_hold() {
     } else {
         assert_eq!(stats.hybrid_requests, 0, "pre-verify artifacts must fall back to routed");
     }
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// The overload-brownout scenario (PR 10 acceptance): 3× sustained load
+/// with mixed priorities against an armed controller. Zero lost requests
+/// (graceful degradation, not rejection), interactive goodput holds the
+/// floor while the lower classes absorb the shedding, the controller
+/// actually engages, and the level recovers to 0 once the burst drains.
+#[test]
+fn overload_brownout_scenario_invariants_hold() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (shape, manifest) = shape_of(&artifacts);
+    let run_dir = seed_run_dir(&artifacts, "brownout");
+    let sc = scenario::overload_suite().into_iter().next().unwrap();
+    let mut cfg = base_cfg(artifacts, run_dir.clone());
+    if let Some(cap) = sc.queue_cap {
+        cfg.queue_cap = cap;
+    }
+    cfg.brownout_target = sc.brownout_target;
+    assert!(cfg.brownout_target.is_some(), "the suite must arm the controller");
+    let queue_cap = cfg.queue_cap as u64;
+    let server = Server::start(cfg).unwrap();
+    let trace = (sc.make)(0xB40B40, 64, shape);
+    let opts = ReplayOpts { retry_busy: sc.retry_busy, ..Default::default() };
+    let out = replay(&server, &trace, &opts).unwrap();
+    let stats = server.shutdown().unwrap();
+    let bounds = scenario::transfer_bounds(&manifest, &["nano", "micro"]).unwrap();
+    let mut violations = check_invariants(&out, &stats, queue_cap, &bounds);
+    violations.extend(scenario::check_brownout_invariants(&out, &stats));
+    assert!(violations.is_empty(), "overload-brownout violations: {violations:?}");
+    // zero lost: every accepted request reached exactly one terminal
+    assert_eq!(out.done + out.failed + out.cancelled, out.accepted, "lost requests");
+    assert_eq!(stats.brownout_level, 0, "level must walk back to 0 after the drain");
+    assert!(
+        out.interactive_goodput() >= scenario::INTERACTIVE_GOODPUT_FLOOR,
+        "interactive goodput {} under the floor",
+        out.interactive_goodput()
+    );
+    // the burst carries quality 0.9 against an L1 cap of 0.7: if the
+    // controller engaged, some requests routed at a reduced target
+    assert!(stats.effective_quality_delta > 0.0, "the controller never engaged");
     let _ = std::fs::remove_dir_all(&run_dir);
 }
 

@@ -737,6 +737,166 @@ fn deadline_expired_requests_are_shed() {
     let _ = std::fs::remove_dir_all(&run_dir);
 }
 
+/// Regression (PR 10): a deadline that expires *mid-decode* must shed the
+/// request from inside the decode loop — terminal `Event::Failed` with the
+/// distinct "deadline expired mid-decode" reason, KV slot released — instead
+/// of burning decode steps to completion the caller will never read. Decode
+/// and dispatch latency are hardware-dependent, so the test scans deadlines
+/// from tight to loose: pre-dispatch sheds (dispatch outran the deadline)
+/// step to the next rung; the first rung that clears dispatch but not the
+/// full `A_MAX`-token decode is the regression case.
+#[test]
+fn mid_decode_deadline_expiry_sheds_and_frees_the_slot() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "middecode");
+    let server =
+        Server::start(base_cfg(artifacts, run_dir.clone(), BatchMode::Continuous)).unwrap();
+    let corpus = generate(61, Scale::Smoke);
+    // warm the compile caches so dispatch latency is milliseconds, not the
+    // first-request PJRT load
+    server
+        .submit(Request::new(corpus[0].prompt.clone()))
+        .expect("warm-up submit")
+        .wait_timeout(Duration::from_secs(120))
+        .expect("warm-up completion");
+
+    let mut saw_mid_decode = false;
+    let mut deadline_ms = 2u64;
+    for _ in 0..12 {
+        let h = server
+            .submit(
+                Request::new(corpus[1].prompt.clone())
+                    .max_new_tokens(hybrid_llm::corpus::A_MAX)
+                    .deadline(Duration::from_millis(deadline_ms)),
+            )
+            .expect("submit");
+        match h.wait_timeout(Duration::from_secs(120)) {
+            Err(RequestError::Failed(reason)) if reason.contains("mid-decode") => {
+                assert!(
+                    reason.contains("deadline expired mid-decode"),
+                    "unexpected mid-decode reason: {reason}"
+                );
+                saw_mid_decode = true;
+                break;
+            }
+            Err(RequestError::Failed(reason)) => {
+                // shed before decode: dispatch was slower than this rung
+                assert!(reason.contains("deadline"), "unexpected failure: {reason}");
+                deadline_ms = deadline_ms * 3 / 2 + 1;
+            }
+            Ok(_) => {
+                // the full decode beat the deadline — the window between
+                // dispatch and completion was jumped; keep scanning
+                deadline_ms = deadline_ms * 3 / 2 + 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(
+        saw_mid_decode,
+        "no deadline rung shed mid-decode — the in-flight sweep is not running"
+    );
+    // the swept request's KV slot is free again: a normal request completes
+    server
+        .submit(Request::new(corpus[2].prompt.clone()))
+        .expect("post-shed submit")
+        .wait_timeout(Duration::from_secs(120))
+        .expect("post-shed completion");
+    let stats = server.shutdown().unwrap();
+    assert!(stats.routing.shed_total() >= 1, "mid-decode expiry must count under shed");
+    assert_eq!(stats.in_flight, 0, "swept request retired from the admission window");
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// Satellite (PR 10): NaN and out-of-`[0, 1]` quality targets are rejected
+/// at submit with the typed `SubmitError::InvalidQuality`, before any
+/// admission-window slot is spent; the boundary values 0.0 and 1.0 are
+/// legal and serve normally.
+#[test]
+fn invalid_quality_targets_rejected_at_submit() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run_dir = seed_run_dir(&artifacts, "badq");
+    let server =
+        Server::start(base_cfg(artifacts, run_dir.clone(), BatchMode::Continuous)).unwrap();
+    let corpus = generate(67, Scale::Smoke);
+    let prompt = corpus[0].prompt.clone();
+    for bad in [f32::NAN, -0.5, 1.5, f32::INFINITY] {
+        match server.submit(Request::new(prompt.clone()).quality(bad)) {
+            Err(SubmitError::InvalidQuality { quality }) => {
+                if bad.is_nan() {
+                    assert!(quality.is_nan());
+                } else {
+                    assert_eq!(quality, bad);
+                }
+            }
+            other => panic!(
+                "quality {bad}: expected InvalidQuality, got {:?}",
+                other.map(|h| h.id())
+            ),
+        }
+    }
+    for ok in [0.0f32, 1.0] {
+        server
+            .submit(Request::new(prompt.clone()).quality(ok))
+            .expect("boundary quality accepted")
+            .wait_timeout(Duration::from_secs(120))
+            .expect("boundary-quality request completes");
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.routing.total(), 2, "rejected qualities never reached routing");
+    assert_eq!(stats.in_flight, 0);
+    let _ = std::fs::remove_dir_all(&run_dir);
+}
+
+/// The brownout A/B pin (DESIGN.md §13): at brownout level 0 every actuator
+/// is the identity, so a server whose controller is armed (but never
+/// tripped — the target sojourn is far above what one-at-a-time traffic can
+/// reach) must make byte-identical routing decisions and greedy tokens to a
+/// server built without the controller (`brownout_target: None`).
+#[test]
+fn disarmed_and_level0_brownout_decode_identical_tokens() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let corpus = generate(71, Scale::Smoke);
+    let prompts: Vec<Vec<i32>> = corpus.iter().take(6).map(|q| q.prompt.clone()).collect();
+    let run = |tag: &str, target: Option<Duration>| -> (Vec<(usize, Vec<i32>)>, u64) {
+        let run_dir = seed_run_dir(&artifacts, tag);
+        let mut cfg = base_cfg(artifacts.clone(), run_dir.clone(), BatchMode::Continuous);
+        cfg.temp = 0.0; // the byte-identity claim is greedy-only
+        cfg.brownout_target = target;
+        let server = Server::start(cfg).unwrap();
+        let out = prompts
+            .iter()
+            .map(|p| {
+                let c = server
+                    .submit(Request::new(p.clone()).quality(0.9))
+                    .expect("submit")
+                    .wait_timeout(Duration::from_secs(120))
+                    .expect("completion");
+                (c.tier, c.tokens)
+            })
+            .collect();
+        let stats = server.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&run_dir);
+        (out, stats.brownout_level)
+    };
+    let (armed, level) = run("bo_armed", Some(Duration::from_secs(5)));
+    let (disarmed, _) = run("bo_off", None);
+    assert_eq!(level, 0, "one-at-a-time traffic must never trip the controller");
+    for (i, (a, d)) in armed.iter().zip(&disarmed).enumerate() {
+        assert_eq!(a.0, d.0, "request {i}: level-0 brownout changed the routing decision");
+        assert_eq!(a.1, d.1, "request {i}: level-0 brownout changed the greedy decode");
+    }
+}
+
 /// The hybrid draft–verify pin (DESIGN.md §12): at temperature 0 with an
 /// always-verify quality target, token-level hybrid decoding must be
 /// **byte-identical** to routing every request to the large tier —
